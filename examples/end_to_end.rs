@@ -1,0 +1,95 @@
+//! End-to-end driver: proves all three layers compose on real data.
+//!
+//! L3 (Rust DES) simulates GPUVM demand paging moving real page bytes
+//! into the frame pool; the resident pages' computation runs through the
+//! PJRT executables AOT-compiled from the L2 JAX graphs over the L1
+//! Pallas kernels; results are verified against pure-Rust references.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//! Recorded in EXPERIMENTS.md §E2E.
+
+fn main() -> anyhow::Result<()> {
+    // The CLI `e2e` subcommand is the canonical implementation; this
+    // example invokes the same driver so `cargo run --example end_to_end`
+    // and `gpuvm e2e` stay in lockstep.
+    use gpuvm::apps::query::TaxiTable;
+    use gpuvm::apps::VaWorkload;
+    use gpuvm::config::SystemConfig;
+    use gpuvm::coordinator::{compute, report};
+    use gpuvm::gpu::exec::run;
+    use gpuvm::gpuvm::GpuVmSystem;
+    use gpuvm::runtime::Runtime;
+    use gpuvm::util::bench::fmt_ns;
+
+    let mut cfg = SystemConfig::default();
+    cfg.gpuvm.page_size = 4096; // AOT page geometry (1024 f32/page)
+    cfg.gpu.mem_bytes = 16 << 20;
+    let n = 1 << 20;
+    let rows = 1 << 20;
+
+    println!("== GPUVM end-to-end: L3 paging + L2 graphs + L1 Pallas kernels ==\n");
+    let rt = Runtime::load_dir("artifacts")?;
+    println!("PJRT platform={} artifacts={:?}\n", rt.platform(), rt.names());
+
+    // --- 1. vector add: paging sim (timing) + PJRT compute (numerics) ---
+    let t0 = std::time::Instant::now();
+    let mut w = VaWorkload::new(n, cfg.gpuvm.page_size).backed();
+    let mut mem = GpuVmSystem::with_backing(&cfg, true);
+    let r = run(&cfg, &mut w, &mut mem)?;
+    let sim_wall = t0.elapsed();
+    print!("{}", report::run_report("va(backed)", "gpuvm", &r));
+    println!(
+        "  simulator wallclock: {:.1} ms for {} DES events ({:.2} Mev/s)\n",
+        sim_wall.as_secs_f64() * 1e3,
+        r.events,
+        r.events as f64 / sim_wall.as_secs_f64() / 1e6
+    );
+    let mut hm = r.hm;
+    let ids: Vec<_> = hm.regions().iter().map(|x| x.id).collect();
+    let rep = compute::elementwise_pass(&rt, &mut hm, "va_batch", ids[0], ids[1], ids[2], n)?;
+    println!(
+        "va_batch:   {} batches | {:.1} Melem/s | verified={} (max abs err {:.1e})",
+        rep.batches,
+        rep.throughput_elems_per_sec() / 1e6,
+        rep.verified,
+        rep.max_abs_err
+    );
+    anyhow::ensure!(rep.verified, "va_batch verification FAILED");
+
+    // --- 2. the five taxi queries through query_batch ---
+    let table = TaxiTable::generate(rows, cfg.seed);
+    println!(
+        "\ntaxi table: {rows} rows, {} matches ({:.3}% selectivity)",
+        table.matches.len(),
+        table.selectivity() * 100.0
+    );
+    for q in 0..gpuvm::apps::NUM_QUERIES {
+        let (rep, total, matches) = compute::query_pass(&rt, &table, q)?;
+        println!(
+            "{}: sum={total:>12.2} matches={matches:>4} | {:.0} Mrow/s | verified={}",
+            gpuvm::apps::QUERY_NAMES[q],
+            rep.throughput_elems_per_sec() / 1e6,
+            rep.verified
+        );
+        anyhow::ensure!(rep.verified, "query verification FAILED");
+    }
+
+    // --- 3. MVT row tiles through the MXU-shaped Pallas kernel ---
+    let mut rng = gpuvm::util::rng::Rng::new(cfg.seed);
+    let a = rng.f32_vec(1024 * 1024);
+    let x = rng.f32_vec(1024);
+    let (rep, _) = compute::mvt_pass(&rt, &a, &x, 1024)?;
+    println!(
+        "\nmvt_row_batch: {} tiles | verified={} (max rel err {:.1e})",
+        rep.batches, rep.verified, rep.max_abs_err
+    );
+    anyhow::ensure!(rep.verified, "mvt verification FAILED");
+
+    println!(
+        "\ne2e OK — simulated GPUVM time {}, all PJRT numerics verified.",
+        fmt_ns(r.metrics.finish_ns)
+    );
+    Ok(())
+}

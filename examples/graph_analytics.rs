@@ -1,0 +1,69 @@
+//! Graph analytics on the Table 2 datasets: BFS and CC under GPUVM
+//! (CSR naive vs Balanced CSR) and UVM, plus the Subway baseline —
+//! a miniature of the paper's §5.2 study.
+//!
+//! ```bash
+//! cargo run --release --example graph_analytics [-- --scale 0.5]
+//! ```
+
+use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
+use gpuvm::baselines::{run_subway, SubwayAlgo};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::graph::{generate, DatasetId};
+use gpuvm::util::bench::fmt_ns;
+use gpuvm::util::cli::Args;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let scale = args.get_f64("scale", 0.25)?;
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = 16;
+    cfg.gpu.warps_per_sm = 8;
+    cfg.gpuvm.page_size = 8192;
+
+    println!("{:<4} {:>9} {:>9} | {:>11} {:>11} {:>11} {:>11}",
+        "DS", "|V|", "|E|", "UVM", "GPUVM-1N", "GPUVM-2N", "Subway");
+    for id in [DatasetId::GU, DatasetId::GK, DatasetId::FS] {
+        let ds = generate(id, scale, 42);
+        let g = Rc::new(ds.graph);
+        // Size GPU memory to ~60% of the edge array (out-of-memory regime).
+        cfg.gpu.mem_bytes = (g.edge_bytes() * 6 / 10).max(4 << 20);
+        let src = g.pick_sources(1, 2, &mut gpuvm::util::rng::Rng::new(1))[0];
+
+        let uvm = {
+            let mut w = GraphWorkload::new(GraphAlgo::Bfs,
+                Layout::Csr { vertices_per_warp: 8 }, g.clone(), src, cfg.gpuvm.page_size);
+            simulate(&cfg, &mut w, MemSysKind::Uvm)?
+        };
+        let g1 = {
+            let mut w = GraphWorkload::new(GraphAlgo::Bfs,
+                Layout::Csr { vertices_per_warp: 8 }, g.clone(), src, cfg.gpuvm.page_size);
+            simulate(&cfg, &mut w, MemSysKind::GpuVm)?
+        };
+        let g2 = {
+            let mut c2 = cfg.clone();
+            c2.rnic.num_nics = 2;
+            let mut w = GraphWorkload::new(GraphAlgo::Bfs,
+                Layout::Balanced { chunk_edges: 2048 }, g.clone(), src, cfg.gpuvm.page_size);
+            simulate(&c2, &mut w, MemSysKind::GpuVm)?
+        };
+        let sub = run_subway(&cfg, &g, SubwayAlgo::Bfs, src);
+
+        println!(
+            "{:<4} {:>9} {:>9} | {:>11} {:>11} {:>11} {:>11}   (GPUVM-2N {:.2}× vs UVM, {:.2}× vs Subway)",
+            id.abbr(),
+            g.num_vertices,
+            g.num_edges(),
+            fmt_ns(uvm.metrics.finish_ns),
+            fmt_ns(g1.metrics.finish_ns),
+            fmt_ns(g2.metrics.finish_ns),
+            fmt_ns(sub.total_ns),
+            uvm.metrics.finish_ns as f64 / g2.metrics.finish_ns as f64,
+            sub.total_ns as f64 / g2.metrics.finish_ns as f64,
+        );
+    }
+    println!("\n(MOLIERE omitted here: Subway cannot represent it; see fig09 bench for the full set)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Query evaluation (paper §5.5): the five taxi queries under GPUVM
+//! (1 and 2 NICs), UVM, and the RAPIDS-like bulk-column engine,
+//! reporting time and I/O amplification.
+//!
+//! ```bash
+//! cargo run --release --example query_engine [-- --rows 1m]
+//! ```
+
+use gpuvm::apps::{QueryWorkload, TaxiTable, NUM_QUERIES, QUERY_NAMES};
+use gpuvm::baselines::run_rapids;
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::util::bench::fmt_ns;
+use gpuvm::util::cli::Args;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let rows = args.get_usize("rows", 1 << 20)?;
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = 16;
+    cfg.gpu.warps_per_sm = 8;
+    cfg.gpuvm.page_size = 4096; // the paper's query config uses 4 KB
+    cfg.gpu.mem_bytes = 16 << 20;
+
+    let table = Rc::new(TaxiTable::generate(rows, 7));
+    println!(
+        "taxi table: {rows} rows, {} matches ({:.3}% selectivity — paper: 0.08%)\n",
+        table.matches.len(),
+        table.selectivity() * 100.0
+    );
+    println!(
+        "{:<10} {:>11} {:>11} {:>11} {:>11} | {:>9} {:>9} {:>9}",
+        "query", "UVM", "RAPIDS", "GPUVM-1N", "GPUVM-2N", "ampU", "ampR", "ampG"
+    );
+    for q in 0..NUM_QUERIES {
+        let uvm = {
+            let mut w = QueryWorkload::new(table.clone(), q, cfg.gpuvm.page_size);
+            simulate(&cfg, &mut w, MemSysKind::Uvm)?
+        };
+        let g1 = {
+            let mut w = QueryWorkload::new(table.clone(), q, cfg.gpuvm.page_size);
+            simulate(&cfg, &mut w, MemSysKind::GpuVm)?
+        };
+        let g2 = {
+            let mut c = cfg.clone();
+            c.rnic.num_nics = 2;
+            let mut w = QueryWorkload::new(table.clone(), q, cfg.gpuvm.page_size);
+            simulate(&c, &mut w, MemSysKind::GpuVm)?
+        };
+        let rap = run_rapids(&cfg, &table, q);
+        println!(
+            "{:<10} {:>11} {:>11} {:>11} {:>11} | {:>8.2}× {:>8.2}× {:>8.2}×",
+            QUERY_NAMES[q],
+            fmt_ns(uvm.metrics.finish_ns),
+            fmt_ns(rap.total_ns),
+            fmt_ns(g1.metrics.finish_ns),
+            fmt_ns(g2.metrics.finish_ns),
+            uvm.metrics.io_amplification(),
+            rap.io_amplification(),
+            g1.metrics.io_amplification(),
+        );
+    }
+    println!("\nShape check (Fig 15): GPUVM < RAPIDS < UVM in time; GPUVM has the least I/O amplification.");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: the paper's Listing 1 — vector addition over `gpuvm<T>`
+//! arrays — run on the simulated testbed under GPUVM and UVM.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use gpuvm::apps::VaWorkload;
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{compare, report};
+use gpuvm::util::bench::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    // The simulated r7525 testbed (Table 1 / Fig 7 defaults): V100-shaped
+    // GPU, ConnectX-shaped NIC, PCIe 3. Scale GPU memory to the workload.
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.mem_bytes = 64 << 20;
+    cfg.gpuvm.page_size = 8192;
+
+    // vectorAdd(gpuvm<float> A, B, C, N) — Listing 1. 4M floats/array.
+    let n = 4 << 20;
+    println!("vector add: {n} elements × 3 arrays = {} MiB working set", 3 * n * 4 >> 20);
+
+    let (g, u) = compare(&cfg, || Box::new(VaWorkload::new(n, cfg.gpuvm.page_size)))?;
+    print!("{}", report::run_report("va", "gpuvm", &g));
+    print!("{}", report::run_report("va", "uvm", &u));
+    println!(
+        "\nGPUVM {} vs UVM {} → speedup {:.2}× (paper §5.3: \"just over 2×\" with two NICs — see below)",
+        fmt_ns(g.metrics.finish_ns),
+        fmt_ns(u.metrics.finish_ns),
+        u.metrics.finish_ns as f64 / g.metrics.finish_ns as f64
+    );
+
+    // Two NICs recover the full PCIe bandwidth (§4.1).
+    cfg.rnic.num_nics = 2;
+    let (g2, _) = compare(&cfg, || Box::new(VaWorkload::new(n, cfg.gpuvm.page_size)))?;
+    println!(
+        "with 2 NICs: {} ({:.2}× over UVM)",
+        fmt_ns(g2.metrics.finish_ns),
+        u.metrics.finish_ns as f64 / g2.metrics.finish_ns as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: every entry in model.ENTRIES → artifacts/<name>.hlo.txt.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True —
+the Rust side unwraps with `to_tuple()`.
+
+Also writes artifacts/manifest.txt: one line per artifact,
+  <name> <file> <in_sig> -> <out_sig>
+which the Rust runtime parses to know each executable's shapes.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> str:
+    parts = []
+    for a in avals:
+        shape = ",".join(str(d) for d in a.shape)
+        parts.append(f"{a.dtype}[{shape}]")
+    return ";".join(parts)
+
+
+def lower_entry(name: str, out_dir: str) -> str:
+    fn, example_args = model.ENTRIES[name]
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_args)
+    return f"{name} {name}.hlo.txt {_sig(example_args)} -> {_sig(outs)}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(model.ENTRIES)
+    lines = []
+    for name in names:
+        line = lower_entry(name, args.out_dir)
+        lines.append(line)
+        print(f"lowered {line}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(lines)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

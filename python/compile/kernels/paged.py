@@ -1,0 +1,156 @@
+"""L1: the paper's compute hot-spots as Pallas kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): GPUVM's insight —
+demand-page HBM in small pages and overlap fetch with compute — maps to
+TPU Pallas as a *BlockSpec-tiled HBM→VMEM pipeline*. The grid iterates
+page-sized blocks; each grid step's block copy is one "page fetch" and
+Pallas double-buffers it against the previous step's compute. The
+`index_map` plays the page table's role.
+
+All kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and numerics are what we validate here.
+Real-TPU VMEM footprints and MXU utilization are *estimated* per kernel in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One simulated 4 KiB page = 1024 f32 lanes.
+PAGE_ELEMS = 1024
+
+_interpret = functools.partial(pl.pallas_call, interpret=True)
+
+
+def _page_spec(P):
+    return pl.BlockSpec((1, P), lambda i: (i, 0))
+
+
+def va_pages(a, b):
+    """Vector add over a batch of resident pages.
+
+    a, b: [B, P] — B pages of P elements. One page per grid step; the
+    HBM→VMEM copy of page i+1 overlaps the add on page i.
+    """
+    B, P = a.shape
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = a_ref[...] + b_ref[...]
+
+    return _interpret(
+        kernel,
+        grid=(B,),
+        in_specs=[_page_spec(P), _page_spec(P)],
+        out_specs=_page_spec(P),
+        out_shape=jax.ShapeDtypeStruct((B, P), a.dtype),
+    )(a, b)
+
+
+def bigc_pages(a, b):
+    """BIGC: heavy per-element chain (VPU-bound), page-tiled like va."""
+    B, P = a.shape
+
+    def kernel(a_ref, b_ref, o_ref):
+        x = a_ref[...] * b_ref[...] + a_ref[...]
+        x = x * x + b_ref[...]
+        o_ref[...] = x * 0.5 + jnp.tanh(x) * 0.25
+
+    return _interpret(
+        kernel,
+        grid=(B,),
+        in_specs=[_page_spec(P), _page_spec(P)],
+        out_specs=_page_spec(P),
+        out_shape=jax.ShapeDtypeStruct((B, P), a.dtype),
+    )(a, b)
+
+
+def mvt_rows(a_rows, x, tile=8):
+    """Row-tiled matvec y = A_rows @ x (the MXU-shaped tile of MVT/ATAX).
+
+    a_rows: [T, N]; x: [N]. Row tiles stream through VMEM while x stays
+    resident — the paper's "reuse-oriented paged memory" for the x vector.
+    """
+    T, N = a_rows.shape
+    tile = min(tile, T)
+    assert T % tile == 0, "row count must divide the tile"
+
+    def kernel(a_ref, x_ref, o_ref):
+        o_ref[...] = a_ref[...] @ x_ref[...]
+
+    return _interpret(
+        kernel,
+        grid=(T // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, N), lambda i: (i, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((T,), a_rows.dtype),
+    )(a_rows, x)
+
+
+def atax_accum(a_rows, tmp_rows, tile=128):
+    """ATAX transpose stage: y = A_rowsT @ tmp_rows, column-tiled.
+
+    a_rows: [T, N]; tmp_rows: [T]. Each grid step owns a column tile —
+    the access pattern that is page-hostile on the GPU becomes an
+    explicit VMEM-resident tile here.
+    """
+    T, N = a_rows.shape
+    tile = min(tile, N)
+    assert N % tile == 0, "column count must divide the tile"
+
+    def kernel(a_ref, t_ref, o_ref):
+        o_ref[...] = a_ref[...].T @ t_ref[...]
+
+    return _interpret(
+        kernel,
+        grid=(N // tile,),
+        in_specs=[
+            pl.BlockSpec((T, tile), lambda i: (0, i)),
+            pl.BlockSpec((T,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), a_rows.dtype),
+    )(a_rows, tmp_rows)
+
+
+def query_agg_pages(seconds, values, threshold=9000):
+    """Per-page masked aggregate of the taxi queries (Q1–Q5).
+
+    seconds: [B, P] int32; values: [B, P] f32 → [B] partial sums of
+    values where seconds > threshold. The Rust coordinator reduces the
+    page partials.
+    """
+    B, P = seconds.shape
+
+    def kernel(s_ref, v_ref, o_ref):
+        mask = s_ref[...] > threshold
+        o_ref[...] = jnp.sum(jnp.where(mask, v_ref[...], 0.0), axis=-1)
+
+    return _interpret(
+        kernel,
+        grid=(B,),
+        in_specs=[_page_spec(P), _page_spec(P)],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), values.dtype),
+    )(seconds, values)
+
+
+def query_count_pages(seconds, threshold=9000):
+    """Per-page match count (validation companion of query_agg_pages)."""
+    B, P = seconds.shape
+
+    def kernel(s_ref, o_ref):
+        o_ref[...] = jnp.sum((s_ref[...] > threshold).astype(jnp.int32), axis=-1)
+
+    return _interpret(
+        kernel,
+        grid=(B,),
+        in_specs=[_page_spec(P)],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+    )(seconds)

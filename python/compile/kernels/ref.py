@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in `paged.py` has a reference here with an identical
+signature; pytest sweeps shapes/dtypes (hypothesis) and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+THRESHOLD_SECONDS = 9000
+
+
+def va_pages(a, b):
+    """Vector add over a batch of pages: c[p, i] = a[p, i] + b[p, i]."""
+    return a + b
+
+
+def bigc_pages(a, b):
+    """BIGC's heavy per-element chain (polynomial + transcendental mix)."""
+    x = a * b + a
+    x = x * x + b
+    return x * 0.5 + jnp.tanh(x) * 0.25
+
+
+def mvt_rows(a_rows, x):
+    """Row-tiled matvec: y[r] = sum_j A[r, j] * x[j]."""
+    return a_rows @ x
+
+
+def atax_accum(a_rows, tmp_rows):
+    """ATAX transpose stage over a row tile: y = A_rowsT @ tmp_rows."""
+    return a_rows.T @ tmp_rows
+
+
+def query_agg_pages(seconds, values, threshold=THRESHOLD_SECONDS):
+    """Per-page masked sum: sum(values[p, i] where seconds[p, i] > thr)."""
+    mask = seconds > threshold
+    return jnp.sum(jnp.where(mask, values, 0.0), axis=-1)
+
+
+def query_count_pages(seconds, threshold=THRESHOLD_SECONDS):
+    """Per-page match count."""
+    return jnp.sum((seconds > threshold).astype(jnp.int32), axis=-1)

@@ -1,0 +1,70 @@
+"""L2: the exported paged-compute graphs, built on the L1 Pallas kernels.
+
+Each entry point is a jax function over *fixed-shape page batches* — the
+unit the Rust coordinator feeds from resident GPU frames. They are
+lowered once by `aot.py` to HLO text and executed via PJRT from Rust;
+Python never runs on the request path.
+
+Export table (name → builder + example args) lives in ENTRIES; aot.py
+and the tests iterate it so adding a graph is a one-line change.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import paged
+
+# Page-batch geometry: B pages of P f32 elements per PJRT call. 64 × 4 KiB
+# = 256 KiB per operand per call — small enough to stay latency-bound,
+# large enough to amortize dispatch (see EXPERIMENTS.md §Perf for the
+# batch-size sweep).
+BATCH_PAGES = 64
+PAGE_ELEMS = paged.PAGE_ELEMS
+MVT_N = 1024
+MVT_TILE_ROWS = 64
+
+
+def va_batch(a, b):
+    """c = a + b over a page batch (paper Listing 1)."""
+    return (paged.va_pages(a, b),)
+
+
+def bigc_batch(a, b):
+    return (paged.bigc_pages(a, b),)
+
+
+def query_batch(seconds, values):
+    """Per-page masked sums + match counts for the taxi queries."""
+    return (
+        paged.query_agg_pages(seconds, values),
+        paged.query_count_pages(seconds),
+    )
+
+
+def mvt_row_batch(a_rows, x):
+    """One MVT row-tile step: y_tile = A_rows @ x."""
+    return (paged.mvt_rows(a_rows, x, tile=8),)
+
+
+def atax_batch(a_rows, x):
+    """Fused ATAX over a row tile: y = A_rowsT (A_rows x)."""
+    tmp = paged.mvt_rows(a_rows, x, tile=8)
+    return (paged.atax_accum(a_rows, tmp, tile=128),)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+#: name → (fn, example_args)
+ENTRIES = {
+    "va_batch": (va_batch, (_f32(BATCH_PAGES, PAGE_ELEMS), _f32(BATCH_PAGES, PAGE_ELEMS))),
+    "bigc_batch": (bigc_batch, (_f32(BATCH_PAGES, PAGE_ELEMS), _f32(BATCH_PAGES, PAGE_ELEMS))),
+    "query_batch": (query_batch, (_i32(BATCH_PAGES, PAGE_ELEMS), _f32(BATCH_PAGES, PAGE_ELEMS))),
+    "mvt_row_batch": (mvt_row_batch, (_f32(MVT_TILE_ROWS, MVT_N), _f32(MVT_N))),
+    "atax_batch": (atax_batch, (_f32(MVT_TILE_ROWS, MVT_N), _f32(MVT_N))),
+}

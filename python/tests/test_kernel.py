@@ -1,0 +1,138 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and dtypes; every kernel must match its ref
+to float tolerance on randomized inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import paged, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, lo=-2.0, hi=2.0):
+    x = jax.random.uniform(key, shape, minval=lo, maxval=hi)
+    return x.astype(dtype)
+
+
+# ---- page-batch elementwise kernels -------------------------------------
+
+page_batches = st.tuples(
+    st.integers(min_value=1, max_value=16),  # B pages
+    st.sampled_from([8, 64, 256, 1024]),  # P elems per page
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+
+
+@given(page_batches)
+@settings(**SETTINGS)
+def test_va_pages_matches_ref(bp):
+    B, P, seed = bp
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = rand(k1, (B, P)), rand(k2, (B, P))
+    np.testing.assert_allclose(paged.va_pages(a, b), ref.va_pages(a, b), rtol=1e-6)
+
+
+@given(page_batches)
+@settings(**SETTINGS)
+def test_bigc_pages_matches_ref(bp):
+    B, P, seed = bp
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = rand(k1, (B, P)), rand(k2, (B, P))
+    np.testing.assert_allclose(
+        paged.bigc_pages(a, b), ref.bigc_pages(a, b), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_va_pages_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    a, b = rand(k1, (4, 128), dtype), rand(k2, (4, 128), dtype)
+    out = paged.va_pages(a, b)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        out.astype(jnp.float32),
+        ref.va_pages(a, b).astype(jnp.float32),
+        rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6,
+    )
+
+
+# ---- matvec tiles ---------------------------------------------------------
+
+mvt_shapes = st.tuples(
+    st.sampled_from([8, 16, 64]),  # T rows (multiple of tile 8)
+    st.sampled_from([16, 128, 512]),  # N cols (multiple of tile 128? no: cols free for mvt)
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@given(mvt_shapes)
+@settings(**SETTINGS)
+def test_mvt_rows_matches_ref(tns):
+    T, N, seed = tns
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, x = rand(k1, (T, N)), rand(k2, (N,))
+    np.testing.assert_allclose(
+        paged.mvt_rows(a, x), ref.mvt_rows(a, x), rtol=2e-5, atol=1e-5
+    )
+
+
+@given(
+    st.sampled_from([8, 32]),
+    st.sampled_from([128, 256, 1024]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_atax_accum_matches_ref(T, N, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, t = rand(k1, (T, N)), rand(k2, (T,))
+    np.testing.assert_allclose(
+        paged.atax_accum(a, t), ref.atax_accum(a, t), rtol=2e-5, atol=1e-5
+    )
+
+
+# ---- query aggregation ----------------------------------------------------
+
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.sampled_from([16, 256, 1024]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_query_agg_matches_ref(B, P, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    # Seconds around the threshold so the mask is non-trivial.
+    seconds = jax.random.randint(k1, (B, P), 0, 2 * ref.THRESHOLD_SECONDS, dtype=jnp.int32)
+    values = rand(k2, (B, P), lo=0.0, hi=50.0)
+    np.testing.assert_allclose(
+        paged.query_agg_pages(seconds, values),
+        ref.query_agg_pages(seconds, values),
+        rtol=1e-5,
+    )
+    np.testing.assert_array_equal(
+        paged.query_count_pages(seconds), ref.query_count_pages(seconds)
+    )
+
+
+def test_query_agg_empty_and_full_masks():
+    seconds = jnp.zeros((2, 64), jnp.int32)  # nothing matches
+    values = jnp.ones((2, 64), jnp.float32)
+    np.testing.assert_allclose(paged.query_agg_pages(seconds, values), [0.0, 0.0])
+    seconds = jnp.full((2, 64), ref.THRESHOLD_SECONDS + 1, jnp.int32)
+    np.testing.assert_allclose(paged.query_agg_pages(seconds, values), [64.0, 64.0])
+
+
+def test_mvt_rejects_untileable():
+    a = jnp.zeros((12, 16))  # 12 rows does not divide tile 8
+    x = jnp.zeros((16,))
+    with pytest.raises(AssertionError):
+        paged.mvt_rows(a, x, tile=8)

@@ -1,0 +1,76 @@
+"""L2 model-level checks: entry shapes, numerics of composed graphs, and
+AOT artifact emission (HLO text parses and names are stable)."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _example_inputs(name, seed=0):
+    _, args = model.ENTRIES[name]
+    key = jax.random.PRNGKey(seed)
+    vals = []
+    for a in args:
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(a.dtype, jnp.integer):
+            vals.append(jax.random.randint(sub, a.shape, 0, 18000, dtype=a.dtype))
+        else:
+            vals.append(jax.random.uniform(sub, a.shape, dtype=a.dtype, minval=-1, maxval=1))
+    return vals
+
+
+def test_all_entries_run_and_match_shapes():
+    for name, (fn, args) in model.ENTRIES.items():
+        vals = _example_inputs(name)
+        outs = fn(*vals)
+        expect = jax.eval_shape(fn, *args)
+        assert len(outs) == len(expect), name
+        for o, e in zip(outs, expect):
+            assert o.shape == e.shape, f"{name}: {o.shape} != {e.shape}"
+            assert o.dtype == e.dtype, name
+
+
+def test_va_batch_numerics():
+    a, b = _example_inputs("va_batch", seed=3)
+    (c,) = model.va_batch(a, b)
+    np.testing.assert_allclose(c, a + b, rtol=1e-6)
+
+
+def test_query_batch_numerics():
+    seconds, values = _example_inputs("query_batch", seed=4)
+    sums, counts = model.query_batch(seconds, values)
+    np.testing.assert_allclose(sums, ref.query_agg_pages(seconds, values), rtol=1e-5)
+    np.testing.assert_array_equal(counts, ref.query_count_pages(seconds))
+
+
+def test_atax_batch_composes():
+    a, x = _example_inputs("atax_batch", seed=5)
+    (y,) = model.atax_batch(a, x)
+    np.testing.assert_allclose(y, a.T @ (a @ x), rtol=2e-4, atol=1e-4)
+
+
+def test_aot_emits_parseable_hlo_and_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        line = aot.lower_entry("va_batch", d)
+        assert line.startswith("va_batch va_batch.hlo.txt ")
+        assert "->" in line
+        text = open(os.path.join(d, "va_batch.hlo.txt")).read()
+        assert "HloModule" in text
+        assert "f32[64,1024]" in text
+
+
+def test_aot_signature_format():
+    with tempfile.TemporaryDirectory() as d:
+        line = aot.lower_entry("query_batch", d)
+        # int32 seconds + f32 values → f32 sums + int32 counts
+        sig_in, sig_out = line.split(" ", 2)[2].split(" -> ")
+        assert sig_in == "int32[64,1024];float32[64,1024]"
+        assert sig_out == "float32[64];int32[64]"

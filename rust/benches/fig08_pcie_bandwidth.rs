@@ -1,0 +1,64 @@
+//! Fig 8 — Achieved PCIe bandwidth vs request size: GPUVM (1 and 2 NICs)
+//! vs CPU-initiated GPUDirect RDMA.
+//!
+//! Paper: GPUVM reaches the 6.5 GB/s single-NIC ceiling even at 4 KB and
+//! the full ~12–13 GB/s with 2 NICs; GDR only saturates at ≥512 KB.
+
+use gpuvm::apps::StreamWorkload;
+use gpuvm::baselines::{nic_ceiling, run_gdr};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::util::bench::banner;
+use gpuvm::util::csv::CsvWriter;
+
+fn gpuvm_bw(nics: usize, req: u64, payload: u64) -> f64 {
+    let mut cfg = SystemConfig::default();
+    cfg.rnic.num_nics = nics;
+    cfg.gpuvm.page_size = req;
+    cfg.gpu.mem_bytes = 1 << 30; // no eviction: pure transfer study
+    let mut w = StreamWorkload::new(payload, req, cfg.total_warps());
+    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).expect("gpuvm run");
+    r.metrics.throughput_in()
+}
+
+fn main() {
+    banner("Fig 8: achieved PCIe bandwidth vs request size");
+    let cfg = SystemConfig::default();
+    // Paper moves 12 GB; we scale the payload with the request size to
+    // keep runtimes in seconds while staying in steady state.
+    let mut csv = CsvWriter::bench_result(
+        "fig08_pcie_bandwidth",
+        &["request_kb", "gdr_1n_gbps", "gpuvm_1n_gbps", "gpuvm_2n_gbps"],
+    );
+    println!(
+        "{:>9} {:>12} {:>14} {:>14}",
+        "request", "GDR 1N", "GPUVM 1N", "GPUVM 2N"
+    );
+    for req_kb in [4u64, 8, 16, 32, 64, 128, 256, 512, 1024] {
+        let req = req_kb * 1024;
+        let payload = (req * 4096).clamp(64 << 20, 512 << 20);
+        let gdr = run_gdr(&cfg, payload, req).bandwidth();
+        let g1 = gpuvm_bw(1, req, payload);
+        let g2 = gpuvm_bw(2, req, payload);
+        println!(
+            "{:>7}KB {:>9.2} GB/s {:>11.2} GB/s {:>11.2} GB/s",
+            req_kb,
+            gdr / 1e9,
+            g1 / 1e9,
+            g2 / 1e9
+        );
+        csv.row([
+            req_kb.to_string(),
+            format!("{:.3}", gdr / 1e9),
+            format!("{:.3}", g1 / 1e9),
+            format!("{:.3}", g2 / 1e9),
+        ]);
+    }
+    csv.flush().unwrap();
+    println!(
+        "\npaper anchors: single-NIC ceiling {:.1} GB/s (GPUVM hits it at 4 KB);",
+        nic_ceiling(&cfg) / 1e9
+    );
+    println!("GDR saturates only at ≥512 KB; 2 NICs ≈ full PCIe 3.");
+    println!("csv: target/bench_results/fig08_pcie_bandwidth.csv");
+}

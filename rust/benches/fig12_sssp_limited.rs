@@ -1,0 +1,98 @@
+//! Fig 12 — SSSP with GPU memory limited to half the working set.
+//!
+//! Paper: with 16 GB of GPU memory (half the graph+weights), GPUVM's
+//! fine 8 KB eviction and reference counters give ≈1.9× speedup and
+//! 1.8× less redundant transfer than UVM's 2 MB VABlock eviction.
+
+use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::graph::{generate, DatasetId};
+use gpuvm::util::bench::{banner, fmt_bytes, fmt_ns};
+use gpuvm::util::csv::CsvWriter;
+use gpuvm::util::stats::geomean;
+use std::rc::Rc;
+
+fn main() {
+    banner("Fig 12: SSSP with limited GPU memory");
+    let scale = 1.0;
+    let mut csv = CsvWriter::bench_result(
+        "fig12_sssp_limited",
+        &["dataset", "uvm_ms", "gpuvm_ms", "speedup", "uvm_redundant_mb", "gpuvm_redundant_mb", "redundancy_ratio"],
+    );
+    println!(
+        "{:>4} {:>11} {:>11} {:>9} | {:>13} {:>13} {:>7}",
+        "DS", "UVM", "GPUVM", "speedup", "UVM redund.", "GPUVM redund.", "ratio"
+    );
+    let mut speedups = Vec::new();
+    let mut redratios = Vec::new();
+    for id in DatasetId::all() {
+        let ds = generate(id, scale, 42);
+        let g = Rc::new(ds.graph);
+        let working = g.edge_bytes() + g.weight_bytes() + (g.num_vertices as u64 * 12);
+        let mut cfg = SystemConfig::default();
+        // Modest concurrency: at 50 % memory the *concurrent* working
+        // set (slots × ~6 pages/groups) must stay well under capacity,
+        // or both systems thrash for scaling reasons the paper's 16 GB
+        // testbed never sees. 8 slots over a 2×-scale graph keeps the
+        // concurrent set ≈ 5 % of capacity, as on the real machine.
+        cfg.gpu.sms = 4;
+        cfg.gpu.warps_per_sm = 2;
+        cfg.gpuvm.page_size = 8192;
+        cfg.rnic.num_nics = 2;
+        let floor = (cfg.gpu.sms * cfg.gpu.warps_per_sm) as u64 * 10 * cfg.gpuvm.page_size;
+        cfg.gpu.mem_bytes = (working / 2).max(floor); // the paper's 16 GB-of-32 regime
+        // Scaling adjustment (EXPERIMENTS.md §Fig 12): the real 2 MB
+        // VABlock is 0.01 % of a 16 GB pool; at our ~MB-scale pools a
+        // literal 2 MB would be a quarter of memory and UVM would thrash
+        // beyond anything the paper measured. Keep the eviction block a
+        // small fixed fraction of memory instead (still 8–64× coarser
+        // than GPUVM's single 8 KB page).
+        cfg.uvm.evict_block = (cfg.gpu.mem_bytes / 16)
+            .next_power_of_two()
+            .clamp(cfg.uvm.prefetch_size, 2 << 20);
+        let src = g.pick_sources(1, 2, &mut gpuvm::util::rng::Rng::new(3))[0];
+
+        let layout = Layout::Balanced { chunk_edges: 2048 };
+        let mut wg = GraphWorkload::new(GraphAlgo::Sssp, layout, g.clone(), src, 8192);
+        let rg = simulate(&cfg, &mut wg, MemSysKind::GpuVm).expect("gpuvm");
+        let mut wu = GraphWorkload::new(GraphAlgo::Sssp, layout, g.clone(), src, 8192);
+        let ru = simulate(&cfg, &mut wu, MemSysKind::Uvm).expect("uvm");
+
+        // Redundant transfer = refetched bytes.
+        let red_u = ru.metrics.refetches * cfg.uvm.prefetch_size;
+        let red_g = rg.metrics.refetches * cfg.gpuvm.page_size;
+        let speed = ru.metrics.finish_ns as f64 / rg.metrics.finish_ns as f64;
+        let ratio = red_u as f64 / red_g.max(1) as f64;
+        speedups.push(speed);
+        if red_g > 0 {
+            redratios.push(ratio);
+        }
+        println!(
+            "{:>4} {:>11} {:>11} {:>8.2}× | {:>13} {:>13} {:>6.1}×",
+            id.abbr(),
+            fmt_ns(ru.metrics.finish_ns),
+            fmt_ns(rg.metrics.finish_ns),
+            speed,
+            fmt_bytes(red_u),
+            fmt_bytes(red_g),
+            ratio
+        );
+        csv.row([
+            id.abbr().to_string(),
+            format!("{:.3}", ru.metrics.finish_ns as f64 / 1e6),
+            format!("{:.3}", rg.metrics.finish_ns as f64 / 1e6),
+            format!("{speed:.3}"),
+            format!("{:.3}", red_u as f64 / 1e6),
+            format!("{:.3}", red_g as f64 / 1e6),
+            format!("{ratio:.3}"),
+        ]);
+    }
+    csv.flush().unwrap();
+    println!(
+        "\ngeomean speedup {:.2}× (paper 1.9×); redundant-transfer ratio {:.2}× (paper 1.8×)",
+        geomean(&speedups),
+        geomean(&redratios)
+    );
+    println!("csv: target/bench_results/fig12_sssp_limited.csv");
+}

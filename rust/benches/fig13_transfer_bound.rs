@@ -1,0 +1,90 @@
+//! Fig 13 — Transfer-bound applications (MVT, ATAX, BIGC, VA):
+//! performance bars + PCIe-utilization lines.
+//!
+//! Paper: GPUVM ≈4× over UVM with 2 NICs (≈2× with 1) on the matrix
+//! column-walk kernels, ≈2× on VA, with far better PCIe utilization.
+
+use gpuvm::apps::{MatrixApp, MatrixSeq, VaWorkload};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::gpu::kernel::Workload;
+use gpuvm::util::bench::{banner, fmt_ns};
+use gpuvm::util::csv::CsvWriter;
+
+fn make(app: &str, page: u64) -> Box<dyn Workload> {
+    match app {
+        "mvt" => Box::new(MatrixSeq::new(MatrixApp::Mvt, 8192, page)),
+        "atax" => Box::new(MatrixSeq::new(MatrixApp::Atax, 8192, page)),
+        "bigc" => Box::new(MatrixSeq::new(MatrixApp::Bigc, 8192, page)),
+        _ => Box::new(VaWorkload::new(4 << 20, page)),
+    }
+}
+
+/// PCIe utilization: achieved inbound bandwidth over what the data path
+/// could carry (direct link for UVM; NIC ceiling × NICs for GPUVM).
+fn utilization(cfg: &SystemConfig, kind: MemSysKind, bw: f64) -> f64 {
+    let capacity = match kind {
+        MemSysKind::Uvm | MemSysKind::Ideal => cfg.pcie.link_bw,
+        MemSysKind::GpuVm => {
+            gpuvm::baselines::nic_ceiling(cfg) * cfg.rnic.num_nics as f64
+        }
+    };
+    (bw / capacity).min(1.0)
+}
+
+fn main() {
+    banner("Fig 13: transfer-bound apps — performance + PCIe utilization");
+    let mut csv = CsvWriter::bench_result(
+        "fig13_transfer_bound",
+        &["app", "uvm_ms", "gpuvm1_ms", "gpuvm2_ms", "speedup1", "speedup2",
+          "uvm_util", "gpuvm1_util", "gpuvm2_util"],
+    );
+    println!(
+        "{:<6} {:>11} {:>11} {:>11} | {:>7} {:>7} | {:>6} {:>6} {:>6}",
+        "app", "UVM", "G-1N", "G-2N", "spd 1N", "spd 2N", "uU", "uG1", "uG2"
+    );
+    for app in ["mvt", "atax", "bigc", "va"] {
+        let mut cfg = SystemConfig::default();
+        cfg.gpu.sms = 28;
+        cfg.gpu.warps_per_sm = 8;
+        cfg.gpuvm.page_size = 4096;
+        cfg.gpu.mem_bytes = 64 << 20; // workloads fit (paper §5.3)
+
+        let u = simulate(&cfg, make(app, 4096).as_mut(), MemSysKind::Uvm).unwrap();
+        let g1 = simulate(&cfg, make(app, 4096).as_mut(), MemSysKind::GpuVm).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.rnic.num_nics = 2;
+        let g2 = simulate(&cfg2, make(app, 4096).as_mut(), MemSysKind::GpuVm).unwrap();
+
+        let (tu, t1, t2) = (u.metrics.finish_ns, g1.metrics.finish_ns, g2.metrics.finish_ns);
+        let uu = utilization(&cfg, MemSysKind::Uvm, u.metrics.throughput_in());
+        let u1 = utilization(&cfg, MemSysKind::GpuVm, g1.metrics.throughput_in());
+        let u2 = utilization(&cfg2, MemSysKind::GpuVm, g2.metrics.throughput_in());
+        println!(
+            "{:<6} {:>11} {:>11} {:>11} | {:>6.2}× {:>6.2}× | {:>5.0}% {:>5.0}% {:>5.0}%",
+            app,
+            fmt_ns(tu),
+            fmt_ns(t1),
+            fmt_ns(t2),
+            tu as f64 / t1 as f64,
+            tu as f64 / t2 as f64,
+            uu * 100.0,
+            u1 * 100.0,
+            u2 * 100.0
+        );
+        csv.row([
+            app.to_string(),
+            format!("{:.3}", tu as f64 / 1e6),
+            format!("{:.3}", t1 as f64 / 1e6),
+            format!("{:.3}", t2 as f64 / 1e6),
+            format!("{:.3}", tu as f64 / t1 as f64),
+            format!("{:.3}", tu as f64 / t2 as f64),
+            format!("{uu:.3}"),
+            format!("{u1:.3}"),
+            format!("{u2:.3}"),
+        ]);
+    }
+    csv.flush().unwrap();
+    println!("\npaper anchors: MVT/ATAX/BIGC ≈4× (2N) / ≈2× (1N); VA ≈2×; GPUVM PCIe utilization ≫ UVM.");
+    println!("csv: target/bench_results/fig13_transfer_bound.csv");
+}

@@ -1,0 +1,80 @@
+//! Fig 15 — Query evaluation: RAPIDS-like vs UVM vs GPUVM (1N/2N) on the
+//! five taxi queries at 0.08 % selectivity.
+//!
+//! Paper: UVM is ~1.5×/3× slower than RAPIDS/GPUVM; GPUVM-2N beats
+//! RAPIDS up to 2.5× (Q5) and halves I/O amplification.
+
+use gpuvm::apps::{QueryWorkload, TaxiTable, NUM_QUERIES, QUERY_NAMES};
+use gpuvm::baselines::run_rapids;
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::util::bench::{banner, fmt_ns};
+use gpuvm::util::csv::CsvWriter;
+use std::rc::Rc;
+
+fn main() {
+    banner("Fig 15: query evaluation — RAPIDS vs UVM vs GPUVM");
+    let rows = 2 << 20;
+    let table = Rc::new(TaxiTable::generate(rows, 7));
+    println!(
+        "table: {rows} rows, {} matches ({:.3}% selectivity; paper 0.08%)\n",
+        table.matches.len(),
+        table.selectivity() * 100.0
+    );
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = 28;
+    cfg.gpu.warps_per_sm = 8;
+    cfg.gpuvm.page_size = 4096; // paper: 4 KB pages for queries
+    cfg.gpu.mem_bytes = 32 << 20;
+
+    let mut csv = CsvWriter::bench_result(
+        "fig15_query_eval",
+        &["query", "rapids_ms", "uvm_ms", "gpuvm1_ms", "gpuvm2_ms",
+          "amp_rapids", "amp_uvm", "amp_gpuvm"],
+    );
+    println!(
+        "{:<10} {:>11} {:>11} {:>11} {:>11} | {:>7} {:>7} {:>7}",
+        "query", "RAPIDS", "UVM", "G-1N", "G-2N", "ampR", "ampU", "ampG"
+    );
+    for q in 0..NUM_QUERIES {
+        let rap = run_rapids(&cfg, &table, q);
+        let u = {
+            let mut w = QueryWorkload::new(table.clone(), q, 4096);
+            simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap()
+        };
+        let g1 = {
+            let mut w = QueryWorkload::new(table.clone(), q, 4096);
+            simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap()
+        };
+        let g2 = {
+            let mut c = cfg.clone();
+            c.rnic.num_nics = 2;
+            let mut w = QueryWorkload::new(table.clone(), q, 4096);
+            simulate(&c, &mut w, MemSysKind::GpuVm).unwrap()
+        };
+        println!(
+            "{:<10} {:>11} {:>11} {:>11} {:>11} | {:>6.2}× {:>6.2}× {:>6.2}×",
+            QUERY_NAMES[q],
+            fmt_ns(rap.total_ns),
+            fmt_ns(u.metrics.finish_ns),
+            fmt_ns(g1.metrics.finish_ns),
+            fmt_ns(g2.metrics.finish_ns),
+            rap.io_amplification(),
+            u.metrics.io_amplification(),
+            g1.metrics.io_amplification(),
+        );
+        csv.row([
+            QUERY_NAMES[q].to_string(),
+            format!("{:.3}", rap.total_ns as f64 / 1e6),
+            format!("{:.3}", u.metrics.finish_ns as f64 / 1e6),
+            format!("{:.3}", g1.metrics.finish_ns as f64 / 1e6),
+            format!("{:.3}", g2.metrics.finish_ns as f64 / 1e6),
+            format!("{:.3}", rap.io_amplification()),
+            format!("{:.3}", u.metrics.io_amplification()),
+            format!("{:.3}", g1.metrics.io_amplification()),
+        ]);
+    }
+    csv.flush().unwrap();
+    println!("\npaper anchors: time GPUVM-2N < RAPIDS < UVM; GPUVM amplification ≈ half of RAPIDS'.");
+    println!("csv: target/bench_results/fig15_query_eval.csv");
+}

@@ -1,0 +1,52 @@
+//! Simulator micro-benchmarks (§Perf): wallclock cost of the DES hot
+//! paths — event throughput, page-table ops, the end-to-end fig09-style
+//! run — tracked across the optimization pass in EXPERIMENTS.md §Perf.
+
+use gpuvm::apps::StreamWorkload;
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::sim::Engine;
+use gpuvm::util::bench::{banner, time};
+use gpuvm::util::csv::CsvWriter;
+
+fn main() {
+    banner("microbench: simulator hot paths");
+    let mut csv = CsvWriter::bench_result("microbench", &["name", "mean_ms", "throughput"]);
+
+    // 1. Raw engine throughput.
+    let t = time("engine push+pop 1M events", 1, 5, || {
+        let mut e: Engine<u64> = Engine::new();
+        for i in 0..1_000_000u64 {
+            e.schedule(i % 10_000, i);
+        }
+        while e.pop().is_some() {}
+    });
+    let evps = 2_000_000.0 / t.mean_s;
+    println!("{}  → {:.1} M events/s", t.report(), evps / 1e6);
+    csv.row([t.name.clone(), format!("{:.3}", t.mean_s * 1e3), format!("{evps:.0}")]);
+
+    // 2. Full GPUVM streaming run (the fig08 inner loop).
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.mem_bytes = 256 << 20;
+    let t = time("gpuvm stream 32MiB @4K (full machine)", 1, 5, || {
+        let mut w = StreamWorkload::new(32 << 20, 4096, cfg.total_warps());
+        let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+        std::hint::black_box(r.metrics.finish_ns);
+    });
+    let faults = (32u64 << 20) / 4096;
+    println!("{}  → {:.0} k faults/s simulated", t.report(), faults as f64 / t.mean_s / 1e3);
+    csv.row([t.name.clone(), format!("{:.3}", t.mean_s * 1e3),
+             format!("{:.0}", faults as f64 / t.mean_s)]);
+
+    // 3. UVM path.
+    let t = time("uvm stream 32MiB @4K (full machine)", 1, 5, || {
+        let mut w = StreamWorkload::new(32 << 20, 4096, cfg.total_warps());
+        let r = simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap();
+        std::hint::black_box(r.metrics.finish_ns);
+    });
+    println!("{}", t.report());
+    csv.row([t.name.clone(), format!("{:.3}", t.mean_s * 1e3), String::new()]);
+
+    csv.flush().unwrap();
+    println!("\ncsv: target/bench_results/microbench.csv");
+}

@@ -1,0 +1,88 @@
+//! Application workloads: the paper's full benchmark set.
+//!
+//! - Graph analytics (§5.2): BFS, CC, SSSP over the Table 2 datasets.
+//! - Transfer-bound kernels (§5.3): MVT, ATAX, BIGC, VA.
+//! - Query evaluation (§5.5): Q1–Q5 over the taxi-shaped table.
+
+pub mod graph;
+pub mod matrix;
+pub mod query;
+pub mod stream;
+pub mod va;
+
+pub use graph::{GraphAlgo, GraphWorkload, Layout};
+pub use matrix::{MatrixApp, MatrixSeq, MatrixWorkload};
+pub use query::{QueryWorkload, TaxiTable, NUM_QUERIES, QUERY_NAMES};
+pub use stream::StreamWorkload;
+pub use va::VaWorkload;
+
+use crate::gpu::kernel::Workload;
+
+/// Build a workload by name (CLI/`gpuvm run` entry point). Graph apps use
+/// the GK-shaped default dataset unless a dataset abbreviation is given
+/// as `bfs:GU`; an optional third component picks the layout
+/// (`bfs:GU:naive` or `:balanced`, the default).
+pub fn by_name(spec: &str, page_size: u64, seed: u64) -> anyhow::Result<Box<dyn Workload>> {
+    let mut parts = spec.splitn(3, ':');
+    let name = parts.next().unwrap_or(spec);
+    let ds = parts.next().unwrap_or("GK");
+    let layout_s = parts.next().unwrap_or("balanced");
+    let dataset = || -> anyhow::Result<std::rc::Rc<crate::graph::Csr>> {
+        let id = match ds {
+            "GU" => crate::graph::DatasetId::GU,
+            "GK" => crate::graph::DatasetId::GK,
+            "FS" => crate::graph::DatasetId::FS,
+            "MO" => crate::graph::DatasetId::MO,
+            _ => anyhow::bail!("unknown dataset '{ds}' (GU|GK|FS|MO)"),
+        };
+        Ok(std::rc::Rc::new(crate::graph::generate(id, 1.0, seed).graph))
+    };
+    let balanced = match layout_s {
+        "naive" => Layout::Csr { vertices_per_warp: 8 },
+        _ => Layout::Balanced { chunk_edges: 2048 },
+    };
+    // Matrix apps accept an `@N` size suffix (e.g. `mvt@4096`).
+    let (name, msize) = match name.split_once('@') {
+        Some((n, s)) => (n, s.parse().unwrap_or(2048)),
+        None => (name, 2048usize),
+    };
+    Ok(match name {
+        "va" => Box::new(VaWorkload::new(4 << 20, page_size)),
+        "mvt" => Box::new(MatrixSeq::new(MatrixApp::Mvt, msize, page_size)),
+        "atax" => Box::new(MatrixSeq::new(MatrixApp::Atax, msize, page_size)),
+        "bigc" => Box::new(MatrixSeq::new(MatrixApp::Bigc, msize, page_size)),
+        "bfs" => Box::new(GraphWorkload::new(GraphAlgo::Bfs, balanced, dataset()?, 0, page_size)),
+        "cc" => Box::new(GraphWorkload::new(GraphAlgo::Cc, balanced, dataset()?, 0, page_size)),
+        "sssp" => Box::new(GraphWorkload::new(GraphAlgo::Sssp, balanced, dataset()?, 0, page_size)),
+        "query" | "q1" | "q2" | "q3" | "q4" | "q5" => {
+            let q = match name {
+                "q2" => 1,
+                "q3" => 2,
+                "q4" => 3,
+                "q5" => 4,
+                _ => 0,
+            };
+            let table = std::rc::Rc::new(TaxiTable::generate(1 << 20, seed));
+            Box::new(QueryWorkload::new(table, q, page_size))
+        }
+        other => anyhow::bail!(
+            "unknown app '{other}' (va|mvt|atax|bigc|bfs|cc|sssp|q1..q5; graph apps accept :GU/:GK/:FS/:MO)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in ["va", "mvt", "atax", "bigc", "q1", "q5"] {
+            assert!(by_name(name, 4096, 1).is_ok(), "{name}");
+        }
+        // Graph apps are slower to build (reference algo); just one.
+        assert!(by_name("bfs:GU", 4096, 1).is_ok());
+        assert!(by_name("nope", 4096, 1).is_err());
+        assert!(by_name("bfs:XX", 4096, 1).is_err());
+    }
+}

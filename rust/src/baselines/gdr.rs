@@ -1,0 +1,134 @@
+//! CPU-initiated GPUDirect-RDMA bulk transfer — the Fig 8 baseline.
+//!
+//! 16 host threads issue synchronous RDMA requests of a fixed
+//! scatter-gather size until the payload (12 GB in the paper) has moved
+//! host-mem → NIC → GPU. The CPU side serializes request *issue* through
+//! the host verbs/runtime stack (`gdr.issue_overhead_us` — calibrated so
+//! GDR only saturates the link at ≥512 KB requests, Fig 8): the paper's
+//! point is precisely that a CPU cannot generate small requests at the
+//! rate 1 344 GPU warps can.
+
+use crate::config::SystemConfig;
+use crate::pcie::{Dir, Topology};
+use crate::sim::{ns_for_bytes, us, SimTime};
+
+#[derive(Debug, Clone)]
+pub struct GdrResult {
+    pub request_bytes: u64,
+    pub total_bytes: u64,
+    pub finish_ns: SimTime,
+    pub requests: u64,
+}
+
+impl GdrResult {
+    pub fn bandwidth(&self) -> f64 {
+        if self.finish_ns == 0 {
+            return 0.0;
+        }
+        self.total_bytes as f64 / (self.finish_ns as f64 / 1e9)
+    }
+}
+
+/// Transfer `total_bytes` with requests of `request_bytes`, striped over
+/// the configured NICs.
+pub fn run_gdr(cfg: &SystemConfig, total_bytes: u64, request_bytes: u64) -> GdrResult {
+    assert!(request_bytes > 0);
+    let mut topo = Topology::new(cfg);
+    let threads = cfg.gdr.threads.max(1);
+    let issue = us(cfg.gdr.issue_overhead_us);
+    let verb = us(cfg.rnic.verb_latency_us);
+    let requests = total_bytes.div_ceil(request_bytes);
+
+    // Per-thread completion horizon; the issue path is a single shared
+    // serialization point (the host runtime lock + doorbell MMIO).
+    let mut thread_free: Vec<SimTime> = vec![0; threads];
+    let mut issue_free: SimTime = 0;
+    let mut finish: SimTime = 0;
+
+    for r in 0..requests {
+        let t = (r % threads as u64) as usize;
+        // Thread must be idle (synchronous requests) and take the issue lock.
+        let start = thread_free[t].max(issue_free);
+        issue_free = start + issue;
+        let nic = (r % cfg.rnic.num_nics as u64) as usize;
+        let path = topo.path_via_nic(nic, 0, Dir::In);
+        let delivered = topo.transfer(issue_free, request_bytes, &path);
+        let done = delivered.max(start + verb);
+        thread_free[t] = done;
+        finish = finish.max(done);
+    }
+    GdrResult {
+        request_bytes,
+        total_bytes,
+        finish_ns: finish,
+        requests,
+    }
+}
+
+/// Analytic upper bound on a single NIC's usable one-direction bandwidth
+/// (the Fig 8 plateau): the shared bridge is crossed twice.
+pub fn nic_ceiling(cfg: &SystemConfig) -> f64 {
+    if cfg.pcie.nic_bridge_shared {
+        cfg.pcie.link_bw / 2.0
+    } else {
+        cfg.pcie.link_bw
+    }
+}
+
+/// Time for one unloaded request of `bytes` (Fig 2-style component).
+pub fn unloaded_request_ns(cfg: &SystemConfig, bytes: u64) -> SimTime {
+    us(cfg.rnic.verb_latency_us).max(ns_for_bytes(bytes, nic_ceiling(cfg)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_requests_underutilize() {
+        let cfg = SystemConfig::default();
+        let r = run_gdr(&cfg, 256 << 20, 4 * 1024);
+        // 4 KB / 72 µs serialized issue ≈ 0.06 GB/s — nowhere near 6.5.
+        assert!(
+            r.bandwidth() < 0.5e9,
+            "4 KB GDR bw {:.2e} should be tiny",
+            r.bandwidth()
+        );
+    }
+
+    #[test]
+    fn large_requests_saturate() {
+        let cfg = SystemConfig::default();
+        let r = run_gdr(&cfg, 2 << 30, 1 << 20);
+        let ceiling = nic_ceiling(&cfg);
+        assert!(
+            r.bandwidth() > 0.85 * ceiling,
+            "1 MB GDR bw {:.2e} vs ceiling {ceiling:.2e}",
+            r.bandwidth()
+        );
+    }
+
+    #[test]
+    fn crossover_near_512k() {
+        // Fig 8: GDR reaches the plateau only at ≥512 KB.
+        let cfg = SystemConfig::default();
+        let ceiling = nic_ceiling(&cfg);
+        let at_256k = run_gdr(&cfg, 1 << 30, 256 * 1024).bandwidth();
+        let at_512k = run_gdr(&cfg, 1 << 30, 512 * 1024).bandwidth();
+        assert!(at_256k < 0.85 * ceiling, "256 KB already saturated: {at_256k:.2e}");
+        assert!(at_512k > 0.75 * ceiling, "512 KB not saturated: {at_512k:.2e}");
+    }
+
+    #[test]
+    fn two_nics_double() {
+        let mut cfg = SystemConfig::default();
+        cfg.rnic.num_nics = 2;
+        let one = {
+            let mut c1 = cfg.clone();
+            c1.rnic.num_nics = 1;
+            run_gdr(&c1, 2 << 30, 1 << 20).bandwidth()
+        };
+        let two = run_gdr(&cfg, 2 << 30, 1 << 20).bandwidth();
+        assert!(two > 1.7 * one, "2 NICs {two:.2e} vs 1 NIC {one:.2e}");
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's comparison systems, reimplemented: CPU-initiated
+//! GPUDirect-RDMA bulk transfer (Fig 8), Subway's partition-and-copy
+//! graph engine (Table 3), and a RAPIDS-like bulk-column query engine
+//! (Fig 15). UVM lives in `crate::uvm` since it is a full memory system.
+
+pub mod gdr;
+pub mod rapids_like;
+pub mod subway;
+
+pub use gdr::{nic_ceiling, run_gdr, GdrResult};
+pub use rapids_like::{run_rapids, RapidsResult};
+pub use subway::{run_subway, SubwayAlgo, SubwayResult};

@@ -1,0 +1,142 @@
+//! Subway baseline (Sabet et al., EuroSys'20) — Table 3's comparator.
+//!
+//! Subway minimizes out-of-GPU-memory transfer by building, each
+//! iteration, the *active subgraph* (frontier vertices + their edges) on
+//! the CPU, bulk-copying it to the GPU, and traversing it there. We
+//! reproduce that loop: per iteration, a CPU partition/compaction pass
+//! over the active edges, a `cudaMemcpy`-style bulk transfer over the
+//! direct PCIe path, and a GPU traversal phase at device-memory speed.
+//! Subway addresses vertices with 32-bit ids, so graphs in the 2³²-edge
+//! class (MOLIERE) are unsupported — as noted in the paper's Table 3.
+
+use crate::config::SystemConfig;
+use crate::graph::{algo, Csr};
+use crate::pcie::{Dir, Topology};
+use crate::sim::{ns_for_bytes, us, SimTime};
+
+#[derive(Debug, Clone)]
+pub struct SubwayResult {
+    pub iterations: usize,
+    pub preprocess_ns: SimTime,
+    pub transfer_ns: SimTime,
+    pub compute_ns: SimTime,
+    pub total_ns: SimTime,
+    pub bytes_transferred: u64,
+}
+
+/// CPU-side subgraph compaction throughput (edges/s): a parallel
+/// scan+scatter over 8-byte edge records on the 2×32-core host
+/// (memory-bandwidth bound, ~12 GB/s effective).
+const CPU_COMPACT_EDGES_PER_SEC: f64 = 1.5e9;
+/// GPU traversal throughput on a resident subgraph (edges/s): V100-class
+/// BFS/CC sustains a few billion traversed edges per second.
+const GPU_TRAVERSE_EDGES_PER_SEC: f64 = 3.0e9;
+/// Fixed per-iteration overhead (kernel launches, stream sync), µs.
+const ITER_FIXED_US: f64 = 20.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubwayAlgo {
+    Bfs,
+    Cc,
+}
+
+/// Run Subway's iteration loop for `algo` from `src`.
+pub fn run_subway(cfg: &SystemConfig, g: &Csr, which: SubwayAlgo, src: u32) -> SubwayResult {
+    assert!(
+        (g.num_vertices as u64) < (1u64 << 32),
+        "Subway is limited to < 2^32 vertices (paper Table 3)"
+    );
+    let mut topo = Topology::new(cfg);
+    // Active vertex sets per iteration (CC processes only the vertices
+    // whose label changed last round, as Subway's active-subgraph build
+    // does).
+    let actives: Vec<Vec<u32>> = match which {
+        SubwayAlgo::Bfs => algo::bfs_frontiers(g, src),
+        SubwayAlgo::Cc => algo::cc_rounds(g).1,
+    };
+
+    let mut now: SimTime = 0;
+    let mut preprocess = 0u64;
+    let mut transfer = 0u64;
+    let mut compute = 0u64;
+    let mut bytes_total = 0u64;
+
+    for active in actives.iter().filter(|a| !a.is_empty()) {
+        let active_edges: u64 = active.iter().map(|&v| g.degree(v as usize)).sum();
+        // 1. CPU compaction: scan the active vertices' adjacency and pack
+        //    the subgraph (offsets + neighbors). Serial with respect to
+        //    the rest of the iteration (needs last round's results).
+        let pre = ns_for_bytes(
+            active_edges * 8,
+            CPU_COMPACT_EDGES_PER_SEC * 8.0,
+        );
+        preprocess += pre;
+        now += pre + us(ITER_FIXED_US);
+        // 2+3. Bulk copy + GPU traversal: Subway streams partitions, so
+        //    the copy of partition k+1 overlaps the traversal of k —
+        //    the iteration pays max(transfer, compute).
+        let bytes = active.len() as u64 * 12 + active_edges * 4;
+        bytes_total += bytes;
+        let path = topo.path_direct(0, Dir::In);
+        let arrive = topo.transfer(now, bytes, &path);
+        let xfer = arrive - now;
+        transfer += xfer;
+        let comp = (active_edges as f64 / GPU_TRAVERSE_EDGES_PER_SEC * 1e9) as u64;
+        compute += comp;
+        now += xfer.max(comp);
+    }
+
+    SubwayResult {
+        iterations: actives.iter().filter(|a| !a.is_empty()).count(),
+        preprocess_ns: preprocess,
+        transfer_ns: transfer,
+        compute_ns: compute,
+        total_ns: now,
+        bytes_transferred: bytes_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn runs_bfs_and_cc() {
+        let cfg = SystemConfig::default();
+        let g = gen::rmat(4096, 65_536, 5);
+        let bfs = run_subway(&cfg, &g, SubwayAlgo::Bfs, 0);
+        assert!(bfs.iterations >= 1);
+        assert!(bfs.total_ns > 0);
+        assert!(bfs.bytes_transferred > 0);
+        let cc = run_subway(&cfg, &g, SubwayAlgo::Cc, 0);
+        assert!(cc.total_ns > bfs.total_ns, "CC touches all edges each round");
+    }
+
+    #[test]
+    fn preprocessing_is_nontrivial_share() {
+        // Subway's weakness: the CPU partition pass is serial work GPUVM
+        // does not pay.
+        let cfg = SystemConfig::default();
+        let g = gen::rmat(8192, 262_144, 9);
+        let r = run_subway(&cfg, &g, SubwayAlgo::Cc, 0);
+        assert!(
+            r.preprocess_ns * 5 > r.transfer_ns,
+            "pre {} vs xfer {}",
+            r.preprocess_ns,
+            r.transfer_ns
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "2^32")]
+    fn rejects_moliere_class() {
+        // Simulate the 2^32 limit with a fake vertex count by
+        // constructing a graph wrapper — from_edges can't build one that
+        // big, so we assert the guard directly.
+        let cfg = SystemConfig::default();
+        let mut g = gen::uniform(16, 32, 1);
+        g.num_vertices = 1 << 32; // forged, to exercise the guard
+        run_subway(&cfg, &g, SubwayAlgo::Bfs, 0);
+    }
+}

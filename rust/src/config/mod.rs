@@ -1,0 +1,7 @@
+//! Configuration: TOML-subset parser + the typed simulated-testbed config.
+
+pub mod system;
+pub mod toml;
+
+pub use system::{EvictionPolicy, GdrConfig, GpuConfig, GpuVmConfig, PcieConfig, RnicConfig,
+    SystemConfig, UvmConfig};

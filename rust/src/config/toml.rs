@@ -1,0 +1,206 @@
+//! A small TOML-subset parser (offline build: no `serde`/`toml`).
+//!
+//! Supported: `[section]` headers, `key = value` pairs, `#` comments,
+//! values of type string (`"..."`), bool, integer (with `k`/`m`/`g`
+//! binary suffixes), float, and flat arrays of scalars. This covers the
+//! repo's system-config files; nested tables are intentionally out of
+//! scope.
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+    /// Floats accept ints too (the common config-file sloppiness).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+}
+
+/// `section -> key -> value`; keys before any section land in `""`.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse(text: &str) -> Result<Doc, TomlError> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError::Parse(lineno + 1, "unterminated section".into()))?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| TomlError::Parse(lineno + 1, format!("expected key = value: '{line}'")))?;
+        let value = parse_value(v.trim())
+            .ok_or_else(|| TomlError::Parse(lineno + 1, format!("bad value: '{}'", v.trim())))?;
+        doc.entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"')?;
+        return Some(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']')?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Some(Value::List(items));
+    }
+    // Integers, with binary size suffixes.
+    if let Some(v) = crate::util::cli::parse_u64_with_suffix(s) {
+        // distinguish float-looking strings like "1.5" without suffix
+        if !s.contains('.') || s.ends_with(['k', 'K', 'm', 'M', 'g', 'G']) {
+            return Some(Value::Int(v as i64));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            top = 1
+            [gpu]           # the device
+            sms = 84
+            mem = 2m        # binary suffix
+            clock_ghz = 1.38
+            name = "v100"
+            enabled = true
+            list = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"].as_int(), Some(1));
+        assert_eq!(doc["gpu"]["sms"].as_int(), Some(84));
+        assert_eq!(doc["gpu"]["mem"].as_u64(), Some(2 * 1024 * 1024));
+        assert_eq!(doc["gpu"]["clock_ghz"].as_f64(), Some(1.38));
+        assert_eq!(doc["gpu"]["name"].as_str(), Some("v100"));
+        assert_eq!(doc["gpu"]["enabled"].as_bool(), Some(true));
+        assert_eq!(doc["gpu"]["list"].as_list().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn float_vs_suffixed() {
+        let doc = parse("a = 1.5\nb = 1.5k\n").unwrap();
+        assert_eq!(doc[""]["a"].as_f64(), Some(1.5));
+        assert_eq!(doc[""]["b"].as_u64(), Some(1536));
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = parse("s = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc[""]["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn int_accepted_as_f64() {
+        let doc = parse("x = 3\n").unwrap();
+        assert_eq!(doc[""]["x"].as_f64(), Some(3.0));
+    }
+}

@@ -1,0 +1,239 @@
+//! The paged-compute path: stream pages of real data through the PJRT
+//! executables compiled from the Pallas kernels.
+//!
+//! The DES executor decides *when* pages move (simulated time); this
+//! module performs the *functional* computation the GPU would do on the
+//! resident pages, in page batches matching the AOT shapes
+//! (`model.BATCH_PAGES` × `model.PAGE_ELEMS`). Results are verified
+//! against pure-Rust references — the end-to-end proof that L3
+//! coordination, L2 graphs, and L1 kernels compose.
+
+use crate::apps::query::TaxiTable;
+use crate::mem::{HostMemory, PageId, RegionId};
+use crate::runtime::{Runtime, Tensor};
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// AOT batch geometry (must match python/compile/model.py).
+pub const BATCH_PAGES: usize = 64;
+pub const PAGE_ELEMS: usize = 1024;
+pub const PAGE_BYTES: u64 = (PAGE_ELEMS * 4) as u64;
+
+/// Outcome of a PJRT compute pass.
+#[derive(Debug, Clone)]
+pub struct ComputeReport {
+    pub artifact: String,
+    pub batches: u64,
+    pub elements: u64,
+    pub wall: std::time::Duration,
+    pub verified: bool,
+    pub max_abs_err: f64,
+}
+
+impl ComputeReport {
+    pub fn throughput_elems_per_sec(&self) -> f64 {
+        self.elements as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Read `count` f32 pages of `region` starting at page `first` into a
+/// flat buffer (zero-padded past the region end).
+fn read_pages_f32(hm: &HostMemory, region: RegionId, first: u64, count: usize) -> Vec<f32> {
+    let r = hm.region(region);
+    let mut out = vec![0f32; count * PAGE_ELEMS];
+    for p in 0..count as u64 {
+        let page_idx = first + p;
+        if page_idx >= r.num_pages {
+            break;
+        }
+        let page = PageId(r.base_page + page_idx);
+        if let Some(bytes) = hm.read_page(page) {
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                out[p as usize * PAGE_ELEMS + i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+    }
+    out
+}
+
+/// Write a flat f32 buffer back as pages of `region`.
+fn write_pages_f32(
+    hm: &mut HostMemory,
+    region: RegionId,
+    first: u64,
+    data: &[f32],
+) -> Result<()> {
+    let r_pages = hm.region(region).num_pages;
+    let base = hm.region(region).base_page;
+    for (p, chunk) in data.chunks(PAGE_ELEMS).enumerate() {
+        let page_idx = first + p as u64;
+        if page_idx >= r_pages {
+            break;
+        }
+        let mut bytes = Vec::with_capacity(PAGE_ELEMS * 4);
+        for v in chunk {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.resize(PAGE_ELEMS * 4, 0);
+        hm.write_page(PageId(base + page_idx), &bytes)?;
+    }
+    Ok(())
+}
+
+/// Stream `C = A + B` (or BIGC's chain) through the `va_batch` /
+/// `bigc_batch` executable, writing C back into host memory, and verify
+/// against a scalar Rust reference.
+pub fn elementwise_pass(
+    rt: &Runtime,
+    hm: &mut HostMemory,
+    artifact: &str,
+    r_a: RegionId,
+    r_b: RegionId,
+    r_c: RegionId,
+    n: usize,
+) -> Result<ComputeReport> {
+    ensure!(
+        hm.page_size() == PAGE_BYTES,
+        "compute path expects {PAGE_BYTES}-byte pages (got {})",
+        hm.page_size()
+    );
+    let pages = (n as u64 * 4).div_ceil(PAGE_BYTES);
+    let t0 = Instant::now();
+    let mut batches = 0u64;
+    let mut first = 0u64;
+    while first < pages {
+        let count = BATCH_PAGES.min((pages - first) as usize);
+        let a = read_pages_f32(hm, r_a, first, BATCH_PAGES);
+        let b = read_pages_f32(hm, r_b, first, BATCH_PAGES);
+        let shape = vec![BATCH_PAGES, PAGE_ELEMS];
+        let outs = rt.execute(
+            artifact,
+            &[Tensor::F32(a, shape.clone()), Tensor::F32(b, shape)],
+        )?;
+        let c = outs[0].as_f32()?;
+        write_pages_f32(hm, r_c, first, &c[..count * PAGE_ELEMS])?;
+        batches += 1;
+        first += count as u64;
+    }
+    let wall = t0.elapsed();
+
+    // Verify against the scalar reference.
+    let a = hm.read_f32(r_a).context("A must be backed")?;
+    let b = hm.read_f32(r_b).context("B must be backed")?;
+    let c = hm.read_f32(r_c).context("C must be backed")?;
+    let mut max_err = 0f64;
+    for i in 0..n {
+        let expect = match artifact {
+            "va_batch" => a[i] + b[i],
+            "bigc_batch" => {
+                let x = a[i] * b[i] + a[i];
+                let x = x * x + b[i];
+                x * 0.5 + x.tanh() * 0.25
+            }
+            other => anyhow::bail!("no reference for {other}"),
+        };
+        max_err = max_err.max((c[i] as f64 - expect as f64).abs());
+    }
+    Ok(ComputeReport {
+        artifact: artifact.to_string(),
+        batches,
+        elements: n as u64,
+        wall,
+        verified: max_err < 1e-4,
+        max_abs_err: max_err,
+    })
+}
+
+/// Run one taxi query through `query_batch`: stream the seconds + value
+/// columns in page batches, reduce the per-page partial sums, verify
+/// against the table's reference answer. Returns (report, sum, matches).
+pub fn query_pass(
+    rt: &Runtime,
+    table: &TaxiTable,
+    query: usize,
+) -> Result<(ComputeReport, f64, i64)> {
+    let rows = table.rows;
+    let pages = (rows * 4).div_ceil(PAGE_BYTES as usize);
+    let t0 = Instant::now();
+    let mut total = 0f64;
+    let mut matches = 0i64;
+    let mut batches = 0u64;
+    let mut first = 0usize;
+    while first < pages {
+        let mut seconds = vec![0i32; BATCH_PAGES * PAGE_ELEMS];
+        let mut values = vec![0f32; BATCH_PAGES * PAGE_ELEMS];
+        let row0 = first * PAGE_ELEMS;
+        for i in 0..(BATCH_PAGES * PAGE_ELEMS).min(rows.saturating_sub(row0)) {
+            seconds[i] = table.seconds[row0 + i] as i32;
+            values[i] = table.values[query][row0 + i];
+        }
+        let shape = vec![BATCH_PAGES, PAGE_ELEMS];
+        let outs = rt.execute(
+            "query_batch",
+            &[
+                Tensor::I32(seconds, shape.clone()),
+                Tensor::F32(values, shape),
+            ],
+        )?;
+        total += outs[0].as_f32()?.iter().map(|&x| x as f64).sum::<f64>();
+        matches += outs[1].as_i32()?.iter().map(|&x| x as i64).sum::<i64>();
+        batches += 1;
+        first += BATCH_PAGES;
+    }
+    let wall = t0.elapsed();
+    let expect = table.reference_sum(query);
+    let err = (total - expect).abs() / expect.abs().max(1.0);
+    let verified = err < 1e-5 && matches == table.matches.len() as i64;
+    Ok((
+        ComputeReport {
+            artifact: "query_batch".into(),
+            batches,
+            elements: rows as u64,
+            wall,
+            verified,
+            max_abs_err: err,
+        },
+        total,
+        matches,
+    ))
+}
+
+/// MVT row pass via `mvt_row_batch`: y = A·x for an n×n matrix streamed
+/// in 64-row tiles. Verifies against a scalar matvec.
+pub fn mvt_pass(rt: &Runtime, a: &[f32], x: &[f32], n: usize) -> Result<(ComputeReport, Vec<f32>)> {
+    ensure!(a.len() == n * n && x.len() == n);
+    ensure!(n == 1024, "AOT mvt artifact is fixed at n=1024");
+    const TILE: usize = 64;
+    let t0 = Instant::now();
+    let mut y = vec![0f32; n];
+    let mut batches = 0u64;
+    for t in 0..(n / TILE) {
+        let rows = &a[t * TILE * n..(t + 1) * TILE * n];
+        let outs = rt.execute(
+            "mvt_row_batch",
+            &[
+                Tensor::F32(rows.to_vec(), vec![TILE, n]),
+                Tensor::F32(x.to_vec(), vec![n]),
+            ],
+        )?;
+        y[t * TILE..(t + 1) * TILE].copy_from_slice(outs[0].as_f32()?);
+        batches += 1;
+    }
+    let wall = t0.elapsed();
+    let mut max_err = 0f64;
+    for r in 0..n {
+        let expect: f64 = (0..n).map(|j| a[r * n + j] as f64 * x[j] as f64).sum();
+        max_err = max_err.max((y[r] as f64 - expect).abs() / expect.abs().max(1.0));
+    }
+    Ok((
+        ComputeReport {
+            artifact: "mvt_row_batch".into(),
+            batches,
+            elements: (n * n) as u64,
+            wall,
+            verified: max_err < 1e-4,
+            max_abs_err: max_err,
+        },
+        y,
+    ))
+}

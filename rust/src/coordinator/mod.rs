@@ -1,0 +1,126 @@
+//! The coordinator: binds workloads, memory systems, the DES executor,
+//! and the PJRT compute path into runs, and prints reports. This is what
+//! the CLI (`gpuvm run`, `gpuvm e2e`) and the benches drive.
+
+pub mod compute;
+pub mod report;
+
+use crate::config::SystemConfig;
+use crate::gpu::exec::{run, RunResult};
+use crate::gpu::kernel::Workload;
+use crate::gpuvm::GpuVmSystem;
+use crate::memsys::ideal::IdealSystem;
+use crate::memsys::MemorySystem;
+use crate::uvm::UvmSystem;
+use anyhow::Result;
+
+/// Which memory system backs a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemSysKind {
+    GpuVm,
+    Uvm,
+    Ideal,
+}
+
+impl MemSysKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gpuvm" => Self::GpuVm,
+            "uvm" => Self::Uvm,
+            "ideal" => Self::Ideal,
+            _ => anyhow::bail!("unknown memory system '{s}' (gpuvm|uvm|ideal)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::GpuVm => "gpuvm",
+            Self::Uvm => "uvm",
+            Self::Ideal => "ideal",
+        }
+    }
+
+    pub fn build(&self, cfg: &SystemConfig) -> Box<dyn MemorySystem> {
+        match self {
+            Self::GpuVm => Box::new(GpuVmSystem::new(cfg)),
+            Self::Uvm => Box::new(UvmSystem::new(cfg)),
+            Self::Ideal => Box::new(IdealSystem::new(cfg.gpu.hbm_hit_ns)),
+        }
+    }
+}
+
+/// Run `workload` under `kind` on `cfg`'s simulated testbed.
+pub fn simulate(
+    cfg: &SystemConfig,
+    workload: &mut dyn Workload,
+    kind: MemSysKind,
+) -> Result<RunResult> {
+    let mut mem = kind.build(cfg);
+    run(cfg, workload, mem.as_mut())
+}
+
+/// Convenience: run the same (re-constructible) workload under GPUVM and
+/// UVM and return (gpuvm, uvm) results — the shape of most paper figures.
+pub fn compare<F>(cfg: &SystemConfig, mut make: F) -> Result<(RunResult, RunResult)>
+where
+    F: FnMut() -> Box<dyn Workload>,
+{
+    let g = simulate(cfg, make().as_mut(), MemSysKind::GpuVm)?;
+    let u = simulate(cfg, make().as_mut(), MemSysKind::Uvm)?;
+    Ok((g, u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::VaWorkload;
+
+    fn cfg() -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpu.sms = 8;
+        c.gpu.warps_per_sm = 4;
+        c.gpu.mem_bytes = 8 << 20;
+        c.gpuvm.page_size = 4096;
+        c.gpuvm.num_qps = 48;
+        c
+    }
+
+    #[test]
+    fn kinds_parse_and_build() {
+        for (s, k) in [
+            ("gpuvm", MemSysKind::GpuVm),
+            ("uvm", MemSysKind::Uvm),
+            ("ideal", MemSysKind::Ideal),
+        ] {
+            assert_eq!(MemSysKind::parse(s).unwrap(), k);
+            assert_eq!(k.name(), s);
+        }
+        assert!(MemSysKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn gpuvm_beats_uvm_on_va() {
+        // Paper §5.3: "just over 2×" on vector add with two NICs (with a
+        // single NIC both sides sit near ~6–6.5 GB/s on streaming reads).
+        let mut c = cfg();
+        c.rnic.num_nics = 2;
+        let (g, u) = compare(&c, || Box::new(VaWorkload::new(512 * 1024, 4096))).unwrap();
+        let speedup = u.metrics.finish_ns as f64 / g.metrics.finish_ns as f64;
+        assert!(
+            speedup > 1.5,
+            "GPUVM {} vs UVM {} → speedup {speedup:.2}",
+            g.metrics.finish_ns,
+            u.metrics.finish_ns
+        );
+    }
+
+    #[test]
+    fn ideal_is_fastest() {
+        let c = cfg();
+        let mut w = VaWorkload::new(256 * 1024, 4096);
+        let i = simulate(&c, &mut w, MemSysKind::Ideal).unwrap();
+        let mut w2 = VaWorkload::new(256 * 1024, 4096);
+        let g = simulate(&c, &mut w2, MemSysKind::GpuVm).unwrap();
+        assert!(i.metrics.finish_ns < g.metrics.finish_ns);
+    }
+}

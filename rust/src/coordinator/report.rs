@@ -1,0 +1,71 @@
+//! Human-readable run reports shared by the CLI and examples.
+
+use crate::gpu::exec::RunResult;
+use crate::util::bench::{fmt_bytes, fmt_gbps, fmt_ns};
+
+/// Multi-line report of one simulated run.
+pub fn run_report(app: &str, memsys: &str, r: &RunResult) -> String {
+    let m = &r.metrics;
+    let mut s = String::new();
+    s.push_str(&format!("app={app} memsys={memsys}\n"));
+    s.push_str(&format!(
+        "  simulated time     {:>14}   (kernels: {}, DES events: {})\n",
+        fmt_ns(m.finish_ns),
+        r.kernels,
+        r.events
+    ));
+    s.push_str(&format!(
+        "  faults             {:>14}   (coalesced: {}, hits: {}, hit rate {:.1}%)\n",
+        m.faults,
+        m.coalesced_faults,
+        m.hits,
+        m.hit_rate() * 100.0
+    ));
+    s.push_str(&format!(
+        "  transferred        {:>14} in / {} out  ({} useful, amp {:.2}×)\n",
+        fmt_bytes(m.bytes_in),
+        fmt_bytes(m.bytes_out),
+        fmt_bytes(m.useful_bytes),
+        m.io_amplification()
+    ));
+    s.push_str(&format!(
+        "  achieved PCIe BW   {:>14}\n",
+        fmt_gbps(m.throughput_in())
+    ));
+    s.push_str(&format!(
+        "  evictions          {:>14}   (waits: {}, refetches: {})\n",
+        m.evictions, m.eviction_waits, m.refetches
+    ));
+    s.push_str(&format!(
+        "  fault latency      {:>11} avg / {} p99\n",
+        fmt_ns(m.fault_latency.mean_ns() as u64),
+        fmt_ns(m.fault_latency.percentile(99.0))
+    ));
+    if m.setup_ns > 0 {
+        s.push_str(&format!(
+            "  one-time setup     {:>14}   (reported separately, per paper)\n",
+            fmt_ns(m.setup_ns)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Metrics;
+
+    #[test]
+    fn report_contains_key_lines() {
+        let r = RunResult {
+            metrics: Metrics::new(),
+            hm: crate::mem::HostMemory::new(4096),
+            kernels: 1,
+            events: 10,
+        };
+        let s = run_report("va", "gpuvm", &r);
+        assert!(s.contains("simulated time"));
+        assert!(s.contains("faults"));
+        assert!(s.contains("app=va memsys=gpuvm"));
+    }
+}

@@ -1,0 +1,555 @@
+//! The GPU execution model: warp slots, scheduling, and the main DES loop.
+//!
+//! Model: the machine exposes `num_gpus × sms × warps_per_sm` hardware
+//! warp slots. Logical warps of each kernel launch are assigned to slots;
+//! when a logical warp retires, its slot picks up the next one
+//! (persistent-warp style). Each runnable warp advances through its
+//! `WarpOp` stream; a faulting warp blocks while other warps keep
+//! executing — reproducing the latency-hiding dynamics the paper's
+//! evaluation depends on. Compute phases and resident-page accesses cost
+//! time locally; page faults go through the pluggable
+//! [`MemorySystem`](crate::memsys::MemorySystem).
+
+use crate::config::SystemConfig;
+use crate::gpu::kernel::{Access, WarpOp, Workload};
+use crate::mem::HostMemory;
+use crate::memsys::{AccessResult, Ev, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::metrics::Metrics;
+use crate::sim::{Engine, SimTime};
+
+/// Per-hardware-slot state.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    /// Current logical warp, if any.
+    logical: Option<usize>,
+    /// Pages from the previous access still referenced.
+    holding: bool,
+    /// When the slot blocked on a fault (for stall accounting).
+    blocked_at: Option<SimTime>,
+}
+
+/// Outcome of a full workload run.
+pub struct RunResult {
+    pub metrics: Metrics,
+    pub hm: HostMemory,
+    /// Kernels launched.
+    pub kernels: u64,
+    /// DES events processed (simulator perf metric).
+    pub events: u64,
+}
+
+/// Execute `workload` on the simulated GPU(s) backed by `mem`.
+pub fn run(
+    cfg: &SystemConfig,
+    workload: &mut dyn Workload,
+    mem: &mut dyn MemorySystem,
+) -> anyhow::Result<RunResult> {
+    cfg.validate()?;
+    let mut hm = HostMemory::new(cfg.gpuvm.page_size);
+    workload.setup(&mut hm);
+    let mut m = Metrics::new();
+    mem.prepare(&hm, &mut m);
+
+    let slots_per_gpu = cfg.gpu.sms * cfg.gpu.warps_per_sm;
+    let total_slots = slots_per_gpu * cfg.gpu.num_gpus;
+    let kernel_launch_ns = crate::sim::us(cfg.gpu.kernel_launch_us);
+
+    let mut eng: Engine<Ev> = Engine::new();
+    let mut slots = vec![
+        Slot {
+            logical: None,
+            holding: false,
+            blocked_at: None,
+        };
+        total_slots
+    ];
+    let mut pending: std::collections::VecDeque<usize> = Default::default();
+    let mut active = 0usize;
+    let mut kernels = 0u64;
+
+    // Launch the first kernel.
+    let launched = launch_next(
+        workload,
+        &mut slots,
+        &mut pending,
+        &mut active,
+        &mut eng,
+        0,
+        &mut kernels,
+    );
+    anyhow::ensure!(launched, "workload produced no kernels");
+
+    let mut wakes: Wakes = Vec::new();
+    let mut scratch: Vec<PageAccess> = Vec::with_capacity(64);
+    loop {
+        let Some((now, ev)) = eng.pop() else {
+            // Queue empty. If warps are blocked, the memory system may be
+            // holding a partial batch — drain it.
+            if active > 0 {
+                let now = eng.now();
+                if mem.drain(now, &mut hm, &mut eng, &mut m) {
+                    continue;
+                }
+                anyhow::bail!(
+                    "deadlock: {active} warps blocked, no events pending \
+                     (GPU memory too small for the concurrent working set? \
+                     frames={}, active warps={active})",
+                    cfg.gpu_frames()
+                );
+            }
+            break;
+        };
+
+        match ev {
+            Ev::Mem(me) => {
+                wakes.clear();
+                mem.on_event(now, me, &mut hm, &mut eng, &mut m, &mut wakes);
+                schedule_wakes(&mut eng, &mut slots, &mut m, &wakes, now);
+            }
+            Ev::Resume { slot } => {
+                step_slot(
+                    cfg,
+                    workload,
+                    mem,
+                    &mut hm,
+                    &mut m,
+                    &mut eng,
+                    &mut slots,
+                    &mut pending,
+                    &mut active,
+                    slot,
+                    now,
+                    &mut wakes,
+                    &mut scratch,
+                );
+                // All warps retired → next kernel (if any).
+                if active == 0 && pending.is_empty() {
+                    launch_next(
+                        workload,
+                        &mut slots,
+                        &mut pending,
+                        &mut active,
+                        &mut eng,
+                        now + kernel_launch_ns,
+                        &mut kernels,
+                    );
+                }
+            }
+        }
+    }
+
+    m.finish_ns = eng.now();
+    mem.finalize(&mut m);
+    Ok(RunResult {
+        metrics: m,
+        hm,
+        kernels,
+        events: eng.processed(),
+    })
+}
+
+/// Assign the next kernel's logical warps to slots; returns false when the
+/// workload is finished.
+fn launch_next(
+    workload: &mut dyn Workload,
+    slots: &mut [Slot],
+    pending: &mut std::collections::VecDeque<usize>,
+    active: &mut usize,
+    eng: &mut Engine<Ev>,
+    at: SimTime,
+    kernels: &mut u64,
+) -> bool {
+    let Some(launch) = workload.next_kernel() else {
+        return false;
+    };
+    *kernels += 1;
+    debug_assert!(pending.is_empty());
+    pending.extend(0..launch.warps);
+    for (i, s) in slots.iter_mut().enumerate() {
+        debug_assert!(s.logical.is_none());
+        if let Some(l) = pending.pop_front() {
+            s.logical = Some(l);
+            s.holding = false;
+            s.blocked_at = None;
+            *active += 1;
+            eng.schedule(at, Ev::Resume {
+                slot: SlotId(i as u32),
+            });
+        } else {
+            break;
+        }
+    }
+    // Zero-warp launches complete immediately; recurse for the next one.
+    if launch.warps == 0 {
+        return launch_next(workload, slots, pending, active, eng, at, kernels);
+    }
+    true
+}
+
+fn schedule_wakes(
+    eng: &mut Engine<Ev>,
+    slots: &mut [Slot],
+    m: &mut Metrics,
+    wakes: &Wakes,
+    now: SimTime,
+) {
+    for &(slot, at) in wakes {
+        let s = &mut slots[slot.0 as usize];
+        if let Some(b) = s.blocked_at.take() {
+            m.stall_ns += at.saturating_sub(b);
+        }
+        eng.schedule(at.max(now), Ev::Resume { slot });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn step_slot(
+    cfg: &SystemConfig,
+    workload: &mut dyn Workload,
+    mem: &mut dyn MemorySystem,
+    hm: &mut HostMemory,
+    m: &mut Metrics,
+    eng: &mut Engine<Ev>,
+    slots: &mut [Slot],
+    pending: &mut std::collections::VecDeque<usize>,
+    active: &mut usize,
+    slot: SlotId,
+    now: SimTime,
+    wakes: &mut Wakes,
+    scratch: &mut Vec<PageAccess>,
+) {
+    let si = slot.0 as usize;
+    let Some(logical) = slots[si].logical else {
+        return; // stale resume for an idle slot
+    };
+
+    // Release the previous op's pages (the paper's reference counters:
+    // a page is needed until the warp moves past the op that used it).
+    if slots[si].holding {
+        wakes.clear();
+        mem.release(now, slot, eng, m, wakes);
+        slots[si].holding = false;
+        // Re-borrow dance: schedule_wakes mutates slots/m.
+        let w = std::mem::take(wakes);
+        schedule_wakes(eng, slots, m, &w, now);
+        *wakes = w;
+        wakes.clear();
+    }
+
+    match workload.next_op(logical) {
+        WarpOp::Compute { ops } => {
+            let dur = (ops as f64 * cfg.gpu.compute_ns_per_op).ceil() as u64;
+            m.compute_ns += dur;
+            eng.schedule(now + dur.max(1), Ev::Resume { slot });
+        }
+        WarpOp::Access(accesses) => {
+            let gpu = si / (cfg.gpu.sms * cfg.gpu.warps_per_sm);
+            translate_into(hm, &accesses, m, scratch);
+            if scratch.is_empty() {
+                eng.schedule(now + 1, Ev::Resume { slot });
+                return;
+            }
+            match mem.access(now, slot, gpu, scratch, hm, eng, m) {
+                AccessResult::Ready { resume_at } => {
+                    slots[si].holding = true;
+                    eng.schedule(resume_at, Ev::Resume { slot });
+                }
+                AccessResult::Blocked => {
+                    slots[si].holding = true;
+                    slots[si].blocked_at = Some(now);
+                }
+            }
+        }
+        WarpOp::Done => {
+            slots[si].logical = None;
+            *active -= 1;
+            if let Some(next) = pending.pop_front() {
+                slots[si].logical = Some(next);
+                *active += 1;
+                // Next logical warp starts immediately on this slot.
+                eng.schedule(now + 1, Ev::Resume { slot });
+            }
+        }
+    }
+}
+
+/// Turn a warp's access groups into a deduplicated page set (into a
+/// reused scratch buffer — this runs once per warp op). This is the
+/// intra-warp coalescing step (`__match_any_sync` leader election in the
+/// paper): 32 lanes touching the same page produce one page reference.
+fn translate_into(
+    hm: &HostMemory,
+    accesses: &[Access],
+    m: &mut Metrics,
+    pages: &mut Vec<PageAccess>,
+) {
+    pages.clear();
+    let addr = hm.addressing();
+    let mut lane_refs = 0u64;
+    for acc in accesses {
+        m.useful_bytes += acc.useful_bytes();
+        let region = acc.region();
+        let write = acc.is_write();
+        let push_range = |pages: &mut Vec<PageAccess>, start: u64, len: u64| {
+            for p in addr.page_range(start, len) {
+                let off = p * addr.page_size;
+                pages.push(PageAccess {
+                    page: hm.page_at(region, off),
+                    write,
+                });
+            }
+        };
+        match acc {
+            Access::Seq { start, len, .. } => {
+                lane_refs += 1;
+                push_range(pages, *start, *len);
+            }
+            Access::Strided {
+                start,
+                stride,
+                lanes,
+                elem,
+                ..
+            } => {
+                for i in 0..*lanes as u64 {
+                    lane_refs += 1;
+                    push_range(pages, start + i * stride, *elem);
+                }
+            }
+            Access::Gather { offsets, elem, .. } => {
+                for &off in offsets {
+                    lane_refs += 1;
+                    push_range(pages, off, *elem);
+                }
+            }
+        }
+    }
+    // Dedup; a page written by any lane is a write.
+    pages.sort_by_key(|p| (p.page, !p.write));
+    pages.dedup_by(|b, a| {
+        if a.page == b.page {
+            a.write |= b.write;
+            true
+        } else {
+            false
+        }
+    });
+    m.bump("lane_page_refs", lane_refs);
+    m.bump("warp_page_refs", pages.len() as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test shim over `translate_into`.
+    fn translate(hm: &HostMemory, accesses: &[Access], m: &mut Metrics) -> Vec<PageAccess> {
+        let mut pages = Vec::new();
+        translate_into(hm, accesses, m, &mut pages);
+        pages
+    }
+    use crate::gpu::kernel::Launch;
+    use crate::mem::RegionId;
+    use crate::memsys::ideal::IdealSystem;
+
+    /// A trivial streaming workload: `warps` warps each do
+    /// read-compute-write over one element range, then finish.
+    struct Stream {
+        warps: usize,
+        region: Option<RegionId>,
+        launched: bool,
+        step: Vec<u8>,
+    }
+
+    impl Stream {
+        fn new(warps: usize) -> Self {
+            Self {
+                warps,
+                region: None,
+                launched: false,
+                step: vec![0; warps],
+            }
+        }
+    }
+
+    impl Workload for Stream {
+        fn name(&self) -> &str {
+            "stream-test"
+        }
+        fn setup(&mut self, hm: &mut HostMemory) {
+            self.region = Some(hm.register("x", (self.warps * 128) as u64));
+        }
+        fn next_kernel(&mut self) -> Option<Launch> {
+            if self.launched {
+                return None;
+            }
+            self.launched = true;
+            Some(Launch {
+                warps: self.warps,
+                tag: 0,
+            })
+        }
+        fn next_op(&mut self, warp: usize) -> WarpOp {
+            let s = self.step[warp];
+            self.step[warp] += 1;
+            match s {
+                0 => WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: (warp * 128) as u64,
+                    len: 128,
+                    write: false,
+                }]),
+                1 => WarpOp::Compute { ops: 100 },
+                _ => WarpOp::Done,
+            }
+        }
+    }
+
+    fn small_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.gpu.sms = 2;
+        cfg.gpu.warps_per_sm = 2;
+        cfg.gpu.mem_bytes = 1 << 20;
+        cfg
+    }
+
+    #[test]
+    fn runs_to_completion_on_ideal() {
+        let cfg = small_cfg();
+        let mut w = Stream::new(16);
+        let mut mem = IdealSystem::new(cfg.gpu.hbm_hit_ns);
+        let r = run(&cfg, &mut w, &mut mem).unwrap();
+        assert_eq!(r.kernels, 1);
+        assert!(r.metrics.finish_ns > 0);
+        assert_eq!(r.metrics.useful_bytes, 16 * 128);
+        // 16 logical warps over 4 slots: 4 rounds of (hit + compute).
+        assert!(r.metrics.hits > 0);
+    }
+
+    #[test]
+    fn more_slots_is_faster() {
+        let mut w1 = Stream::new(64);
+        let mut w2 = Stream::new(64);
+        let mut cfg1 = small_cfg();
+        cfg1.gpu.warps_per_sm = 1;
+        let mut cfg2 = small_cfg();
+        cfg2.gpu.warps_per_sm = 16;
+        let r1 = run(&cfg1, &mut w1, &mut IdealSystem::new(400)).unwrap();
+        let r2 = run(&cfg2, &mut w2, &mut IdealSystem::new(400)).unwrap();
+        assert!(
+            r2.metrics.finish_ns < r1.metrics.finish_ns,
+            "{} !< {}",
+            r2.metrics.finish_ns,
+            r1.metrics.finish_ns
+        );
+    }
+
+    #[test]
+    fn translate_dedups_within_page() {
+        let mut hm = HostMemory::new(4096);
+        let r = hm.register("x", 1 << 20);
+        let mut m = Metrics::new();
+        // 32 lanes × 4 bytes stride 4 = all in one page.
+        let pages = translate(
+            &hm,
+            &[Access::Strided {
+                region: r,
+                start: 0,
+                stride: 4,
+                lanes: 32,
+                elem: 4,
+                write: false,
+            }],
+            &mut m,
+        );
+        assert_eq!(pages.len(), 1);
+        assert_eq!(m.counter("lane_page_refs"), 32);
+        assert_eq!(m.counter("warp_page_refs"), 1);
+    }
+
+    #[test]
+    fn translate_strided_hits_many_pages() {
+        let mut hm = HostMemory::new(4096);
+        let r = hm.register("x", 1 << 20);
+        let mut m = Metrics::new();
+        // Column access: each lane in its own page.
+        let pages = translate(
+            &hm,
+            &[Access::Strided {
+                region: r,
+                start: 0,
+                stride: 4096,
+                lanes: 32,
+                elem: 4,
+                write: false,
+            }],
+            &mut m,
+        );
+        assert_eq!(pages.len(), 32);
+    }
+
+    #[test]
+    fn translate_write_wins_on_dedup() {
+        let mut hm = HostMemory::new(4096);
+        let r = hm.register("x", 8192);
+        let mut m = Metrics::new();
+        let pages = translate(
+            &hm,
+            &[
+                Access::Seq {
+                    region: r,
+                    start: 0,
+                    len: 64,
+                    write: false,
+                },
+                Access::Seq {
+                    region: r,
+                    start: 64,
+                    len: 64,
+                    write: true,
+                },
+            ],
+            &mut m,
+        );
+        assert_eq!(pages.len(), 1);
+        assert!(pages[0].write);
+    }
+
+    #[test]
+    fn multi_kernel_workload() {
+        struct TwoKernels {
+            region: Option<RegionId>,
+            kernel: u32,
+            step: u8,
+        }
+        impl Workload for TwoKernels {
+            fn name(&self) -> &str {
+                "two"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("x", 4096));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                self.kernel += 1;
+                self.step = 0;
+                (self.kernel <= 2).then_some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                self.step += 1;
+                if self.step == 1 {
+                    WarpOp::Compute { ops: 10 }
+                } else {
+                    WarpOp::Done
+                }
+            }
+        }
+        let cfg = small_cfg();
+        let mut w = TwoKernels {
+            region: None,
+            kernel: 0,
+            step: 0,
+        };
+        let r = run(&cfg, &mut w, &mut IdealSystem::new(400)).unwrap();
+        assert_eq!(r.kernels, 2);
+    }
+}

@@ -1,0 +1,189 @@
+//! The workload abstraction: GPU kernels as per-warp access/compute
+//! streams over `gpuvm<T>`-style arrays (paper Listing 1).
+//!
+//! Applications do not simulate individual instructions; they emit, per
+//! warp, the sequence of *memory access groups* and *compute phases* the
+//! real kernel would perform. The executor (gpu::exec) translates access
+//! groups into page sets — which is exactly where the paper's intra-warp
+//! `__match_any_sync` coalescing happens — and drives them through a
+//! pluggable memory system (GPUVM, UVM, or ideal/bulk).
+
+use crate::mem::RegionId;
+
+/// One warp-level memory access group (the 32 lanes' addresses issued
+/// together). Offsets are in bytes within the region.
+#[derive(Debug, Clone)]
+pub enum Access {
+    /// Coalesced: lanes read/write `[start, start+len)` contiguously.
+    Seq {
+        region: RegionId,
+        start: u64,
+        len: u64,
+        write: bool,
+    },
+    /// Strided (column-major matrix walks — MVT/ATAX/BIGC): lane `i`
+    /// touches `elem` bytes at `start + i*stride`, for `lanes` lanes.
+    Strided {
+        region: RegionId,
+        start: u64,
+        stride: u64,
+        lanes: u32,
+        elem: u64,
+        write: bool,
+    },
+    /// Irregular gather/scatter (graph neighbor lists, sparse queries):
+    /// each listed byte offset touches `elem` bytes.
+    Gather {
+        region: RegionId,
+        offsets: Vec<u64>,
+        elem: u64,
+        write: bool,
+    },
+}
+
+impl Access {
+    /// Bytes the application actually consumes from this access (the
+    /// numerator of the I/O-amplification metric).
+    pub fn useful_bytes(&self) -> u64 {
+        match self {
+            Access::Seq { len, .. } => *len,
+            Access::Strided { lanes, elem, .. } => *lanes as u64 * *elem,
+            Access::Gather { offsets, elem, .. } => offsets.len() as u64 * *elem,
+        }
+    }
+
+    pub fn is_write(&self) -> bool {
+        match self {
+            Access::Seq { write, .. }
+            | Access::Strided { write, .. }
+            | Access::Gather { write, .. } => *write,
+        }
+    }
+
+    pub fn region(&self) -> RegionId {
+        match self {
+            Access::Seq { region, .. }
+            | Access::Strided { region, .. }
+            | Access::Gather { region, .. } => *region,
+        }
+    }
+}
+
+/// One step of a warp's instruction stream.
+#[derive(Debug, Clone)]
+pub enum WarpOp {
+    /// Issue these access groups together; the warp blocks until all
+    /// touched pages are resident.
+    Access(Vec<Access>),
+    /// Arithmetic phase: `ops` per-lane operations (scaled to time by
+    /// `GpuConfig::compute_ns_per_op`).
+    Compute { ops: u64 },
+    /// This warp has retired (its slot picks up the next logical warp).
+    Done,
+}
+
+/// Static per-kernel resource usage, for the Fig 16 register report.
+/// `base` is the application kernel alone (the UVM variant); GPUVM's
+/// runtime adds `gpuvm_extra` registers for page-table walks, leader
+/// election state, WR construction and CQ polling.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelResources {
+    pub base_registers: u32,
+    pub gpuvm_extra_registers: u32,
+}
+
+impl KernelResources {
+    pub fn uvm(&self) -> u32 {
+        self.base_registers
+    }
+    pub fn gpuvm(&self) -> u32 {
+        self.base_registers + self.gpuvm_extra_registers
+    }
+    /// V100: 255 usable registers per thread before spilling.
+    pub fn spills(&self) -> bool {
+        self.gpuvm() > 255
+    }
+}
+
+/// A kernel launch: how many logical warps the grid contains.
+#[derive(Debug, Clone, Copy)]
+pub struct Launch {
+    pub warps: usize,
+    /// Optional label for metrics/tracing (e.g. "bfs-level-3").
+    pub tag: u32,
+}
+
+/// A workload is a sequence of kernel launches (graph apps relaunch per
+/// iteration) whose warps emit `WarpOp`s on demand.
+pub trait Workload {
+    fn name(&self) -> &str;
+
+    /// Register the application's arrays in host memory. Called once.
+    fn setup(&mut self, hm: &mut crate::mem::HostMemory);
+
+    /// Launch the next kernel, or `None` when the application finished.
+    /// The first call launches the first kernel.
+    fn next_kernel(&mut self) -> Option<Launch>;
+
+    /// Next op for `warp` (0-based within the current launch). Called
+    /// repeatedly until it returns `WarpOp::Done` for that warp.
+    fn next_op(&mut self, warp: usize) -> WarpOp;
+
+    /// Resource descriptor for the Fig 16 report.
+    fn resources(&self) -> KernelResources {
+        KernelResources {
+            base_registers: 32,
+            gpuvm_extra_registers: 24,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn useful_bytes() {
+        let seq = Access::Seq {
+            region: RegionId(0),
+            start: 0,
+            len: 128,
+            write: false,
+        };
+        assert_eq!(seq.useful_bytes(), 128);
+        let st = Access::Strided {
+            region: RegionId(0),
+            start: 0,
+            stride: 4096,
+            lanes: 32,
+            elem: 4,
+            write: true,
+        };
+        assert_eq!(st.useful_bytes(), 128);
+        assert!(st.is_write());
+        let g = Access::Gather {
+            region: RegionId(1),
+            offsets: vec![0, 8, 4096],
+            elem: 8,
+            write: false,
+        };
+        assert_eq!(g.useful_bytes(), 24);
+        assert_eq!(g.region(), RegionId(1));
+    }
+
+    #[test]
+    fn resources_spill_threshold() {
+        let r = KernelResources {
+            base_registers: 40,
+            gpuvm_extra_registers: 26,
+        };
+        assert_eq!(r.uvm(), 40);
+        assert_eq!(r.gpuvm(), 66);
+        assert!(!r.spills());
+        let big = KernelResources {
+            base_registers: 240,
+            gpuvm_extra_registers: 26,
+        };
+        assert!(big.spills());
+    }
+}

@@ -1,0 +1,9 @@
+//! GPU execution model: the workload/kernel abstraction, the warp-slot
+//! executor, and static resource accounting.
+
+pub mod exec;
+pub mod kernel;
+pub mod resources;
+
+pub use exec::{run, RunResult};
+pub use kernel::{Access, KernelResources, Launch, WarpOp, Workload};

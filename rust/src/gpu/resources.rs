@@ -1,0 +1,69 @@
+//! Static per-kernel resource accounting for the Fig 16 register report.
+//!
+//! The paper's Fig 16 shows registers-per-thread for each benchmark under
+//! UVM and under GPUVM, demonstrating that linking the GPUVM runtime into
+//! application kernels does not push any of them past the V100's 255
+//! usable registers (no spilling). We reproduce that accounting from the
+//! kernel descriptors: each app declares its base register footprint
+//! (UVM variant ≈ the plain CUDA kernel) and GPUVM adds a fixed runtime
+//! cost (page-table walk state, leader-election masks, WR scratch, CQ
+//! polling cursor).
+
+use crate::gpu::kernel::KernelResources;
+
+/// The GPUVM runtime's register footprint, derived from the runtime's
+/// hot-path state: page number + offset (2), page-table probe (4),
+/// `__match_any_sync` masks and leader id (3), WR fields — post number,
+/// frame address, host address, rkey, QP id (6), CQ poll state (3),
+/// eviction/refcount bookkeeping (4), plus spill-free scratch (4).
+pub const GPUVM_RUNTIME_REGISTERS: u32 = 26;
+
+/// One row of the Fig 16 report.
+#[derive(Debug, Clone)]
+pub struct RegisterRow {
+    pub app: String,
+    pub uvm: u32,
+    pub gpuvm: u32,
+    pub spills: bool,
+}
+
+/// Build the Fig 16 table from (app name, resources) pairs.
+pub fn register_report(apps: &[(&str, KernelResources)]) -> Vec<RegisterRow> {
+    apps.iter()
+        .map(|(name, r)| RegisterRow {
+            app: name.to_string(),
+            uvm: r.uvm(),
+            gpuvm: r.gpuvm(),
+            spills: r.spills(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_shape() {
+        let rows = register_report(&[
+            (
+                "va",
+                KernelResources {
+                    base_registers: 18,
+                    gpuvm_extra_registers: GPUVM_RUNTIME_REGISTERS,
+                },
+            ),
+            (
+                "bfs",
+                KernelResources {
+                    base_registers: 40,
+                    gpuvm_extra_registers: GPUVM_RUNTIME_REGISTERS,
+                },
+            ),
+        ]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].gpuvm, 18 + GPUVM_RUNTIME_REGISTERS);
+        assert!(rows.iter().all(|r| !r.spills));
+        assert!(rows.iter().all(|r| r.gpuvm > r.uvm));
+    }
+}

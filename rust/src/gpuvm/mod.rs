@@ -1,0 +1,333 @@
+//! GPUVM: the paper's GPU-driven virtual memory runtime.
+
+pub mod runtime;
+
+pub use runtime::GpuVmSystem;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EvictionPolicy, SystemConfig};
+    use crate::gpu::exec::run;
+    use crate::gpu::kernel::{Access, Launch, WarpOp, Workload};
+    use crate::mem::{HostMemory, RegionId};
+    use crate::memsys::MemorySystem;
+
+    /// Streaming reader: `warps` warps, each reads `reads` consecutive
+    /// 128 B chunks spaced a page apart (forcing one fault per read when
+    /// cold), with a compute step between.
+    struct Reader {
+        warps: usize,
+        reads: usize,
+        region: Option<RegionId>,
+        launched: bool,
+        state: Vec<(usize, bool)>, // (reads done, last was access)
+        page_size: u64,
+    }
+
+    impl Reader {
+        fn new(warps: usize, reads: usize, page_size: u64) -> Self {
+            Self {
+                warps,
+                reads,
+                region: None,
+                launched: false,
+                state: vec![(0, false); warps],
+                page_size,
+            }
+        }
+    }
+
+    impl Workload for Reader {
+        fn name(&self) -> &str {
+            "reader"
+        }
+        fn setup(&mut self, hm: &mut HostMemory) {
+            let bytes = (self.warps * self.reads) as u64 * self.page_size;
+            self.region = Some(hm.register("data", bytes));
+        }
+        fn next_kernel(&mut self) -> Option<Launch> {
+            if self.launched {
+                return None;
+            }
+            self.launched = true;
+            Some(Launch {
+                warps: self.warps,
+                tag: 0,
+            })
+        }
+        fn next_op(&mut self, warp: usize) -> WarpOp {
+            let (done, was_access) = self.state[warp];
+            if was_access {
+                self.state[warp].1 = false;
+                return WarpOp::Compute { ops: 64 };
+            }
+            if done >= self.reads {
+                return WarpOp::Done;
+            }
+            self.state[warp] = (done + 1, true);
+            let page_idx = (warp * self.reads + done) as u64;
+            WarpOp::Access(vec![Access::Seq {
+                region: self.region.unwrap(),
+                start: page_idx * self.page_size,
+                len: 128,
+                write: false,
+            }])
+        }
+    }
+
+    fn cfg(warps: usize, frames: u64) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpu.sms = warps;
+        c.gpu.warps_per_sm = 1;
+        c.gpuvm.page_size = 4096;
+        c.gpu.mem_bytes = frames * 4096;
+        c.gpuvm.num_qps = 16;
+        c
+    }
+
+    #[test]
+    fn cold_faults_then_completion() {
+        let c = cfg(4, 64);
+        let mut w = Reader::new(4, 4, 4096);
+        let mut mem = GpuVmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        // 16 distinct pages, all cold: 16 leader faults, no coalescing.
+        assert_eq!(r.metrics.faults, 16);
+        assert_eq!(r.metrics.coalesced_faults, 0);
+        assert_eq!(r.metrics.bytes_in, 16 * 4096);
+        assert_eq!(r.metrics.evictions, 0);
+        mem.check_invariants().unwrap();
+        // Unloaded fault ≈ verb latency floor.
+        let mean = r.metrics.fault_latency.mean_ns();
+        assert!(
+            (20_000.0..40_000.0).contains(&mean),
+            "fault latency mean {mean}"
+        );
+    }
+
+    /// All warps read the SAME page: one leader fault, rest coalesced.
+    struct SamePage {
+        warps: usize,
+        region: Option<RegionId>,
+        launched: bool,
+        step: Vec<u8>,
+    }
+
+    impl Workload for SamePage {
+        fn name(&self) -> &str {
+            "same-page"
+        }
+        fn setup(&mut self, hm: &mut HostMemory) {
+            self.region = Some(hm.register("one", 4096));
+        }
+        fn next_kernel(&mut self) -> Option<Launch> {
+            if self.launched {
+                return None;
+            }
+            self.launched = true;
+            Some(Launch {
+                warps: self.warps,
+                tag: 0,
+            })
+        }
+        fn next_op(&mut self, warp: usize) -> WarpOp {
+            let s = self.step[warp];
+            self.step[warp] += 1;
+            match s {
+                0 => WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: 0,
+                    len: 64,
+                    write: false,
+                }]),
+                _ => WarpOp::Done,
+            }
+        }
+    }
+
+    #[test]
+    fn inter_warp_coalescing() {
+        let c = cfg(8, 16);
+        let mut w = SamePage {
+            warps: 8,
+            region: None,
+            launched: false,
+            step: vec![0; 8],
+        };
+        let mut mem = GpuVmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        assert_eq!(r.metrics.faults, 1, "one leader");
+        assert_eq!(r.metrics.coalesced_faults, 7, "seven join the in-flight fault");
+        assert_eq!(r.metrics.bytes_in, 4096, "page transferred once");
+    }
+
+    #[test]
+    fn oversubscription_evicts_fifo_and_preserves_liveness() {
+        // 4 warps × 8 pages = 32 distinct pages through 8 frames.
+        let c = cfg(4, 8);
+        let mut w = Reader::new(4, 8, 4096);
+        let mut mem = GpuVmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        assert_eq!(r.metrics.faults, 32);
+        assert!(r.metrics.evictions >= 24, "evictions={}", r.metrics.evictions);
+        assert_eq!(r.metrics.refetches, 0, "streaming never refetches");
+        mem.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dirty_pages_write_back() {
+        /// Write a page then stream far past it so it must evict.
+        struct Writer {
+            region: Option<RegionId>,
+            launched: bool,
+            step: usize,
+        }
+        impl Workload for Writer {
+            fn name(&self) -> &str {
+                "writer"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("w", 64 * 4096));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                if self.launched {
+                    return None;
+                }
+                self.launched = true;
+                Some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                let s = self.step;
+                self.step += 1;
+                if s == 0 {
+                    WarpOp::Access(vec![Access::Seq {
+                        region: self.region.unwrap(),
+                        start: 0,
+                        len: 128,
+                        write: true,
+                    }])
+                } else if s <= 32 {
+                    WarpOp::Access(vec![Access::Seq {
+                        region: self.region.unwrap(),
+                        start: (s as u64) * 4096,
+                        len: 128,
+                        write: false,
+                    }])
+                } else {
+                    WarpOp::Done
+                }
+            }
+        }
+        let c = cfg(1, 8);
+        let mut w = Writer {
+            region: None,
+            launched: false,
+            step: 0,
+        };
+        let mut mem = GpuVmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        assert!(r.metrics.bytes_out >= 4096, "dirty page written back");
+        assert!(r.metrics.evictions > 0);
+    }
+
+    #[test]
+    fn backed_mode_moves_real_bytes() {
+        /// One warp reads one page of known data.
+        struct ReadOne {
+            region: Option<RegionId>,
+            launched: bool,
+            step: usize,
+        }
+        impl Workload for ReadOne {
+            fn name(&self) -> &str {
+                "read-one"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                let vals: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+                self.region = Some(hm.register_f32("d", &vals));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                if self.launched {
+                    return None;
+                }
+                self.launched = true;
+                Some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                self.step += 1;
+                if self.step == 1 {
+                    WarpOp::Access(vec![Access::Seq {
+                        region: self.region.unwrap(),
+                        start: 0,
+                        len: 4096,
+                        write: false,
+                    }])
+                } else {
+                    WarpOp::Done
+                }
+            }
+        }
+        let c = cfg(1, 8);
+        let mut w = ReadOne {
+            region: None,
+            launched: false,
+            step: 0,
+        };
+        let mut mem = GpuVmSystem::with_backing(&c, true);
+        let _r = run(&c, &mut w, &mut mem).unwrap();
+        // After the run the page streamed through frame 0: verify bytes.
+        let bytes = mem.pool(0).frame_bytes(crate::mem::FrameId(0)).unwrap();
+        let v1 = f32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        assert_eq!(v1, 1.0, "frame holds the host page's bytes");
+    }
+
+    #[test]
+    fn eviction_policies_all_complete() {
+        for policy in [
+            EvictionPolicy::FifoRefCount,
+            EvictionPolicy::FifoStrict,
+            EvictionPolicy::Random,
+        ] {
+            let mut c = cfg(4, 8);
+            c.gpuvm.eviction_policy = policy;
+            let mut w = Reader::new(4, 8, 4096);
+            let mut mem = GpuVmSystem::new(&c);
+            let r = run(&c, &mut w, &mut mem).unwrap();
+            assert_eq!(r.metrics.faults, 32, "{policy:?}");
+            mem.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn batching_reduces_doorbells() {
+        let mut c1 = cfg(8, 256);
+        c1.gpuvm.fault_batch = 1;
+        let mut c4 = cfg(8, 256);
+        c4.gpuvm.fault_batch = 4;
+        let mut w1 = Reader::new(8, 16, 4096);
+        let mut w4 = Reader::new(8, 16, 4096);
+        let mut m1 = GpuVmSystem::new(&c1);
+        let mut m4 = GpuVmSystem::new(&c4);
+        let r1 = run(&c1, &mut w1, &mut m1).unwrap();
+        let r4 = run(&c4, &mut w4, &mut m4).unwrap();
+        assert_eq!(r1.metrics.work_requests, r4.metrics.work_requests);
+        assert!(
+            r4.metrics.doorbells < r1.metrics.doorbells,
+            "batched doorbells {} !< unbatched {}",
+            r4.metrics.doorbells,
+            r1.metrics.doorbells
+        );
+    }
+
+    #[test]
+    fn name_and_finalize() {
+        let c = cfg(2, 8);
+        let mut mem = GpuVmSystem::new(&c);
+        assert_eq!(MemorySystem::name(&mem), "gpuvm");
+        let mut w = Reader::new(2, 2, 4096);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        assert!(r.metrics.counter("nic_wrs") >= 4);
+        assert!(r.metrics.link_busy_ns.contains_key("nic0"));
+    }
+}

@@ -1,0 +1,694 @@
+//! The GPUVM runtime — the paper's contribution (§3).
+//!
+//! GPU threads manage their own virtual memory: on a page-table miss the
+//! warp's leader acquires a frame from the circular page buffer (evicting
+//! the FIFO head once its reference counter drains, §3.3), builds an RDMA
+//! work request, posts it to one of many parallel queue pairs, rings the
+//! doorbell (batched, §3.2), and polls the completion queue. Warps that
+//! fault on a page already in flight join its waiter list instead of
+//! posting again (inter-warp coalescing, Fig 6). The host OS is never on
+//! the path; the RNIC moves the page host-mem → NIC → GPU.
+//!
+//! Functionally, backed host regions really move bytes into the frame
+//! pool, so data integrity under paging + eviction is testable; timing
+//! flows through the RNIC and PCIe models on the shared DES clock.
+
+use crate::config::{EvictionPolicy, SystemConfig};
+use crate::mem::{FrameId, FramePool, FrameState, HostMemory, PageId};
+use crate::memsys::{AccessResult, Ev, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::metrics::Metrics;
+use crate::pcie::{Dir, Topology};
+use crate::rnic::{NicBank, WorkRequest};
+use crate::sim::{us, Engine, SimTime};
+use crate::util::rng::Rng;
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::collections::VecDeque;
+
+/// Key for a fault: which GPU wants which host page.
+type FaultKey = (usize, PageId);
+
+/// A fault from first miss to data-resident.
+#[derive(Debug)]
+struct Inflight {
+    /// Frame assigned (None while queued behind a busy frame).
+    frame: Option<FrameId>,
+    /// Slots to wake when the page becomes resident. A slot appears once
+    /// per distinct page it waits on.
+    waiters: Vec<SlotId>,
+    /// Any waiter wants to write.
+    write: bool,
+    /// When the first miss occurred (fault-latency histogram).
+    started: SimTime,
+}
+
+/// Per-queue doorbell batching state (§3.2: post_number / batch_counter /
+/// one leader rings per batch).
+#[derive(Debug, Default, Clone)]
+struct QueueBatch {
+    pending: u32,
+    /// Epoch guards stale BatchFlush timers.
+    epoch: u64,
+}
+
+/// What to do when a synchronous write-back completes.
+#[derive(Debug)]
+struct FetchAfterWriteback {
+    gpu: usize,
+    page: PageId,
+}
+
+/// Why a WR exists (determines the completion handling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WrPurpose {
+    Fetch,
+    /// Eviction write-back that gates a fetch (paper §5.3: synchronous).
+    WritebackSync,
+    /// Fire-and-forget write-back (async_writeback extension).
+    WritebackAsync,
+}
+
+/// A work request waiting for a free queue. §3.2: a leader whose
+/// post_number exceeds the current batch "must wait for the current
+/// batch to finish" — so in-flight WRs are bounded by
+/// num_qps × fault_batch, which is exactly the Little's-law knee of
+/// Fig 11.
+#[derive(Debug, Clone, Copy)]
+struct PendingWr {
+    gpu: usize,
+    page: PageId,
+    dir: Dir,
+    purpose: WrPurpose,
+    /// For a synchronous write-back: the page whose fetch follows.
+    follow: Option<PageId>,
+}
+
+pub struct GpuVmSystem {
+    cfg: SystemConfig,
+    topo: Topology,
+    nics: NicBank,
+    /// Per-GPU frame pool and circular head cursor.
+    pools: Vec<FramePool>,
+    cursor: Vec<usize>,
+    /// Per-GPU, per-frame queue of pages waiting to take over the frame.
+    frame_waiters: Vec<Vec<VecDeque<PageId>>>,
+    inflight: FxHashMap<FaultKey, Inflight>,
+    wr_fault: FxHashMap<u64, FaultKey>,
+    wr_writeback: FxHashMap<u64, FetchAfterWriteback>,
+    next_wr: u64,
+    next_queue: usize,
+    batches: Vec<QueueBatch>,
+    /// WRs in flight (rung, not yet completed) per queue.
+    queue_busy: Vec<u32>,
+    /// Leaders waiting for a free queue (FIFO).
+    backlog: VecDeque<PendingWr>,
+    /// Reused completion buffer (hot path, §Perf).
+    completion_buf: Vec<crate::rnic::Completion>,
+    /// Frames each slot currently references.
+    holds: FxHashMap<SlotId, Vec<(usize, FrameId)>>,
+    /// Outstanding pages per blocked slot; wake at 0.
+    slot_pending: FxHashMap<SlotId, u32>,
+    /// Pages that were resident once and got evicted (refetch accounting).
+    evicted_once: FxHashSet<FaultKey>,
+    rng: Rng,
+    backed: bool,
+}
+
+impl GpuVmSystem {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self::with_backing(cfg, false)
+    }
+
+    /// `backed = true` keeps real page bytes in the frame pools (required
+    /// by the PJRT compute path and the data-integrity tests).
+    pub fn with_backing(cfg: &SystemConfig, backed: bool) -> Self {
+        let frames = cfg.gpu_frames();
+        let pools = (0..cfg.gpu.num_gpus)
+            .map(|_| FramePool::new(frames, cfg.gpuvm.page_size, backed))
+            .collect();
+        let frame_waiters = (0..cfg.gpu.num_gpus)
+            .map(|_| vec![VecDeque::new(); frames])
+            .collect();
+        Self {
+            topo: Topology::new(cfg),
+            nics: NicBank::new(cfg),
+            pools,
+            cursor: vec![0; cfg.gpu.num_gpus],
+            frame_waiters,
+            inflight: FxHashMap::default(),
+            wr_fault: FxHashMap::default(),
+            wr_writeback: FxHashMap::default(),
+            next_wr: 1,
+            next_queue: 0,
+            batches: vec![QueueBatch::default(); cfg.gpuvm.num_qps],
+            queue_busy: vec![0; cfg.gpuvm.num_qps],
+            backlog: VecDeque::new(),
+            completion_buf: Vec::with_capacity(64),
+            holds: FxHashMap::default(),
+            slot_pending: FxHashMap::default(),
+            evicted_once: FxHashSet::default(),
+            rng: Rng::new(cfg.seed ^ 0x6b75_766d),
+            backed,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Direct access to a GPU's frame pool (PJRT compute path, tests).
+    pub fn pool(&self, gpu: usize) -> &FramePool {
+        &self.pools[gpu]
+    }
+
+    pub fn pool_mut(&mut self, gpu: usize) -> &mut FramePool {
+        &mut self.pools[gpu]
+    }
+
+    /// Structural invariants across all pools (property tests).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        for p in &self.pools {
+            p.check_invariants()?;
+        }
+        Ok(())
+    }
+
+    // ---- frame acquisition (the circular buffer of Fig 5) ----
+
+    /// Try to take the next frame per the eviction policy. Returns the
+    /// frame if usable now, or None after enqueueing `page` on a busy
+    /// frame's waiter list.
+    fn acquire_frame(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        page: PageId,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> Option<FrameId> {
+        let n = self.pools[gpu].num_frames();
+        match self.cfg.gpuvm.eviction_policy {
+            EvictionPolicy::FifoRefCount => {
+                // Paper §5.4: FIFO with reference priority — the head
+                // cursor skips referenced (hot) frames; if a full sweep
+                // finds nothing evictable, queue behind the head frame
+                // (liveness).
+                for _ in 0..n {
+                    let f = FrameId((self.cursor[gpu] % n) as u32);
+                    self.cursor[gpu] += 1;
+                    if self.frame_usable(gpu, f) {
+                        return self.try_take_frame(now, gpu, f, page, hm, eng, m);
+                    }
+                }
+                let f = FrameId((self.cursor[gpu] % n) as u32);
+                self.cursor[gpu] += 1;
+                self.enqueue_frame_wait(gpu, f, page, m);
+                None
+            }
+            EvictionPolicy::FifoStrict => {
+                // Ablation: take the head frame unconditionally; wait for
+                // its reference counter to drain if needed.
+                let f = FrameId((self.cursor[gpu] % n) as u32);
+                self.cursor[gpu] += 1;
+                self.try_take_frame(now, gpu, f, page, hm, eng, m)
+            }
+            EvictionPolicy::Random => {
+                for _ in 0..8 {
+                    let f = FrameId(self.rng.gen_range(n as u64) as u32);
+                    if self.frame_usable(gpu, f) {
+                        return self.try_take_frame(now, gpu, f, page, hm, eng, m);
+                    }
+                }
+                let f = FrameId(self.rng.gen_range(n as u64) as u32);
+                self.enqueue_frame_wait(gpu, f, page, m);
+                None
+            }
+        }
+    }
+
+    fn frame_usable(&self, gpu: usize, f: FrameId) -> bool {
+        let fr = self.pools[gpu].frame(f);
+        self.frame_waiters[gpu][f.0 as usize].is_empty()
+            && match fr.state {
+                FrameState::Free => true,
+                FrameState::Resident(_) => fr.refcount == 0,
+                FrameState::Filling(_) => false,
+            }
+    }
+
+    /// Take `f` for `page` if possible now; otherwise enqueue and return
+    /// None. On success the fetch (and any write-back) is initiated.
+    fn try_take_frame(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        f: FrameId,
+        page: PageId,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> Option<FrameId> {
+        if !self.frame_usable(gpu, f) {
+            self.enqueue_frame_wait(gpu, f, page, m);
+            return None;
+        }
+        self.start_fill(now, gpu, f, page, hm, eng, m);
+        Some(f)
+    }
+
+    fn enqueue_frame_wait(&mut self, gpu: usize, f: FrameId, page: PageId, m: &mut Metrics) {
+        m.eviction_waits += 1;
+        self.frame_waiters[gpu][f.0 as usize].push_back(page);
+    }
+
+    /// Evict `f` if it holds a page, then begin filling it with `page`
+    /// and post the fetch WR (after a synchronous write-back if dirty).
+    fn start_fill(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        f: FrameId,
+        page: PageId,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) {
+        let t = now + self.cfg.gpuvm.eviction_check_ns;
+        let mut fetch_deferred = false;
+        if let FrameState::Resident(_) = self.pools[gpu].frame(f).state {
+            // Functional write-back happens immediately; the timing cost
+            // is the write-back WR below.
+            let bytes = self.pools[gpu].frame_bytes(f).map(|b| b.to_vec());
+            let (old_page, dirty) = self.pools[gpu].evict(f).expect("evict checked usable");
+            m.evictions += 1;
+            self.evicted_once.insert((gpu, old_page));
+            if dirty {
+                if let Some(b) = bytes {
+                    hm.write_page(old_page, &b).expect("write-back target");
+                }
+                m.bytes_out += self.cfg.gpuvm.page_size;
+                let purpose = if self.cfg.gpuvm.async_writeback {
+                    WrPurpose::WritebackAsync
+                } else {
+                    // Paper §5.3: write-back is synchronous — the fetch
+                    // waits for the out-transfer's completion.
+                    fetch_deferred = true;
+                    WrPurpose::WritebackSync
+                };
+                self.submit(
+                    t,
+                    PendingWr {
+                        gpu,
+                        page: old_page,
+                        dir: Dir::Out,
+                        purpose,
+                        follow: fetch_deferred.then_some(page),
+                    },
+                    eng,
+                    m,
+                );
+            }
+        }
+        self.pools[gpu]
+            .begin_fill(page, f)
+            .expect("frame free after evict");
+        if let Some(fl) = self.inflight.get_mut(&(gpu, page)) {
+            fl.frame = Some(f);
+        }
+        if !fetch_deferred {
+            self.submit(
+                t,
+                PendingWr {
+                    gpu,
+                    page,
+                    dir: Dir::In,
+                    purpose: WrPurpose::Fetch,
+                    follow: None,
+                },
+                eng,
+                m,
+            );
+        }
+    }
+
+    /// Submit a WR: post it on a free queue, or enqueue the leader in the
+    /// backlog if every queue is occupied by an in-flight batch (§3.2:
+    /// "it must wait for the current batch to finish"). This bounds
+    /// in-flight WRs to num_qps × fault_batch — the Fig 11 knee.
+    fn submit(&mut self, now: SimTime, pw: PendingWr, eng: &mut Engine<Ev>, m: &mut Metrics) {
+        match self.find_free_queue() {
+            Some(queue) => self.post_now(now, queue, pw, eng, m),
+            None => self.backlog.push_back(pw),
+        }
+    }
+
+    /// A queue can take a post if its current batch is still filling and
+    /// it has no batch in flight.
+    fn find_free_queue(&self) -> Option<usize> {
+        let n = self.nics.num_queues();
+        for off in 0..n {
+            let q = (self.next_queue + off) % n;
+            if self.queue_busy[q] == 0 && self.batches[q].pending < self.cfg.gpuvm.fault_batch {
+                return Some(q);
+            }
+        }
+        None
+    }
+
+    fn post_now(
+        &mut self,
+        now: SimTime,
+        queue: usize,
+        pw: PendingWr,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) {
+        let wr_id = self.next_wr;
+        self.next_wr += 1;
+        match pw.purpose {
+            WrPurpose::Fetch => {
+                self.wr_fault.insert(wr_id, (pw.gpu, pw.page));
+            }
+            WrPurpose::WritebackSync => {
+                self.wr_writeback.insert(
+                    wr_id,
+                    FetchAfterWriteback {
+                        gpu: pw.gpu,
+                        page: pw.follow.expect("sync write-back carries its fetch"),
+                    },
+                );
+            }
+            WrPurpose::WritebackAsync => {}
+        }
+        let wr = WorkRequest {
+            wr_id,
+            page: pw.page,
+            bytes: self.cfg.gpuvm.page_size,
+            dir: pw.dir,
+            gpu: pw.gpu,
+        };
+        let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
+        self.nics.post(queue, wr).expect("free queue accepts a post");
+        m.work_requests += 1;
+        let b = &mut self.batches[queue];
+        b.pending += 1;
+        if b.pending >= self.cfg.gpuvm.fault_batch {
+            self.next_queue = (queue + 1) % self.nics.num_queues();
+            self.ring(t_posted + self.cfg.gpuvm.doorbell_ns, queue, eng, m);
+        } else if b.pending == 1 {
+            // First of a batch: arm the flush timer.
+            let epoch = b.epoch;
+            eng.schedule(
+                t_posted + us(self.cfg.gpuvm.batch_timeout_us),
+                Ev::Mem(MemEvent::BatchFlush { queue, epoch }),
+            );
+        }
+    }
+
+    fn ring(&mut self, now: SimTime, queue: usize, eng: &mut Engine<Ev>, m: &mut Metrics) {
+        let b = &mut self.batches[queue];
+        if b.pending == 0 {
+            return;
+        }
+        self.queue_busy[queue] += b.pending;
+        b.pending = 0;
+        b.epoch += 1;
+        m.doorbells += 1;
+        self.completion_buf.clear();
+        let mut buf = std::mem::take(&mut self.completion_buf);
+        self.nics
+            .ring_doorbell_into(now, queue, &mut self.topo, &mut buf)
+            .expect("valid queue");
+        for c in &buf {
+            eng.schedule(
+                c.at,
+                Ev::Mem(MemEvent::CqCompletion {
+                    queue,
+                    wr_id: c.wr_id,
+                }),
+            );
+        }
+        self.completion_buf = buf;
+    }
+
+    /// A fetch completed: install bytes, mark resident, hand out refs,
+    /// wake waiters.
+    fn complete_fetch(
+        &mut self,
+        now: SimTime,
+        key: FaultKey,
+        hm: &mut HostMemory,
+        m: &mut Metrics,
+        wakes: &mut Wakes,
+    ) {
+        let (gpu, page) = key;
+        let fl = self.inflight.remove(&key).expect("inflight fetch");
+        let frame = fl.frame.expect("fetch had a frame");
+        let bytes = if self.backed {
+            hm.read_page(page).map(|b| b.to_vec())
+        } else {
+            None
+        };
+        self.pools[gpu]
+            .complete_fill(frame, bytes.as_deref())
+            .expect("filling frame");
+        m.bytes_in += self.cfg.gpuvm.page_size;
+        m.fault_latency.record(now.saturating_sub(fl.started));
+        if fl.write {
+            self.pools[gpu].mark_dirty(frame);
+        }
+        let resume = now + self.cfg.gpuvm.cq_poll_interval_ns;
+        for slot in fl.waiters {
+            // Each waiter takes a reference before it runs.
+            self.pools[gpu].addref(frame);
+            self.holds.entry(slot).or_default().push((gpu, frame));
+            let p = self
+                .slot_pending
+                .get_mut(&slot)
+                .expect("waiter has pending count");
+            *p -= 1;
+            if *p == 0 {
+                self.slot_pending.remove(&slot);
+                wakes.push((slot, resume));
+            }
+        }
+    }
+
+    /// A frame's refcount hit zero: if pages queue on it, start the next.
+    fn service_frame_waiters(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        frame: FrameId,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) {
+        if !self.frame_waiters[gpu][frame.0 as usize].is_empty() {
+            let fr = self.pools[gpu].frame(frame);
+            let free_now = match fr.state {
+                FrameState::Free => true,
+                FrameState::Resident(_) => fr.refcount == 0,
+                FrameState::Filling(_) => false,
+            };
+            if free_now {
+                let page = self.frame_waiters[gpu][frame.0 as usize]
+                    .pop_front()
+                    .unwrap();
+                self.start_fill(now, gpu, frame, page, hm, eng, m);
+            }
+        }
+    }
+}
+
+impl MemorySystem for GpuVmSystem {
+    fn name(&self) -> &'static str {
+        "gpuvm"
+    }
+
+    fn prepare(&mut self, _hm: &HostMemory, _m: &mut Metrics) {}
+
+    fn access(
+        &mut self,
+        now: SimTime,
+        slot: SlotId,
+        gpu: usize,
+        pages: &[PageAccess],
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> AccessResult {
+        debug_assert!(gpu < self.pools.len());
+        let t = now + self.cfg.gpuvm.page_table_lookup_ns;
+        let mut misses = 0u32;
+        for pa in pages {
+            match self.pools[gpu].lookup(pa.page) {
+                Some((frame, true)) => {
+                    m.hits += 1;
+                    self.pools[gpu].addref(frame);
+                    if pa.write {
+                        self.pools[gpu].mark_dirty(frame);
+                    }
+                    self.holds.entry(slot).or_default().push((gpu, frame));
+                }
+                Some((_frame, false)) => {
+                    // Fault in flight (another leader owns it): coalesce.
+                    m.coalesced_faults += 1;
+                    let fl = self
+                        .inflight
+                        .get_mut(&(gpu, pa.page))
+                        .expect("filling frame has inflight entry");
+                    fl.waiters.push(slot);
+                    fl.write |= pa.write;
+                    misses += 1;
+                }
+                None => {
+                    if let Some(fl) = self.inflight.get_mut(&(gpu, pa.page)) {
+                        // Queued behind a busy frame; join it.
+                        m.coalesced_faults += 1;
+                        fl.waiters.push(slot);
+                        fl.write |= pa.write;
+                        misses += 1;
+                        continue;
+                    }
+                    // New fault: this warp's leader takes it (Fig 4).
+                    m.faults += 1;
+                    if self.evicted_once.contains(&(gpu, pa.page)) {
+                        m.refetches += 1;
+                    }
+                    self.inflight.insert(
+                        (gpu, pa.page),
+                        Inflight {
+                            frame: None,
+                            waiters: vec![slot],
+                            write: pa.write,
+                            started: now,
+                        },
+                    );
+                    let t_leader = t + self.cfg.gpuvm.leader_election_ns;
+                    self.acquire_frame(t_leader, gpu, pa.page, hm, eng, m);
+                    misses += 1;
+                }
+            }
+        }
+        if misses == 0 {
+            AccessResult::Ready {
+                resume_at: t + self.cfg.gpu.hbm_hit_ns,
+            }
+        } else {
+            self.slot_pending.insert(slot, misses);
+            AccessResult::Blocked
+        }
+    }
+
+    fn release(
+        &mut self,
+        now: SimTime,
+        slot: SlotId,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+        _wakes: &mut Wakes,
+    ) {
+        let Some(held) = self.holds.remove(&slot) else {
+            return;
+        };
+        // note: hm is not available here; frame-waiter servicing that
+        // needs host bytes defers the byte copy to fetch completion, so
+        // nothing here touches host data. Write-backs capture bytes at
+        // evict time inside start_fill, which needs hm — so releases that
+        // trigger dirty evictions route through a zero-delay event.
+        let mut freed: Vec<(usize, FrameId)> = Vec::new();
+        for (gpu, frame) in held {
+            self.pools[gpu].unref(frame);
+            if self.pools[gpu].frame(frame).refcount == 0 {
+                freed.push((gpu, frame));
+            }
+        }
+        for (gpu, frame) in freed {
+            if !self.frame_waiters[gpu][frame.0 as usize].is_empty() {
+                // Defer to a zero-delay event so `hm` is in scope when the
+                // eviction (and its functional write-back) runs.
+                eng.schedule(
+                    now,
+                    Ev::Mem(MemEvent::FrameFree {
+                        gpu,
+                        frame: frame.0,
+                    }),
+                );
+            }
+        }
+        let _ = m;
+    }
+
+    fn on_event(
+        &mut self,
+        now: SimTime,
+        ev: MemEvent,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+        wakes: &mut Wakes,
+    ) {
+        match ev {
+            MemEvent::CqCompletion { queue, wr_id } => {
+                debug_assert!(self.queue_busy[queue] > 0);
+                self.queue_busy[queue] -= 1;
+                if let Some(key) = self.wr_fault.remove(&wr_id) {
+                    self.complete_fetch(now, key, hm, m, wakes);
+                } else if let Some(fw) = self.wr_writeback.remove(&wr_id) {
+                    // Synchronous write-back done: launch the fetch.
+                    self.submit(
+                        now,
+                        PendingWr {
+                            gpu: fw.gpu,
+                            page: fw.page,
+                            dir: Dir::In,
+                            purpose: WrPurpose::Fetch,
+                            follow: None,
+                        },
+                        eng,
+                        m,
+                    );
+                }
+                // Async write-backs complete silently.
+                // The freed queue slot drains waiting leaders (§3.2).
+                while !self.backlog.is_empty() {
+                    let Some(q) = self.find_free_queue() else { break };
+                    let pw = self.backlog.pop_front().unwrap();
+                    self.post_now(now, q, pw, eng, m);
+                }
+            }
+            MemEvent::FrameFree { gpu, frame } => {
+                self.service_frame_waiters(now, gpu, FrameId(frame), hm, eng, m);
+            }
+            MemEvent::BatchFlush { queue, epoch } => {
+                if self.batches[queue].epoch == epoch && self.batches[queue].pending > 0 {
+                    self.ring(now + self.cfg.gpuvm.doorbell_ns, queue, eng, m);
+                }
+            }
+            _ => unreachable!("UVM event routed to GPUVM"),
+        }
+    }
+
+    fn drain(
+        &mut self,
+        now: SimTime,
+        _hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> bool {
+        let mut any = false;
+        for q in 0..self.batches.len() {
+            if self.batches[q].pending > 0 {
+                self.ring(now + self.cfg.gpuvm.doorbell_ns, q, eng, m);
+                any = true;
+            }
+        }
+        any
+    }
+
+    fn finalize(&mut self, m: &mut Metrics) {
+        self.topo.export_utilization(m);
+        let (wrs, dbs, bytes) = self.nics.stats();
+        m.bump("nic_wrs", wrs);
+        m.bump("nic_doorbells", dbs);
+        m.bump("nic_bytes", bytes);
+    }
+}

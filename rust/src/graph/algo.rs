@@ -1,0 +1,190 @@
+//! Reference (host-side, scalar) graph algorithms. These are the ground
+//! truth the simulated GPU apps verify against, and they drive the
+//! frontier progression that the Subway baseline and the iterative
+//! kernels share.
+
+use super::csr::Csr;
+use std::collections::VecDeque;
+
+pub const UNREACHED: u32 = u32::MAX;
+
+/// BFS levels from `src` (UNREACHED where not reachable).
+pub fn bfs_levels(g: &Csr, src: u32) -> Vec<u32> {
+    let mut level = vec![UNREACHED; g.num_vertices];
+    let mut q = VecDeque::new();
+    level[src as usize] = 0;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        let next = level[u as usize] + 1;
+        for &v in g.neighbors_of(u as usize) {
+            if level[v as usize] == UNREACHED {
+                level[v as usize] = next;
+                q.push_back(v);
+            }
+        }
+    }
+    level
+}
+
+/// Per-level frontiers from `src` (frontier[k] = vertices at distance k).
+pub fn bfs_frontiers(g: &Csr, src: u32) -> Vec<Vec<u32>> {
+    let levels = bfs_levels(g, src);
+    let max = levels
+        .iter()
+        .filter(|&&l| l != UNREACHED)
+        .max()
+        .copied()
+        .unwrap_or(0);
+    let mut fronts = vec![Vec::new(); max as usize + 1];
+    for (v, &l) in levels.iter().enumerate() {
+        if l != UNREACHED {
+            fronts[l as usize].push(v as u32);
+        }
+    }
+    fronts
+}
+
+/// Connected components by label propagation over the *undirected* view
+/// (min label wins), as GPU CC implementations do. Returns labels and the
+/// number of propagation iterations until fixpoint.
+pub fn cc_labels(g: &Csr) -> (Vec<u32>, usize) {
+    let (labels, rounds) = cc_rounds(g);
+    (labels, rounds.len())
+}
+
+/// Label propagation with per-round *active sets*: round k processes the
+/// vertices whose label changed in round k-1 (round 0 = all). This is
+/// how GPU CC kernels and Subway bound per-iteration work — the active
+/// set shrinks geometrically after the first rounds.
+pub fn cc_rounds(g: &Csr) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let mut label: Vec<u32> = (0..g.num_vertices as u32).collect();
+    let mut active: Vec<u32> = (0..g.num_vertices as u32).collect();
+    let mut rounds = Vec::new();
+    while !active.is_empty() {
+        rounds.push(active.clone());
+        let mut changed = vec![false; g.num_vertices];
+        for &u in &active {
+            let u = u as usize;
+            for &v in g.neighbors_of(u) {
+                let (lu, lv) = (label[u], label[v as usize]);
+                if lu < lv {
+                    label[v as usize] = lu;
+                    changed[v as usize] = true;
+                } else if lv < lu {
+                    label[u] = lv;
+                    changed[u] = true;
+                }
+            }
+        }
+        active = changed
+            .iter()
+            .enumerate()
+            .filter_map(|(v, &c)| c.then_some(v as u32))
+            .collect();
+        if rounds.len() > g.num_vertices {
+            break; // safety
+        }
+    }
+    (label, rounds)
+}
+
+/// Single-source shortest paths (Bellman-Ford frontier style). Returns
+/// distances (f32::INFINITY where unreachable) and the per-iteration
+/// frontier sizes (for iterative kernel simulation).
+pub fn sssp(g: &Csr, src: u32) -> (Vec<f32>, Vec<usize>) {
+    let w = g
+        .weights
+        .as_ref()
+        .expect("sssp requires weights");
+    let mut dist = vec![f32::INFINITY; g.num_vertices];
+    dist[src as usize] = 0.0;
+    let mut frontier = vec![src];
+    let mut sizes = Vec::new();
+    while !frontier.is_empty() {
+        sizes.push(frontier.len());
+        let mut next = Vec::new();
+        let mut in_next = vec![false; g.num_vertices];
+        for &u in &frontier {
+            let (s, e) = (g.offsets[u as usize] as usize, g.offsets[u as usize + 1] as usize);
+            for i in s..e {
+                let v = g.neighbors[i] as usize;
+                let nd = dist[u as usize] + w[i];
+                if nd < dist[v] {
+                    dist[v] = nd;
+                    if !in_next[v] {
+                        in_next[v] = true;
+                        next.push(v as u32);
+                    }
+                }
+            }
+        }
+        frontier = next;
+        if sizes.len() > 10 * g.num_vertices {
+            break; // safety (negative weights are impossible here)
+        }
+    }
+    (dist, sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn chain() -> Csr {
+        // 0→1→2→3 plus isolated 4
+        Csr::from_edges(5, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn bfs_chain() {
+        let g = chain();
+        let l = bfs_levels(&g, 0);
+        assert_eq!(l, vec![0, 1, 2, 3, UNREACHED]);
+        let f = bfs_frontiers(&g, 0);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f[2], vec![2]);
+    }
+
+    #[test]
+    fn cc_two_components() {
+        let g = Csr::from_edges(5, &[(0, 1), (1, 2), (3, 4)]);
+        let (l, iters) = cc_labels(&g);
+        assert_eq!(l[0], l[1]);
+        assert_eq!(l[1], l[2]);
+        assert_eq!(l[3], l[4]);
+        assert_ne!(l[0], l[3]);
+        assert!(iters >= 1);
+    }
+
+    #[test]
+    fn sssp_prefers_cheap_path() {
+        // 0→1 (w 10), 0→2 (w 1), 2→1 (w 1): dist(1) = 2 via 2.
+        let mut g = Csr::from_edges(3, &[(0, 1), (0, 2), (2, 1)]);
+        g.weights = Some(vec![10.0, 1.0, 1.0]);
+        let (d, sizes) = sssp(&g, 0);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[2], 1.0);
+        assert_eq!(d[1], 2.0);
+        assert!(!sizes.is_empty());
+    }
+
+    #[test]
+    fn bfs_matches_sssp_on_unit_weights() {
+        let mut rng = Rng::new(5);
+        let edges: Vec<(u32, u32)> = (0..2000)
+            .map(|_| (rng.gen_range(100) as u32, rng.gen_range(100) as u32))
+            .collect();
+        let mut g = Csr::from_edges(100, &edges);
+        g.weights = Some(vec![1.0; g.num_edges()]);
+        let l = bfs_levels(&g, 0);
+        let (d, _) = sssp(&g, 0);
+        for v in 0..100 {
+            if l[v] == UNREACHED {
+                assert!(d[v].is_infinite());
+            } else {
+                assert_eq!(d[v], l[v] as f32);
+            }
+        }
+    }
+}

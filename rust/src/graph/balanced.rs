@@ -1,0 +1,109 @@
+//! Balanced CSR (paper Fig 10): edges regrouped into equal-size chunks so
+//! every worker (warp) gets the same amount of edge work and therefore a
+//! fairly equal number of page faults — the fix for fault serialization
+//! on high-degree hubs (GK's 7.5 M-neighbor vertex).
+
+use super::csr::Csr;
+
+/// One unit of work: a slice of a single vertex's neighbor list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub vertex: u32,
+    /// Start index into the shared `neighbors` array.
+    pub edge_start: u64,
+    pub len: u32,
+}
+
+/// Balanced CSR: the same `neighbors`/`weights` arrays as the CSR, plus a
+/// chunk table that splits every neighbor list into ≤ `chunk_size` pieces.
+#[derive(Debug, Clone)]
+pub struct BalancedCsr {
+    pub chunk_size: u32,
+    pub chunks: Vec<Chunk>,
+}
+
+impl BalancedCsr {
+    pub fn build(csr: &Csr, chunk_size: u32) -> Self {
+        assert!(chunk_size > 0);
+        let mut chunks = Vec::new();
+        for v in 0..csr.num_vertices {
+            let start = csr.offsets[v];
+            let end = csr.offsets[v + 1];
+            let mut e = start;
+            while e < end {
+                let len = (end - e).min(chunk_size as u64) as u32;
+                chunks.push(Chunk {
+                    vertex: v as u32,
+                    edge_start: e,
+                    len,
+                });
+                e += len as u64;
+            }
+        }
+        Self { chunk_size, chunks }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Extra memory the chunk table costs (the paper: ≤ 400 MB for
+    /// billion-edge graphs — negligible).
+    pub fn overhead_bytes(&self) -> u64 {
+        (self.chunks.len() * std::mem::size_of::<Chunk>()) as u64
+    }
+
+    /// Chunks owned by `vertex` (test helper).
+    pub fn chunks_of(&self, vertex: u32) -> impl Iterator<Item = &Chunk> {
+        self.chunks.iter().filter(move |c| c.vertex == vertex)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn splits_hubs_evenly() {
+        // Vertex 0 has 10 edges, vertex 1 has 1, chunk size 4.
+        let edges: Vec<(u32, u32)> = (0..10).map(|i| (0u32, i as u32 % 3)).chain([(1, 2)]).collect();
+        let csr = Csr::from_edges(3, &edges);
+        let b = BalancedCsr::build(&csr, 4);
+        let v0: Vec<_> = b.chunks_of(0).collect();
+        assert_eq!(v0.len(), 3); // 4 + 4 + 2
+        assert_eq!(v0[0].len, 4);
+        assert_eq!(v0[2].len, 2);
+        assert_eq!(b.chunks_of(1).count(), 1);
+        assert!(b.chunks.iter().all(|c| c.len <= 4));
+    }
+
+    #[test]
+    fn covers_all_edges_exactly_once() {
+        let mut rng = Rng::new(7);
+        let edges: Vec<(u32, u32)> = (0..500)
+            .map(|_| (rng.gen_range(40) as u32, rng.gen_range(40) as u32))
+            .collect();
+        let csr = Csr::from_edges(40, &edges);
+        let b = BalancedCsr::build(&csr, 16);
+        let total: u64 = b.chunks.iter().map(|c| c.len as u64).sum();
+        assert_eq!(total, csr.num_edges() as u64);
+        // Chunks of a vertex tile its CSR range contiguously.
+        for v in 0..40u32 {
+            let mut expect = csr.offsets[v as usize];
+            for c in b.chunks_of(v) {
+                assert_eq!(c.edge_start, expect);
+                expect += c.len as u64;
+            }
+            assert_eq!(expect, csr.offsets[v as usize + 1]);
+        }
+    }
+
+    #[test]
+    fn overhead_is_small() {
+        let edges: Vec<(u32, u32)> = (0..1000).map(|i| (i % 100, (i + 1) % 100)).collect();
+        let csr = Csr::from_edges(100, &edges);
+        let b = BalancedCsr::build(&csr, 32);
+        assert!(b.overhead_bytes() < csr.edge_bytes());
+    }
+}

@@ -1,0 +1,147 @@
+//! Compressed Sparse Row graph representation.
+
+/// A directed graph in CSR form. `offsets[v]..offsets[v+1]` indexes into
+/// `neighbors` (and `weights`, when present).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub num_vertices: usize,
+    pub offsets: Vec<u64>,
+    pub neighbors: Vec<u32>,
+    pub weights: Option<Vec<f32>>,
+}
+
+impl Csr {
+    /// Build from an edge list (u → v). Parallel edges are kept (as in
+    /// the SuiteSparse dumps the paper uses); self-loops allowed.
+    pub fn from_edges(num_vertices: usize, edges: &[(u32, u32)]) -> Self {
+        let mut deg = vec![0u64; num_vertices];
+        for &(u, _) in edges {
+            deg[u as usize] += 1;
+        }
+        let mut offsets = vec![0u64; num_vertices + 1];
+        for v in 0..num_vertices {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0u32; edges.len()];
+        for &(u, v) in edges {
+            let c = &mut cursor[u as usize];
+            neighbors[*c as usize] = v;
+            *c += 1;
+        }
+        Self {
+            num_vertices,
+            offsets,
+            neighbors,
+            weights: None,
+        }
+    }
+
+    /// Attach uniform-random weights in `[1, 64)` (SSSP inputs).
+    pub fn with_weights(mut self, rng: &mut crate::util::rng::Rng) -> Self {
+        self.weights = Some(
+            (0..self.neighbors.len())
+                .map(|_| 1.0 + rng.f64() as f32 * 63.0)
+                .collect(),
+        );
+        self
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> u64 {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    pub fn max_degree(&self) -> u64 {
+        (0..self.num_vertices).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn neighbors_of(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Bytes of the edge structure (neighbors array), as reported in the
+    /// paper's Table 2 "Edges" column.
+    pub fn edge_bytes(&self) -> u64 {
+        (self.neighbors.len() * 4) as u64
+    }
+
+    /// Bytes including weights, Table 2's "Weights" column.
+    pub fn weight_bytes(&self) -> u64 {
+        self.weights.as_ref().map(|w| (w.len() * 4) as u64).unwrap_or(0)
+    }
+
+    /// Pick `n` source vertices with degree ≥ `min_degree` (the paper
+    /// runs BFS/SSSP from >100 sources with ≥2 neighbors).
+    pub fn pick_sources(
+        &self,
+        n: usize,
+        min_degree: u64,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Vec<u32> {
+        let mut sources = Vec::with_capacity(n);
+        let mut tries = 0;
+        while sources.len() < n && tries < n * 1000 {
+            tries += 1;
+            let v = rng.gen_range(self.num_vertices as u64) as u32;
+            if self.degree(v as usize) >= min_degree {
+                sources.push(v);
+            }
+        }
+        sources
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn diamond() -> Csr {
+        // 0→1, 0→2, 1→3, 2→3
+        Csr::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn structure() {
+        let g = diamond();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors_of(0), &[1, 2]);
+        assert_eq!(g.neighbors_of(1), &[3]);
+        assert_eq!(g.neighbors_of(3), &[] as &[u32]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.edge_bytes(), 16);
+    }
+
+    #[test]
+    fn weights_attach() {
+        let mut rng = Rng::new(1);
+        let g = diamond().with_weights(&mut rng);
+        let w = g.weights.as_ref().unwrap();
+        assert_eq!(w.len(), 4);
+        assert!(w.iter().all(|&x| (1.0..64.0).contains(&x)));
+        assert_eq!(g.weight_bytes(), 16);
+    }
+
+    #[test]
+    fn sources_respect_min_degree() {
+        let g = diamond();
+        let mut rng = Rng::new(2);
+        let s = g.pick_sources(10, 2, &mut rng);
+        assert!(s.iter().all(|&v| g.degree(v as usize) >= 2));
+        assert!(s.iter().all(|&v| v == 0)); // only vertex 0 has degree 2
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(3, &[]);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! The paper's graph datasets (Table 2), scaled ~1000× down with their
+//! shape parameters preserved. Sizes are chosen so the default benches
+//! run in seconds; `scale` lets the benches grow them.
+
+use super::csr::Csr;
+use super::gen;
+use crate::util::rng::Rng;
+
+/// Which Table 2 graph a scaled instance mimics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetId {
+    /// GAP-Urand: uniform, flat degrees.
+    GU,
+    /// GAP-Kron: Kronecker, extreme hubs (paper max degree ≈ 7.5 M).
+    GK,
+    /// Friendster: community structure (paper max degree 5 200).
+    FS,
+    /// MOLIERE: dense biomedical co-occurrence, heavy hubs (≈ 2.1 M),
+    /// highest edge/vertex ratio and > 2^32-edge-class size (Subway
+    /// cannot run it — Table 3 note).
+    MO,
+}
+
+impl DatasetId {
+    pub fn abbr(&self) -> &'static str {
+        match self {
+            DatasetId::GU => "GU",
+            DatasetId::GK => "GK",
+            DatasetId::FS => "FS",
+            DatasetId::MO => "MO",
+        }
+    }
+
+    pub fn all() -> [DatasetId; 4] {
+        [DatasetId::GU, DatasetId::GK, DatasetId::FS, DatasetId::MO]
+    }
+
+    /// Table 3 runs only GK/GU/FS (Subway's 2^32 vertex-id limit).
+    pub fn subway_supported(&self) -> bool {
+        !matches!(self, DatasetId::MO)
+    }
+}
+
+/// A generated, weighted instance plus its provenance.
+pub struct Dataset {
+    pub id: DatasetId,
+    pub graph: Csr,
+}
+
+/// Generate a scaled instance. `scale = 1.0` gives the default bench
+/// size (~0.5–1 M edges); paper-relative vertex/edge ratios are kept.
+pub fn generate(id: DatasetId, scale: f64, seed: u64) -> Dataset {
+    // (vertices, edges) at scale 1.0 — ratios follow Table 2:
+    // GU/GK: |E|/|V| = 32; FS: 55; MO: 221.
+    let (v, e) = match id {
+        DatasetId::GU => (32_768, 1_048_576),
+        DatasetId::GK => (32_768, 1_048_576),
+        DatasetId::FS => (16_384, 901_120),
+        DatasetId::MO => (7_424, 1_638_400),
+    };
+    let v = ((v as f64 * scale) as usize).max(64);
+    let e = ((e as f64 * scale) as usize).max(256);
+    let mut rng = Rng::new(seed ^ (id.abbr().len() as u64) << 32 ^ id as u64);
+    let graph = match id {
+        DatasetId::GU => gen::uniform(v, e, rng.next_u64()),
+        DatasetId::GK => gen::rmat(v, e, rng.next_u64()),
+        DatasetId::FS => gen::community(v, e, (v / 300).max(4), 0.75, rng.next_u64()),
+        DatasetId::MO => gen::rmat_with(v, e, 0.62, 0.17, 0.17, rng.next_u64()),
+    };
+    let graph = graph.with_weights(&mut rng);
+    Dataset { id, graph }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_follow_table2() {
+        let gu = generate(DatasetId::GU, 0.25, 1);
+        let gk = generate(DatasetId::GK, 0.25, 1);
+        let fs = generate(DatasetId::FS, 0.25, 1);
+        let mo = generate(DatasetId::MO, 0.25, 1);
+        // Degree skew ordering: GU flat; GK/MO extreme; FS in between.
+        assert!(gu.graph.max_degree() < 100, "GU max {}", gu.graph.max_degree());
+        assert!(
+            gk.graph.max_degree() > 10 * fs.graph.max_degree().max(1) / 2,
+            "GK {} vs FS {}",
+            gk.graph.max_degree(),
+            fs.graph.max_degree()
+        );
+        assert!(mo.graph.max_degree() > gu.graph.max_degree() * 10);
+        // MO has the highest density.
+        let density = |d: &Dataset| d.graph.num_edges() as f64 / d.graph.num_vertices as f64;
+        assert!(density(&mo) > density(&gu) * 3.0);
+        // All weighted.
+        assert!(gu.graph.weights.is_some());
+    }
+
+    #[test]
+    fn subway_support_flag() {
+        assert!(DatasetId::GK.subway_supported());
+        assert!(!DatasetId::MO.subway_supported());
+    }
+
+    #[test]
+    fn scaling() {
+        let small = generate(DatasetId::GU, 0.1, 1);
+        let big = generate(DatasetId::GU, 0.5, 1);
+        assert!(big.graph.num_edges() > 4 * small.graph.num_edges());
+    }
+}

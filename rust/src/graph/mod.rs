@@ -1,0 +1,12 @@
+//! Graph substrate: CSR, Balanced CSR (Fig 10), reference algorithms,
+//! generators, and the scaled Table 2 datasets.
+
+pub mod algo;
+pub mod balanced;
+pub mod csr;
+pub mod datasets;
+pub mod gen;
+
+pub use balanced::{BalancedCsr, Chunk};
+pub use csr::Csr;
+pub use datasets::{generate, Dataset, DatasetId};

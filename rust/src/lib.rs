@@ -1,0 +1,38 @@
+//! # GPUVM — GPU-driven Unified Virtual Memory (reproduction)
+//!
+//! A full-system reproduction of *GPUVM: GPU-driven Unified Virtual
+//! Memory* (Nazaraliyev, Sadredini, Abu-Ghazaleh; CS.DC 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's contribution as a calibrated
+//!   functional + timing simulation: GPU warps handle their own page
+//!   faults by posting RDMA work requests to RNIC queue pairs; a FIFO
+//!   circular page buffer with reference counters manages GPU memory;
+//!   a UVM model (OS fault handler, 64 KB prefetch, 2 MB VABlock
+//!   eviction) and bulk-transfer baselines (GPUDirect, Subway, a
+//!   RAPIDS-like scan engine) provide every comparison the paper makes.
+//! - **L2/L1 (python/, build-time only)** — the per-page compute payloads
+//!   as JAX graphs over Pallas kernels, AOT-lowered to HLO text.
+//! - **runtime/** — loads those artifacts via the PJRT C API (`xla`
+//!   crate) and executes them from the Rust hot path; Python never runs
+//!   at request time.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! measured reproductions of every figure and table.
+
+pub mod apps;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod graph;
+pub mod gpuvm;
+pub mod mem;
+pub mod memsys;
+pub mod metrics;
+pub mod pcie;
+pub mod rnic;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod uvm;

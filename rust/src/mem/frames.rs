@@ -1,0 +1,253 @@
+//! GPU page-frame pool: the "virtual address space" of Fig 5.
+//!
+//! Mechanism only — mapping, reference counting, fill/evict state — shared
+//! by both the GPUVM runtime (circular FIFO on top) and the UVM model
+//! (VABlock grouping on top). Pools are optionally *backed* with real
+//! bytes so the PJRT compute path and the correctness tests can verify
+//! data integrity under paging and eviction.
+
+use super::page::{FrameId, PageId};
+use anyhow::{bail, ensure, Result};
+use rustc_hash::FxHashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameState {
+    Free,
+    /// Fault in flight: frame reserved, data not yet arrived.
+    Filling(PageId),
+    Resident(PageId),
+}
+
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub state: FrameState,
+    /// Number of warps currently needing this page (paper §3.3).
+    pub refcount: u32,
+    pub dirty: bool,
+}
+
+pub struct FramePool {
+    page_size: u64,
+    frames: Vec<Frame>,
+    /// host page → frame, for pages Filling or Resident.
+    page_table: FxHashMap<PageId, FrameId>,
+    /// Real frame bytes if backed.
+    data: Option<Vec<u8>>,
+}
+
+impl FramePool {
+    pub fn new(num_frames: usize, page_size: u64, backed: bool) -> Self {
+        assert!(num_frames > 0);
+        Self {
+            page_size,
+            frames: vec![
+                Frame {
+                    state: FrameState::Free,
+                    refcount: 0,
+                    dirty: false,
+                };
+                num_frames
+            ],
+            page_table: FxHashMap::with_capacity_and_hasher(num_frames * 2, Default::default()),
+            data: backed.then(|| vec![0u8; num_frames * page_size as usize]),
+        }
+    }
+
+    pub fn num_frames(&self) -> usize {
+        self.frames.len()
+    }
+    pub fn page_size(&self) -> u64 {
+        self.page_size
+    }
+    pub fn is_backed(&self) -> bool {
+        self.data.is_some()
+    }
+    pub fn mapped_pages(&self) -> usize {
+        self.page_table.len()
+    }
+
+    pub fn frame(&self, f: FrameId) -> &Frame {
+        &self.frames[f.0 as usize]
+    }
+
+    /// Page-table lookup: `Some((frame, resident))`.
+    pub fn lookup(&self, page: PageId) -> Option<(FrameId, bool)> {
+        let &f = self.page_table.get(&page)?;
+        let resident = matches!(self.frames[f.0 as usize].state, FrameState::Resident(_));
+        Some((f, resident))
+    }
+
+    /// Reserve `frame` for `page` and mark the fill in flight.
+    pub fn begin_fill(&mut self, page: PageId, frame: FrameId) -> Result<()> {
+        let fr = &mut self.frames[frame.0 as usize];
+        ensure!(
+            fr.state == FrameState::Free,
+            "begin_fill on non-free frame {frame:?} ({:?})",
+            fr.state
+        );
+        ensure!(
+            !self.page_table.contains_key(&page),
+            "page {page:?} already mapped"
+        );
+        fr.state = FrameState::Filling(page);
+        fr.dirty = false;
+        self.page_table.insert(page, frame);
+        Ok(())
+    }
+
+    /// Data arrived: `frame` becomes resident. Optionally install the page
+    /// bytes (backed pools).
+    pub fn complete_fill(&mut self, frame: FrameId, bytes: Option<&[u8]>) -> Result<PageId> {
+        let fr = &mut self.frames[frame.0 as usize];
+        let page = match fr.state {
+            FrameState::Filling(p) => p,
+            s => bail!("complete_fill on frame {frame:?} in state {s:?}"),
+        };
+        fr.state = FrameState::Resident(page);
+        if let (Some(data), Some(bytes)) = (self.data.as_mut(), bytes) {
+            ensure!(bytes.len() == self.page_size as usize, "page-size mismatch");
+            let off = frame.0 as usize * self.page_size as usize;
+            data[off..off + bytes.len()].copy_from_slice(bytes);
+        }
+        Ok(page)
+    }
+
+    /// Unmap a resident, unreferenced frame. Returns the page it held and
+    /// whether it was dirty (caller handles write-back).
+    pub fn evict(&mut self, frame: FrameId) -> Result<(PageId, bool)> {
+        let fr = &mut self.frames[frame.0 as usize];
+        let page = match fr.state {
+            FrameState::Resident(p) => p,
+            s => bail!("evict on frame {frame:?} in state {s:?}"),
+        };
+        ensure!(
+            fr.refcount == 0,
+            "evicting frame {frame:?} with refcount {}",
+            fr.refcount
+        );
+        let dirty = fr.dirty;
+        fr.state = FrameState::Free;
+        fr.dirty = false;
+        self.page_table.remove(&page);
+        Ok((page, dirty))
+    }
+
+    pub fn addref(&mut self, frame: FrameId) {
+        self.frames[frame.0 as usize].refcount += 1;
+    }
+
+    pub fn unref(&mut self, frame: FrameId) {
+        let fr = &mut self.frames[frame.0 as usize];
+        assert!(fr.refcount > 0, "unref of frame {frame:?} with refcount 0");
+        fr.refcount -= 1;
+    }
+
+    pub fn mark_dirty(&mut self, frame: FrameId) {
+        self.frames[frame.0 as usize].dirty = true;
+    }
+
+    /// Frame payload (backed pools only).
+    pub fn frame_bytes(&self, frame: FrameId) -> Option<&[u8]> {
+        let data = self.data.as_ref()?;
+        let ps = self.page_size as usize;
+        let off = frame.0 as usize * ps;
+        Some(&data[off..off + ps])
+    }
+
+    pub fn frame_bytes_mut(&mut self, frame: FrameId) -> Option<&mut [u8]> {
+        let ps = self.page_size as usize;
+        let off = frame.0 as usize * ps;
+        self.data.as_mut().map(|d| &mut d[off..off + ps])
+    }
+
+    /// Structural invariants; called by the property tests after every
+    /// simulated step.
+    pub fn check_invariants(&self) -> Result<()> {
+        // page_table ↔ frame states form a bijection.
+        let mut seen = 0usize;
+        for (i, fr) in self.frames.iter().enumerate() {
+            match fr.state {
+                FrameState::Free => {
+                    ensure!(fr.refcount == 0, "free frame {i} has refcount");
+                    ensure!(!fr.dirty, "free frame {i} is dirty");
+                }
+                FrameState::Filling(p) | FrameState::Resident(p) => {
+                    seen += 1;
+                    let mapped = self.page_table.get(&p).copied();
+                    ensure!(
+                        mapped == Some(FrameId(i as u32)),
+                        "frame {i} holds {p:?} but page table says {mapped:?}"
+                    );
+                }
+            }
+        }
+        ensure!(
+            seen == self.page_table.len(),
+            "page table has {} entries, frames hold {seen}",
+            self.page_table.len()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_evict_cycle() {
+        let mut pool = FramePool::new(2, 4096, false);
+        pool.begin_fill(PageId(10), FrameId(0)).unwrap();
+        assert_eq!(pool.lookup(PageId(10)), Some((FrameId(0), false)));
+        pool.complete_fill(FrameId(0), None).unwrap();
+        assert_eq!(pool.lookup(PageId(10)), Some((FrameId(0), true)));
+        pool.addref(FrameId(0));
+        assert!(pool.evict(FrameId(0)).is_err(), "referenced frame must not evict");
+        pool.unref(FrameId(0));
+        let (page, dirty) = pool.evict(FrameId(0)).unwrap();
+        assert_eq!(page, PageId(10));
+        assert!(!dirty);
+        assert_eq!(pool.lookup(PageId(10)), None);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dirty_tracking() {
+        let mut pool = FramePool::new(1, 4096, false);
+        pool.begin_fill(PageId(1), FrameId(0)).unwrap();
+        pool.complete_fill(FrameId(0), None).unwrap();
+        pool.mark_dirty(FrameId(0));
+        let (_, dirty) = pool.evict(FrameId(0)).unwrap();
+        assert!(dirty);
+    }
+
+    #[test]
+    fn backed_bytes_installed() {
+        let mut pool = FramePool::new(1, 8, true);
+        pool.begin_fill(PageId(0), FrameId(0)).unwrap();
+        pool.complete_fill(FrameId(0), Some(&[1, 2, 3, 4, 5, 6, 7, 8]))
+            .unwrap();
+        assert_eq!(pool.frame_bytes(FrameId(0)).unwrap(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        pool.frame_bytes_mut(FrameId(0)).unwrap()[0] = 9;
+        assert_eq!(pool.frame_bytes(FrameId(0)).unwrap()[0], 9);
+    }
+
+    #[test]
+    fn double_map_rejected() {
+        let mut pool = FramePool::new(2, 4096, false);
+        pool.begin_fill(PageId(5), FrameId(0)).unwrap();
+        assert!(pool.begin_fill(PageId(5), FrameId(1)).is_err());
+        assert!(pool.begin_fill(PageId(6), FrameId(0)).is_err());
+    }
+
+    #[test]
+    fn invariants_catch_corruption() {
+        let mut pool = FramePool::new(2, 4096, false);
+        pool.begin_fill(PageId(1), FrameId(0)).unwrap();
+        pool.complete_fill(FrameId(0), None).unwrap();
+        pool.check_invariants().unwrap();
+        // simulate corruption
+        pool.page_table.insert(PageId(99), FrameId(1));
+        assert!(pool.check_invariants().is_err());
+    }
+}

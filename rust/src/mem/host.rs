@@ -1,0 +1,240 @@
+//! Host ("physical", Fig 5) memory: registered regions holding all
+//! application data, as `malloc` + `ibv_reg_mr` do in the real system.
+//!
+//! Regions are either *backed* (real bytes — used where numerics are
+//! verified, e.g. the PJRT end-to-end path) or *phantom* (sizes only —
+//! used by the large timing sweeps where carrying gigabytes of payload
+//! would only slow the simulator down without changing any timing).
+
+use super::page::{Addressing, PageId, RegionId};
+use anyhow::{ensure, Result};
+
+#[derive(Debug)]
+pub struct Region {
+    pub id: RegionId,
+    pub name: String,
+    /// First global page of this region.
+    pub base_page: u64,
+    pub len_bytes: u64,
+    pub num_pages: u64,
+    /// Real payload, if backed. Length = num_pages * page_size (padded).
+    data: Option<Vec<u8>>,
+    /// `cudaMemAdviseSetReadMostly`-style hint (consumed by the UVM model).
+    pub read_mostly: bool,
+    /// Remote key à la ibv_reg_mr (purely cosmetic, carried in WRs).
+    pub rkey: u32,
+}
+
+impl Region {
+    pub fn is_backed(&self) -> bool {
+        self.data.is_some()
+    }
+}
+
+/// All registered host memory for a run.
+pub struct HostMemory {
+    addressing: Addressing,
+    regions: Vec<Region>,
+    next_page: u64,
+}
+
+impl HostMemory {
+    pub fn new(page_size: u64) -> Self {
+        Self {
+            addressing: Addressing::new(page_size),
+            regions: Vec::new(),
+            next_page: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> u64 {
+        self.addressing.page_size
+    }
+
+    pub fn addressing(&self) -> Addressing {
+        self.addressing
+    }
+
+    /// Register a phantom region of `len_bytes`.
+    pub fn register(&mut self, name: &str, len_bytes: u64) -> RegionId {
+        self.register_inner(name, len_bytes, None)
+    }
+
+    /// Register a backed region initialized with `data`.
+    pub fn register_backed(&mut self, name: &str, data: Vec<u8>) -> RegionId {
+        let len = data.len() as u64;
+        self.register_inner(name, len, Some(data))
+    }
+
+    /// Register a backed region from f32 values (the common case for the
+    /// compute apps and the PJRT path).
+    pub fn register_f32(&mut self, name: &str, values: &[f32]) -> RegionId {
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.register_backed(name, bytes)
+    }
+
+    fn register_inner(&mut self, name: &str, len_bytes: u64, data: Option<Vec<u8>>) -> RegionId {
+        let id = RegionId(self.regions.len() as u32);
+        let num_pages = self.addressing.pages_for(len_bytes).max(1);
+        // Pad backed data to a whole number of pages so page reads are
+        // always full-page (the DMA engine moves whole pages).
+        let data = data.map(|mut d| {
+            d.resize((num_pages * self.addressing.page_size) as usize, 0);
+            d
+        });
+        let rkey = 0x1000_0000u32.wrapping_add((id.0 + 1).wrapping_mul(0x9E37));
+        self.regions.push(Region {
+            id,
+            name: name.to_string(),
+            base_page: self.next_page,
+            len_bytes,
+            num_pages,
+            data,
+            read_mostly: false,
+            rkey,
+        });
+        self.next_page += num_pages;
+        id
+    }
+
+    /// Apply the read-mostly advice to a region (UVM `cudaMemAdvise`).
+    pub fn advise_read_mostly(&mut self, region: RegionId) {
+        self.regions[region.0 as usize].read_mostly = true;
+    }
+
+    pub fn region(&self, id: RegionId) -> &Region {
+        &self.regions[id.0 as usize]
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.next_page
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.regions.iter().map(|r| r.len_bytes).sum()
+    }
+
+    /// Global page id of `(region, byte_offset)`.
+    pub fn page_at(&self, region: RegionId, offset: u64) -> PageId {
+        let r = &self.regions[region.0 as usize];
+        debug_assert!(offset < r.num_pages * self.addressing.page_size);
+        PageId(r.base_page + self.addressing.page_of(offset))
+    }
+
+    /// Which region owns a global page.
+    pub fn region_of_page(&self, page: PageId) -> Option<RegionId> {
+        // Regions are contiguous and sorted by base_page: binary search.
+        let idx = self
+            .regions
+            .partition_point(|r| r.base_page + r.num_pages <= page.0);
+        let r = self.regions.get(idx)?;
+        (r.base_page <= page.0).then_some(r.id)
+    }
+
+    /// Read a whole page's bytes (None for phantom regions).
+    pub fn read_page(&self, page: PageId) -> Option<&[u8]> {
+        let rid = self.region_of_page(page)?;
+        let r = &self.regions[rid.0 as usize];
+        let data = r.data.as_ref()?;
+        let ps = self.addressing.page_size as usize;
+        let local = (page.0 - r.base_page) as usize;
+        Some(&data[local * ps..(local + 1) * ps])
+    }
+
+    /// Write a whole page back (eviction write-back path).
+    pub fn write_page(&mut self, page: PageId, bytes: &[u8]) -> Result<()> {
+        let rid = self
+            .region_of_page(page)
+            .ok_or_else(|| anyhow::anyhow!("page {page:?} not registered"))?;
+        let ps = self.addressing.page_size as usize;
+        ensure!(bytes.len() == ps, "write_page expects a whole page");
+        let r = &mut self.regions[rid.0 as usize];
+        if let Some(data) = r.data.as_mut() {
+            let local = (page.0 - r.base_page) as usize;
+            data[local * ps..(local + 1) * ps].copy_from_slice(bytes);
+        }
+        Ok(())
+    }
+
+    /// Read back a backed region as f32 values (truncated to its length).
+    pub fn read_f32(&self, region: RegionId) -> Option<Vec<f32>> {
+        let r = &self.regions[region.0 as usize];
+        let data = r.data.as_ref()?;
+        let n = (r.len_bytes / 4) as usize;
+        Some(
+            (0..n)
+                .map(|i| f32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap()))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_layout() {
+        let mut hm = HostMemory::new(4096);
+        let a = hm.register("a", 10_000); // 3 pages
+        let b = hm.register("b", 4096); // 1 page
+        assert_eq!(hm.region(a).base_page, 0);
+        assert_eq!(hm.region(a).num_pages, 3);
+        assert_eq!(hm.region(b).base_page, 3);
+        assert_eq!(hm.total_pages(), 4);
+        assert_eq!(hm.page_at(b, 0), PageId(3));
+        assert_eq!(hm.region_of_page(PageId(2)), Some(a));
+        assert_eq!(hm.region_of_page(PageId(3)), Some(b));
+        assert_eq!(hm.region_of_page(PageId(4)), None);
+    }
+
+    #[test]
+    fn backed_round_trip() {
+        let mut hm = HostMemory::new(4096);
+        let vals: Vec<f32> = (0..2000).map(|i| i as f32).collect();
+        let r = hm.register_f32("x", &vals);
+        assert_eq!(hm.region(r).num_pages, 2); // 8000 bytes
+        let p0 = hm.read_page(PageId(0)).unwrap().to_vec();
+        assert_eq!(f32::from_le_bytes(p0[0..4].try_into().unwrap()), 0.0);
+        assert_eq!(f32::from_le_bytes(p0[4..8].try_into().unwrap()), 1.0);
+        // write back a modified page
+        let mut page = p0;
+        page[0..4].copy_from_slice(&42f32.to_le_bytes());
+        hm.write_page(PageId(0), &page).unwrap();
+        let back = hm.read_f32(r).unwrap();
+        assert_eq!(back[0], 42.0);
+        assert_eq!(back[1], 1.0);
+        assert_eq!(back.len(), 2000);
+    }
+
+    #[test]
+    fn phantom_regions_have_no_bytes() {
+        let mut hm = HostMemory::new(4096);
+        hm.register("ph", 1 << 20);
+        assert!(hm.read_page(PageId(5)).is_none());
+        assert!(!hm.region(RegionId(0)).is_backed());
+    }
+
+    #[test]
+    fn zero_len_region_occupies_one_page() {
+        let mut hm = HostMemory::new(4096);
+        let r = hm.register("empty", 0);
+        assert_eq!(hm.region(r).num_pages, 1);
+    }
+
+    #[test]
+    fn read_mostly_advice() {
+        let mut hm = HostMemory::new(4096);
+        let r = hm.register("ro", 8192);
+        assert!(!hm.region(r).read_mostly);
+        hm.advise_read_mostly(r);
+        assert!(hm.region(r).read_mostly);
+    }
+}

@@ -1,0 +1,11 @@
+//! Memory substrates: host regions (the "physical" space), GPU page
+//! frames (the "virtual" space), and page/address arithmetic. See paper
+//! Fig 5 for the mapping these modules implement.
+
+pub mod frames;
+pub mod host;
+pub mod page;
+
+pub use frames::{Frame, FramePool, FrameState};
+pub use host::{HostMemory, Region};
+pub use page::{Addressing, FrameId, PageId, RegionId};

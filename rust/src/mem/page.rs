@@ -1,0 +1,86 @@
+//! Page identifiers and address arithmetic.
+//!
+//! GPUVM's address spaces (paper Fig 5): host virtual memory acts as the
+//! "physical" space holding all application data; GPU memory is the
+//! "virtual" space of page frames. We number pages *globally* across all
+//! registered host regions, so a `PageId` uniquely identifies a host page
+//! independent of which array it belongs to.
+
+/// Global host page number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId(pub u64);
+
+/// Index of a GPU page frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FrameId(pub u32);
+
+/// Handle to a registered host region (one application array / buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RegionId(pub u32);
+
+/// Byte-address arithmetic within a region, given the run's page size.
+#[derive(Debug, Clone, Copy)]
+pub struct Addressing {
+    pub page_size: u64,
+}
+
+impl Addressing {
+    pub fn new(page_size: u64) -> Self {
+        assert!(page_size.is_power_of_two());
+        Self { page_size }
+    }
+
+    /// Pages needed to hold `bytes`.
+    #[inline]
+    pub fn pages_for(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.page_size)
+    }
+
+    /// Page index (within a region) of byte offset `off`.
+    #[inline]
+    pub fn page_of(&self, off: u64) -> u64 {
+        off >> self.page_size.trailing_zeros()
+    }
+
+    /// Offset within its page of byte offset `off`.
+    #[inline]
+    pub fn offset_in_page(&self, off: u64) -> u64 {
+        off & (self.page_size - 1)
+    }
+
+    /// Inclusive page range covering `[off, off+len)` within a region.
+    #[inline]
+    pub fn page_range(&self, off: u64, len: u64) -> std::ops::RangeInclusive<u64> {
+        if len == 0 {
+            let p = self.page_of(off);
+            return p..=p;
+        }
+        self.page_of(off)..=self.page_of(off + len - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Addressing::new(4096);
+        assert_eq!(a.pages_for(0), 0);
+        assert_eq!(a.pages_for(1), 1);
+        assert_eq!(a.pages_for(4096), 1);
+        assert_eq!(a.pages_for(4097), 2);
+        assert_eq!(a.page_of(4095), 0);
+        assert_eq!(a.page_of(4096), 1);
+        assert_eq!(a.offset_in_page(4097), 1);
+        assert_eq!(a.page_range(4000, 200), 0..=1);
+        assert_eq!(a.page_range(0, 4096), 0..=0);
+        assert_eq!(a.page_range(100, 0), 0..=0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn page_size_must_be_pow2() {
+        Addressing::new(3000);
+    }
+}

@@ -1,0 +1,77 @@
+//! The "ideal" memory system: every page is already resident in GPU
+//! memory. Used by the bulk-transfer baselines (Subway, RAPIDS-like,
+//! explicit `cudaMemcpy` phases), which pay their transfer costs up
+//! front through `pcie::Topology` and then compute at full speed, and by
+//! unit tests that want the executor's dynamics without paging.
+
+use super::{AccessResult, Ev, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::mem::HostMemory;
+use crate::metrics::Metrics;
+use crate::sim::{Engine, SimTime};
+
+pub struct IdealSystem {
+    hit_ns: u64,
+}
+
+impl IdealSystem {
+    pub fn new(hit_ns: u64) -> Self {
+        Self { hit_ns }
+    }
+}
+
+impl MemorySystem for IdealSystem {
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+
+    fn prepare(&mut self, _hm: &HostMemory, _m: &mut Metrics) {}
+
+    fn access(
+        &mut self,
+        now: SimTime,
+        _slot: SlotId,
+        _gpu: usize,
+        pages: &[PageAccess],
+        _hm: &mut HostMemory,
+        _eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> AccessResult {
+        m.hits += pages.len() as u64;
+        AccessResult::Ready {
+            resume_at: now + self.hit_ns,
+        }
+    }
+
+    fn release(
+        &mut self,
+        _now: SimTime,
+        _slot: SlotId,
+        _eng: &mut Engine<Ev>,
+        _m: &mut Metrics,
+        _wakes: &mut Wakes,
+    ) {
+    }
+
+    fn on_event(
+        &mut self,
+        _now: SimTime,
+        _ev: MemEvent,
+        _hm: &mut HostMemory,
+        _eng: &mut Engine<Ev>,
+        _m: &mut Metrics,
+        _wakes: &mut Wakes,
+    ) {
+    }
+
+    fn drain(
+        &mut self,
+        _now: SimTime,
+        _hm: &mut HostMemory,
+        _eng: &mut Engine<Ev>,
+        _m: &mut Metrics,
+    ) -> bool {
+        false
+    }
+
+    fn finalize(&mut self, _m: &mut Metrics) {}
+}

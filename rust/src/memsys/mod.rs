@@ -1,0 +1,117 @@
+//! The memory-system interface the GPU executor drives, plus the shared
+//! event vocabulary and an "ideal" (everything-resident) implementation
+//! used by the bulk-transfer baselines.
+
+pub mod ideal;
+
+use crate::mem::{HostMemory, PageId};
+use crate::metrics::Metrics;
+use crate::sim::{Engine, SimTime};
+
+/// Hardware warp-slot identifier (dense, executor-assigned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SlotId(pub u32);
+
+/// One page touched by a warp access, with intent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageAccess {
+    pub page: PageId,
+    pub write: bool,
+}
+
+/// Events internal to memory systems, routed through the executor's
+/// engine so all timing lives on one clock.
+#[derive(Debug, Clone, Copy)]
+pub enum MemEvent {
+    /// A CQ entry for `wr_id` became visible on `queue` (GPUVM).
+    CqCompletion { queue: usize, wr_id: u64 },
+    /// A frame's reference count drained and pages queue on it (GPUVM):
+    /// service the frame's waiter list.
+    FrameFree { gpu: usize, frame: u32 },
+    /// Flush a partially filled fault batch (GPUVM, batching > 1).
+    BatchFlush { queue: usize, epoch: u64 },
+    /// The UVM driver wakes to retire a batch of faults.
+    UvmDriverService,
+    /// A UVM fault-group DMA finished.
+    UvmTransferDone { token: u64 },
+}
+
+/// Executor event type (the single DES event vocabulary).
+#[derive(Debug, Clone, Copy)]
+pub enum Ev {
+    /// A warp slot should (re)evaluate its next op.
+    Resume { slot: SlotId },
+    /// Memory-system internal event.
+    Mem(MemEvent),
+}
+
+/// Result of a warp access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessResult {
+    /// All pages resident; warp may continue at `resume_at`.
+    Ready { resume_at: SimTime },
+    /// At least one fault in flight; the memory system will wake the slot.
+    Blocked,
+}
+
+/// Wake-ups produced by memory-system event handling.
+pub type Wakes = Vec<(SlotId, SimTime)>;
+
+/// A pluggable paged memory system (GPUVM, UVM, ideal).
+///
+/// Contract:
+/// - `access` must eventually lead to every referenced page being
+///   resident and the slot woken (via `Ready` or a later wake).
+/// - Pages referenced by a slot stay resident (refcounted) until
+///   `release(slot)`.
+/// - `on_event` handles this system's `MemEvent`s and may schedule more.
+/// - `drain` is called when no warp is runnable and no event is pending
+///   from the executor's perspective; it must flush any internal
+///   batching so progress resumes (returns true if it did anything).
+pub trait MemorySystem {
+    fn name(&self) -> &'static str;
+
+    /// Called once after the workload registered its regions.
+    fn prepare(&mut self, hm: &HostMemory, m: &mut Metrics);
+
+    /// Warp `slot` on GPU `gpu` touches `pages`.
+    fn access(
+        &mut self,
+        now: SimTime,
+        slot: SlotId,
+        gpu: usize,
+        pages: &[PageAccess],
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> AccessResult;
+
+    /// Release all pages `slot` currently references. May wake warps
+    /// stalled on eviction.
+    fn release(
+        &mut self,
+        now: SimTime,
+        slot: SlotId,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+        wakes: &mut Wakes,
+    );
+
+    /// Handle an internal event; push any slot wake-ups.
+    fn on_event(
+        &mut self,
+        now: SimTime,
+        ev: MemEvent,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+        wakes: &mut Wakes,
+    );
+
+    /// Flush internal batching when the pipeline would otherwise stall.
+    fn drain(&mut self, now: SimTime, hm: &mut HostMemory, eng: &mut Engine<Ev>, m: &mut Metrics)
+        -> bool;
+
+    /// Export final counters (link utilization etc.) into `m`.
+    fn finalize(&mut self, m: &mut Metrics);
+}

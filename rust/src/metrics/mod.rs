@@ -1,0 +1,194 @@
+//! Run metrics: counters, latency histograms, link utilization, and the
+//! I/O-amplification accounting Fig 12/15 report.
+
+use crate::sim::SimTime;
+use crate::util::stats::LatencyHist;
+use std::collections::BTreeMap;
+
+/// Everything a single simulated run records. Memory systems and the GPU
+/// execution model write into this; benches and the CLI read it out.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Total page faults taken (leader-level, post-coalescing for GPUVM;
+    /// fault groups for UVM).
+    pub faults: u64,
+    /// Faults resolved by joining an already-in-flight fault (inter-warp
+    /// coalescing for GPUVM; duplicate-fault squash for UVM).
+    pub coalesced_faults: u64,
+    /// Page-table hits (access found the page resident).
+    pub hits: u64,
+    /// Bytes moved host→GPU.
+    pub bytes_in: u64,
+    /// Bytes moved GPU→host (write-backs).
+    pub bytes_out: u64,
+    /// Bytes transferred that the application actually read/wrote.
+    pub useful_bytes: u64,
+    /// Pages evicted.
+    pub evictions: u64,
+    /// Evictions that had to wait for a nonzero reference count.
+    pub eviction_waits: u64,
+    /// Pages that were evicted and later re-fetched (redundant transfer).
+    pub refetches: u64,
+    /// Doorbell rings.
+    pub doorbells: u64,
+    /// Work requests posted to RNIC queues.
+    pub work_requests: u64,
+    /// Fault service latency (post→data-resident), ns.
+    pub fault_latency: LatencyHist,
+    /// Per-warp stall time waiting on faults, ns (summed).
+    pub stall_ns: u64,
+    /// Compute time summed over warps, ns.
+    pub compute_ns: u64,
+    /// End of run, ns.
+    pub finish_ns: SimTime,
+    /// Per-link busy nanoseconds (keyed by link name) for utilization.
+    pub link_busy_ns: BTreeMap<String, u64>,
+    /// One-time setup cost reported separately (e.g. memadvise), ns.
+    pub setup_ns: u64,
+    /// Extra named counters (ablations, per-app detail).
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bump(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn add_link_busy(&mut self, link: &str, ns: u64) {
+        *self.link_busy_ns.entry(link.to_string()).or_insert(0) += ns;
+    }
+
+    /// Achieved host→GPU throughput over the run, bytes/s.
+    pub fn throughput_in(&self) -> f64 {
+        if self.finish_ns == 0 {
+            return 0.0;
+        }
+        self.bytes_in as f64 / (self.finish_ns as f64 / 1e9)
+    }
+
+    /// Utilization of a link over the run duration, in [0, 1].
+    pub fn link_utilization(&self, link: &str) -> f64 {
+        if self.finish_ns == 0 {
+            return 0.0;
+        }
+        let busy = self.link_busy_ns.get(link).copied().unwrap_or(0);
+        (busy as f64 / self.finish_ns as f64).min(1.0)
+    }
+
+    /// I/O amplification: bytes moved per byte the application needed.
+    /// 1.0 is perfect; UVM's 64 KB granularity on sparse access inflates it.
+    pub fn io_amplification(&self) -> f64 {
+        if self.useful_bytes == 0 {
+            return 0.0;
+        }
+        (self.bytes_in + self.bytes_out) as f64 / self.useful_bytes as f64
+    }
+
+    /// Fault hit rate = hits / (hits + faults + coalesced).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.faults + self.coalesced_faults;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    /// Merge another run's metrics (used by multi-GPU aggregation).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.faults += other.faults;
+        self.coalesced_faults += other.coalesced_faults;
+        self.hits += other.hits;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.useful_bytes += other.useful_bytes;
+        self.evictions += other.evictions;
+        self.eviction_waits += other.eviction_waits;
+        self.refetches += other.refetches;
+        self.doorbells += other.doorbells;
+        self.work_requests += other.work_requests;
+        self.stall_ns += other.stall_ns;
+        self.compute_ns += other.compute_ns;
+        self.finish_ns = self.finish_ns.max(other.finish_ns);
+        self.setup_ns += other.setup_ns;
+        for (k, v) in &other.link_busy_ns {
+            *self.link_busy_ns.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    /// Compact single-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "t={} faults={} coalesced={} hits={} in={} out={} evict={} refetch={} amp={:.2} bw_in={}",
+            crate::util::bench::fmt_ns(self.finish_ns),
+            self.faults,
+            self.coalesced_faults,
+            self.hits,
+            crate::util::bench::fmt_bytes(self.bytes_in),
+            crate::util::bench::fmt_bytes(self.bytes_out),
+            self.evictions,
+            self.refetches,
+            self.io_amplification(),
+            crate::util::bench::fmt_gbps(self.throughput_in()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_amplification() {
+        let mut m = Metrics::new();
+        m.bytes_in = 12_000_000_000;
+        m.useful_bytes = 6_000_000_000;
+        m.finish_ns = 1_000_000_000; // 1 s
+        assert!((m.throughput_in() - 12e9).abs() < 1.0);
+        assert!((m.io_amplification() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_utilization_bounded() {
+        let mut m = Metrics::new();
+        m.finish_ns = 100;
+        m.add_link_busy("nic0", 250);
+        assert_eq!(m.link_utilization("nic0"), 1.0);
+        assert_eq!(m.link_utilization("absent"), 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::new();
+        a.faults = 5;
+        a.finish_ns = 10;
+        a.bump("x", 1);
+        let mut b = Metrics::new();
+        b.faults = 7;
+        b.finish_ns = 20;
+        b.bump("x", 2);
+        a.merge(&b);
+        assert_eq!(a.faults, 12);
+        assert_eq!(a.finish_ns, 20);
+        assert_eq!(a.counter("x"), 3);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.throughput_in(), 0.0);
+        assert_eq!(m.io_amplification(), 0.0);
+        assert_eq!(m.hit_rate(), 0.0);
+        assert!(!m.summary().is_empty());
+    }
+}

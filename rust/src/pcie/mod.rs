@@ -1,0 +1,308 @@
+//! PCIe topology and bandwidth-contention model (paper Fig 7).
+//!
+//! The r7525 node: GPUs and RNICs hang off *separate* PCIe bridges under
+//! the root complex; host DRAM is reached through the root. The NIC's
+//! bridge is a shared channel, so a page flowing host-mem → NIC → GPU
+//! crosses that bridge twice and usable one-directional bandwidth halves
+//! (Fig 7 caption; the 6.5 GB/s ceiling of Fig 8). GPU bridges are modeled
+//! full-duplex (separate up/down links).
+//!
+//! Contention model: each link is a FIFO byte-serial resource with a
+//! `busy_until` horizon; a transfer reserves each link on its path in
+//! order (store-and-forward). With many small concurrent transfers this
+//! reduces to an M/D/1-ish queue per link, which is exactly the regime the
+//! paper's Little's-law analysis (§3.2) describes.
+
+use crate::config::SystemConfig;
+use crate::sim::{ns_for_bytes, SimTime};
+
+/// Index into the topology's link table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId(pub usize);
+
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// Usable bandwidth, bytes/s.
+    pub bw: f64,
+    /// Earliest time the link is free.
+    busy_until: SimTime,
+    /// Accumulated busy nanoseconds (for utilization reporting).
+    busy_ns: u64,
+    /// Bytes carried.
+    pub bytes: u64,
+}
+
+impl Link {
+    fn new(name: impl Into<String>, bw: f64) -> Self {
+        Self {
+            name: name.into(),
+            bw,
+            busy_until: 0,
+            busy_ns: 0,
+            bytes: 0,
+        }
+    }
+}
+
+/// Direction of a transfer relative to the GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// host memory → GPU
+    In,
+    /// GPU → host memory
+    Out,
+}
+
+/// The simulated PCIe fabric.
+pub struct Topology {
+    links: Vec<Link>,
+    hop_ns: u64,
+    mem: LinkId,
+    /// one per NIC; shared channel (both directions) if `nic_bridge_shared`
+    nic_bridge: Vec<LinkId>,
+    /// per GPU: (down = toward GPU, up = from GPU)
+    gpu_bridge: Vec<(LinkId, LinkId)>,
+    nic_bridge_shared: bool,
+    /// separate up-links for NIC bridges when not shared
+    nic_bridge_up: Vec<LinkId>,
+}
+
+impl Topology {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let mut links = Vec::new();
+        let mut add = |name: String, bw: f64| {
+            links.push(Link::new(name, bw));
+            LinkId(links.len() - 1)
+        };
+        let mem = add("mem".into(), cfg.pcie.mem_bw);
+        let mut nic_bridge = Vec::new();
+        let mut nic_bridge_up = Vec::new();
+        for n in 0..cfg.rnic.num_nics {
+            nic_bridge.push(add(format!("nic{n}"), cfg.pcie.link_bw));
+            if !cfg.pcie.nic_bridge_shared {
+                nic_bridge_up.push(add(format!("nic{n}.up"), cfg.pcie.link_bw));
+            }
+        }
+        let mut gpu_bridge = Vec::new();
+        for g in 0..cfg.gpu.num_gpus {
+            let down = add(format!("gpu{g}.down"), cfg.pcie.link_bw);
+            let up = add(format!("gpu{g}.up"), cfg.pcie.link_bw);
+            gpu_bridge.push((down, up));
+        }
+        Self {
+            links,
+            hop_ns: cfg.pcie.hop_ns,
+            mem,
+            nic_bridge,
+            gpu_bridge,
+            nic_bridge_shared: cfg.pcie.nic_bridge_shared,
+            nic_bridge_up,
+        }
+    }
+
+    pub fn num_nics(&self) -> usize {
+        self.nic_bridge.len()
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// Busy-time accumulated on a link, ns.
+    pub fn busy_ns(&self, id: LinkId) -> u64 {
+        self.links[id.0].busy_ns
+    }
+
+    pub fn find_link(&self, name: &str) -> Option<LinkId> {
+        self.links.iter().position(|l| l.name == name).map(LinkId)
+    }
+
+    /// Path for a page moved by RNIC `nic` for GPU `gpu`:
+    /// mem → NIC bridge (ingress) → NIC bridge (egress) → GPU bridge.
+    pub fn path_via_nic(&self, nic: usize, gpu: usize, dir: Dir) -> Vec<LinkId> {
+        let nb_in = self.nic_bridge[nic];
+        let nb_out = if self.nic_bridge_shared {
+            self.nic_bridge[nic]
+        } else {
+            self.nic_bridge_up[nic]
+        };
+        let (down, up) = self.gpu_bridge[gpu];
+        match dir {
+            Dir::In => vec![self.mem, nb_in, nb_out, down],
+            Dir::Out => vec![up, nb_in, nb_out, self.mem],
+        }
+    }
+
+    /// Path for a direct host↔GPU DMA (the UVM / bulk-copy data path —
+    /// no NIC in the loop).
+    pub fn path_direct(&self, gpu: usize, dir: Dir) -> Vec<LinkId> {
+        let (down, up) = self.gpu_bridge[gpu];
+        match dir {
+            Dir::In => vec![self.mem, down],
+            Dir::Out => vec![up, self.mem],
+        }
+    }
+
+    /// Reserve `bytes` across `path` starting no earlier than `now`;
+    /// returns the delivery (finish) time. Each hop is store-and-forward:
+    /// propagate (`hop_ns`, latency only — it does NOT occupy the link),
+    /// queue behind the link's horizon, occupy it for bytes/bw, move on.
+    pub fn transfer(&mut self, now: SimTime, bytes: u64, path: &[LinkId]) -> SimTime {
+        let mut t = now;
+        let mut prev: Option<usize> = None;
+        for &LinkId(i) in path {
+            let link = &mut self.links[i];
+            // A doubly-crossed shared channel (NIC bridge) is one
+            // contiguous occupancy: no propagation gap between the in-
+            // and out-crossing, or the gap would be dead air on the wire.
+            let ready = if prev == Some(i) {
+                t
+            } else {
+                t.saturating_add(self.hop_ns)
+            };
+            let start = ready.max(link.busy_until);
+            let dur = ns_for_bytes(bytes, link.bw);
+            link.busy_until = start + dur;
+            link.busy_ns += dur;
+            link.bytes += bytes;
+            t = start + dur;
+            prev = Some(i);
+        }
+        t
+    }
+
+    /// Earliest time the first link of `path` frees up (for backpressure).
+    pub fn free_at(&self, path: &[LinkId]) -> SimTime {
+        path.first().map(|&LinkId(i)| self.links[i].busy_until).unwrap_or(0)
+    }
+
+    /// Copy per-link busy counters into run metrics.
+    pub fn export_utilization(&self, m: &mut crate::metrics::Metrics) {
+        for l in &self.links {
+            m.add_link_busy(&l.name, l.busy_ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(nics: usize) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.rnic.num_nics = nics;
+        c.pcie.hop_ns = 0; // simplify math in tests
+        c
+    }
+
+    #[test]
+    fn nic_path_crosses_bridge_twice() {
+        let c = cfg(1);
+        let topo = Topology::new(&c);
+        let path = topo.path_via_nic(0, 0, Dir::In);
+        let nic = topo.find_link("nic0").unwrap();
+        let crossings = path.iter().filter(|&&l| l == nic).count();
+        assert_eq!(crossings, 2, "shared bridge must be traversed twice");
+    }
+
+    #[test]
+    fn shared_bridge_halves_throughput() {
+        let c = cfg(1);
+        let mut topo = Topology::new(&c);
+        let path = topo.path_via_nic(0, 0, Dir::In);
+        // Saturate with many 64 KiB transfers; steady-state throughput
+        // through the doubly-crossed bridge must be ~bw/2.
+        let n = 2000u64;
+        let bytes = 64 * 1024;
+        let mut finish = 0;
+        for _ in 0..n {
+            finish = topo.transfer(0, bytes, &path);
+        }
+        let bw = n as f64 * bytes as f64 / (finish as f64 / 1e9);
+        let expect = c.pcie.link_bw / 2.0;
+        assert!(
+            (bw - expect).abs() / expect < 0.05,
+            "bw={:.2e} expect={:.2e}",
+            bw,
+            expect
+        );
+    }
+
+    #[test]
+    fn direct_path_full_bandwidth() {
+        let c = cfg(1);
+        let mut topo = Topology::new(&c);
+        let path = topo.path_direct(0, Dir::In);
+        let n = 2000u64;
+        let bytes = 64 * 1024;
+        let mut finish = 0;
+        for _ in 0..n {
+            finish = topo.transfer(0, bytes, &path);
+        }
+        let bw = n as f64 * bytes as f64 / (finish as f64 / 1e9);
+        assert!(
+            (bw - c.pcie.link_bw).abs() / c.pcie.link_bw < 0.05,
+            "bw={bw:.2e}"
+        );
+    }
+
+    #[test]
+    fn two_nics_double_throughput() {
+        let c = cfg(2);
+        let mut topo = Topology::new(&c);
+        let p0 = topo.path_via_nic(0, 0, Dir::In);
+        let p1 = topo.path_via_nic(1, 0, Dir::In);
+        let n = 2000u64;
+        let bytes = 64 * 1024;
+        let mut finish = 0;
+        for i in 0..n {
+            let p = if i % 2 == 0 { &p0 } else { &p1 };
+            finish = finish.max(topo.transfer(0, bytes, p));
+        }
+        let bw = n as f64 * bytes as f64 / (finish as f64 / 1e9);
+        // Two bridges at bw/2 each = bw total (mem + gpu.down can carry it).
+        assert!(
+            (bw - c.pcie.link_bw).abs() / c.pcie.link_bw < 0.08,
+            "bw={bw:.2e}"
+        );
+    }
+
+    #[test]
+    fn contention_serializes() {
+        let c = cfg(1);
+        let mut topo = Topology::new(&c);
+        let path = topo.path_direct(0, Dir::In);
+        let t1 = topo.transfer(0, 1_000_000, &path);
+        let t2 = topo.transfer(0, 1_000_000, &path);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn utilization_export() {
+        let c = cfg(1);
+        let mut topo = Topology::new(&c);
+        let path = topo.path_direct(0, Dir::In);
+        topo.transfer(0, 13_000_000, &path); // ~1 ms on the gpu link
+        let mut m = crate::metrics::Metrics::new();
+        m.finish_ns = 2_000_000;
+        topo.export_utilization(&mut m);
+        let u = m.link_utilization("gpu0.down");
+        assert!((0.4..=0.6).contains(&u), "u={u}");
+    }
+
+    #[test]
+    fn unshared_bridge_uses_separate_uplink() {
+        let mut c = cfg(1);
+        c.pcie.nic_bridge_shared = false;
+        let topo = Topology::new(&c);
+        let path = topo.path_via_nic(0, 0, Dir::In);
+        let nic = topo.find_link("nic0").unwrap();
+        let nic_up = topo.find_link("nic0.up").unwrap();
+        assert!(path.contains(&nic) && path.contains(&nic_up));
+    }
+}

@@ -1,0 +1,5 @@
+//! PJRT artifact loading + execution (the `xla` crate wrapper).
+
+pub mod pjrt;
+
+pub use pjrt::{Artifact, Runtime, Tensor, TensorSpec};

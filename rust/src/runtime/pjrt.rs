@@ -1,0 +1,271 @@
+//! PJRT runtime: load the AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Graphs are lowered
+//! with `return_tuple=True`, so outputs are unwrapped with `to_tuple()`.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "float32",
+            Tensor::I32(..) => "int32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v, _) => xla::Literal::vec1(v),
+            Tensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        Ok(match spec.dtype.as_str() {
+            "float32" => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            "int32" => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+            other => bail!("unsupported artifact dtype {other}"),
+        })
+    }
+}
+
+/// Parsed `dtype[d0,d1,...]` from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad tensor spec '{s}'"))?;
+        let dims = rest.strip_suffix(']').context("missing ]")?;
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().map_err(Into::into))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self {
+            dtype: dtype.to_string(),
+            shape,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled executable plus its manifest signature.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: a PJRT CPU client and the compiled artifact table.
+/// Python is done by now — this is the only compute engine on the
+/// request path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Standard location: `<repo>/artifacts` (built by `make artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load_dir("artifacts")
+    }
+
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let art = Self::load_line(&client, &dir, line)
+                .with_context(|| format!("loading artifact '{line}'"))?;
+            artifacts.insert(art.name.clone(), art);
+        }
+        ensure!(!artifacts.is_empty(), "empty artifact manifest");
+        Ok(Self {
+            client,
+            artifacts,
+            dir,
+        })
+    }
+
+    fn load_line(client: &xla::PjRtClient, dir: &Path, line: &str) -> Result<Artifact> {
+        // "<name> <file> <in;in;..> -> <out;out;..>"
+        let mut parts = line.splitn(3, ' ');
+        let name = parts.next().context("name")?.to_string();
+        let file = parts.next().context("file")?;
+        let sig = parts.next().context("signature")?;
+        let (ins, outs) = sig.split_once(" -> ").context("signature arrow")?;
+        let inputs = ins
+            .split(';')
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = outs
+            .split(';')
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let path = dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Artifact {
+            name,
+            inputs,
+            outputs,
+            exe,
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut n: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        n.sort_unstable();
+        n
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("no artifact '{name}' (have: {:?})", self.names()))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute `name` with `inputs`, validating against the manifest
+    /// signature, and return the output tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let art = self.artifact(name)?;
+        ensure!(
+            inputs.len() == art.inputs.len(),
+            "{name}: {} inputs given, {} expected",
+            inputs.len(),
+            art.inputs.len()
+        );
+        for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
+            ensure!(
+                t.shape() == spec.shape.as_slice() && t.dtype_name() == spec.dtype,
+                "{name}: input {i} is {}{:?}, expected {}{:?}",
+                t.dtype_name(),
+                t.shape(),
+                spec.dtype,
+                spec.shape
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(
+            outs.len() == art.outputs.len(),
+            "{name}: {} outputs, expected {}",
+            outs.len(),
+            art.outputs.len()
+        );
+        outs.iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        let t = TensorSpec::parse("float32[64,1024]").unwrap();
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.shape, vec![64, 1024]);
+        assert_eq!(t.elems(), 65536);
+        let s = TensorSpec::parse("int32[64]").unwrap();
+        assert_eq!(s.shape, vec![64]);
+        assert!(TensorSpec::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.len(), 2);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype_name(), "float32");
+    }
+
+    // PJRT execution tests live in rust/tests/runtime_pjrt.rs (they need
+    // `make artifacts` to have run).
+}

@@ -1,0 +1,13 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! The engine is generic over the event payload type; component worlds
+//! (the GPUVM runtime, the UVM driver, the RNIC model) define one event
+//! enum each and drive a `while let Some((t, ev)) = engine.pop()` loop.
+//! Determinism: ties in time are broken by schedule order (a monotone
+//! sequence number), so the same seed always yields the same trajectory.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::Engine;
+pub use time::{ms, ns_for_bytes, us, SimTime, NS_PER_MS, NS_PER_S, NS_PER_US};

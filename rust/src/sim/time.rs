@@ -1,0 +1,53 @@
+//! Simulated time: u64 nanoseconds since run start.
+
+/// Simulated time in nanoseconds.
+pub type SimTime = u64;
+
+pub const NS_PER_US: u64 = 1_000;
+pub const NS_PER_MS: u64 = 1_000_000;
+pub const NS_PER_S: u64 = 1_000_000_000;
+
+/// Microseconds (possibly fractional) to nanoseconds, rounding to nearest.
+#[inline]
+pub fn us(x: f64) -> SimTime {
+    (x * NS_PER_US as f64).round() as SimTime
+}
+
+/// Milliseconds to nanoseconds.
+#[inline]
+pub fn ms(x: f64) -> SimTime {
+    (x * NS_PER_MS as f64).round() as SimTime
+}
+
+/// Duration in ns to move `bytes` at `bytes_per_sec`, rounded up so a
+/// nonzero transfer never takes zero time.
+#[inline]
+pub fn ns_for_bytes(bytes: u64, bytes_per_sec: f64) -> SimTime {
+    if bytes == 0 {
+        return 0;
+    }
+    debug_assert!(bytes_per_sec > 0.0);
+    let ns = bytes as f64 * NS_PER_S as f64 / bytes_per_sec;
+    (ns.ceil() as SimTime).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(us(23.0), 23_000);
+        assert_eq!(us(0.5), 500);
+        assert_eq!(ms(1.5), 1_500_000);
+    }
+
+    #[test]
+    fn bandwidth_durations() {
+        // 4 KiB at 12 GB/s ≈ 341 ns
+        let t = ns_for_bytes(4096, 12e9);
+        assert!((340..=342).contains(&t), "{t}");
+        assert_eq!(ns_for_bytes(0, 12e9), 0);
+        assert!(ns_for_bytes(1, 1e12) >= 1);
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal wallclock bench harness (the offline build has no `criterion`).
+//!
+//! Benches in this repo mostly report *simulated* time from the DES, but the
+//! §Perf pass also needs wallclock measurements of the simulator itself;
+//! this module provides warmup + repeated timing with mean/std and a
+//! stable text report format shared by all `rust/benches/*.rs` binaries.
+
+use super::stats::Online;
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut o = Online::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        o.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: o.mean(),
+        std_s: o.std(),
+        min_s: o.min(),
+    }
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>10.3} ms ±{:>7.3} ms  (min {:.3} ms, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Pretty banner used by the figure benches so output sections are greppable.
+pub fn banner(title: &str) {
+    let line = "=".repeat(title.len().max(8) + 8);
+    println!("\n{line}\n=== {title} ===\n{line}");
+}
+
+/// Format a simulated duration (ns) human-readably.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+    if b >= GB {
+        format!("{:.2} GiB", b as f64 / GB as f64)
+    } else if b >= MB {
+        format!("{:.2} MiB", b as f64 / MB as f64)
+    } else if b >= KB {
+        format!("{:.2} KiB", b as f64 / KB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format a bandwidth (bytes/sec) as GB/s (decimal, matching the paper).
+pub fn fmt_gbps(bytes_per_sec: f64) -> String {
+    format!("{:.2} GB/s", bytes_per_sec / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs() {
+        let mut count = 0u32;
+        let t = time("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0);
+        assert!(!t.report().is_empty());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500), "500 ns");
+        assert_eq!(fmt_ns(1_500), "1.500 µs");
+        assert_eq!(fmt_ns(2_000_000), "2.000 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000 s");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_gbps(6.5e9), "6.50 GB/s");
+    }
+}

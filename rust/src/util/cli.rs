@@ -1,0 +1,163 @@
+//! Tiny argument parser (the offline build has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// program name as invoked
+    pub prog: String,
+    positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        let mut it = std::env::args();
+        let prog = it.next().unwrap_or_else(|| "gpuvm".into());
+        Self::parse(prog, it.collect())
+    }
+
+    pub fn parse(prog: String, argv: Vec<String>) -> Self {
+        let mut positional = Vec::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags
+                        .entry(stripped.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.entry(stripped.to_string()).or_default().push(String::new());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self {
+            prog,
+            positional,
+            flags,
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_u64_with_suffix(v)
+                .ok_or_else(|| anyhow::anyhow!("--{key}: cannot parse '{v}' as integer")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}' as float")),
+        }
+    }
+}
+
+/// Parse integers with the size suffixes used throughout the configs:
+/// `4k`/`4K` = 4096, `2m`/`2M` = 2 MiB, `1g`/`1G` = 1 GiB (binary units).
+pub fn parse_u64_with_suffix(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1024u64),
+        'm' | 'M' => (&s[..s.len() - 1], 1024 * 1024),
+        'g' | 'G' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    let base: f64 = num.parse().ok()?;
+    if base < 0.0 {
+        return None;
+    }
+    Some((base * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse("gpuvm".into(), argv.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // NB: a bare boolean flag greedily consumes a following non-flag
+        // token, so `--verbose` must come last or use `--verbose=`.
+        let a = parse(&["run", "extra", "--app", "bfs", "--pages=8k", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("app"), Some("bfs"));
+        assert_eq!(a.get_u64("pages", 0).unwrap(), 8192);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn last_flag_wins_and_all_collected() {
+        let a = parse(&["--x", "1", "--x", "2"]);
+        assert_eq!(a.get("x"), Some("2"));
+        assert_eq!(a.get_all("x"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(parse_u64_with_suffix("4k"), Some(4096));
+        assert_eq!(parse_u64_with_suffix("2M"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_u64_with_suffix("1g"), Some(1 << 30));
+        assert_eq!(parse_u64_with_suffix("1.5k"), Some(1536));
+        assert_eq!(parse_u64_with_suffix("17"), Some(17));
+        assert_eq!(parse_u64_with_suffix("bogus"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_or("m", "d"), "d");
+        assert_eq!(a.get_f64("f", 1.5).unwrap(), 1.5);
+    }
+}

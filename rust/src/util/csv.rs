@@ -1,0 +1,93 @@
+//! Minimal CSV writer for bench outputs (`target/bench_results/*.csv`).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A CSV table accumulated in memory and flushed to disk.
+pub struct CsvWriter {
+    path: PathBuf,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        Self {
+            path: path.as_ref().to_path_buf(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Standard location for bench outputs.
+    pub fn bench_result(name: &str, header: &[&str]) -> Self {
+        let dir = Path::new("target/bench_results");
+        let _ = fs::create_dir_all(dir);
+        Self::new(dir.join(format!("{name}.csv")), header)
+    }
+
+    pub fn row<I: IntoIterator<Item = S>, S: ToString>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(|c| c.to_string()).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row width mismatch for {}",
+            self.path.display()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn flush(&self) -> std::io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&self.path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            let escaped: Vec<String> = row.iter().map(|c| escape(c)).collect();
+            writeln!(f, "{}", escaped.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("gpuvm_csv_test");
+        let _ = fs::create_dir_all(&dir);
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]);
+        w.row(["1", "x,y"]);
+        w.row(["2", "plain"]);
+        w.flush().unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2,plain\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn width_checked() {
+        let mut w = CsvWriter::new("/tmp/unused.csv", &["a", "b"]);
+        w.row(["only-one"]);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utilities replacing crates unavailable in the offline build:
+//! PRNG (`rand`), property testing (`proptest`), bench harness
+//! (`criterion`), CSV output, CLI parsing (`clap`), and small stats.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,110 @@
+//! Mini property-testing harness (the offline build has no `proptest`).
+//!
+//! A property is a closure over a seeded [`crate::util::rng::Rng`]; the
+//! harness runs it across many derived seeds and, on failure, re-runs with
+//! the failing seed reported so the case can be pinned as a regression test.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath)
+//! use gpuvm::util::proptest::check;
+//! check("addition commutes", 256, |rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Base seed; override with `GPUVM_PROPTEST_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("GPUVM_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Number-of-cases multiplier; `GPUVM_PROPTEST_CASES_MULT` scales all
+/// `check` call sites (useful for a longer soak).
+fn cases_mult() -> f64 {
+    std::env::var("GPUVM_PROPTEST_CASES_MULT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Run `prop` for `cases` derived seeds. Panics (with the failing seed in
+/// the message) if any case fails.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u32, mut prop: F) {
+    let cases = ((cases as f64 * cases_mult()).ceil() as u32).max(1);
+    let mut seeder = Rng::new(base_seed() ^ fxhash(name));
+    for case in 0..cases {
+        let seed = seeder.next_u64();
+        let mut rng = Rng::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay: seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// FNV-1a over the property name so distinct properties use distinct
+/// seed streams even with the same base seed.
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum symmetric", 64, |rng| {
+            let a = rng.gen_range(100);
+            let b = rng.gen_range(100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            check("always fails", 4, |_| panic!("boom"));
+        }));
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("replay: seed"), "{msg}");
+    }
+
+    #[test]
+    fn distinct_names_distinct_streams() {
+        let mut first_a = 0;
+        check("name-a", 1, |rng| first_a = rng.next_u64());
+        let mut first_b = 0;
+        check("name-b", 1, |rng| first_b = rng.next_u64());
+        assert_ne!(first_a, first_b);
+    }
+}

@@ -1,0 +1,175 @@
+//! Small statistics helpers: online mean/variance, percentile estimation
+//! over recorded samples, and fixed-bucket latency histograms.
+
+/// Online mean / variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Log2-bucketed histogram for latencies in nanoseconds. Bucket `i` covers
+/// `[2^i, 2^(i+1))` ns; bucket 0 covers `[0, 2)`.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: [u64; 64],
+    online: Online,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self {
+            buckets: [0; 64],
+            online: Online::new(),
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        let idx = if ns < 2 { 0 } else { 63 - ns.leading_zeros() as usize };
+        self.buckets[idx.min(63)] += 1;
+        self.online.push(ns as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.online.count()
+    }
+    pub fn mean_ns(&self) -> f64 {
+        self.online.mean()
+    }
+    pub fn max_ns(&self) -> f64 {
+        self.online.max()
+    }
+
+    /// Approximate percentile from the log buckets (upper bucket bound).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Geometric mean of a slice of positive ratios (used for speedup summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_mean_var() {
+        let mut o = Online::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            o.push(x);
+        }
+        assert!((o.mean() - 5.0).abs() < 1e-12);
+        assert!((o.var() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(o.min(), 2.0);
+        assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn hist_percentiles_monotone() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000u64 {
+            h.record(i * 100);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+        assert!(h.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn geomean_of_twos() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_structs_are_safe() {
+        let o = Online::new();
+        assert_eq!(o.mean(), 0.0);
+        let h = LatencyHist::new();
+        assert_eq!(h.percentile(99.0), 0);
+    }
+}

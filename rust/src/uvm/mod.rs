@@ -1,0 +1,681 @@
+//! The UVM baseline (paper §2.1, Fig 1): OS-mediated demand paging.
+//!
+//! Faulting accesses miss in the µTLB, the GMMU writes the fault buffer,
+//! and the *host* driver retires faults in batches: interrupt + driver
+//! dispatch (`batch_fixed_us`), then serial OS work per 64 KB fault group
+//! (page allocation, dual page-table updates, host TLB shootdown) with
+//! limited parallelism — the paper's core target. Each 4 KB fault
+//! transfers a 64 KB group (fault + speculative prefetch) over the
+//! *direct* host→GPU DMA path (no NIC). Eviction frees a whole 2 MB
+//! VABlock chosen FIFO, which under memory pressure throws out pages that
+//! are still needed — the refetch traffic Figs 12/14 quantify.
+//!
+//! The model is timing + accounting only: application data never moves
+//! (semantically there is a single coherent copy), so functional results
+//! are identical across memory systems by construction.
+
+use crate::config::SystemConfig;
+use crate::mem::{HostMemory, PageId, RegionId};
+use crate::memsys::{AccessResult, Ev, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::metrics::Metrics;
+use crate::pcie::{Dir, Topology};
+use crate::sim::{ms, us, Engine, SimTime};
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::collections::VecDeque;
+
+/// A 64 KB fault/transfer group: (gpu, region, group index within region).
+type GroupKey = (usize, u32, u64);
+
+#[derive(Debug, Default)]
+struct GroupState {
+    refcount: u32,
+    dirty: bool,
+    resident: bool,
+    /// Logical access clock (driver-side LRU at VABlock granularity:
+    /// eviction picks the block of the least-recently-used group, but
+    /// still throws out the *whole* 2 MB block — the paper's complaint).
+    last_access: u64,
+}
+
+#[derive(Debug)]
+struct PendingFault {
+    waiters: Vec<SlotId>,
+    write: bool,
+    started: SimTime,
+}
+
+pub struct UvmSystem {
+    cfg: SystemConfig,
+    topo: Topology,
+    groups: FxHashMap<GroupKey, GroupState>,
+    /// Residency arrival order (FIFO VABlock eviction picks from the head).
+    fifo: VecDeque<GroupKey>,
+    free_frames: Vec<usize>,
+    pending: FxHashMap<GroupKey, PendingFault>,
+    /// The GPU-side fault buffer, in arrival order.
+    fault_buffer: VecDeque<GroupKey>,
+    driver_busy_until: SimTime,
+    driver_scheduled: bool,
+    holds: FxHashMap<SlotId, Vec<GroupKey>>,
+    slot_pending: FxHashMap<SlotId, u32>,
+    evicted_once: FxHashSet<GroupKey>,
+    transfers: FxHashMap<u64, GroupKey>,
+    next_token: u64,
+    /// Logical access clock for the block-LRU.
+    access_clock: u64,
+    pages_per_group: u64,
+    groups_per_block: u64,
+}
+
+impl UvmSystem {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let frames = (cfg.gpu.mem_bytes / cfg.uvm.prefetch_size).max(1) as usize;
+        Self {
+            topo: Topology::new(cfg),
+            groups: FxHashMap::default(),
+            fifo: VecDeque::new(),
+            free_frames: vec![frames; cfg.gpu.num_gpus],
+            pending: FxHashMap::default(),
+            fault_buffer: VecDeque::new(),
+            driver_busy_until: 0,
+            driver_scheduled: false,
+            holds: FxHashMap::default(),
+            slot_pending: FxHashMap::default(),
+            evicted_once: FxHashSet::default(),
+            transfers: FxHashMap::default(),
+            next_token: 1,
+            access_clock: 0,
+            pages_per_group: cfg.uvm.prefetch_size / cfg.gpuvm.page_size,
+            groups_per_block: cfg.uvm.evict_block / cfg.uvm.prefetch_size,
+            cfg: cfg.clone(),
+        }
+    }
+
+    fn group_of(&self, hm: &HostMemory, gpu: usize, page: PageId) -> GroupKey {
+        let rid = hm
+            .region_of_page(page)
+            .expect("access to unregistered page");
+        let base = hm.region(rid).base_page;
+        (gpu, rid.0, (page.0 - base) / self.pages_per_group.max(1))
+    }
+
+    fn region_read_mostly(&self, hm: &HostMemory, key: GroupKey) -> bool {
+        hm.region(RegionId(key.1)).read_mostly
+    }
+
+    /// VABlock of a group.
+    fn block_of(&self, key: GroupKey) -> (usize, u32, u64) {
+        (key.0, key.1, key.2 / self.groups_per_block.max(1))
+    }
+
+    fn schedule_driver(&mut self, now: SimTime, eng: &mut Engine<Ev>) {
+        if !self.driver_scheduled {
+            self.driver_scheduled = true;
+            eng.schedule(
+                now.max(self.driver_busy_until),
+                Ev::Mem(MemEvent::UvmDriverService),
+            );
+        }
+    }
+
+    /// Free frames by evicting an entire VABlock — the one holding the
+    /// least-recently-used resident group (block-granular LRU, as the
+    /// real driver does; the paper's point is that the *whole 2 MB* goes,
+    /// including pages that were about to be used). Returns frames freed.
+    ///
+    /// `force` models UVM's behaviour under extreme pressure: the driver
+    /// CAN unmap pages that GPU threads are actively touching (they just
+    /// refault and replay) — so when every resident group is referenced,
+    /// forced eviction thrashes rather than deadlocks.
+    fn evict_vablock(&mut self, now: SimTime, gpu: usize, force: bool, m: &mut Metrics) -> usize {
+        // Least-recently-used resident group on this GPU → its block.
+        let Some(victim) = self
+            .fifo
+            .iter()
+            .filter(|k| k.0 == gpu)
+            .min_by_key(|k| self.groups.get(k).map(|g| g.last_access).unwrap_or(0))
+            .copied()
+        else {
+            return 0;
+        };
+        let block = self.block_of(victim);
+        let victims: Vec<GroupKey> = self
+            .fifo
+            .iter()
+            .filter(|k| self.block_of(**k) == block)
+            .copied()
+            .collect();
+        let mut freed = 0;
+        for key in victims {
+            let g = self.groups.get_mut(&key).expect("fifo entry has state");
+            if g.refcount > 0 && !force {
+                m.eviction_waits += 1;
+                continue; // prefer not to evict a group under active access
+            }
+            if g.refcount > 0 {
+                m.bump("uvm_forced_evictions", 1);
+            }
+            g.resident = false;
+            let dirty = std::mem::take(&mut g.dirty);
+            self.fifo.retain(|k| *k != key);
+            self.evicted_once.insert(key);
+            self.free_frames[gpu] += 1;
+            freed += 1;
+            m.evictions += 1;
+            if dirty {
+                m.bytes_out += self.cfg.uvm.prefetch_size;
+                let path = self.topo.path_direct(gpu, Dir::Out);
+                self.topo.transfer(now, self.cfg.uvm.prefetch_size, &path);
+            }
+        }
+        freed
+    }
+}
+
+impl MemorySystem for UvmSystem {
+    fn name(&self) -> &'static str {
+        "uvm"
+    }
+
+    fn prepare(&mut self, hm: &HostMemory, m: &mut Metrics) {
+        // Applying cudaMemAdvise is a one-time host-side cost, reported
+        // separately from the speedup numbers (as in the paper §5.2).
+        for r in hm.regions() {
+            if r.read_mostly {
+                m.setup_ns += ms(self.cfg.uvm.memadvise_setup_ms);
+            }
+        }
+    }
+
+    fn access(
+        &mut self,
+        now: SimTime,
+        slot: SlotId,
+        gpu: usize,
+        pages: &[PageAccess],
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> AccessResult {
+        let t = now + self.cfg.uvm.tlb_hit_ns;
+        // Pages → 64 KB groups (dedup).
+        let mut groups: Vec<(GroupKey, bool)> = pages
+            .iter()
+            .map(|pa| (self.group_of(hm, gpu, pa.page), pa.write))
+            .collect();
+        groups.sort_by_key(|(k, w)| (*k, !*w));
+        groups.dedup_by(|b, a| {
+            if a.0 == b.0 {
+                a.1 |= b.1;
+                true
+            } else {
+                false
+            }
+        });
+
+        let mut misses = 0u32;
+        for (key, write) in groups {
+            self.access_clock += 1;
+            let clock = self.access_clock;
+            let resident = self.groups.get(&key).map(|g| g.resident).unwrap_or(false);
+            if resident {
+                m.hits += 1;
+                let g = self.groups.get_mut(&key).unwrap();
+                g.refcount += 1;
+                g.dirty |= write;
+                g.last_access = clock;
+                self.holds.entry(slot).or_default().push(key);
+                continue;
+            }
+            misses += 1;
+            if let Some(p) = self.pending.get_mut(&key) {
+                m.coalesced_faults += 1;
+                p.waiters.push(slot);
+                p.write |= write;
+                continue;
+            }
+            // New fault: GMMU writes the fault buffer, driver is poked.
+            m.faults += 1;
+            if self.evicted_once.contains(&key) {
+                m.refetches += 1;
+            }
+            self.pending.insert(
+                key,
+                PendingFault {
+                    waiters: vec![slot],
+                    write,
+                    started: now,
+                },
+            );
+            self.fault_buffer.push_back(key);
+            self.schedule_driver(t + self.cfg.uvm.gmmu_fault_ns, eng);
+        }
+
+        if misses == 0 {
+            AccessResult::Ready {
+                resume_at: t + self.cfg.gpu.hbm_hit_ns,
+            }
+        } else {
+            *self.slot_pending.entry(slot).or_insert(0) += misses;
+            AccessResult::Blocked
+        }
+    }
+
+    fn release(
+        &mut self,
+        _now: SimTime,
+        slot: SlotId,
+        _eng: &mut Engine<Ev>,
+        _m: &mut Metrics,
+        _wakes: &mut Wakes,
+    ) {
+        if let Some(held) = self.holds.remove(&slot) {
+            for key in held {
+                let g = self.groups.get_mut(&key).expect("held group exists");
+                debug_assert!(g.refcount > 0);
+                g.refcount -= 1;
+            }
+        }
+    }
+
+    fn on_event(
+        &mut self,
+        now: SimTime,
+        ev: MemEvent,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+        wakes: &mut Wakes,
+    ) {
+        match ev {
+            MemEvent::UvmDriverService => {
+                self.driver_scheduled = false;
+                if self.fault_buffer.is_empty() {
+                    return;
+                }
+                // Retire up to batch_size fault groups.
+                let n = self.fault_buffer.len().min(self.cfg.uvm.batch_size);
+                let mut batch: Vec<GroupKey> = Vec::with_capacity(n);
+                for _ in 0..n {
+                    batch.push(self.fault_buffer.pop_front().unwrap());
+                }
+                // Host-side cost: fixed dispatch + serial OS work with
+                // limited parallelism; read-mostly groups skip ownership
+                // transfer and TLB shootdown.
+                let mut os_us = 0.0;
+                for key in &batch {
+                    let f = if self.region_read_mostly(hm, *key) {
+                        self.cfg.uvm.readmostly_factor
+                    } else {
+                        1.0
+                    };
+                    os_us += self.cfg.uvm.os_per_fault_us * f;
+                }
+                let cost = us(self.cfg.uvm.batch_fixed_us)
+                    + us(os_us / self.cfg.uvm.host_parallelism as f64);
+                let t_done = now.max(self.driver_busy_until) + cost;
+                self.driver_busy_until = t_done;
+
+                for key in batch {
+                    let gpu = key.0;
+                    // Make room (may evict a VABlock — the 2 MB hammer).
+                    let mut spins = 0;
+                    while self.free_frames[gpu] == 0 {
+                        if self.evict_vablock(t_done, gpu, false, m) == 0 {
+                            spins += 1;
+                            if spins > self.fifo.len().max(4) {
+                                // Everything resident is referenced:
+                                // thrash (forced unmap + replay).
+                                self.evict_vablock(t_done, gpu, true, m);
+                                break;
+                            }
+                        }
+                    }
+                    if self.free_frames[gpu] == 0 {
+                        // Nothing resident at all (first faults racing);
+                        // re-queue and retry shortly.
+                        self.fault_buffer.push_back(key);
+                        self.schedule_driver(t_done + us(5.0), eng);
+                        continue;
+                    }
+                    self.free_frames[gpu] -= 1;
+                    // DMA the 64 KB group over the direct path.
+                    let path = self.topo.path_direct(gpu, Dir::In);
+                    let arrive = self.topo.transfer(t_done, self.cfg.uvm.prefetch_size, &path);
+                    m.bytes_in += self.cfg.uvm.prefetch_size;
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    self.transfers.insert(token, key);
+                    eng.schedule(arrive, Ev::Mem(MemEvent::UvmTransferDone { token }));
+                }
+                if !self.fault_buffer.is_empty() {
+                    self.schedule_driver(t_done, eng);
+                }
+            }
+            MemEvent::UvmTransferDone { token } => {
+                let key = self.transfers.remove(&token).expect("transfer token");
+                let p = self.pending.remove(&key).expect("pending fault");
+                self.access_clock += 1;
+                let clock = self.access_clock;
+                let g = self.groups.entry(key).or_default();
+                g.resident = true;
+                g.dirty |= p.write;
+                g.last_access = clock;
+                self.fifo.push_back(key);
+                m.fault_latency.record(now.saturating_sub(p.started));
+                for slot in p.waiters {
+                    let g = self.groups.get_mut(&key).unwrap();
+                    g.refcount += 1;
+                    self.holds.entry(slot).or_default().push(key);
+                    let c = self
+                        .slot_pending
+                        .get_mut(&slot)
+                        .expect("waiter has pending count");
+                    *c -= 1;
+                    if *c == 0 {
+                        self.slot_pending.remove(&slot);
+                        wakes.push((slot, now + self.cfg.uvm.tlb_hit_ns));
+                    }
+                }
+            }
+            _ => unreachable!("GPUVM event routed to UVM"),
+        }
+    }
+
+    fn drain(
+        &mut self,
+        now: SimTime,
+        _hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        _m: &mut Metrics,
+    ) -> bool {
+        if !self.fault_buffer.is_empty() && !self.driver_scheduled {
+            self.schedule_driver(now, eng);
+            return true;
+        }
+        false
+    }
+
+    fn finalize(&mut self, m: &mut Metrics) {
+        self.topo.export_utilization(m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::exec::run;
+    use crate::gpu::kernel::{Access, Launch, WarpOp, Workload};
+
+    /// Sequential streaming reader at 4 KB steps.
+    struct Stream {
+        warps: usize,
+        reads_per_warp: usize,
+        region: Option<RegionId>,
+        launched: bool,
+        state: Vec<usize>,
+        read_mostly: bool,
+    }
+
+    impl Stream {
+        fn new(warps: usize, reads: usize) -> Self {
+            Self {
+                warps,
+                reads_per_warp: reads,
+                region: None,
+                launched: false,
+                state: vec![0; warps],
+                read_mostly: false,
+            }
+        }
+    }
+
+    impl Workload for Stream {
+        fn name(&self) -> &str {
+            "uvm-stream"
+        }
+        fn setup(&mut self, hm: &mut HostMemory) {
+            let bytes = (self.warps * self.reads_per_warp) as u64 * 4096;
+            let r = hm.register("d", bytes);
+            if self.read_mostly {
+                hm.advise_read_mostly(r);
+            }
+            self.region = Some(r);
+        }
+        fn next_kernel(&mut self) -> Option<Launch> {
+            if self.launched {
+                return None;
+            }
+            self.launched = true;
+            Some(Launch {
+                warps: self.warps,
+                tag: 0,
+            })
+        }
+        fn next_op(&mut self, warp: usize) -> WarpOp {
+            let s = self.state[warp];
+            if s >= self.reads_per_warp {
+                return WarpOp::Done;
+            }
+            self.state[warp] += 1;
+            let idx = (warp * self.reads_per_warp + s) as u64;
+            WarpOp::Access(vec![Access::Seq {
+                region: self.region.unwrap(),
+                start: idx * 4096,
+                len: 4096,
+                write: false,
+            }])
+        }
+    }
+
+    fn cfg(warps: usize, mem_bytes: u64) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpu.sms = warps;
+        c.gpu.warps_per_sm = 1;
+        c.gpuvm.page_size = 4096;
+        c.gpu.mem_bytes = mem_bytes;
+        c
+    }
+
+    #[test]
+    fn prefetch_groups_amortize_faults() {
+        // 64 sequential 4 KB reads = 4 MB... no: 64*4KB = 256 KB = 4 groups.
+        let c = cfg(1, 32 << 20);
+        let mut w = Stream::new(1, 64);
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        // 16 pages per 64 KB group → 4 leader faults, 60 group hits.
+        assert_eq!(r.metrics.faults, 4);
+        assert_eq!(r.metrics.hits, 60);
+        assert_eq!(r.metrics.bytes_in, 4 * 64 * 1024);
+        // I/O amplification: moved 256 KB for 256 KB useful = 1.0 here
+        // (sequential); sparse access is where UVM inflates.
+        assert!((r.metrics.io_amplification() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn sparse_access_amplifies_io() {
+        /// One 4 KB-read per 64 KB group.
+        struct Sparse {
+            region: Option<RegionId>,
+            launched: bool,
+            step: usize,
+        }
+        impl Workload for Sparse {
+            fn name(&self) -> &str {
+                "sparse"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("d", 64 * 65536));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                if self.launched {
+                    return None;
+                }
+                self.launched = true;
+                Some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                let s = self.step;
+                self.step += 1;
+                if s >= 64 {
+                    return WarpOp::Done;
+                }
+                WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: (s as u64) * 65536,
+                    len: 4096,
+                    write: false,
+                }])
+            }
+        }
+        let c = cfg(1, 32 << 20);
+        let mut w = Sparse {
+            region: None,
+            launched: false,
+            step: 0,
+        };
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        // Each 4 KB read moves 64 KB: amplification = 16×.
+        assert!((r.metrics.io_amplification() - 16.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn fault_latency_dominated_by_host() {
+        let c = cfg(1, 32 << 20);
+        let mut w = Stream::new(1, 16);
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        // Single 64 KB fault ≈ batch_fixed + os_per_fault/par + transfer
+        // ≈ 15 + 11 + 5.3 µs ≈ 31 µs; host share ≈ 7× transfer per Fig 2
+        // when counting the full serial OS path.
+        let mean = r.metrics.fault_latency.mean_ns();
+        assert!(
+            (20_000.0..60_000.0).contains(&mean),
+            "uvm fault mean {mean}"
+        );
+    }
+
+    #[test]
+    fn oversubscription_evicts_vablocks_and_refetches() {
+        /// Two passes over a working set larger than GPU memory.
+        struct TwoPass {
+            region: Option<RegionId>,
+            kernel: u32,
+            step: usize,
+            groups: usize,
+        }
+        impl Workload for TwoPass {
+            fn name(&self) -> &str {
+                "two-pass"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("d", self.groups as u64 * 65536));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                self.kernel += 1;
+                self.step = 0;
+                (self.kernel <= 2).then_some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                let s = self.step;
+                self.step += 1;
+                if s >= self.groups {
+                    return WarpOp::Done;
+                }
+                WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: (s as u64) * 65536,
+                    len: 4096,
+                    write: false,
+                }])
+            }
+        }
+        // GPU memory: 2 MB = 32 groups; working set 64 groups.
+        let c = cfg(1, 2 << 20);
+        let mut w = TwoPass {
+            region: None,
+            kernel: 0,
+            step: 0,
+            groups: 64,
+        };
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        assert!(r.metrics.evictions > 0, "must evict under pressure");
+        assert!(
+            r.metrics.refetches > 0,
+            "second pass refetches evicted groups"
+        );
+        assert_eq!(r.metrics.faults as i64, (64 + r.metrics.refetches) as i64);
+    }
+
+    #[test]
+    fn read_mostly_reduces_host_cost() {
+        let c = cfg(4, 32 << 20);
+        let mut plain = Stream::new(4, 64);
+        let mut advised = Stream::new(4, 64);
+        advised.read_mostly = true;
+        let rp = run(&c, &mut plain, &mut UvmSystem::new(&c)).unwrap();
+        let ra = run(&c, &mut advised, &mut UvmSystem::new(&c)).unwrap();
+        assert!(
+            ra.metrics.finish_ns < rp.metrics.finish_ns,
+            "memadvise {} !< plain {}",
+            ra.metrics.finish_ns,
+            rp.metrics.finish_ns
+        );
+        assert!(ra.metrics.setup_ns > 0, "advice setup cost reported");
+        assert_eq!(rp.metrics.setup_ns, 0);
+    }
+
+    #[test]
+    fn duplicate_faults_coalesce_in_fault_buffer() {
+        let mut c = cfg(8, 32 << 20);
+        c.gpu.sms = 8;
+        // All 8 warps read the same group.
+        struct Same {
+            region: Option<RegionId>,
+            launched: bool,
+            step: Vec<u8>,
+        }
+        impl Workload for Same {
+            fn name(&self) -> &str {
+                "same"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("d", 65536));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                if self.launched {
+                    return None;
+                }
+                self.launched = true;
+                Some(Launch { warps: 8, tag: 0 })
+            }
+            fn next_op(&mut self, w: usize) -> WarpOp {
+                let s = self.step[w];
+                self.step[w] += 1;
+                if s == 0 {
+                    WarpOp::Access(vec![Access::Seq {
+                        region: self.region.unwrap(),
+                        start: 0,
+                        len: 64,
+                        write: false,
+                    }])
+                } else {
+                    WarpOp::Done
+                }
+            }
+        }
+        let mut w = Same {
+            region: None,
+            launched: false,
+            step: vec![0; 8],
+        };
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        assert_eq!(r.metrics.faults, 1);
+        assert_eq!(r.metrics.coalesced_faults, 7);
+        assert_eq!(r.metrics.bytes_in, 65536);
+    }
+}

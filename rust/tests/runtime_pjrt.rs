@@ -1,0 +1,99 @@
+//! PJRT runtime integration: load the AOT artifacts and verify numerics
+//! against Rust references. Requires `make artifacts` (skips politely if
+//! they are absent so `cargo test` works standalone).
+
+use gpuvm::apps::TaxiTable;
+use gpuvm::coordinator::compute;
+use gpuvm::mem::HostMemory;
+use gpuvm::runtime::{Runtime, Tensor};
+use gpuvm::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_load_and_list() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    for expect in ["va_batch", "bigc_batch", "query_batch", "mvt_row_batch", "atax_batch"] {
+        assert!(names.contains(&expect), "missing artifact {expect}");
+    }
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn va_batch_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let a = rng.f32_vec(64 * 1024);
+    let b = rng.f32_vec(64 * 1024);
+    let shape = vec![64, 1024];
+    let outs = rt
+        .execute(
+            "va_batch",
+            &[Tensor::F32(a.clone(), shape.clone()), Tensor::F32(b.clone(), shape)],
+        )
+        .unwrap();
+    let c = outs[0].as_f32().unwrap();
+    for i in 0..a.len() {
+        assert!((c[i] - (a[i] + b[i])).abs() < 1e-6, "elem {i}");
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let bad = Tensor::F32(vec![0.0; 16], vec![4, 4]);
+    let err = rt.execute("va_batch", &[bad.clone(), bad]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err:#}");
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn elementwise_pass_streams_pages_and_verifies() {
+    let Some(rt) = runtime() else { return };
+    let n = 100_000; // not batch-aligned on purpose
+    let mut hm = HostMemory::new(4096);
+    let mut rng = Rng::new(7);
+    let a = rng.f32_vec(n);
+    let b = rng.f32_vec(n);
+    let ra = hm.register_f32("A", &a);
+    let rb = hm.register_f32("B", &b);
+    let rc = hm.register_f32("C", &vec![0.0; n]);
+    let rep = compute::elementwise_pass(&rt, &mut hm, "va_batch", ra, rb, rc, n).unwrap();
+    assert!(rep.verified, "max err {}", rep.max_abs_err);
+    assert_eq!(rep.elements, n as u64);
+    // bigc through the same path.
+    let rep2 = compute::elementwise_pass(&rt, &mut hm, "bigc_batch", ra, rb, rc, n).unwrap();
+    assert!(rep2.verified, "bigc max err {}", rep2.max_abs_err);
+}
+
+#[test]
+fn query_pass_matches_table_reference() {
+    let Some(rt) = runtime() else { return };
+    let table = TaxiTable::generate(200_000, 13);
+    for q in [0, 4] {
+        let (rep, total, matches) = compute::query_pass(&rt, &table, q).unwrap();
+        assert!(rep.verified, "q{q} err {}", rep.max_abs_err);
+        assert_eq!(matches, table.matches.len() as i64);
+        assert!((total - table.reference_sum(q)).abs() / table.reference_sum(q) < 1e-5);
+    }
+}
+
+#[test]
+fn mvt_pass_verifies() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let a = rng.f32_vec(1024 * 1024);
+    let x = rng.f32_vec(1024);
+    let (rep, y) = compute::mvt_pass(&rt, &a, &x, 1024).unwrap();
+    assert!(rep.verified, "err {}", rep.max_abs_err);
+    assert_eq!(y.len(), 1024);
+}

@@ -1,0 +1,136 @@
+//! Calibration validation: the simulated testbed must reproduce the
+//! paper's own measured anchor points (within tolerance). These are the
+//! tests that keep the timing model honest:
+//!
+//! - Fig 2: UVM host involvement ≈ 7× the 64 KB transfer time.
+//! - Fig 8: GPUVM saturates one NIC (6.5 GB/s) at 4 KB pages; GDR only
+//!   at ≥512 KB; 2 NICs ≈ full PCIe 3.
+//! - §5.1: UVM streaming achieves ~6 GB/s (≈50 % of PCIe).
+//! - §3.2/Fig 11: Little's-law queue-count knee near 48 queues.
+
+use gpuvm::apps::StreamWorkload;
+use gpuvm::baselines::{nic_ceiling, run_gdr};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::sim::us;
+
+fn full_machine() -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.gpu.mem_bytes = 512 << 20;
+    c
+}
+
+#[test]
+fn fig2_host_involvement_about_7x_transfer() {
+    let cfg = SystemConfig::default();
+    let host_us = cfg.uvm.batch_fixed_us + cfg.uvm.os_per_fault_us;
+    let transfer_us = 64.0 * 1024.0 / cfg.pcie.link_bw * 1e6;
+    let ratio = host_us / transfer_us;
+    assert!(
+        (5.0..9.5).contains(&ratio),
+        "host/transfer ratio {ratio:.1} (paper: ≈7× at 64 KB)"
+    );
+}
+
+#[test]
+fn fig8_gpuvm_saturates_at_4k_one_nic() {
+    let cfg = full_machine();
+    let mut w = StreamWorkload::new(96 << 20, 4096, cfg.total_warps());
+    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+    let bw = r.metrics.throughput_in();
+    let ceiling = nic_ceiling(&cfg);
+    assert!(
+        bw > 0.85 * ceiling && bw <= 1.02 * ceiling,
+        "GPUVM@4K: {:.2} GB/s vs 6.5 GB/s ceiling",
+        bw / 1e9
+    );
+}
+
+#[test]
+fn fig8_two_nics_reach_full_pcie() {
+    let mut cfg = full_machine();
+    cfg.rnic.num_nics = 2;
+    let mut w = StreamWorkload::new(96 << 20, 4096, cfg.total_warps());
+    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+    let bw = r.metrics.throughput_in();
+    assert!(
+        bw > 0.85 * cfg.pcie.link_bw,
+        "GPUVM 2N: {:.2} GB/s vs {:.2} GB/s PCIe",
+        bw / 1e9,
+        cfg.pcie.link_bw / 1e9
+    );
+}
+
+#[test]
+fn fig8_gdr_needs_512k_requests() {
+    let cfg = SystemConfig::default();
+    let ceiling = nic_ceiling(&cfg);
+    let small = run_gdr(&cfg, 1 << 30, 64 * 1024).bandwidth();
+    let large = run_gdr(&cfg, 1 << 30, 512 * 1024).bandwidth();
+    assert!(small < 0.75 * ceiling, "GDR@64K {:.2} GB/s too fast", small / 1e9);
+    assert!(large > 0.75 * ceiling, "GDR@512K {:.2} GB/s too slow", large / 1e9);
+}
+
+#[test]
+fn uvm_streaming_about_half_pcie() {
+    // §5.1: "UVM ... average throughput ... 6GBps achieving only 50% of
+    // the available bandwidth."
+    let cfg = full_machine();
+    let mut w = StreamWorkload::new(64 << 20, 4096, cfg.total_warps());
+    let r = simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap();
+    let bw = r.metrics.throughput_in() / 1e9;
+    assert!(
+        (4.5..8.5).contains(&bw),
+        "UVM streaming {bw:.2} GB/s (paper: ~6)"
+    );
+}
+
+#[test]
+fn fig11_queue_count_knee() {
+    // Performance flattens above ~48 queues (8 KB pages, 2 NICs in the
+    // paper's Fig 11 setup).
+    let mut times = Vec::new();
+    for qps in [8usize, 16, 48, 84] {
+        let mut cfg = full_machine();
+        cfg.rnic.num_nics = 2;
+        cfg.gpuvm.page_size = 8192;
+        cfg.gpuvm.num_qps = qps;
+        let mut w = StreamWorkload::new(32 << 20, 8192, cfg.total_warps());
+        let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+        times.push(r.metrics.finish_ns as f64);
+    }
+    let (t8, t16, t48, t84) = (times[0], times[1], times[2], times[3]);
+    assert!(t8 > 1.5 * t84, "8 queues must starve the NICs: {t8} vs {t84}");
+    assert!(t16 > 1.05 * t84, "16 queues still below knee");
+    assert!(
+        t48 < 1.10 * t84,
+        "≥48 queues is past the knee: t48={t48} t84={t84}"
+    );
+}
+
+#[test]
+fn littles_law_depth_matches_paper() {
+    // §3.2: 12 GB/s at 23 µs ⇒ ~72 in-flight 4 KB requests (36 at 8 KB).
+    let cfg = SystemConfig::default();
+    let target = 12e9;
+    let depth_4k = target * us(cfg.rnic.verb_latency_us) as f64 / 1e9 / 4096.0;
+    let depth_8k = target * us(cfg.rnic.verb_latency_us) as f64 / 1e9 / 8192.0;
+    assert!((60.0..80.0).contains(&depth_4k), "{depth_4k}");
+    assert!((30.0..40.0).contains(&depth_8k), "{depth_8k}");
+}
+
+#[test]
+fn unloaded_gpuvm_fault_near_verb_latency() {
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = 1;
+    cfg.gpu.warps_per_sm = 1;
+    cfg.gpu.mem_bytes = 64 << 20;
+    let mut w = StreamWorkload::new(1 << 20, 4096, 1);
+    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+    let mean = r.metrics.fault_latency.mean_ns() as f64;
+    let verb = us(cfg.rnic.verb_latency_us) as f64;
+    assert!(
+        (verb..verb * 1.5).contains(&mean),
+        "unloaded fault {mean} vs verb {verb}"
+    );
+}
