@@ -8,7 +8,7 @@
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
-//! Recorded in EXPERIMENTS.md §E2E.
+//! See README.md for the experiment index.
 
 fn main() -> anyhow::Result<()> {
     // The CLI `e2e` subcommand is the canonical implementation; this

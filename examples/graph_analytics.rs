@@ -9,7 +9,7 @@
 use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
 use gpuvm::baselines::{run_subway, SubwayAlgo};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::graph::{generate, DatasetId};
 use gpuvm::util::bench::fmt_ns;
 use gpuvm::util::cli::Args;
@@ -35,19 +35,19 @@ fn main() -> anyhow::Result<()> {
         let uvm = {
             let mut w = GraphWorkload::new(GraphAlgo::Bfs,
                 Layout::Csr { vertices_per_warp: 8 }, g.clone(), src, cfg.gpuvm.page_size);
-            simulate(&cfg, &mut w, MemSysKind::Uvm)?
+            simulate(&cfg, &mut w, "uvm")?
         };
         let g1 = {
             let mut w = GraphWorkload::new(GraphAlgo::Bfs,
                 Layout::Csr { vertices_per_warp: 8 }, g.clone(), src, cfg.gpuvm.page_size);
-            simulate(&cfg, &mut w, MemSysKind::GpuVm)?
+            simulate(&cfg, &mut w, "gpuvm")?
         };
         let g2 = {
             let mut c2 = cfg.clone();
             c2.rnic.num_nics = 2;
             let mut w = GraphWorkload::new(GraphAlgo::Bfs,
                 Layout::Balanced { chunk_edges: 2048 }, g.clone(), src, cfg.gpuvm.page_size);
-            simulate(&c2, &mut w, MemSysKind::GpuVm)?
+            simulate(&c2, &mut w, "gpuvm")?
         };
         let sub = run_subway(&cfg, &g, SubwayAlgo::Bfs, src);
 

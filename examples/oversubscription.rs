@@ -7,7 +7,7 @@
 
 use gpuvm::apps::{MatrixApp, MatrixSeq, VaWorkload};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::gpu::kernel::Workload;
 use gpuvm::util::cli::Args;
 
@@ -40,8 +40,8 @@ fn main() -> anyhow::Result<()> {
     let ws = working_set(&app);
     // Baseline: everything fits.
     cfg.gpu.mem_bytes = ws * 2;
-    let base_g = simulate(&cfg, make(&app, 4096).as_mut(), MemSysKind::GpuVm)?;
-    let base_u = simulate(&cfg, make(&app, 4096).as_mut(), MemSysKind::Uvm)?;
+    let base_g = simulate(&cfg, make(&app, 4096).as_mut(), "gpuvm")?;
+    let base_u = simulate(&cfg, make(&app, 4096).as_mut(), "uvm")?;
 
     println!("app={app}, working set {} MiB", ws >> 20);
     println!(
@@ -52,8 +52,8 @@ fn main() -> anyhow::Result<()> {
         // oversubscription = ws/mem - 1  (Eq. 1)
         let mem = ws * 100 / (100 + pct);
         cfg.gpu.mem_bytes = mem.max(64 * 4096);
-        let g = simulate(&cfg, make(&app, 4096).as_mut(), MemSysKind::GpuVm)?;
-        let u = simulate(&cfg, make(&app, 4096).as_mut(), MemSysKind::Uvm)?;
+        let g = simulate(&cfg, make(&app, 4096).as_mut(), "gpuvm")?;
+        let u = simulate(&cfg, make(&app, 4096).as_mut(), "uvm")?;
         println!(
             "{:>13}% {:>11.2}× {:>11.2}× {:>14} {:>14}",
             pct,

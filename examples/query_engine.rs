@@ -9,7 +9,7 @@
 use gpuvm::apps::{QueryWorkload, TaxiTable, NUM_QUERIES, QUERY_NAMES};
 use gpuvm::baselines::run_rapids;
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::util::bench::fmt_ns;
 use gpuvm::util::cli::Args;
 use std::rc::Rc;
@@ -36,17 +36,17 @@ fn main() -> anyhow::Result<()> {
     for q in 0..NUM_QUERIES {
         let uvm = {
             let mut w = QueryWorkload::new(table.clone(), q, cfg.gpuvm.page_size);
-            simulate(&cfg, &mut w, MemSysKind::Uvm)?
+            simulate(&cfg, &mut w, "uvm")?
         };
         let g1 = {
             let mut w = QueryWorkload::new(table.clone(), q, cfg.gpuvm.page_size);
-            simulate(&cfg, &mut w, MemSysKind::GpuVm)?
+            simulate(&cfg, &mut w, "gpuvm")?
         };
         let g2 = {
             let mut c = cfg.clone();
             c.rnic.num_nics = 2;
             let mut w = QueryWorkload::new(table.clone(), q, cfg.gpuvm.page_size);
-            simulate(&c, &mut w, MemSysKind::GpuVm)?
+            simulate(&c, &mut w, "gpuvm")?
         };
         let rap = run_rapids(&cfg, &table, q);
         println!(

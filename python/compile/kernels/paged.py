@@ -1,6 +1,6 @@
 """L1: the paper's compute hot-spots as Pallas kernels.
 
-Hardware adaptation (DESIGN.md §Hardware-Adaptation): GPUVM's insight —
+Hardware adaptation: GPUVM's insight —
 demand-page HBM in small pages and overlap fetch with compute — maps to
 TPU Pallas as a *BlockSpec-tiled HBM→VMEM pipeline*. The grid iterates
 page-sized blocks; each grid step's block copy is one "page fetch" and
@@ -10,7 +10,7 @@ Pallas double-buffers it against the previous step's compute. The
 All kernels are lowered with `interpret=True`: the CPU PJRT plugin cannot
 execute Mosaic custom-calls, and numerics are what we validate here.
 Real-TPU VMEM footprints and MXU utilization are *estimated* per kernel in
-EXPERIMENTS.md §Perf.
+README.md.
 """
 
 import functools

@@ -16,7 +16,7 @@ from .kernels import paged
 
 # Page-batch geometry: B pages of P f32 elements per PJRT call. 64 × 4 KiB
 # = 256 KiB per operand per call — small enough to stay latency-bound,
-# large enough to amortize dispatch (see EXPERIMENTS.md §Perf for the
+# large enough to amortize dispatch (see README.md for the
 # batch-size sweep).
 BATCH_PAGES = 64
 PAGE_ELEMS = paged.PAGE_ELEMS

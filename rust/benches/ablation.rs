@@ -1,4 +1,4 @@
-//! Ablations of GPUVM's design choices (DESIGN.md §4, beyond the paper's
+//! Ablations of GPUVM's design choices (beyond the paper's
 //! own figures):
 //!
 //! 1. Eviction policy: reference-priority FIFO (paper) vs strict FIFO
@@ -10,7 +10,7 @@
 
 use gpuvm::apps::{MatrixApp, MatrixSeq, StreamWorkload, VaWorkload};
 use gpuvm::config::{EvictionPolicy, SystemConfig};
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::util::bench::{banner, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
 
@@ -36,7 +36,7 @@ fn main() {
         // frames forces sustained eviction so the policies differ.
         cfg.gpu.mem_bytes = 16 << 20;
         let mut w = MatrixSeq::new(MatrixApp::Mvt, 4096, 4096);
-        match simulate(&cfg, &mut w, MemSysKind::GpuVm) {
+        match simulate(&cfg, &mut w, "gpuvm") {
             Ok(r) => {
                 println!(
                     "{:<18} {:>11}  evictions={:<7} refetches={:<8} eviction-waits={}",
@@ -77,7 +77,7 @@ fn main() {
             cfg.gpuvm.fault_batch = batch;
             cfg.gpu.mem_bytes = 256 << 20;
             let mut w = StreamWorkload::new(32 << 20, 4096, cfg.total_warps());
-            let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+            let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
             println!(
                 "qps={qps:<4} batch={batch:<3} → {:>6.2} GB/s  (doorbells {})",
                 r.metrics.throughput_in() / 1e9,
@@ -101,7 +101,7 @@ fn main() {
         let n = 2 << 20;
         cfg.gpu.mem_bytes = (3 * n as u64 * 4) * 100 / 150;
         let mut w = VaWorkload::new(n, 4096);
-        let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+        let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
         println!(
             "{:<18} {:>11}  written-back {:.1} MiB",
             name,

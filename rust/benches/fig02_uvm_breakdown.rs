@@ -7,7 +7,7 @@
 
 use gpuvm::apps::StreamWorkload;
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::util::bench::banner;
 use gpuvm::util::csv::CsvWriter;
 
@@ -34,7 +34,7 @@ fn main() {
         c.gpu.mem_bytes = 256 << 20;
         c.gpuvm.page_size = size.min(1 << 20); // app access granularity
         let mut w = StreamWorkload::new(size * 16, size, 1);
-        let r = simulate(&c, &mut w, MemSysKind::Uvm).expect("uvm run");
+        let r = simulate(&c, &mut w, "uvm").expect("uvm run");
         let measured_us = r.metrics.fault_latency.mean_ns() / 1e3;
         let ratio = host_us / transfer_us;
         println!(

@@ -7,7 +7,7 @@
 use gpuvm::apps::StreamWorkload;
 use gpuvm::baselines::{nic_ceiling, run_gdr};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::util::bench::banner;
 use gpuvm::util::csv::CsvWriter;
 
@@ -17,7 +17,7 @@ fn gpuvm_bw(nics: usize, req: u64, payload: u64) -> f64 {
     cfg.gpuvm.page_size = req;
     cfg.gpu.mem_bytes = 1 << 30; // no eviction: pure transfer study
     let mut w = StreamWorkload::new(payload, req, cfg.total_warps());
-    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).expect("gpuvm run");
+    let r = simulate(&cfg, &mut w, "gpuvm").expect("gpuvm run");
     r.metrics.throughput_in()
 }
 

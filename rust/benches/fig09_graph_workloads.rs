@@ -1,20 +1,21 @@
 //! Fig 9 — Graph workloads: BFS and CC on the four Table 2 datasets
 //! under UVM (with/without memadvise) and GPUVM (1 NIC + CSR naive,
-//! 2 NICs + Balanced CSR).
+//! 2 NICs + Balanced CSR), driven through the `Session` API.
 //!
 //! Paper: GPUVM-2N averages 1.4× (BFS) / 1.5× (CC) over the optimized
 //! UVM baseline; memadvise buys UVM ~25 % at a setup cost reported
 //! separately.
 
-use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
+use gpuvm::apps::GraphAlgo;
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::Session;
 use gpuvm::graph::{generate, DatasetId};
 use gpuvm::util::bench::{banner, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
 use gpuvm::util::rng::Rng;
 use gpuvm::util::stats::geomean;
-use std::rc::Rc;
+
+const GRAPH_SEED: u64 = 42;
 
 fn cfg_for(graph_bytes: u64, nics: usize) -> SystemConfig {
     let mut c = SystemConfig::default();
@@ -22,6 +23,7 @@ fn cfg_for(graph_bytes: u64, nics: usize) -> SystemConfig {
     c.gpu.warps_per_sm = 8;
     c.gpuvm.page_size = 8192; // paper: 8 KB pages for graphs
     c.rnic.num_nics = nics;
+    c.seed = GRAPH_SEED; // workload specs regenerate the same graph
     // Fig 9 is the paper's *in-memory* regime: the Table 2 graphs (13.5–
     // 24.8 GB of edges) fit the V100's 32 GB, so runs are cold-fault /
     // transfer-bound, not eviction-bound (that's Figs 12/14).
@@ -50,36 +52,41 @@ fn main() {
             algo.name(), "DS", "U-nm", "U-wm", "G-1N", "G-2N", "2N vs wm"
         );
         for id in DatasetId::all() {
-            let ds = generate(id, scale, 42);
-            let g = Rc::new(ds.graph);
+            let ds = generate(id, scale, GRAPH_SEED);
+            let g = ds.graph;
             let bytes = g.edge_bytes() + g.weight_bytes();
             let mut rng = Rng::new(7);
             let srcs = g.pick_sources(sources, 2, &mut rng);
+            let naive_spec = format!("{}:{}:naive", algo.name(), id.abbr());
+            let balanced_spec = format!("{}:{}:balanced", algo.name(), id.abbr());
             let mut t = [0u64; 4]; // nm, wm, 1n, 2n
             let mut setup = 0u64;
+            // Each backend run rebuilds its workload from the spec (the
+            // generator is deterministic, so all runs see the same
+            // graph); at bench scale generation is cheap next to the
+            // DES run itself.
             for &src in &srcs {
-                let naive = Layout::Csr { vertices_per_warp: 8 };
-                let balanced = Layout::Balanced { chunk_edges: 2048 };
-                let cfg1 = cfg_for(bytes, 1);
-                let cfg2 = cfg_for(bytes, 2);
-                let runs: [(usize, MemSysKind, &SystemConfig, Layout, bool); 4] = [
-                    (0, MemSysKind::Uvm, &cfg1, naive, false),
-                    (1, MemSysKind::Uvm, &cfg1, naive, true),
-                    (2, MemSysKind::GpuVm, &cfg1, naive, false),
-                    (3, MemSysKind::GpuVm, &cfg2, balanced, false),
-                ];
-                for (i, kind, cfg, layout, wm) in runs {
-                    let mut w =
-                        GraphWorkload::new(algo, layout, g.clone(), src, cfg.gpuvm.page_size);
-                    if wm {
-                        w = w.with_read_mostly();
-                    }
-                    let r = simulate(cfg, &mut w, kind).expect("run");
-                    t[i] += r.metrics.finish_ns;
-                    if wm {
-                        setup += r.metrics.setup_ns;
-                    }
-                }
+                // 1 NIC: UVM without/with memadvise, GPUVM on naive CSR.
+                let one_nic = Session::new(cfg_for(bytes, 1))
+                    .graph_scale(scale)
+                    .graph_source(src)
+                    .workload(&naive_spec)
+                    .backends(["uvm", "uvm-memadvise", "gpuvm"])
+                    .run_all()
+                    .expect("1-NIC runs");
+                // 2 NICs: GPUVM on Balanced CSR (the paper's "2N").
+                let two_nic = Session::new(cfg_for(bytes, 2))
+                    .graph_scale(scale)
+                    .graph_source(src)
+                    .workload(&balanced_spec)
+                    .backend("gpuvm")
+                    .run_all()
+                    .expect("2-NIC run");
+                t[0] += one_nic[0].finish_ns;
+                t[1] += one_nic[1].finish_ns;
+                t[2] += one_nic[2].finish_ns;
+                t[3] += two_nic[0].finish_ns;
+                setup += one_nic[1].setup_ns;
             }
             let n = srcs.len().max(1) as u64;
             let (nm, wm, g1, g2) = (t[0] / n, t[1] / n, t[2] / n, t[3] / n);

@@ -6,7 +6,7 @@
 
 use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::graph::{generate, DatasetId};
 use gpuvm::util::bench::banner;
 use gpuvm::util::csv::CsvWriter;
@@ -39,7 +39,7 @@ fn main() {
                 0,
                 cfg.gpuvm.page_size,
             );
-            let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).expect("run");
+            let r = simulate(&cfg, &mut w, "gpuvm").expect("run");
             times.push(r.metrics.finish_ns as f64);
         }
         let best = times.iter().cloned().fold(f64::INFINITY, f64::min);

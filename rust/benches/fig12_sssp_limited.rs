@@ -6,7 +6,7 @@
 
 use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::graph::{generate, DatasetId};
 use gpuvm::util::bench::{banner, fmt_bytes, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
@@ -42,7 +42,7 @@ fn main() {
         cfg.rnic.num_nics = 2;
         let floor = (cfg.gpu.sms * cfg.gpu.warps_per_sm) as u64 * 10 * cfg.gpuvm.page_size;
         cfg.gpu.mem_bytes = (working / 2).max(floor); // the paper's 16 GB-of-32 regime
-        // Scaling adjustment (EXPERIMENTS.md §Fig 12): the real 2 MB
+        // Scaling adjustment: the real 2 MB
         // VABlock is 0.01 % of a 16 GB pool; at our ~MB-scale pools a
         // literal 2 MB would be a quarter of memory and UVM would thrash
         // beyond anything the paper measured. Keep the eviction block a
@@ -55,9 +55,9 @@ fn main() {
 
         let layout = Layout::Balanced { chunk_edges: 2048 };
         let mut wg = GraphWorkload::new(GraphAlgo::Sssp, layout, g.clone(), src, 8192);
-        let rg = simulate(&cfg, &mut wg, MemSysKind::GpuVm).expect("gpuvm");
+        let rg = simulate(&cfg, &mut wg, "gpuvm").expect("gpuvm");
         let mut wu = GraphWorkload::new(GraphAlgo::Sssp, layout, g.clone(), src, 8192);
-        let ru = simulate(&cfg, &mut wu, MemSysKind::Uvm).expect("uvm");
+        let ru = simulate(&cfg, &mut wu, "uvm").expect("uvm");
 
         // Redundant transfer = refetched bytes.
         let red_u = ru.metrics.refetches * cfg.uvm.prefetch_size;

@@ -1,35 +1,25 @@
 //! Fig 13 — Transfer-bound applications (MVT, ATAX, BIGC, VA):
-//! performance bars + PCIe-utilization lines.
+//! performance bars + PCIe-utilization lines, driven as one `Session`
+//! sweep (backends × NIC counts) per app.
 //!
 //! Paper: GPUVM ≈4× over UVM with 2 NICs (≈2× with 1) on the matrix
 //! column-walk kernels, ≈2× on VA, with far better PCIe utilization.
 
-use gpuvm::apps::{MatrixApp, MatrixSeq, VaWorkload};
+use gpuvm::baselines::nic_ceiling;
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
-use gpuvm::gpu::kernel::Workload;
+use gpuvm::coordinator::{RunReport, Session};
 use gpuvm::util::bench::{banner, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
 
-fn make(app: &str, page: u64) -> Box<dyn Workload> {
-    match app {
-        "mvt" => Box::new(MatrixSeq::new(MatrixApp::Mvt, 8192, page)),
-        "atax" => Box::new(MatrixSeq::new(MatrixApp::Atax, 8192, page)),
-        "bigc" => Box::new(MatrixSeq::new(MatrixApp::Bigc, 8192, page)),
-        _ => Box::new(VaWorkload::new(4 << 20, page)),
-    }
-}
-
 /// PCIe utilization: achieved inbound bandwidth over what the data path
 /// could carry (direct link for UVM; NIC ceiling × NICs for GPUVM).
-fn utilization(cfg: &SystemConfig, kind: MemSysKind, bw: f64) -> f64 {
-    let capacity = match kind {
-        MemSysKind::Uvm | MemSysKind::Ideal => cfg.pcie.link_bw,
-        MemSysKind::GpuVm => {
-            gpuvm::baselines::nic_ceiling(cfg) * cfg.rnic.num_nics as f64
-        }
+fn utilization(cfg: &SystemConfig, rep: &RunReport) -> f64 {
+    let capacity = if rep.backend == "gpuvm" {
+        nic_ceiling(cfg) * rep.nics as f64
+    } else {
+        cfg.pcie.link_bw
     };
-    (bw / capacity).min(1.0)
+    (rep.bandwidth_in() / capacity).min(1.0)
 }
 
 fn main() {
@@ -40,28 +30,35 @@ fn main() {
           "uvm_util", "gpuvm1_util", "gpuvm2_util"],
     );
     println!(
-        "{:<6} {:>11} {:>11} {:>11} | {:>7} {:>7} | {:>6} {:>6} {:>6}",
+        "{:<10} {:>11} {:>11} {:>11} | {:>7} {:>7} | {:>6} {:>6} {:>6}",
         "app", "UVM", "G-1N", "G-2N", "spd 1N", "spd 2N", "uU", "uG1", "uG2"
     );
-    for app in ["mvt", "atax", "bigc", "va"] {
+    for app in ["mvt@8192", "atax@8192", "bigc@8192", "va"] {
         let mut cfg = SystemConfig::default();
         cfg.gpu.sms = 28;
         cfg.gpu.warps_per_sm = 8;
         cfg.gpuvm.page_size = 4096;
         cfg.gpu.mem_bytes = 64 << 20; // workloads fit (paper §5.3)
+        let cfg_report = cfg.clone();
 
-        let u = simulate(&cfg, make(app, 4096).as_mut(), MemSysKind::Uvm).unwrap();
-        let g1 = simulate(&cfg, make(app, 4096).as_mut(), MemSysKind::GpuVm).unwrap();
-        let mut cfg2 = cfg.clone();
-        cfg2.rnic.num_nics = 2;
-        let g2 = simulate(&cfg2, make(app, 4096).as_mut(), MemSysKind::GpuVm).unwrap();
+        // One sweep point per (nics, backend); order: nics outer. The
+        // uvm@2N point is redundant (UVM's direct DMA path ignores the
+        // NIC count) but cheap; the uniform cross product keeps the
+        // sweep declarative.
+        let reports = Session::new(cfg)
+            .workload(app)
+            .backends(["uvm", "gpuvm"])
+            .sweep_nics([1, 2])
+            .run_all()
+            .expect("fig13 sweep");
+        let (u, g1, g2) = (&reports[0], &reports[1], &reports[3]);
 
-        let (tu, t1, t2) = (u.metrics.finish_ns, g1.metrics.finish_ns, g2.metrics.finish_ns);
-        let uu = utilization(&cfg, MemSysKind::Uvm, u.metrics.throughput_in());
-        let u1 = utilization(&cfg, MemSysKind::GpuVm, g1.metrics.throughput_in());
-        let u2 = utilization(&cfg2, MemSysKind::GpuVm, g2.metrics.throughput_in());
+        let (tu, t1, t2) = (u.finish_ns, g1.finish_ns, g2.finish_ns);
+        let uu = utilization(&cfg_report, u);
+        let u1 = utilization(&cfg_report, g1);
+        let u2 = utilization(&cfg_report, g2);
         println!(
-            "{:<6} {:>11} {:>11} {:>11} | {:>6.2}× {:>6.2}× | {:>5.0}% {:>5.0}% {:>5.0}%",
+            "{:<10} {:>11} {:>11} {:>11} | {:>6.2}× {:>6.2}× | {:>5.0}% {:>5.0}% {:>5.0}%",
             app,
             fmt_ns(tu),
             fmt_ns(t1),

@@ -1,40 +1,31 @@
 //! Fig 14 — Effect of oversubscription: fix the workload, shrink GPU
-//! memory per Eq. (1), plot the slowdown.
+//! memory per Eq. (1), plot the slowdown. One `Session` per app sweeps
+//! the GPU-memory axis across both paged backends.
 //!
 //! Paper: UVM slows graph apps up to 4× and the column-walk matrix
 //! kernels exponentially (2 MB evictions + useless 64 KB prefetch);
 //! GPUVM stays within ≈2× at every pressure level.
 
-use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout, MatrixApp, MatrixSeq, VaWorkload};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
-use gpuvm::gpu::kernel::Workload;
+use gpuvm::coordinator::Session;
 use gpuvm::graph::{generate, DatasetId};
 use gpuvm::util::bench::banner;
 use gpuvm::util::csv::CsvWriter;
-use std::rc::Rc;
+
+const GRAPH_SEED: u64 = 42;
+const GRAPH_SCALE: f64 = 0.5;
 
 fn main() {
     banner("Fig 14: oversubscription sweep");
-    let graph = Rc::new(generate(DatasetId::GK, 0.5, 42).graph);
+    // Size the graph working set from the same generator the spec uses.
+    let graph = generate(DatasetId::GK, GRAPH_SCALE, GRAPH_SEED).graph;
     let graph_bytes = graph.edge_bytes() + (graph.num_vertices as u64 * 12);
-    let apps: Vec<(&str, u64, Box<dyn Fn(u64) -> Box<dyn Workload>>)> = vec![
-        ("bfs", graph_bytes, {
-            let g = graph.clone();
-            Box::new(move |page| {
-                Box::new(GraphWorkload::new(
-                    GraphAlgo::Bfs,
-                    Layout::Balanced { chunk_edges: 2048 },
-                    g.clone(),
-                    0,
-                    page,
-                ))
-            })
-        }),
-        ("mvt", 8192 * 8192 * 4, Box::new(|page| Box::new(MatrixSeq::new(MatrixApp::Mvt, 8192, page)))),
-        ("atax", 8192 * 8192 * 4, Box::new(|page| Box::new(MatrixSeq::new(MatrixApp::Atax, 8192, page)))),
-        ("bigc", 8192 * 8192 * 4, Box::new(|page| Box::new(MatrixSeq::new(MatrixApp::Bigc, 8192, page)))),
-        ("va", 3 * (2 << 20) * 4, Box::new(|page| Box::new(VaWorkload::new(2 << 20, page)))),
+    let apps: [(&str, u64); 5] = [
+        ("bfs:GK:balanced", graph_bytes),
+        ("mvt@8192", 8192 * 8192 * 4),
+        ("atax@8192", 8192 * 8192 * 4),
+        ("bigc@8192", 8192 * 8192 * 4),
+        ("va@2m", 3 * (2 << 20) * 4),
     ];
     let levels = [0u64, 10, 25, 50, 75];
     let mut csv = CsvWriter::bench_result(
@@ -42,27 +33,39 @@ fn main() {
         &["app", "oversub_pct", "gpuvm_slowdown", "uvm_slowdown"],
     );
     println!(
-        "{:<6} {:>8} | {:>14} {:>14}",
+        "{:<16} {:>8} | {:>14} {:>14}",
         "app", "oversub", "GPUVM slowdown", "UVM slowdown"
     );
-    for (name, ws, make) in &apps {
-        let mut base: Option<(u64, u64)> = None;
-        for &pct in &levels {
-            let mut cfg = SystemConfig::default();
-            cfg.gpu.sms = 28;
-            cfg.gpu.warps_per_sm = 8;
-            cfg.gpuvm.page_size = 4096;
-            cfg.gpu.mem_bytes = if pct == 0 {
-                ws * 2
-            } else {
-                (ws * 100 / (100 + pct)).max(192 * 4096)
-            };
-            let g = simulate(&cfg, make(4096).as_mut(), MemSysKind::GpuVm).unwrap();
-            let u = simulate(&cfg, make(4096).as_mut(), MemSysKind::Uvm).unwrap();
-            let (bg, bu) = *base.get_or_insert((g.metrics.finish_ns, u.metrics.finish_ns));
-            let sg = g.metrics.finish_ns as f64 / bg as f64;
-            let su = u.metrics.finish_ns as f64 / bu as f64;
-            println!("{name:<6} {pct:>7}% | {sg:>13.2}× {su:>13.2}×");
+    for (name, ws) in &apps {
+        // Eq. (1): oversubscription = ws/mem - 1.
+        let mems: Vec<u64> = levels
+            .iter()
+            .map(|&pct| {
+                if pct == 0 {
+                    ws * 2
+                } else {
+                    (ws * 100 / (100 + pct)).max(192 * 4096)
+                }
+            })
+            .collect();
+        let mut cfg = SystemConfig::default();
+        cfg.gpu.sms = 28;
+        cfg.gpu.warps_per_sm = 8;
+        cfg.gpuvm.page_size = 4096;
+        cfg.seed = GRAPH_SEED;
+        let reports = Session::new(cfg)
+            .graph_scale(GRAPH_SCALE)
+            .workload(name)
+            .backends(["gpuvm", "uvm"])
+            .sweep_gpu_mem(mems)
+            .run_all()
+            .expect("fig14 sweep");
+        // Point order: gpu-mem level outer, then [gpuvm, uvm].
+        let (bg, bu) = (reports[0].finish_ns, reports[1].finish_ns);
+        for (i, &pct) in levels.iter().enumerate() {
+            let sg = reports[2 * i].finish_ns as f64 / bg as f64;
+            let su = reports[2 * i + 1].finish_ns as f64 / bu as f64;
+            println!("{name:<16} {pct:>7}% | {sg:>13.2}× {su:>13.2}×");
             csv.row([
                 name.to_string(),
                 pct.to_string(),

@@ -7,7 +7,7 @@
 use gpuvm::apps::{QueryWorkload, TaxiTable, NUM_QUERIES, QUERY_NAMES};
 use gpuvm::baselines::run_rapids;
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::util::bench::{banner, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
 use std::rc::Rc;
@@ -40,17 +40,17 @@ fn main() {
         let rap = run_rapids(&cfg, &table, q);
         let u = {
             let mut w = QueryWorkload::new(table.clone(), q, 4096);
-            simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap()
+            simulate(&cfg, &mut w, "uvm").unwrap()
         };
         let g1 = {
             let mut w = QueryWorkload::new(table.clone(), q, 4096);
-            simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap()
+            simulate(&cfg, &mut w, "gpuvm").unwrap()
         };
         let g2 = {
             let mut c = cfg.clone();
             c.rnic.num_nics = 2;
             let mut w = QueryWorkload::new(table.clone(), q, 4096);
-            simulate(&c, &mut w, MemSysKind::GpuVm).unwrap()
+            simulate(&c, &mut w, "gpuvm").unwrap()
         };
         println!(
             "{:<10} {:>11} {:>11} {:>11} {:>11} | {:>6.2}× {:>6.2}× {:>6.2}×",

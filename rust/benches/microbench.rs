@@ -1,10 +1,10 @@
 //! Simulator micro-benchmarks (§Perf): wallclock cost of the DES hot
 //! paths — event throughput, page-table ops, the end-to-end fig09-style
-//! run — tracked across the optimization pass in EXPERIMENTS.md §Perf.
+//! run — tracked across optimization passes.
 
 use gpuvm::apps::StreamWorkload;
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::sim::Engine;
 use gpuvm::util::bench::{banner, time};
 use gpuvm::util::csv::CsvWriter;
@@ -30,7 +30,7 @@ fn main() {
     cfg.gpu.mem_bytes = 256 << 20;
     let t = time("gpuvm stream 32MiB @4K (full machine)", 1, 5, || {
         let mut w = StreamWorkload::new(32 << 20, 4096, cfg.total_warps());
-        let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+        let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
         std::hint::black_box(r.metrics.finish_ns);
     });
     let faults = (32u64 << 20) / 4096;
@@ -41,7 +41,7 @@ fn main() {
     // 3. UVM path.
     let t = time("uvm stream 32MiB @4K (full machine)", 1, 5, || {
         let mut w = StreamWorkload::new(32 << 20, 4096, cfg.total_warps());
-        let r = simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap();
+        let r = simulate(&cfg, &mut w, "uvm").unwrap();
         std::hint::black_box(r.metrics.finish_ns);
     });
     println!("{}", t.report());

@@ -6,7 +6,7 @@
 use gpuvm::apps::{GraphAlgo, GraphWorkload, Layout};
 use gpuvm::baselines::{run_subway, SubwayAlgo};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::graph::{generate, DatasetId};
 use gpuvm::util::bench::{banner, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
@@ -46,7 +46,7 @@ fn main() {
                 src,
                 cfg.gpuvm.page_size,
             );
-            let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+            let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
             let speed = sub.total_ns as f64 / r.metrics.finish_ns as f64;
             all.push(speed);
             println!(

@@ -388,6 +388,15 @@ impl Workload for GraphWorkload {
             gpuvm_extra_registers: crate::gpu::resources::GPUVM_RUNTIME_REGISTERS,
         }
     }
+
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        // The CSR structure (and weights) never changes; the per-vertex
+        // value array is written every iteration.
+        [self.r_offsets, self.r_neighbors, self.r_weights]
+            .into_iter()
+            .flatten()
+            .collect()
+    }
 }
 
 #[cfg(test)]

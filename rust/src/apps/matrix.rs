@@ -234,6 +234,11 @@ impl Workload for MatrixWorkload {
             gpuvm_extra_registers: crate::gpu::resources::GPUVM_RUNTIME_REGISTERS,
         }
     }
+
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        // The matrix and the input vector are read-only; y is written.
+        [self.r_a, self.r_x].into_iter().flatten().collect()
+    }
 }
 
 impl MatrixWorkload {
@@ -278,6 +283,9 @@ impl Workload for MatrixSeq {
     }
     fn resources(&self) -> KernelResources {
         self.0.resources()
+    }
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        self.0.read_mostly_regions()
     }
 }
 

@@ -3,6 +3,12 @@
 //! - Graph analytics (§5.2): BFS, CC, SSSP over the Table 2 datasets.
 //! - Transfer-bound kernels (§5.3): MVT, ATAX, BIGC, VA.
 //! - Query evaluation (§5.5): Q1–Q5 over the taxi-shaped table.
+//!
+//! Workloads are named by *specs* — `va@4m`, `mvt@8192`, `bfs:GK:naive`,
+//! `q3@1m` — parsed once into a [`WorkloadSpec`] that every backend,
+//! the CLI, and [`crate::coordinator::Session`] build from. A spec is
+//! plain data (`Send + Sync + Clone`), so sweep threads each construct
+//! their own workload instance.
 
 pub mod graph;
 pub mod matrix;
@@ -16,59 +22,276 @@ pub use query::{QueryWorkload, TaxiTable, NUM_QUERIES, QUERY_NAMES};
 pub use stream::StreamWorkload;
 pub use va::VaWorkload;
 
-use crate::gpu::kernel::Workload;
+use crate::gpu::kernel::{KernelResources, Launch, WarpOp, Workload};
+use crate::graph::DatasetId;
+use crate::mem::{HostMemory, RegionId};
+use crate::util::cli::parse_u64_with_suffix;
+use anyhow::{bail, Context, Result};
 
-/// Build a workload by name (CLI/`gpuvm run` entry point). Graph apps use
-/// the GK-shaped default dataset unless a dataset abbreviation is given
-/// as `bfs:GU`; an optional third component picks the layout
-/// (`bfs:GU:naive` or `:balanced`, the default).
-pub fn by_name(spec: &str, page_size: u64, seed: u64) -> anyhow::Result<Box<dyn Workload>> {
-    let mut parts = spec.splitn(3, ':');
-    let name = parts.next().unwrap_or(spec);
-    let ds = parts.next().unwrap_or("GK");
-    let layout_s = parts.next().unwrap_or("balanced");
-    let dataset = || -> anyhow::Result<std::rc::Rc<crate::graph::Csr>> {
-        let id = match ds {
-            "GU" => crate::graph::DatasetId::GU,
-            "GK" => crate::graph::DatasetId::GK,
-            "FS" => crate::graph::DatasetId::FS,
-            "MO" => crate::graph::DatasetId::MO,
-            _ => anyhow::bail!("unknown dataset '{ds}' (GU|GK|FS|MO)"),
-        };
-        Ok(std::rc::Rc::new(crate::graph::generate(id, 1.0, seed).graph))
-    };
-    let balanced = match layout_s {
-        "naive" => Layout::Csr { vertices_per_warp: 8 },
-        _ => Layout::Balanced { chunk_edges: 2048 },
-    };
-    // Matrix apps accept an `@N` size suffix (e.g. `mvt@4096`).
-    let (name, msize) = match name.split_once('@') {
-        Some((n, s)) => (n, s.parse().unwrap_or(2048)),
-        None => (name, 2048usize),
-    };
-    Ok(match name {
-        "va" => Box::new(VaWorkload::new(4 << 20, page_size)),
-        "mvt" => Box::new(MatrixSeq::new(MatrixApp::Mvt, msize, page_size)),
-        "atax" => Box::new(MatrixSeq::new(MatrixApp::Atax, msize, page_size)),
-        "bigc" => Box::new(MatrixSeq::new(MatrixApp::Bigc, msize, page_size)),
-        "bfs" => Box::new(GraphWorkload::new(GraphAlgo::Bfs, balanced, dataset()?, 0, page_size)),
-        "cc" => Box::new(GraphWorkload::new(GraphAlgo::Cc, balanced, dataset()?, 0, page_size)),
-        "sssp" => Box::new(GraphWorkload::new(GraphAlgo::Sssp, balanced, dataset()?, 0, page_size)),
-        "query" | "q1" | "q2" | "q3" | "q4" | "q5" => {
-            let q = match name {
-                "q2" => 1,
-                "q3" => 2,
-                "q4" => 3,
-                "q5" => 4,
-                _ => 0,
-            };
-            let table = std::rc::Rc::new(TaxiTable::generate(1 << 20, seed));
-            Box::new(QueryWorkload::new(table, q, page_size))
+/// Every spec-resolvable application, with its parsed parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecKind {
+    /// Vector add over `n` f32 elements per array.
+    Va { n: usize },
+    /// MVT/ATAX/BIGC over an `n × n` f32 matrix.
+    Matrix { app: MatrixApp, n: usize },
+    /// BFS/CC/SSSP over a Table 2 dataset; `naive` picks the CSR
+    /// per-vertex layout (paper "1N"), otherwise Balanced CSR ("2N").
+    Graph {
+        algo: GraphAlgo,
+        dataset: DatasetId,
+        naive: bool,
+    },
+    /// Taxi query `q` (0-based) over `rows` rows.
+    Query { q: usize, rows: usize },
+}
+
+/// Knobs a workload build needs beyond the spec itself. Constructed from
+/// the run's [`crate::config::SystemConfig`]; Sessions override the
+/// graph-specific fields for sweeps.
+#[derive(Debug, Clone)]
+pub struct BuildOpts {
+    pub page_size: u64,
+    pub seed: u64,
+    /// Wrap in [`Advised`] so read-only inputs get the read-mostly hint
+    /// (the UVM "wm" configuration).
+    pub advise: bool,
+    /// Dataset scale for graph specs (1.0 = the default bench size).
+    pub graph_scale: f64,
+    /// Source vertex for graph specs.
+    pub graph_source: u32,
+}
+
+impl BuildOpts {
+    pub fn new(page_size: u64, seed: u64) -> Self {
+        Self {
+            page_size,
+            seed,
+            advise: false,
+            graph_scale: 1.0,
+            graph_source: 0,
         }
-        other => anyhow::bail!(
-            "unknown app '{other}' (va|mvt|atax|bigc|bfs|cc|sssp|q1..q5; graph apps accept :GU/:GK/:FS/:MO)"
-        ),
-    })
+    }
+
+    /// Options matching a system configuration.
+    pub fn for_cfg(cfg: &crate::config::SystemConfig) -> Self {
+        Self::new(cfg.gpuvm.page_size, cfg.seed)
+    }
+}
+
+/// A parsed workload spec: the string form plus its resolved parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    raw: String,
+    pub kind: SpecKind,
+}
+
+const APP_HELP: &str =
+    "va[@N]|mvt[@N]|atax[@N]|bigc[@N]|bfs|cc|sssp[:GU|GK|FS|MO[:naive|balanced]]|q1..q5[@ROWS]";
+
+/// Parse a size parameter with the CLI's `k`/`m`/`g` suffixes; errors
+/// instead of silently substituting a default (the `mvt@garbage` fix).
+fn parse_size(app: &str, s: &str) -> Result<usize> {
+    let v = parse_u64_with_suffix(s)
+        .with_context(|| format!("{app}: cannot parse size suffix '@{s}' (try 4096, 4k, 1m)"))?;
+    anyhow::ensure!(v > 0, "{app}: size must be positive, got '@{s}'");
+    Ok(v as usize)
+}
+
+impl WorkloadSpec {
+    /// Parse `va@4m`, `mvt@8192`, `bfs:GK:naive`, `q3@1m`, ...
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut parts = spec.splitn(3, ':');
+        let head = parts.next().unwrap_or(spec);
+        let ds = parts.next();
+        let layout = parts.next();
+
+        // `name@N` size suffix (elements, matrix dim, or rows).
+        let (name, size) = match head.split_once('@') {
+            Some((n, s)) => (n, Some(parse_size(n, s)?)),
+            None => (head, None),
+        };
+
+        let reject_colon = |what: &str| -> Result<()> {
+            if ds.is_some() || layout.is_some() {
+                bail!("'{name}' takes no ':' qualifier ({what})");
+            }
+            Ok(())
+        };
+
+        let kind = match name {
+            "va" => {
+                reject_colon("use va@N for the element count")?;
+                SpecKind::Va {
+                    n: size.unwrap_or(4 << 20),
+                }
+            }
+            "mvt" | "atax" | "bigc" => {
+                reject_colon("use mvt@N for the matrix dimension")?;
+                let app = match name {
+                    "mvt" => MatrixApp::Mvt,
+                    "atax" => MatrixApp::Atax,
+                    _ => MatrixApp::Bigc,
+                };
+                let n = size.unwrap_or(2048);
+                anyhow::ensure!(
+                    n % 32 == 0,
+                    "{name}: matrix dimension must be a multiple of the warp width (32), got {n}"
+                );
+                SpecKind::Matrix { app, n }
+            }
+            "bfs" | "cc" | "sssp" => {
+                let algo = match name {
+                    "bfs" => GraphAlgo::Bfs,
+                    "cc" => GraphAlgo::Cc,
+                    _ => GraphAlgo::Sssp,
+                };
+                if size.is_some() {
+                    bail!("{name}: graph apps take ':DS[:layout]', not '@N'");
+                }
+                let dataset = DatasetId::parse(ds.unwrap_or("GK"))?;
+                let naive = match layout.unwrap_or("balanced") {
+                    "naive" => true,
+                    "balanced" => false,
+                    other => bail!("{name}: unknown layout '{other}' (naive|balanced)"),
+                };
+                SpecKind::Graph {
+                    algo,
+                    dataset,
+                    naive,
+                }
+            }
+            "query" | "q1" | "q2" | "q3" | "q4" | "q5" => {
+                reject_colon("use q1@ROWS for the table size")?;
+                let q = match name {
+                    "q2" => 1,
+                    "q3" => 2,
+                    "q4" => 3,
+                    "q5" => 4,
+                    _ => 0,
+                };
+                SpecKind::Query {
+                    q,
+                    rows: size.unwrap_or(1 << 20),
+                }
+            }
+            other => bail!("unknown app '{other}' (valid: {APP_HELP})"),
+        };
+        Ok(Self {
+            raw: spec.to_string(),
+            kind,
+        })
+    }
+
+    /// The spec string as written.
+    pub fn raw(&self) -> &str {
+        &self.raw
+    }
+
+    /// Construct the workload this spec names.
+    pub fn build(&self, o: &BuildOpts) -> Result<Box<dyn Workload>> {
+        let w: Box<dyn Workload> = match self.kind {
+            SpecKind::Va { n } => Box::new(VaWorkload::new(n, o.page_size)),
+            SpecKind::Matrix { app, n } => Box::new(MatrixSeq::new(app, n, o.page_size)),
+            SpecKind::Graph {
+                algo,
+                dataset,
+                naive,
+            } => {
+                let g = std::rc::Rc::new(
+                    crate::graph::generate(dataset, o.graph_scale, o.seed).graph,
+                );
+                anyhow::ensure!(
+                    (o.graph_source as usize) < g.num_vertices,
+                    "graph source {} out of range (|V| = {})",
+                    o.graph_source,
+                    g.num_vertices
+                );
+                let layout = if naive {
+                    Layout::Csr {
+                        vertices_per_warp: 8,
+                    }
+                } else {
+                    Layout::Balanced { chunk_edges: 2048 }
+                };
+                Box::new(GraphWorkload::new(
+                    algo,
+                    layout,
+                    g,
+                    o.graph_source,
+                    o.page_size,
+                ))
+            }
+            SpecKind::Query { q, rows } => {
+                let table = std::rc::Rc::new(TaxiTable::generate(rows, o.seed));
+                Box::new(QueryWorkload::new(table, q, o.page_size))
+            }
+        };
+        Ok(if o.advise {
+            Box::new(Advised::new(w))
+        } else {
+            w
+        })
+    }
+
+    /// Total host bytes the workload registers, without running it.
+    pub fn footprint_bytes(&self, o: &BuildOpts) -> Result<u64> {
+        let mut w = self.build(o)?;
+        let mut hm = HostMemory::new(o.page_size);
+        w.setup(&mut hm);
+        Ok(hm.total_bytes())
+    }
+}
+
+/// Wraps any workload and applies `cudaMemAdviseSetReadMostly` to its
+/// read-only inputs after setup — the generic form of the paper's UVM
+/// "wm" configuration, used by the `uvm-memadvise` backend. The
+/// lifetime lets it wrap borrowed workloads too (`Box::new(&mut w)`),
+/// which is how `coordinator::simulate` honors advising backends on
+/// caller-owned workloads.
+pub struct Advised<'a> {
+    inner: Box<dyn Workload + 'a>,
+}
+
+impl<'a> Advised<'a> {
+    pub fn new(inner: Box<dyn Workload + 'a>) -> Self {
+        Self { inner }
+    }
+}
+
+impl Workload for Advised<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn setup(&mut self, hm: &mut HostMemory) {
+        self.inner.setup(hm);
+        for r in self.inner.read_mostly_regions() {
+            hm.advise_read_mostly(r);
+        }
+    }
+
+    fn next_kernel(&mut self) -> Option<Launch> {
+        self.inner.next_kernel()
+    }
+
+    fn next_op(&mut self, warp: usize) -> WarpOp {
+        self.inner.next_op(warp)
+    }
+
+    fn resources(&self) -> KernelResources {
+        self.inner.resources()
+    }
+
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        self.inner.read_mostly_regions()
+    }
+}
+
+/// Build a workload by name (CLI/`gpuvm run` entry point) with default
+/// build options. See [`WorkloadSpec::parse`] for the grammar.
+pub fn by_name(spec: &str, page_size: u64, seed: u64) -> Result<Box<dyn Workload>> {
+    WorkloadSpec::parse(spec)?.build(&BuildOpts::new(page_size, seed))
 }
 
 #[cfg(test)]
@@ -84,5 +307,52 @@ mod tests {
         assert!(by_name("bfs:GU", 4096, 1).is_ok());
         assert!(by_name("nope", 4096, 1).is_err());
         assert!(by_name("bfs:XX", 4096, 1).is_err());
+    }
+
+    #[test]
+    fn size_suffixes_parse_like_the_cli() {
+        let s = WorkloadSpec::parse("mvt@4k").unwrap();
+        assert_eq!(
+            s.kind,
+            SpecKind::Matrix {
+                app: MatrixApp::Mvt,
+                n: 4096
+            }
+        );
+        let s = WorkloadSpec::parse("va@1m").unwrap();
+        assert_eq!(s.kind, SpecKind::Va { n: 1 << 20 });
+        let s = WorkloadSpec::parse("q3@64k").unwrap();
+        assert_eq!(s.kind, SpecKind::Query { q: 2, rows: 65536 });
+    }
+
+    #[test]
+    fn bad_size_suffix_is_an_error_not_a_default() {
+        // The old parser silently fell back to 2048 here.
+        let err = WorkloadSpec::parse("mvt@garbage").unwrap_err();
+        assert!(err.to_string().contains("garbage"), "{err:#}");
+        assert!(WorkloadSpec::parse("va@0").is_err());
+        assert!(WorkloadSpec::parse("mvt@100").is_err(), "not a multiple of 32");
+        assert!(WorkloadSpec::parse("bfs@4k").is_err(), "graph apps take :DS");
+        assert!(WorkloadSpec::parse("va:GK").is_err(), "va takes no dataset");
+        assert!(WorkloadSpec::parse("bfs:GK:zigzag").is_err());
+    }
+
+    #[test]
+    fn advised_wrapper_marks_read_only_inputs() {
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let mut o = BuildOpts::new(4096, 1);
+        o.advise = true;
+        let mut w = spec.build(&o).unwrap();
+        let mut hm = HostMemory::new(4096);
+        w.setup(&mut hm);
+        let advised: Vec<bool> = hm.regions().iter().map(|r| r.read_mostly).collect();
+        assert_eq!(advised, vec![true, true, false], "A, B advised; C written");
+    }
+
+    #[test]
+    fn footprint_matches_registration() {
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let o = BuildOpts::new(4096, 1);
+        assert_eq!(spec.footprint_bytes(&o).unwrap(), 3 * 65536 * 4);
     }
 }

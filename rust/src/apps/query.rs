@@ -196,6 +196,12 @@ impl Workload for QueryWorkload {
             gpuvm_extra_registers: crate::gpu::resources::GPUVM_RUNTIME_REGISTERS,
         }
     }
+
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        // Queries only read the column data (the aggregate lives in
+        // registers/shared memory).
+        [self.r_seconds, self.r_value].into_iter().flatten().collect()
+    }
 }
 
 #[cfg(test)]

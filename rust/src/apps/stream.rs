@@ -87,6 +87,14 @@ impl Workload for StreamWorkload {
             gpuvm_extra_registers: crate::gpu::resources::GPUVM_RUNTIME_REGISTERS,
         }
     }
+
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        if self.write {
+            Vec::new()
+        } else {
+            self.region.into_iter().collect()
+        }
+    }
 }
 
 #[cfg(test)]

@@ -134,6 +134,11 @@ impl Workload for VaWorkload {
             gpuvm_extra_registers: crate::gpu::resources::GPUVM_RUNTIME_REGISTERS,
         }
     }
+
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        // A and B are read-only inputs; C is written.
+        [self.r_a, self.r_b].into_iter().flatten().collect()
+    }
 }
 
 #[cfg(test)]

@@ -167,6 +167,10 @@ pub struct GdrConfig {
     /// saturates the link only at ≥512 KB requests (Fig 8) — the paper's
     /// point is that a CPU cannot *generate* small requests fast enough.
     pub issue_overhead_us: f64,
+    /// Scatter-gather request size the bulk `gdr` backend stages data
+    /// with, bytes. Default 1 MiB: past the Fig 8 saturation knee, i.e.
+    /// the best case for the CPU-initiated baseline.
+    pub request_bytes: u64,
 }
 
 /// Top-level simulated system.
@@ -242,6 +246,7 @@ impl Default for SystemConfig {
             gdr: GdrConfig {
                 threads: 16,
                 issue_overhead_us: 72.0,
+                request_bytes: 1 << 20,
             },
             seed: 0x5EED,
         }
@@ -330,6 +335,7 @@ impl SystemConfig {
             ("uvm", "memadvise_setup_ms") => self.uvm.memadvise_setup_ms = f64v(v)?,
             ("gdr", "threads") => self.gdr.threads = usizev(v)?,
             ("gdr", "issue_overhead_us") => self.gdr.issue_overhead_us = f64v(v)?,
+            ("gdr", "request_bytes") => self.gdr.request_bytes = u64v(v)?,
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())

@@ -1,62 +1,52 @@
-//! The coordinator: binds workloads, memory systems, the DES executor,
-//! and the PJRT compute path into runs, and prints reports. This is what
-//! the CLI (`gpuvm run`, `gpuvm e2e`) and the benches drive.
+//! The coordinator: binds workloads, backends, the DES executor, and the
+//! PJRT compute path into runs, and produces reports. This is what the
+//! CLI (`gpuvm run`, `gpuvm sweep`, `gpuvm e2e`) and the benches drive.
+//!
+//! The pieces:
+//! - [`backend`] — the string-keyed registry of every comparison system
+//!   (`gpuvm`, `uvm`, `uvm-memadvise`, `ideal`, `gdr`, `subway`,
+//!   `rapids`), all behind the [`Backend`] trait;
+//! - [`Session`] — the fluent sweep builder
+//!   (`Session::new(cfg).workload("bfs:GK").backend("gpuvm")
+//!   .sweep_nics([1, 2]).run_all()`);
+//! - [`RunReport`] — one structured result per run, serializable to CSV
+//!   and JSON;
+//! - [`compute`] — the PJRT functional-compute passes.
 
+pub mod backend;
 pub mod compute;
 pub mod report;
+pub mod session;
+
+pub use backend::Backend;
+pub use report::RunReport;
+pub use session::Session;
 
 use crate::config::SystemConfig;
 use crate::gpu::exec::{run, RunResult};
 use crate::gpu::kernel::Workload;
-use crate::gpuvm::GpuVmSystem;
-use crate::memsys::ideal::IdealSystem;
-use crate::memsys::MemorySystem;
-use crate::uvm::UvmSystem;
 use anyhow::Result;
 
-/// Which memory system backs a run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MemSysKind {
-    GpuVm,
-    Uvm,
-    Ideal,
-}
-
-impl MemSysKind {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "gpuvm" => Self::GpuVm,
-            "uvm" => Self::Uvm,
-            "ideal" => Self::Ideal,
-            _ => anyhow::bail!("unknown memory system '{s}' (gpuvm|uvm|ideal)"),
-        })
+/// Run an already-constructed `workload` under the named paged backend
+/// on `cfg`'s simulated testbed. Advising backends (`uvm-memadvise`)
+/// get the read-mostly hint applied to the workload's read-only regions
+/// at setup. Bulk backends (`gdr`, `subway`, `rapids`) have no
+/// pluggable memory system — drive those through [`Backend::run`] or a
+/// [`Session`] with a workload spec.
+pub fn simulate(cfg: &SystemConfig, workload: &mut dyn Workload, kind: &str) -> Result<RunResult> {
+    let b = backend::lookup(kind)?;
+    let mut mem = b.build_memsys(cfg).ok_or_else(|| {
+        anyhow::anyhow!(
+            "backend '{kind}' is a bulk engine with no pluggable memory system; \
+             drive it through a Session or Backend::run with a workload spec"
+        )
+    })?;
+    if b.advise() {
+        let mut w = crate::apps::Advised::new(Box::new(workload));
+        run(cfg, &mut w, mem.as_mut())
+    } else {
+        run(cfg, workload, mem.as_mut())
     }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::GpuVm => "gpuvm",
-            Self::Uvm => "uvm",
-            Self::Ideal => "ideal",
-        }
-    }
-
-    pub fn build(&self, cfg: &SystemConfig) -> Box<dyn MemorySystem> {
-        match self {
-            Self::GpuVm => Box::new(GpuVmSystem::new(cfg)),
-            Self::Uvm => Box::new(UvmSystem::new(cfg)),
-            Self::Ideal => Box::new(IdealSystem::new(cfg.gpu.hbm_hit_ns)),
-        }
-    }
-}
-
-/// Run `workload` under `kind` on `cfg`'s simulated testbed.
-pub fn simulate(
-    cfg: &SystemConfig,
-    workload: &mut dyn Workload,
-    kind: MemSysKind,
-) -> Result<RunResult> {
-    let mut mem = kind.build(cfg);
-    run(cfg, workload, mem.as_mut())
 }
 
 /// Convenience: run the same (re-constructible) workload under GPUVM and
@@ -65,8 +55,8 @@ pub fn compare<F>(cfg: &SystemConfig, mut make: F) -> Result<(RunResult, RunResu
 where
     F: FnMut() -> Box<dyn Workload>,
 {
-    let g = simulate(cfg, make().as_mut(), MemSysKind::GpuVm)?;
-    let u = simulate(cfg, make().as_mut(), MemSysKind::Uvm)?;
+    let g = simulate(cfg, make().as_mut(), "gpuvm")?;
+    let u = simulate(cfg, make().as_mut(), "uvm")?;
     Ok((g, u))
 }
 
@@ -86,16 +76,13 @@ mod tests {
     }
 
     #[test]
-    fn kinds_parse_and_build() {
-        for (s, k) in [
-            ("gpuvm", MemSysKind::GpuVm),
-            ("uvm", MemSysKind::Uvm),
-            ("ideal", MemSysKind::Ideal),
-        ] {
-            assert_eq!(MemSysKind::parse(s).unwrap(), k);
-            assert_eq!(k.name(), s);
-        }
-        assert!(MemSysKind::parse("bogus").is_err());
+    fn simulate_rejects_unknown_and_bulk_backends() {
+        let c = cfg();
+        let mut w = VaWorkload::new(64 * 1024, 4096);
+        let err = simulate(&c, &mut w, "bogus").unwrap_err().to_string();
+        assert!(err.contains("gpuvm") && err.contains("rapids"), "{err}");
+        let err = simulate(&c, &mut w, "gdr").unwrap_err().to_string();
+        assert!(err.contains("bulk"), "{err}");
     }
 
     #[test]
@@ -115,12 +102,24 @@ mod tests {
     }
 
     #[test]
+    fn simulate_honors_memadvise_on_prebuilt_workloads() {
+        let c = cfg();
+        let mut w = VaWorkload::new(256 * 1024, 4096);
+        let plain = simulate(&c, &mut w, "uvm").unwrap();
+        let mut w2 = VaWorkload::new(256 * 1024, 4096);
+        let advised = simulate(&c, &mut w2, "uvm-memadvise").unwrap();
+        assert_eq!(plain.metrics.setup_ns, 0);
+        assert!(advised.metrics.setup_ns > 0, "advice must reach the regions");
+        assert!(advised.metrics.finish_ns < plain.metrics.finish_ns);
+    }
+
+    #[test]
     fn ideal_is_fastest() {
         let c = cfg();
         let mut w = VaWorkload::new(256 * 1024, 4096);
-        let i = simulate(&c, &mut w, MemSysKind::Ideal).unwrap();
+        let i = simulate(&c, &mut w, "ideal").unwrap();
         let mut w2 = VaWorkload::new(256 * 1024, 4096);
-        let g = simulate(&c, &mut w2, MemSysKind::GpuVm).unwrap();
+        let g = simulate(&c, &mut w2, "gpuvm").unwrap();
         assert!(i.metrics.finish_ns < g.metrics.finish_ns);
     }
 }

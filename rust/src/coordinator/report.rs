@@ -1,9 +1,271 @@
-//! Human-readable run reports shared by the CLI and examples.
+//! Run reporting: the structured [`RunReport`] every backend produces
+//! (serializable to CSV and JSON), plus the human-readable text report
+//! the CLI and examples print.
 
+use crate::config::SystemConfig;
 use crate::gpu::exec::RunResult;
 use crate::util::bench::{fmt_bytes, fmt_gbps, fmt_ns};
+use std::io::Write as _;
+use std::path::Path;
 
-/// Multi-line report of one simulated run.
+/// One run's outcome, flattened for sweeps: identity (backend, workload),
+/// the swept configuration axes, and the headline metrics. This is what
+/// [`crate::coordinator::Session::run_all`] returns one of per point.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub backend: String,
+    pub workload: String,
+    // Swept configuration axes.
+    pub nics: usize,
+    pub page_size: u64,
+    pub gpu_mem_bytes: u64,
+    pub qps: usize,
+    // Headline results.
+    pub finish_ns: u64,
+    /// One-time setup cost reported separately (e.g. memadvise).
+    pub setup_ns: u64,
+    pub kernels: u64,
+    /// DES events processed (simulator-perf metric; 0 for bulk backends).
+    pub events: u64,
+    pub faults: u64,
+    pub coalesced_faults: u64,
+    pub hits: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub useful_bytes: u64,
+    pub evictions: u64,
+    pub refetches: u64,
+}
+
+impl RunReport {
+    /// Column names matching [`RunReport::csv_row`].
+    pub const CSV_HEADER: [&'static str; 19] = [
+        "backend",
+        "workload",
+        "nics",
+        "page_size",
+        "gpu_mem_bytes",
+        "qps",
+        "finish_ns",
+        "setup_ns",
+        "kernels",
+        "events",
+        "faults",
+        "coalesced_faults",
+        "hits",
+        "bytes_in",
+        "bytes_out",
+        "useful_bytes",
+        "evictions",
+        "refetches",
+        "io_amplification",
+    ];
+
+    /// A report with zeroed metrics, tagged with the run's identity and
+    /// sweep axes. Bulk backends fill in their own fields from here.
+    pub fn empty(backend: &str, workload: &str, cfg: &SystemConfig) -> Self {
+        Self {
+            backend: backend.to_string(),
+            workload: workload.to_string(),
+            nics: cfg.rnic.num_nics,
+            page_size: cfg.gpuvm.page_size,
+            gpu_mem_bytes: cfg.gpu.mem_bytes,
+            qps: cfg.gpuvm.num_qps,
+            finish_ns: 0,
+            setup_ns: 0,
+            kernels: 0,
+            events: 0,
+            faults: 0,
+            coalesced_faults: 0,
+            hits: 0,
+            bytes_in: 0,
+            bytes_out: 0,
+            useful_bytes: 0,
+            evictions: 0,
+            refetches: 0,
+        }
+    }
+
+    /// Flatten a DES run into a report.
+    pub fn from_sim(backend: &str, workload: &str, cfg: &SystemConfig, r: &RunResult) -> Self {
+        let m = &r.metrics;
+        Self {
+            finish_ns: m.finish_ns,
+            setup_ns: m.setup_ns,
+            kernels: r.kernels,
+            events: r.events,
+            faults: m.faults,
+            coalesced_faults: m.coalesced_faults,
+            hits: m.hits,
+            bytes_in: m.bytes_in,
+            bytes_out: m.bytes_out,
+            useful_bytes: m.useful_bytes,
+            evictions: m.evictions,
+            refetches: m.refetches,
+            ..Self::empty(backend, workload, cfg)
+        }
+    }
+
+    /// Achieved host→GPU bandwidth over the run, bytes/s.
+    pub fn bandwidth_in(&self) -> f64 {
+        if self.finish_ns == 0 {
+            return 0.0;
+        }
+        self.bytes_in as f64 / (self.finish_ns as f64 / 1e9)
+    }
+
+    /// Bytes moved per byte the application needed (0 when unknown).
+    pub fn io_amplification(&self) -> f64 {
+        if self.useful_bytes == 0 {
+            return 0.0;
+        }
+        (self.bytes_in + self.bytes_out) as f64 / self.useful_bytes as f64
+    }
+
+    /// Cells matching [`RunReport::CSV_HEADER`].
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.backend.clone(),
+            self.workload.clone(),
+            self.nics.to_string(),
+            self.page_size.to_string(),
+            self.gpu_mem_bytes.to_string(),
+            self.qps.to_string(),
+            self.finish_ns.to_string(),
+            self.setup_ns.to_string(),
+            self.kernels.to_string(),
+            self.events.to_string(),
+            self.faults.to_string(),
+            self.coalesced_faults.to_string(),
+            self.hits.to_string(),
+            self.bytes_in.to_string(),
+            self.bytes_out.to_string(),
+            self.useful_bytes.to_string(),
+            self.evictions.to_string(),
+            self.refetches.to_string(),
+            format!("{:.4}", self.io_amplification()),
+        ]
+    }
+
+    /// One JSON object (hand-rolled; the offline build has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"backend\":{},\"workload\":{},\"nics\":{},\"page_size\":{},",
+                "\"gpu_mem_bytes\":{},\"qps\":{},\"finish_ns\":{},\"setup_ns\":{},",
+                "\"kernels\":{},\"events\":{},\"faults\":{},\"coalesced_faults\":{},",
+                "\"hits\":{},\"bytes_in\":{},\"bytes_out\":{},\"useful_bytes\":{},",
+                "\"evictions\":{},\"refetches\":{},\"io_amplification\":{:.4},",
+                "\"bandwidth_in_bytes_per_sec\":{:.1}}}"
+            ),
+            json_string(&self.backend),
+            json_string(&self.workload),
+            self.nics,
+            self.page_size,
+            self.gpu_mem_bytes,
+            self.qps,
+            self.finish_ns,
+            self.setup_ns,
+            self.kernels,
+            self.events,
+            self.faults,
+            self.coalesced_faults,
+            self.hits,
+            self.bytes_in,
+            self.bytes_out,
+            self.useful_bytes,
+            self.evictions,
+            self.refetches,
+            self.io_amplification(),
+            self.bandwidth_in(),
+        )
+    }
+
+    /// Multi-line human-readable report (the CLI's `run` output).
+    pub fn text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "app={} memsys={} (nics={}, page={}, gpu-mem={})\n",
+            self.workload,
+            self.backend,
+            self.nics,
+            fmt_bytes(self.page_size),
+            fmt_bytes(self.gpu_mem_bytes)
+        ));
+        s.push_str(&format!(
+            "  simulated time     {:>14}   (kernels: {}, DES events: {})\n",
+            fmt_ns(self.finish_ns),
+            self.kernels,
+            self.events
+        ));
+        s.push_str(&format!(
+            "  faults             {:>14}   (coalesced: {}, hits: {})\n",
+            self.faults, self.coalesced_faults, self.hits
+        ));
+        s.push_str(&format!(
+            "  transferred        {:>14} in / {} out  ({} useful, amp {:.2}×)\n",
+            fmt_bytes(self.bytes_in),
+            fmt_bytes(self.bytes_out),
+            fmt_bytes(self.useful_bytes),
+            self.io_amplification()
+        ));
+        s.push_str(&format!(
+            "  achieved PCIe BW   {:>14}\n",
+            fmt_gbps(self.bandwidth_in())
+        ));
+        s.push_str(&format!(
+            "  evictions          {:>14}   (refetches: {})\n",
+            self.evictions, self.refetches
+        ));
+        if self.setup_ns > 0 {
+            s.push_str(&format!(
+                "  one-time setup     {:>14}   (reported separately, per paper)\n",
+                fmt_ns(self.setup_ns)
+            ));
+        }
+        s
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Serialize reports as a JSON array.
+pub fn json_array(reports: &[RunReport]) -> String {
+    let items: Vec<String> = reports.iter().map(|r| r.to_json()).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Write reports as CSV to `path`.
+pub fn write_csv<P: AsRef<Path>>(path: P, reports: &[RunReport]) -> std::io::Result<()> {
+    let mut w = crate::util::csv::CsvWriter::new(path, &RunReport::CSV_HEADER);
+    for r in reports {
+        w.row(r.csv_row());
+    }
+    w.flush()
+}
+
+/// Write reports as a JSON array to `path`.
+pub fn write_json<P: AsRef<Path>>(path: P, reports: &[RunReport]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", json_array(reports))
+}
+
+/// Multi-line report of one simulated run (legacy text form, kept for
+/// the e2e driver and examples that hold a raw [`RunResult`]).
 pub fn run_report(app: &str, memsys: &str, r: &RunResult) -> String {
     let m = &r.metrics;
     let mut s = String::new();
@@ -55,6 +317,17 @@ mod tests {
     use super::*;
     use crate::metrics::Metrics;
 
+    fn sample() -> RunReport {
+        let cfg = SystemConfig::default();
+        let r = RunResult {
+            metrics: Metrics::new(),
+            hm: crate::mem::HostMemory::new(4096),
+            kernels: 1,
+            events: 10,
+        };
+        RunReport::from_sim("gpuvm", "va", &cfg, &r)
+    }
+
     #[test]
     fn report_contains_key_lines() {
         let r = RunResult {
@@ -67,5 +340,24 @@ mod tests {
         assert!(s.contains("simulated time"));
         assert!(s.contains("faults"));
         assert!(s.contains("app=va memsys=gpuvm"));
+    }
+
+    #[test]
+    fn csv_row_matches_header() {
+        let r = sample();
+        assert_eq!(r.csv_row().len(), RunReport::CSV_HEADER.len());
+        assert!(r.text().contains("app=va memsys=gpuvm"));
+    }
+
+    #[test]
+    fn json_is_wellformed_enough() {
+        let mut r = sample();
+        r.workload = "bfs:GK:\"x\"".into();
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\\\"x\\\""));
+        let arr = json_array(&[r.clone(), r]);
+        assert!(arr.starts_with('[') && arr.ends_with(']'));
+        assert_eq!(arr.matches("\"backend\"").count(), 2);
     }
 }

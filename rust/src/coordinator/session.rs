@@ -1,0 +1,382 @@
+//! The fluent run-construction API: a [`Session`] owns a base
+//! [`SystemConfig`] and accumulates workloads, backends, and sweep axes;
+//! [`Session::run_all`] expands the cross product and executes every
+//! point — across `std::thread` workers — returning one structured
+//! [`RunReport`] per point.
+//!
+//! ```no_run
+//! use gpuvm::config::SystemConfig;
+//! use gpuvm::coordinator::Session;
+//!
+//! let reports = Session::new(SystemConfig::default())
+//!     .workload("bfs:GK")
+//!     .backend("gpuvm")
+//!     .backend("uvm")
+//!     .sweep_nics([1, 2])
+//!     .run_all()
+//!     .unwrap();
+//! for r in &reports {
+//!     println!("{} {} nics={} → {} ns", r.backend, r.workload, r.nics, r.finish_ns);
+//! }
+//! ```
+//!
+//! Workload specs and backends are validated *before* any run starts, so
+//! a typo fails fast with the full list of valid names. Point order is
+//! deterministic: sweep points outermost (in axis declaration order),
+//! then workloads, then backends — regardless of thread count.
+
+use crate::apps::{BuildOpts, WorkloadSpec};
+use crate::config::SystemConfig;
+use crate::coordinator::backend::{self, Backend};
+use crate::coordinator::report::RunReport;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One sweep dimension; axes multiply.
+#[derive(Debug, Clone)]
+enum Axis {
+    Nics(Vec<usize>),
+    PageSize(Vec<u64>),
+    GpuMem(Vec<u64>),
+    Qps(Vec<usize>),
+    FaultBatch(Vec<u32>),
+}
+
+/// Builder for one or many runs over the simulated testbed.
+#[derive(Clone)]
+pub struct Session {
+    cfg: SystemConfig,
+    workloads: Vec<String>,
+    backends: Vec<String>,
+    axes: Vec<Axis>,
+    threads: usize,
+    graph_scale: f64,
+    graph_source: u32,
+}
+
+impl Session {
+    /// Start a session from a base configuration. Every sweep point is a
+    /// clone of `cfg` with one value per swept axis overridden.
+    pub fn new(cfg: SystemConfig) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self {
+            cfg,
+            workloads: Vec::new(),
+            backends: Vec::new(),
+            axes: Vec::new(),
+            threads,
+            graph_scale: 1.0,
+            graph_source: 0,
+        }
+    }
+
+    /// Add a workload by spec (`va@4m`, `bfs:GK:naive`, `q3`, ...).
+    pub fn workload(mut self, spec: &str) -> Self {
+        self.workloads.push(spec.to_string());
+        self
+    }
+
+    /// Add several workloads at once.
+    pub fn workloads<I, S>(mut self, specs: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.workloads.extend(specs.into_iter().map(Into::into));
+        self
+    }
+
+    /// Add a backend by registry name (`gpuvm`, `uvm-memadvise`, `gdr`, ...).
+    pub fn backend(mut self, name: &str) -> Self {
+        self.backends.push(name.to_string());
+        self
+    }
+
+    /// Add several backends at once.
+    pub fn backends<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.backends.extend(names.into_iter().map(Into::into));
+        self
+    }
+
+    /// Sweep the NIC count.
+    pub fn sweep_nics<I: IntoIterator<Item = usize>>(mut self, ns: I) -> Self {
+        self.axes.push(Axis::Nics(ns.into_iter().collect()));
+        self
+    }
+
+    /// Sweep the page size (bytes).
+    pub fn sweep_page_size<I: IntoIterator<Item = u64>>(mut self, ps: I) -> Self {
+        self.axes.push(Axis::PageSize(ps.into_iter().collect()));
+        self
+    }
+
+    /// Sweep GPU memory (bytes) — the oversubscription axis.
+    pub fn sweep_gpu_mem<I: IntoIterator<Item = u64>>(mut self, ms: I) -> Self {
+        self.axes.push(Axis::GpuMem(ms.into_iter().collect()));
+        self
+    }
+
+    /// Sweep the queue-pair count.
+    pub fn sweep_qps<I: IntoIterator<Item = usize>>(mut self, qs: I) -> Self {
+        self.axes.push(Axis::Qps(qs.into_iter().collect()));
+        self
+    }
+
+    /// Sweep the fault batch size.
+    pub fn sweep_fault_batch<I: IntoIterator<Item = u32>>(mut self, bs: I) -> Self {
+        self.axes.push(Axis::FaultBatch(bs.into_iter().collect()));
+        self
+    }
+
+    /// Dataset scale for graph workloads (1.0 = default bench size).
+    pub fn graph_scale(mut self, scale: f64) -> Self {
+        self.graph_scale = scale;
+        self
+    }
+
+    /// Source vertex for graph workloads.
+    pub fn graph_source(mut self, src: u32) -> Self {
+        self.graph_source = src;
+        self
+    }
+
+    /// Worker thread cap (defaults to the machine's parallelism).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Number of runs `run_all` will execute.
+    pub fn num_points(&self) -> usize {
+        let sweep: usize = self
+            .axes
+            .iter()
+            .map(|a| match a {
+                Axis::Nics(v) => v.len(),
+                Axis::PageSize(v) => v.len(),
+                Axis::GpuMem(v) => v.len(),
+                Axis::Qps(v) => v.len(),
+                Axis::FaultBatch(v) => v.len(),
+            })
+            .product();
+        sweep * self.workloads.len() * self.backends.len().max(1)
+    }
+
+    /// Expand the sweep axes into one config per point.
+    fn sweep_cfgs(&self) -> Vec<SystemConfig> {
+        let mut cfgs = vec![self.cfg.clone()];
+        for axis in &self.axes {
+            let mut next = Vec::new();
+            for base in &cfgs {
+                match axis {
+                    Axis::Nics(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.rnic.num_nics = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::PageSize(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.gpuvm.page_size = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::GpuMem(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.gpu.mem_bytes = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::Qps(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.gpuvm.num_qps = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::FaultBatch(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.gpuvm.fault_batch = v;
+                            next.push(c);
+                        }
+                    }
+                }
+            }
+            cfgs = next;
+        }
+        cfgs
+    }
+
+    /// Validate everything, expand the cross product, execute every
+    /// point (multi-threaded), and return the reports in deterministic
+    /// order: sweep point × workload × backend.
+    pub fn run_all(self) -> Result<Vec<RunReport>> {
+        anyhow::ensure!(
+            !self.workloads.is_empty(),
+            "Session has no workloads; call .workload(\"va\") first"
+        );
+        let backend_names: Vec<String> = if self.backends.is_empty() {
+            vec!["gpuvm".to_string()]
+        } else {
+            self.backends.clone()
+        };
+        // Validate up front: a typo must fail before hours of sweeping.
+        let backends: Vec<&'static dyn Backend> = backend_names
+            .iter()
+            .map(|n| backend::lookup(n))
+            .collect::<Result<_>>()?;
+        let specs: Vec<WorkloadSpec> = self
+            .workloads
+            .iter()
+            .map(|w| WorkloadSpec::parse(w))
+            .collect::<Result<_>>()?;
+        self.cfg.validate().context("base configuration invalid")?;
+
+        struct Point {
+            cfg: SystemConfig,
+            backend: &'static dyn Backend,
+            spec: WorkloadSpec,
+            opts: BuildOpts,
+        }
+
+        let mut points: Vec<Point> = Vec::new();
+        for cfg in self.sweep_cfgs() {
+            cfg.validate().with_context(|| {
+                format!(
+                    "swept configuration invalid (nics={}, page={}, gpu-mem={}, qps={})",
+                    cfg.rnic.num_nics, cfg.gpuvm.page_size, cfg.gpu.mem_bytes, cfg.gpuvm.num_qps
+                )
+            })?;
+            for spec in &specs {
+                for b in &backends {
+                    let mut opts = BuildOpts::for_cfg(&cfg);
+                    opts.graph_scale = self.graph_scale;
+                    opts.graph_source = self.graph_source;
+                    points.push(Point {
+                        cfg: cfg.clone(),
+                        backend: *b,
+                        spec: spec.clone(),
+                        opts,
+                    });
+                }
+            }
+        }
+
+        let workers = self.threads.clamp(1, points.len().max(1));
+        if workers == 1 {
+            return points
+                .iter()
+                .map(|p| p.backend.run(&p.cfg, &p.spec, &p.opts))
+                .collect();
+        }
+
+        // Work-stealing over an atomic cursor; each worker records
+        // (index, result) pairs so the merged output preserves point order.
+        let points_ref = &points;
+        let cursor = AtomicUsize::new(0);
+        let cursor_ref = &cursor;
+        let mut slots: Vec<Option<Result<RunReport>>> =
+            (0..points.len()).map(|_| None).collect();
+        let collected: Vec<Vec<(usize, Result<RunReport>)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                            let Some(p) = points_ref.get(i) else { break };
+                            out.push((i, p.backend.run(&p.cfg, &p.spec, &p.opts)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("sweep worker panicked"))
+                .collect()
+        });
+        for (i, r) in collected.into_iter().flatten() {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every sweep point executed"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpu.sms = 8;
+        c.gpu.warps_per_sm = 4;
+        c.gpu.mem_bytes = 8 << 20;
+        c.gpuvm.page_size = 4096;
+        c.gpuvm.num_qps = 32;
+        c
+    }
+
+    #[test]
+    fn bad_names_fail_before_running() {
+        let err = Session::new(small_cfg())
+            .workload("va@64k")
+            .backend("warp-drive")
+            .run_all()
+            .unwrap_err();
+        assert!(err.to_string().contains("warp-drive"), "{err:#}");
+        let err = Session::new(small_cfg())
+            .workload("va@banana")
+            .backend("gpuvm")
+            .run_all()
+            .unwrap_err();
+        assert!(err.to_string().contains("banana"), "{err:#}");
+    }
+
+    #[test]
+    fn cross_product_order_is_deterministic() {
+        let reports = Session::new(small_cfg())
+            .workload("va@64k")
+            .backends(["ideal", "gpuvm"])
+            .sweep_nics([1, 2])
+            .threads(4)
+            .run_all()
+            .unwrap();
+        assert_eq!(reports.len(), 4);
+        let key: Vec<(usize, &str)> = reports
+            .iter()
+            .map(|r| (r.nics, r.backend.as_str()))
+            .collect();
+        assert_eq!(
+            key,
+            vec![(1, "ideal"), (1, "gpuvm"), (2, "ideal"), (2, "gpuvm")]
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let build = || {
+            Session::new(small_cfg())
+                .workload("va@64k")
+                .backends(["ideal", "gpuvm", "uvm"])
+                .sweep_nics([1, 2])
+        };
+        let serial = build().threads(1).run_all().unwrap();
+        let parallel = build().threads(8).run_all().unwrap();
+        let fin = |rs: &[RunReport]| rs.iter().map(|r| r.finish_ns).collect::<Vec<_>>();
+        assert_eq!(fin(&serial), fin(&parallel), "DES runs are deterministic");
+    }
+}

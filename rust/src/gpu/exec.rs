@@ -13,7 +13,7 @@
 use crate::config::SystemConfig;
 use crate::gpu::kernel::{Access, WarpOp, Workload};
 use crate::mem::HostMemory;
-use crate::memsys::{AccessResult, Ev, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::memsys::{AccessResult, Ev, MemCtx, MemorySystem, PageAccess, SlotId, Wakes};
 use crate::metrics::Metrics;
 use crate::sim::{Engine, SimTime};
 
@@ -87,7 +87,19 @@ pub fn run(
             // holding a partial batch — drain it.
             if active > 0 {
                 let now = eng.now();
-                if mem.drain(now, &mut hm, &mut eng, &mut m) {
+                wakes.clear();
+                let progressed = {
+                    let mut ctx = MemCtx {
+                        now,
+                        hm: &mut hm,
+                        eng: &mut eng,
+                        m: &mut m,
+                        wakes: &mut wakes,
+                    };
+                    mem.drain(&mut ctx)
+                };
+                schedule_wakes(&mut eng, &mut slots, &mut m, &wakes, now);
+                if progressed {
                     continue;
                 }
                 anyhow::bail!(
@@ -103,7 +115,16 @@ pub fn run(
         match ev {
             Ev::Mem(me) => {
                 wakes.clear();
-                mem.on_event(now, me, &mut hm, &mut eng, &mut m, &mut wakes);
+                {
+                    let mut ctx = MemCtx {
+                        now,
+                        hm: &mut hm,
+                        eng: &mut eng,
+                        m: &mut m,
+                        wakes: &mut wakes,
+                    };
+                    mem.on_event(&mut ctx, me);
+                }
                 schedule_wakes(&mut eng, &mut slots, &mut m, &wakes, now);
             }
             Ev::Resume { slot } => {
@@ -227,12 +248,18 @@ fn step_slot(
     // a page is needed until the warp moves past the op that used it).
     if slots[si].holding {
         wakes.clear();
-        mem.release(now, slot, eng, m, wakes);
+        {
+            let mut ctx = MemCtx {
+                now,
+                hm: &mut *hm,
+                eng: &mut *eng,
+                m: &mut *m,
+                wakes: &mut *wakes,
+            };
+            mem.release(&mut ctx, slot);
+        }
         slots[si].holding = false;
-        // Re-borrow dance: schedule_wakes mutates slots/m.
-        let w = std::mem::take(wakes);
-        schedule_wakes(eng, slots, m, &w, now);
-        *wakes = w;
+        schedule_wakes(eng, slots, m, wakes, now);
         wakes.clear();
     }
 
@@ -249,7 +276,19 @@ fn step_slot(
                 eng.schedule(now + 1, Ev::Resume { slot });
                 return;
             }
-            match mem.access(now, slot, gpu, scratch, hm, eng, m) {
+            wakes.clear();
+            let result = {
+                let mut ctx = MemCtx {
+                    now,
+                    hm: &mut *hm,
+                    eng: &mut *eng,
+                    m: &mut *m,
+                    wakes: &mut *wakes,
+                };
+                mem.access(&mut ctx, slot, gpu, scratch.as_slice())
+            };
+            schedule_wakes(eng, slots, m, wakes, now);
+            match result {
                 AccessResult::Ready { resume_at } => {
                     slots[si].holding = true;
                     eng.schedule(resume_at, Ev::Resume { slot });

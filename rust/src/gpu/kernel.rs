@@ -136,6 +136,36 @@ pub trait Workload {
             gpuvm_extra_registers: 24,
         }
     }
+
+    /// Regions eligible for `cudaMemAdviseSetReadMostly` — the app's
+    /// read-only inputs (the paper's UVM "wm" configuration). Only valid
+    /// after `setup`. Default: none.
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        Vec::new()
+    }
+}
+
+/// Delegation so wrappers (e.g. [`crate::apps::Advised`]) can hold
+/// either an owned workload or a caller's `&mut dyn Workload`.
+impl<W: Workload + ?Sized> Workload for &mut W {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn setup(&mut self, hm: &mut crate::mem::HostMemory) {
+        (**self).setup(hm)
+    }
+    fn next_kernel(&mut self) -> Option<Launch> {
+        (**self).next_kernel()
+    }
+    fn next_op(&mut self, warp: usize) -> WarpOp {
+        (**self).next_op(warp)
+    }
+    fn resources(&self) -> KernelResources {
+        (**self).resources()
+    }
+    fn read_mostly_regions(&self) -> Vec<RegionId> {
+        (**self).read_mostly_regions()
+    }
 }
 
 #[cfg(test)]

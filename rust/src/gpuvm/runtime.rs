@@ -15,13 +15,13 @@
 
 use crate::config::{EvictionPolicy, SystemConfig};
 use crate::mem::{FrameId, FramePool, FrameState, HostMemory, PageId};
-use crate::memsys::{AccessResult, Ev, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
 use crate::metrics::Metrics;
 use crate::pcie::{Dir, Topology};
 use crate::rnic::{NicBank, WorkRequest};
 use crate::sim::{us, Engine, SimTime};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 use crate::util::rng::Rng;
-use rustc_hash::{FxHashMap, FxHashSet};
 use std::collections::VecDeque;
 
 /// Key for a fault: which GPU wants which host page.
@@ -507,21 +507,19 @@ impl MemorySystem for GpuVmSystem {
 
     fn access(
         &mut self,
-        now: SimTime,
+        ctx: &mut MemCtx<'_>,
         slot: SlotId,
         gpu: usize,
         pages: &[PageAccess],
-        hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
     ) -> AccessResult {
         debug_assert!(gpu < self.pools.len());
+        let now = ctx.now;
         let t = now + self.cfg.gpuvm.page_table_lookup_ns;
         let mut misses = 0u32;
         for pa in pages {
             match self.pools[gpu].lookup(pa.page) {
                 Some((frame, true)) => {
-                    m.hits += 1;
+                    ctx.m.hits += 1;
                     self.pools[gpu].addref(frame);
                     if pa.write {
                         self.pools[gpu].mark_dirty(frame);
@@ -530,7 +528,7 @@ impl MemorySystem for GpuVmSystem {
                 }
                 Some((_frame, false)) => {
                     // Fault in flight (another leader owns it): coalesce.
-                    m.coalesced_faults += 1;
+                    ctx.m.coalesced_faults += 1;
                     let fl = self
                         .inflight
                         .get_mut(&(gpu, pa.page))
@@ -542,16 +540,16 @@ impl MemorySystem for GpuVmSystem {
                 None => {
                     if let Some(fl) = self.inflight.get_mut(&(gpu, pa.page)) {
                         // Queued behind a busy frame; join it.
-                        m.coalesced_faults += 1;
+                        ctx.m.coalesced_faults += 1;
                         fl.waiters.push(slot);
                         fl.write |= pa.write;
                         misses += 1;
                         continue;
                     }
                     // New fault: this warp's leader takes it (Fig 4).
-                    m.faults += 1;
+                    ctx.m.faults += 1;
                     if self.evicted_once.contains(&(gpu, pa.page)) {
-                        m.refetches += 1;
+                        ctx.m.refetches += 1;
                     }
                     self.inflight.insert(
                         (gpu, pa.page),
@@ -563,7 +561,7 @@ impl MemorySystem for GpuVmSystem {
                         },
                     );
                     let t_leader = t + self.cfg.gpuvm.leader_election_ns;
-                    self.acquire_frame(t_leader, gpu, pa.page, hm, eng, m);
+                    self.acquire_frame(t_leader, gpu, pa.page, &mut *ctx.hm, &mut *ctx.eng, &mut *ctx.m);
                     misses += 1;
                 }
             }
@@ -578,14 +576,8 @@ impl MemorySystem for GpuVmSystem {
         }
     }
 
-    fn release(
-        &mut self,
-        now: SimTime,
-        slot: SlotId,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-        _wakes: &mut Wakes,
-    ) {
+    fn release(&mut self, ctx: &mut MemCtx<'_>, slot: SlotId) {
+        let now = ctx.now;
         let Some(held) = self.holds.remove(&slot) else {
             return;
         };
@@ -603,9 +595,9 @@ impl MemorySystem for GpuVmSystem {
         }
         for (gpu, frame) in freed {
             if !self.frame_waiters[gpu][frame.0 as usize].is_empty() {
-                // Defer to a zero-delay event so `hm` is in scope when the
-                // eviction (and its functional write-back) runs.
-                eng.schedule(
+                // Defer to a zero-delay event so the eviction (and its
+                // functional write-back) runs with a fresh context.
+                ctx.eng.schedule(
                     now,
                     Ev::Mem(MemEvent::FrameFree {
                         gpu,
@@ -614,24 +606,16 @@ impl MemorySystem for GpuVmSystem {
                 );
             }
         }
-        let _ = m;
     }
 
-    fn on_event(
-        &mut self,
-        now: SimTime,
-        ev: MemEvent,
-        hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-        wakes: &mut Wakes,
-    ) {
+    fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent) {
+        let now = ctx.now;
         match ev {
             MemEvent::CqCompletion { queue, wr_id } => {
                 debug_assert!(self.queue_busy[queue] > 0);
                 self.queue_busy[queue] -= 1;
                 if let Some(key) = self.wr_fault.remove(&wr_id) {
-                    self.complete_fetch(now, key, hm, m, wakes);
+                    self.complete_fetch(now, key, &mut *ctx.hm, &mut *ctx.m, &mut *ctx.wakes);
                 } else if let Some(fw) = self.wr_writeback.remove(&wr_id) {
                     // Synchronous write-back done: launch the fetch.
                     self.submit(
@@ -643,8 +627,8 @@ impl MemorySystem for GpuVmSystem {
                             purpose: WrPurpose::Fetch,
                             follow: None,
                         },
-                        eng,
-                        m,
+                        &mut *ctx.eng,
+                        &mut *ctx.m,
                     );
                 }
                 // Async write-backs complete silently.
@@ -652,32 +636,44 @@ impl MemorySystem for GpuVmSystem {
                 while !self.backlog.is_empty() {
                     let Some(q) = self.find_free_queue() else { break };
                     let pw = self.backlog.pop_front().unwrap();
-                    self.post_now(now, q, pw, eng, m);
+                    self.post_now(now, q, pw, &mut *ctx.eng, &mut *ctx.m);
                 }
             }
             MemEvent::FrameFree { gpu, frame } => {
-                self.service_frame_waiters(now, gpu, FrameId(frame), hm, eng, m);
+                self.service_frame_waiters(
+                    now,
+                    gpu,
+                    FrameId(frame),
+                    &mut *ctx.hm,
+                    &mut *ctx.eng,
+                    &mut *ctx.m,
+                );
             }
             MemEvent::BatchFlush { queue, epoch } => {
                 if self.batches[queue].epoch == epoch && self.batches[queue].pending > 0 {
-                    self.ring(now + self.cfg.gpuvm.doorbell_ns, queue, eng, m);
+                    self.ring(
+                        now + self.cfg.gpuvm.doorbell_ns,
+                        queue,
+                        &mut *ctx.eng,
+                        &mut *ctx.m,
+                    );
                 }
             }
             _ => unreachable!("UVM event routed to GPUVM"),
         }
     }
 
-    fn drain(
-        &mut self,
-        now: SimTime,
-        _hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-    ) -> bool {
+    fn drain(&mut self, ctx: &mut MemCtx<'_>) -> bool {
+        let now = ctx.now;
         let mut any = false;
         for q in 0..self.batches.len() {
             if self.batches[q].pending > 0 {
-                self.ring(now + self.cfg.gpuvm.doorbell_ns, q, eng, m);
+                self.ring(
+                    now + self.cfg.gpuvm.doorbell_ns,
+                    q,
+                    &mut *ctx.eng,
+                    &mut *ctx.m,
+                );
                 any = true;
             }
         }

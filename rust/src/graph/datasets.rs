@@ -35,6 +35,17 @@ impl DatasetId {
         [DatasetId::GU, DatasetId::GK, DatasetId::FS, DatasetId::MO]
     }
 
+    /// Parse a Table 2 abbreviation (used by workload specs like `bfs:GK`).
+    pub fn parse(s: &str) -> anyhow::Result<DatasetId> {
+        Ok(match s {
+            "GU" => DatasetId::GU,
+            "GK" => DatasetId::GK,
+            "FS" => DatasetId::FS,
+            "MO" => DatasetId::MO,
+            _ => anyhow::bail!("unknown dataset '{s}' (GU|GK|FS|MO)"),
+        })
+    }
+
     /// Table 3 runs only GK/GU/FS (Subway's 2^32 vertex-id limit).
     pub fn subway_supported(&self) -> bool {
         !matches!(self, DatasetId::MO)

@@ -14,11 +14,17 @@
 //! - **L2/L1 (python/, build-time only)** — the per-page compute payloads
 //!   as JAX graphs over Pallas kernels, AOT-lowered to HLO text.
 //! - **runtime/** — loads those artifacts via the PJRT C API (`xla`
-//!   crate) and executes them from the Rust hot path; Python never runs
-//!   at request time.
+//!   crate, behind the `xla` feature; offline builds get a stub) and
+//!   executes them from the Rust hot path; Python never runs at request
+//!   time.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! measured reproductions of every figure and table.
+//! Entry points: the [`coordinator::Session`] builder constructs single
+//! runs and multi-threaded sweeps over any registered
+//! [`coordinator::Backend`] (`gpuvm`, `uvm`, `uvm-memadvise`, `ideal`,
+//! `gdr`, `subway`, `rapids`); the `gpuvm` binary wraps it as
+//! `run`/`compare`/`sweep`. See the top-level `README.md` for a
+//! quickstart and the experiment index (`rust/benches/` reproduces every
+//! figure and table).
 
 pub mod apps;
 pub mod baselines;

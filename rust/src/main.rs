@@ -1,18 +1,23 @@
 //! `gpuvm` — the leader binary: run workloads on the simulated testbed,
-//! compare memory systems, and drive the end-to-end PJRT path.
+//! compare backends, sweep configurations, and drive the end-to-end
+//! PJRT path.
 //!
 //! ```text
 //! gpuvm run --app va --mem gpuvm --nics 2 --page-size 8k --gpu-mem 64m
-//! gpuvm compare --app bfs:GK              # gpuvm vs uvm side by side
-//! gpuvm e2e                               # full three-layer driver
-//! gpuvm list                              # apps + artifacts
-//! gpuvm info                              # resolved system config
+//! gpuvm run --app bfs:GK --mem subway          # bulk baselines too
+//! gpuvm compare --app bfs:GK                   # gpuvm vs uvm side by side
+//! gpuvm sweep --app va --app mvt@4096 --mem gpuvm,uvm --nics 1,2 \
+//!             --csv sweep.csv --json sweep.json
+//! gpuvm e2e                                    # full three-layer driver
+//! gpuvm list                                   # apps, backends, artifacts
+//! gpuvm info                                   # resolved system config
 //! ```
 
 use anyhow::Result;
-use gpuvm::apps;
+use gpuvm::apps::{BuildOpts, WorkloadSpec};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{self, report, MemSysKind};
+use gpuvm::coordinator::{backend, report, Session};
+use gpuvm::util::bench::{fmt_bytes, fmt_ns};
 use gpuvm::util::cli::Args;
 
 fn main() {
@@ -31,6 +36,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("run") => cmd_run(args),
         Some("compare") => cmd_compare(args),
+        Some("sweep") => cmd_sweep(args),
         Some("e2e") => cmd_e2e(args),
         Some("list") => cmd_list(),
         Some("info") => cmd_info(args),
@@ -44,15 +50,20 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: gpuvm <run|compare|e2e|list|info> [flags]
-  run      --app <name[:DS]> [--mem gpuvm|uvm|ideal] [--nics N] [--qps N]
+const USAGE: &str = "usage: gpuvm <run|compare|sweep|e2e|list|info> [flags]
+  run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--eviction fifo|fifo-strict|random] [--fault-batch N]
+           [--scale F] [--src V]
   compare  same flags; runs gpuvm vs uvm and prints the speedup
+  sweep    --app S [--app S2 ...] [--mem B1,B2,..] [--nics 1,2]
+           [--page-sizes 4k,8k] [--gpu-mems 16m,32m] [--qp-counts 16,48,84]
+           [--threads N] [--csv FILE] [--json FILE]
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
-  list     apps and AOT artifacts
+  list     apps, backends, and AOT artifacts
   info     resolved system configuration
-apps: va mvt atax bigc bfs cc sssp q1..q5 (graph apps accept :GU/:GK/:FS/:MO)";
+apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp (:GU/:GK/:FS/:MO[:naive]) q1..q5[@ROWS]
+backends: gpuvm uvm uvm-memadvise ideal gdr subway rapids";
 
 fn config_from(args: &Args) -> Result<SystemConfig> {
     let mut cfg = SystemConfig::default();
@@ -61,28 +72,138 @@ fn config_from(args: &Args) -> Result<SystemConfig> {
     Ok(cfg)
 }
 
+fn opts_from(args: &Args, cfg: &SystemConfig) -> Result<BuildOpts> {
+    let mut o = BuildOpts::for_cfg(cfg);
+    o.graph_scale = args.get_f64("scale", 1.0)?;
+    o.graph_source = args.get_u64("src", 0)? as u32;
+    Ok(o)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
-    let app = args.get_or("app", "va");
-    let kind = MemSysKind::parse(args.get_or("mem", "gpuvm"))?;
-    let mut w = apps::by_name(app, cfg.gpuvm.page_size, cfg.seed)?;
-    let r = coordinator::simulate(&cfg, w.as_mut(), kind)?;
-    print!("{}", report::run_report(app, kind.name(), &r));
+    let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
+    let b = backend::lookup(args.get_or("mem", "gpuvm"))?;
+    let rep = b.run(&cfg, &spec, &opts_from(args, &cfg)?)?;
+    print!("{}", rep.text());
     Ok(())
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
-    let app = args.get_or("app", "va");
-    let (g, u) = coordinator::compare(&cfg, || {
-        apps::by_name(app, cfg.gpuvm.page_size, cfg.seed).expect("app resolved above")
-    })?;
-    print!("{}", report::run_report(app, "gpuvm", &g));
-    print!("{}", report::run_report(app, "uvm", &u));
+    let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
+    let opts = opts_from(args, &cfg)?;
+    let g = backend::lookup("gpuvm")?.run(&cfg, &spec, &opts)?;
+    let u = backend::lookup("uvm")?.run(&cfg, &spec, &opts)?;
+    print!("{}", g.text());
+    print!("{}", u.text());
     println!(
         "speedup (uvm/gpuvm): {:.2}×",
-        u.metrics.finish_ns as f64 / g.metrics.finish_ns.max(1) as f64
+        u.finish_ns as f64 / g.finish_ns.max(1) as f64
     );
+    Ok(())
+}
+
+/// Parse a comma-separated `--key a,b,c` flag (also accepts repeats).
+fn list_flag(args: &Args, key: &str) -> Vec<String> {
+    args.get_all(key)
+        .iter()
+        .flat_map(|v| v.split(','))
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn parse_sizes(args: &Args, key: &str) -> Result<Vec<u64>> {
+    list_flag(args, key)
+        .iter()
+        .map(|s| {
+            gpuvm::util::cli::parse_u64_with_suffix(s)
+                .ok_or_else(|| anyhow::anyhow!("--{key}: cannot parse '{s}'"))
+        })
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let mut session = Session::new(cfg)
+        .graph_scale(args.get_f64("scale", 1.0)?)
+        .graph_source(args.get_u64("src", 0)? as u32);
+
+    let apps_list = list_flag(args, "app");
+    anyhow::ensure!(
+        !apps_list.is_empty(),
+        "sweep needs at least one --app (e.g. --app va --app bfs:GK)"
+    );
+    session = session.workloads(apps_list);
+
+    let mems = list_flag(args, "mem");
+    session = if mems.is_empty() {
+        session.backends(["gpuvm", "uvm"])
+    } else {
+        session.backends(mems)
+    };
+
+    let nics = list_flag(args, "nics");
+    if !nics.is_empty() {
+        let ns: Vec<usize> = nics
+            .iter()
+            .map(|s| s.parse().map_err(|_| anyhow::anyhow!("--nics: bad '{s}'")))
+            .collect::<Result<_>>()?;
+        session = session.sweep_nics(ns);
+    }
+    let ps = parse_sizes(args, "page-sizes")?;
+    if !ps.is_empty() {
+        session = session.sweep_page_size(ps);
+    }
+    let gm = parse_sizes(args, "gpu-mems")?;
+    if !gm.is_empty() {
+        session = session.sweep_gpu_mem(gm);
+    }
+    let qps = list_flag(args, "qp-counts");
+    if !qps.is_empty() {
+        let qs: Vec<usize> = qps
+            .iter()
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| anyhow::anyhow!("--qp-counts: bad '{s}'"))
+            })
+            .collect::<Result<_>>()?;
+        session = session.sweep_qps(qs);
+    }
+    if args.has("threads") {
+        session = session.threads(args.get_usize("threads", 1)?);
+    }
+
+    let n = session.num_points();
+    eprintln!("sweeping {n} runs...");
+    let reports = session.run_all()?;
+
+    println!(
+        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>12} {:>9} {:>10} {:>6}",
+        "backend", "workload", "nics", "page", "gpu-mem", "time", "faults", "moved", "amp"
+    );
+    for r in &reports {
+        println!(
+            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>12} {:>9} {:>10} {:>5.2}×",
+            r.backend,
+            r.workload,
+            r.nics,
+            fmt_bytes(r.page_size),
+            fmt_bytes(r.gpu_mem_bytes),
+            fmt_ns(r.finish_ns),
+            r.faults,
+            fmt_bytes(r.bytes_in),
+            r.io_amplification(),
+        );
+    }
+    if let Some(path) = args.get("csv") {
+        report::write_csv(path, &reports)?;
+        eprintln!("csv: {path}");
+    }
+    if let Some(path) = args.get("json") {
+        report::write_json(path, &reports)?;
+        eprintln!("json: {path}");
+    }
     Ok(())
 }
 
@@ -161,8 +282,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("apps: va mvt atax bigc bfs cc sssp q1 q2 q3 q4 q5");
-    println!("datasets (graph apps, ':DS' suffix): GU GK FS MO");
+    println!("apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp q1..q5[@ROWS]");
+    println!("datasets (graph apps, ':DS' suffix): GU GK FS MO (optional :naive|:balanced)");
+    println!("backends:");
+    for b in backend::registry() {
+        println!("  {:<14} {}", b.name(), b.describe());
+    }
     match gpuvm::runtime::Runtime::load_default() {
         Ok(rt) => println!("artifacts ({}): {:?}", rt.dir().display(), rt.names()),
         Err(_) => println!("artifacts: none built (run `make artifacts`)"),

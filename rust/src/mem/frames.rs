@@ -7,8 +7,8 @@
 //! data integrity under paging and eviction.
 
 use super::page::{FrameId, PageId};
+use crate::util::fxhash::FxHashMap;
 use anyhow::{bail, ensure, Result};
-use rustc_hash::FxHashMap;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameState {

@@ -4,10 +4,9 @@
 //! front through `pcie::Topology` and then compute at full speed, and by
 //! unit tests that want the executor's dynamics without paging.
 
-use super::{AccessResult, Ev, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
+use super::{AccessResult, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId};
 use crate::mem::HostMemory;
 use crate::metrics::Metrics;
-use crate::sim::{Engine, SimTime};
 
 pub struct IdealSystem {
     hit_ns: u64,
@@ -28,48 +27,22 @@ impl MemorySystem for IdealSystem {
 
     fn access(
         &mut self,
-        now: SimTime,
+        ctx: &mut MemCtx<'_>,
         _slot: SlotId,
         _gpu: usize,
         pages: &[PageAccess],
-        _hm: &mut HostMemory,
-        _eng: &mut Engine<Ev>,
-        m: &mut Metrics,
     ) -> AccessResult {
-        m.hits += pages.len() as u64;
+        ctx.m.hits += pages.len() as u64;
         AccessResult::Ready {
-            resume_at: now + self.hit_ns,
+            resume_at: ctx.now + self.hit_ns,
         }
     }
 
-    fn release(
-        &mut self,
-        _now: SimTime,
-        _slot: SlotId,
-        _eng: &mut Engine<Ev>,
-        _m: &mut Metrics,
-        _wakes: &mut Wakes,
-    ) {
-    }
+    fn release(&mut self, _ctx: &mut MemCtx<'_>, _slot: SlotId) {}
 
-    fn on_event(
-        &mut self,
-        _now: SimTime,
-        _ev: MemEvent,
-        _hm: &mut HostMemory,
-        _eng: &mut Engine<Ev>,
-        _m: &mut Metrics,
-        _wakes: &mut Wakes,
-    ) {
-    }
+    fn on_event(&mut self, _ctx: &mut MemCtx<'_>, _ev: MemEvent) {}
 
-    fn drain(
-        &mut self,
-        _now: SimTime,
-        _hm: &mut HostMemory,
-        _eng: &mut Engine<Ev>,
-        _m: &mut Metrics,
-    ) -> bool {
+    fn drain(&mut self, _ctx: &mut MemCtx<'_>) -> bool {
         false
     }
 

@@ -57,6 +57,20 @@ pub enum AccessResult {
 /// Wake-ups produced by memory-system event handling.
 pub type Wakes = Vec<(SlotId, SimTime)>;
 
+/// Everything a memory system needs from the executor at a call site:
+/// the current simulated time plus mutable access to host memory, the
+/// event engine, the run metrics, and the slot wake list. The executor
+/// assembles one per trait call; implementations push wake-ups into
+/// `wakes` and schedule follow-up events on `eng`.
+pub struct MemCtx<'a> {
+    /// Time of the event/call being handled.
+    pub now: SimTime,
+    pub hm: &'a mut HostMemory,
+    pub eng: &'a mut Engine<Ev>,
+    pub m: &'a mut Metrics,
+    pub wakes: &'a mut Wakes,
+}
+
 /// A pluggable paged memory system (GPUVM, UVM, ideal).
 ///
 /// Contract:
@@ -77,40 +91,21 @@ pub trait MemorySystem {
     /// Warp `slot` on GPU `gpu` touches `pages`.
     fn access(
         &mut self,
-        now: SimTime,
+        ctx: &mut MemCtx<'_>,
         slot: SlotId,
         gpu: usize,
         pages: &[PageAccess],
-        hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
     ) -> AccessResult;
 
     /// Release all pages `slot` currently references. May wake warps
     /// stalled on eviction.
-    fn release(
-        &mut self,
-        now: SimTime,
-        slot: SlotId,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-        wakes: &mut Wakes,
-    );
+    fn release(&mut self, ctx: &mut MemCtx<'_>, slot: SlotId);
 
-    /// Handle an internal event; push any slot wake-ups.
-    fn on_event(
-        &mut self,
-        now: SimTime,
-        ev: MemEvent,
-        hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-        wakes: &mut Wakes,
-    );
+    /// Handle an internal event; push any slot wake-ups into `ctx.wakes`.
+    fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent);
 
     /// Flush internal batching when the pipeline would otherwise stall.
-    fn drain(&mut self, now: SimTime, hm: &mut HostMemory, eng: &mut Engine<Ev>, m: &mut Metrics)
-        -> bool;
+    fn drain(&mut self, ctx: &mut MemCtx<'_>) -> bool;
 
     /// Export final counters (link utilization etc.) into `m`.
     fn finalize(&mut self, m: &mut Metrics);

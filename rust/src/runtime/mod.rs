@@ -1,5 +1,19 @@
 //! PJRT artifact loading + execution (the `xla` crate wrapper).
+//!
+//! Built two ways:
+//! - `--features xla`: the real PJRT client in `pjrt.rs`;
+//! - default (offline): the stub in `stub.rs` with the same API whose
+//!   loaders return an error — callers (`gpuvm e2e`, the PJRT tests)
+//!   already handle that path gracefully.
 
+pub mod tensor;
+
+#[cfg(feature = "xla")]
 pub mod pjrt;
 
-pub use pjrt::{Artifact, Runtime, Tensor, TensorSpec};
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
+pub mod pjrt;
+
+pub use pjrt::{Artifact, Runtime};
+pub use tensor::{Tensor, TensorSpec};

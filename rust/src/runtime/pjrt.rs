@@ -1,105 +1,33 @@
 //! PJRT runtime: load the AOT artifacts (HLO text emitted by
 //! `python/compile/aot.py`) and execute them from the Rust hot path.
+//! Only compiled with `--features xla`; offline builds get the stub in
+//! `stub.rs` with the same API surface.
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md). Graphs are lowered
 //! with `return_tuple=True`, so outputs are unwrapped with `to_tuple()`.
 
+use super::tensor::{Tensor, TensorSpec};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// A host-side tensor crossing the PJRT boundary.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Tensor {
-    F32(Vec<f32>, Vec<usize>),
-    I32(Vec<i32>, Vec<usize>),
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(v, _) => xla::Literal::vec1(v),
+        Tensor::I32(v, _) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
 }
 
-impl Tensor {
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.shape().iter().product()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            Tensor::F32(v, _) => Ok(v),
-            _ => bail!("tensor is not f32"),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            Tensor::I32(v, _) => Ok(v),
-            _ => bail!("tensor is not i32"),
-        }
-    }
-
-    fn dtype_name(&self) -> &'static str {
-        match self {
-            Tensor::F32(..) => "float32",
-            Tensor::I32(..) => "int32",
-        }
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32(v, _) => xla::Literal::vec1(v),
-            Tensor::I32(v, _) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
-        Ok(match spec.dtype.as_str() {
-            "float32" => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
-            "int32" => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
-            other => bail!("unsupported artifact dtype {other}"),
-        })
-    }
-}
-
-/// Parsed `dtype[d0,d1,...]` from the manifest.
-#[derive(Debug, Clone, PartialEq)]
-pub struct TensorSpec {
-    pub dtype: String,
-    pub shape: Vec<usize>,
-}
-
-impl TensorSpec {
-    fn parse(s: &str) -> Result<Self> {
-        let (dtype, rest) = s
-            .split_once('[')
-            .with_context(|| format!("bad tensor spec '{s}'"))?;
-        let dims = rest.strip_suffix(']').context("missing ]")?;
-        let shape = if dims.is_empty() {
-            vec![]
-        } else {
-            dims.split(',')
-                .map(|d| d.trim().parse::<usize>().map_err(Into::into))
-                .collect::<Result<Vec<_>>>()?
-        };
-        Ok(Self {
-            dtype: dtype.to_string(),
-            shape,
-        })
-    }
-
-    pub fn elems(&self) -> usize {
-        self.shape.iter().product()
-    }
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    Ok(match spec.dtype.as_str() {
+        "float32" => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+        "int32" => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        other => bail!("unsupported artifact dtype {other}"),
+    })
 }
 
 /// One compiled executable plus its manifest signature.
@@ -224,7 +152,7 @@ impl Runtime {
         }
         let literals: Vec<xla::Literal> = inputs
             .iter()
-            .map(|t| t.to_literal())
+            .map(to_literal)
             .collect::<Result<Vec<_>>>()?;
         let result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
         let outs = result.to_tuple()?;
@@ -236,36 +164,10 @@ impl Runtime {
         );
         outs.iter()
             .zip(&art.outputs)
-            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .map(|(lit, spec)| from_literal(lit, spec))
             .collect()
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tensor_spec_parses() {
-        let t = TensorSpec::parse("float32[64,1024]").unwrap();
-        assert_eq!(t.dtype, "float32");
-        assert_eq!(t.shape, vec![64, 1024]);
-        assert_eq!(t.elems(), 65536);
-        let s = TensorSpec::parse("int32[64]").unwrap();
-        assert_eq!(s.shape, vec![64]);
-        assert!(TensorSpec::parse("garbage").is_err());
-    }
-
-    #[test]
-    fn tensor_accessors() {
-        let t = Tensor::F32(vec![1.0, 2.0], vec![2]);
-        assert_eq!(t.shape(), &[2]);
-        assert_eq!(t.len(), 2);
-        assert!(t.as_f32().is_ok());
-        assert!(t.as_i32().is_err());
-        assert_eq!(t.dtype_name(), "float32");
-    }
-
-    // PJRT execution tests live in rust/tests/runtime_pjrt.rs (they need
-    // `make artifacts` to have run).
-}
+// PJRT execution tests live in rust/tests/runtime_pjrt.rs (they need
+// `make artifacts` to have run).

@@ -1,0 +1,71 @@
+//! Offline stand-in for the PJRT runtime (built without `--features
+//! xla`). Loading always fails with an actionable message; the methods
+//! that need a loaded client are unreachable because a stub `Runtime`
+//! can never be constructed. This keeps the coordinator's compute path,
+//! the CLI's `e2e` command, and the PJRT tests compiling — they all
+//! handle the load error gracefully — without the `xla` crate.
+
+use super::tensor::{Tensor, TensorSpec};
+use anyhow::Result;
+use std::path::Path;
+
+/// One compiled executable plus its manifest signature.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+enum Never {}
+
+/// The stub runtime: uninhabited, so every method is trivially total.
+pub struct Runtime {
+    _never: Never,
+}
+
+impl Runtime {
+    /// Standard location: `<repo>/artifacts` (built by `make artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load_dir("artifacts")
+    }
+
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: this binary was built without the `xla` \
+             feature (artifacts dir: {}); rebuild with `cargo build --features xla` \
+             on a machine with the vendored xla crate",
+            dir.as_ref().display()
+        )
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn artifact(&self, _name: &str) -> Result<&Artifact> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn dir(&self) -> &Path {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loading_reports_the_missing_feature() {
+        let err = Runtime::load_default().unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Host-side tensor types crossing the PJRT boundary. Pure Rust — built
+//! with or without the `xla` feature (the compute passes and their
+//! references use these even when the PJRT client is stubbed out).
+
+use anyhow::{bail, Context, Result};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub(crate) fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "float32",
+            Tensor::I32(..) => "int32",
+        }
+    }
+}
+
+/// Parsed `dtype[d0,d1,...]` from the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub(crate) fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad tensor spec '{s}'"))?;
+        let dims = rest.strip_suffix(']').context("missing ]")?;
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().map_err(Into::into))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self {
+            dtype: dtype.to_string(),
+            shape,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        let t = TensorSpec::parse("float32[64,1024]").unwrap();
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.shape, vec![64, 1024]);
+        assert_eq!(t.elems(), 65536);
+        let s = TensorSpec::parse("int32[64]").unwrap();
+        assert_eq!(s.shape, vec![64]);
+        assert!(TensorSpec::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.len(), 2);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype_name(), "float32");
+    }
+}

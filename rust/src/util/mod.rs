@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fxhash;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -16,11 +16,11 @@
 
 use crate::config::SystemConfig;
 use crate::mem::{HostMemory, PageId, RegionId};
-use crate::memsys::{AccessResult, Ev, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
+use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId};
 use crate::metrics::Metrics;
 use crate::pcie::{Dir, Topology};
 use crate::sim::{ms, us, Engine, SimTime};
-use rustc_hash::{FxHashMap, FxHashSet};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 use std::collections::VecDeque;
 
 /// A 64 KB fault/transfer group: (gpu, region, group index within region).
@@ -189,16 +189,15 @@ impl MemorySystem for UvmSystem {
 
     fn access(
         &mut self,
-        now: SimTime,
+        ctx: &mut MemCtx<'_>,
         slot: SlotId,
         gpu: usize,
         pages: &[PageAccess],
-        hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
     ) -> AccessResult {
+        let now = ctx.now;
         let t = now + self.cfg.uvm.tlb_hit_ns;
         // Pages → 64 KB groups (dedup).
+        let hm: &HostMemory = &*ctx.hm;
         let mut groups: Vec<(GroupKey, bool)> = pages
             .iter()
             .map(|pa| (self.group_of(hm, gpu, pa.page), pa.write))
@@ -219,7 +218,7 @@ impl MemorySystem for UvmSystem {
             let clock = self.access_clock;
             let resident = self.groups.get(&key).map(|g| g.resident).unwrap_or(false);
             if resident {
-                m.hits += 1;
+                ctx.m.hits += 1;
                 let g = self.groups.get_mut(&key).unwrap();
                 g.refcount += 1;
                 g.dirty |= write;
@@ -229,15 +228,15 @@ impl MemorySystem for UvmSystem {
             }
             misses += 1;
             if let Some(p) = self.pending.get_mut(&key) {
-                m.coalesced_faults += 1;
+                ctx.m.coalesced_faults += 1;
                 p.waiters.push(slot);
                 p.write |= write;
                 continue;
             }
             // New fault: GMMU writes the fault buffer, driver is poked.
-            m.faults += 1;
+            ctx.m.faults += 1;
             if self.evicted_once.contains(&key) {
-                m.refetches += 1;
+                ctx.m.refetches += 1;
             }
             self.pending.insert(
                 key,
@@ -248,7 +247,7 @@ impl MemorySystem for UvmSystem {
                 },
             );
             self.fault_buffer.push_back(key);
-            self.schedule_driver(t + self.cfg.uvm.gmmu_fault_ns, eng);
+            self.schedule_driver(t + self.cfg.uvm.gmmu_fault_ns, &mut *ctx.eng);
         }
 
         if misses == 0 {
@@ -261,14 +260,7 @@ impl MemorySystem for UvmSystem {
         }
     }
 
-    fn release(
-        &mut self,
-        _now: SimTime,
-        slot: SlotId,
-        _eng: &mut Engine<Ev>,
-        _m: &mut Metrics,
-        _wakes: &mut Wakes,
-    ) {
+    fn release(&mut self, _ctx: &mut MemCtx<'_>, slot: SlotId) {
         if let Some(held) = self.holds.remove(&slot) {
             for key in held {
                 let g = self.groups.get_mut(&key).expect("held group exists");
@@ -278,15 +270,8 @@ impl MemorySystem for UvmSystem {
         }
     }
 
-    fn on_event(
-        &mut self,
-        now: SimTime,
-        ev: MemEvent,
-        hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-        wakes: &mut Wakes,
-    ) {
+    fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent) {
+        let now = ctx.now;
         match ev {
             MemEvent::UvmDriverService => {
                 self.driver_scheduled = false;
@@ -304,7 +289,7 @@ impl MemorySystem for UvmSystem {
                 // transfer and TLB shootdown.
                 let mut os_us = 0.0;
                 for key in &batch {
-                    let f = if self.region_read_mostly(hm, *key) {
+                    let f = if self.region_read_mostly(&*ctx.hm, *key) {
                         self.cfg.uvm.readmostly_factor
                     } else {
                         1.0
@@ -321,12 +306,12 @@ impl MemorySystem for UvmSystem {
                     // Make room (may evict a VABlock — the 2 MB hammer).
                     let mut spins = 0;
                     while self.free_frames[gpu] == 0 {
-                        if self.evict_vablock(t_done, gpu, false, m) == 0 {
+                        if self.evict_vablock(t_done, gpu, false, &mut *ctx.m) == 0 {
                             spins += 1;
                             if spins > self.fifo.len().max(4) {
                                 // Everything resident is referenced:
                                 // thrash (forced unmap + replay).
-                                self.evict_vablock(t_done, gpu, true, m);
+                                self.evict_vablock(t_done, gpu, true, &mut *ctx.m);
                                 break;
                             }
                         }
@@ -335,21 +320,22 @@ impl MemorySystem for UvmSystem {
                         // Nothing resident at all (first faults racing);
                         // re-queue and retry shortly.
                         self.fault_buffer.push_back(key);
-                        self.schedule_driver(t_done + us(5.0), eng);
+                        self.schedule_driver(t_done + us(5.0), &mut *ctx.eng);
                         continue;
                     }
                     self.free_frames[gpu] -= 1;
                     // DMA the 64 KB group over the direct path.
                     let path = self.topo.path_direct(gpu, Dir::In);
                     let arrive = self.topo.transfer(t_done, self.cfg.uvm.prefetch_size, &path);
-                    m.bytes_in += self.cfg.uvm.prefetch_size;
+                    ctx.m.bytes_in += self.cfg.uvm.prefetch_size;
                     let token = self.next_token;
                     self.next_token += 1;
                     self.transfers.insert(token, key);
-                    eng.schedule(arrive, Ev::Mem(MemEvent::UvmTransferDone { token }));
+                    ctx.eng
+                        .schedule(arrive, Ev::Mem(MemEvent::UvmTransferDone { token }));
                 }
                 if !self.fault_buffer.is_empty() {
-                    self.schedule_driver(t_done, eng);
+                    self.schedule_driver(t_done, &mut *ctx.eng);
                 }
             }
             MemEvent::UvmTransferDone { token } => {
@@ -362,7 +348,7 @@ impl MemorySystem for UvmSystem {
                 g.dirty |= p.write;
                 g.last_access = clock;
                 self.fifo.push_back(key);
-                m.fault_latency.record(now.saturating_sub(p.started));
+                ctx.m.fault_latency.record(now.saturating_sub(p.started));
                 for slot in p.waiters {
                     let g = self.groups.get_mut(&key).unwrap();
                     g.refcount += 1;
@@ -374,7 +360,7 @@ impl MemorySystem for UvmSystem {
                     *c -= 1;
                     if *c == 0 {
                         self.slot_pending.remove(&slot);
-                        wakes.push((slot, now + self.cfg.uvm.tlb_hit_ns));
+                        ctx.wakes.push((slot, now + self.cfg.uvm.tlb_hit_ns));
                     }
                 }
             }
@@ -382,15 +368,9 @@ impl MemorySystem for UvmSystem {
         }
     }
 
-    fn drain(
-        &mut self,
-        now: SimTime,
-        _hm: &mut HostMemory,
-        eng: &mut Engine<Ev>,
-        _m: &mut Metrics,
-    ) -> bool {
+    fn drain(&mut self, ctx: &mut MemCtx<'_>) -> bool {
         if !self.fault_buffer.is_empty() && !self.driver_scheduled {
-            self.schedule_driver(now, eng);
+            self.schedule_driver(ctx.now, &mut *ctx.eng);
             return true;
         }
         false

@@ -5,7 +5,7 @@
 use gpuvm::apps::{self, GraphAlgo, GraphWorkload, Layout, MatrixApp, MatrixSeq, QueryWorkload,
     StreamWorkload, TaxiTable, VaWorkload};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{self, MemSysKind};
+use gpuvm::coordinator;
 use gpuvm::gpu::exec::run;
 use gpuvm::gpuvm::GpuVmSystem;
 use gpuvm::graph::{generate, DatasetId};
@@ -26,7 +26,7 @@ fn small_cfg() -> SystemConfig {
 fn every_app_runs_on_every_memsys() {
     let cfg = small_cfg();
     for app in ["va", "mvt", "atax", "bigc", "q1"] {
-        for kind in [MemSysKind::GpuVm, MemSysKind::Uvm, MemSysKind::Ideal] {
+        for kind in ["gpuvm", "uvm", "ideal"] {
             let mut w = apps::by_name(app, cfg.gpuvm.page_size, 7).unwrap();
             let r = coordinator::simulate(&cfg, w.as_mut(), kind)
                 .unwrap_or_else(|e| panic!("{app} on {kind:?}: {e}"));
@@ -41,7 +41,7 @@ fn graph_apps_run_on_both_paged_systems() {
     let cfg = small_cfg();
     let g = Rc::new(generate(DatasetId::GK, 0.05, 3).graph);
     for algo in [GraphAlgo::Bfs, GraphAlgo::Cc, GraphAlgo::Sssp] {
-        for kind in [MemSysKind::GpuVm, MemSysKind::Uvm] {
+        for kind in ["gpuvm", "uvm"] {
             let mut w = GraphWorkload::new(
                 algo,
                 Layout::Balanced { chunk_edges: 512 },
@@ -158,11 +158,11 @@ fn oversubscribed_va_still_correct_and_slower() {
     let n = 1 << 20; // 4 MiB per array, 12 MiB total
     let fit = {
         let mut w = VaWorkload::new(n, 4096);
-        coordinator::simulate(&cfg_fit, &mut w, MemSysKind::GpuVm).unwrap()
+        coordinator::simulate(&cfg_fit, &mut w, "gpuvm").unwrap()
     };
     let tight = {
         let mut w = VaWorkload::new(n, 4096);
-        coordinator::simulate(&cfg_tight, &mut w, MemSysKind::GpuVm).unwrap()
+        coordinator::simulate(&cfg_tight, &mut w, "gpuvm").unwrap()
     };
     assert!(tight.metrics.evictions > 0);
     assert!(
@@ -177,8 +177,8 @@ fn uvm_amplifies_io_on_sparse_queries_gpuvm_does_not() {
     let table = Rc::new(TaxiTable::generate(1 << 18, 5));
     let mut wg = QueryWorkload::new(table.clone(), 2, 4096);
     let mut wu = QueryWorkload::new(table, 2, 4096);
-    let g = coordinator::simulate(&cfg, &mut wg, MemSysKind::GpuVm).unwrap();
-    let u = coordinator::simulate(&cfg, &mut wu, MemSysKind::Uvm).unwrap();
+    let g = coordinator::simulate(&cfg, &mut wg, "gpuvm").unwrap();
+    let u = coordinator::simulate(&cfg, &mut wu, "uvm").unwrap();
     assert!(g.metrics.io_amplification() < u.metrics.io_amplification());
     assert!(g.metrics.finish_ns < u.metrics.finish_ns);
 }
@@ -197,11 +197,11 @@ fn matrix_apps_show_uvm_pathology_under_pressure() {
     let n = 4096;
     let g = {
         let mut w = MatrixSeq::new(MatrixApp::Bigc, n, 4096);
-        coordinator::simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap()
+        coordinator::simulate(&cfg, &mut w, "gpuvm").unwrap()
     };
     let u = {
         let mut w = MatrixSeq::new(MatrixApp::Bigc, n, 4096);
-        coordinator::simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap()
+        coordinator::simulate(&cfg, &mut w, "uvm").unwrap()
     };
     let speedup = u.metrics.finish_ns as f64 / g.metrics.finish_ns as f64;
     assert!(speedup > 1.5, "GPUVM speedup under pressure only {speedup:.2}×");
@@ -232,11 +232,11 @@ fn memadvise_variant_reported_separately() {
     let n = 256 * 1024;
     let plain = {
         let mut w = VaWorkload::new(n, 4096);
-        coordinator::simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap()
+        coordinator::simulate(&cfg, &mut w, "uvm").unwrap()
     };
     let advised = {
         let mut w = Advised(VaWorkload::new(n, 4096));
-        coordinator::simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap()
+        coordinator::simulate(&cfg, &mut w, "uvm").unwrap()
     };
     assert!(advised.metrics.setup_ns > 0);
     assert!(advised.metrics.finish_ns < plain.metrics.finish_ns);

@@ -1,5 +1,5 @@
 //! Property-based tests (mini in-tree harness, `util::proptest`) over the
-//! coordinator's invariants — DESIGN.md §6:
+//! coordinator's invariants:
 //!
 //! 1. a mapped page's frame holds exactly its bytes,
 //! 2. refcounts never go negative / referenced frames never evicted,

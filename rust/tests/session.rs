@@ -1,0 +1,140 @@
+//! Registry + Session/RunBuilder integration: every backend name
+//! round-trips, spec/backend typos fail with actionable errors, every
+//! backend runs end to end through the same code path, and a small
+//! sweep returns one report per point with sane orderings.
+
+use gpuvm::apps::{BuildOpts, WorkloadSpec};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::{backend, report, Session};
+
+fn small_cfg() -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.gpu.sms = 8;
+    c.gpu.warps_per_sm = 4;
+    c.gpu.mem_bytes = 8 << 20;
+    c.gpuvm.page_size = 4096;
+    c.gpuvm.num_qps = 32;
+    c
+}
+
+#[test]
+fn every_backend_round_trips_through_parse_build_name() {
+    let names = backend::names();
+    assert!(names.contains(&"gpuvm"));
+    assert!(names.contains(&"uvm-memadvise"));
+    for name in names {
+        let b = backend::lookup(name).unwrap();
+        assert_eq!(b.name(), name, "name must round-trip through lookup");
+    }
+}
+
+#[test]
+fn unknown_names_produce_actionable_errors() {
+    let err = backend::lookup("hbm3").unwrap_err().to_string();
+    for valid in ["gpuvm", "uvm", "uvm-memadvise", "ideal", "gdr", "subway", "rapids"] {
+        assert!(err.contains(valid), "'{valid}' missing from: {err}");
+    }
+    let err = WorkloadSpec::parse("tetris").unwrap_err().to_string();
+    assert!(err.contains("va") && err.contains("q1..q5"), "{err}");
+}
+
+#[test]
+fn every_backend_runs_va_through_the_same_path() {
+    let cfg = small_cfg();
+    let spec = WorkloadSpec::parse("va@64k").unwrap();
+    let opts = BuildOpts::for_cfg(&cfg);
+    for b in backend::registry() {
+        let rep = b
+            .run(&cfg, &spec, &opts)
+            .unwrap_or_else(|e| panic!("{} on va: {e:#}", b.name()));
+        assert!(rep.finish_ns > 0, "{}", b.name());
+        assert_eq!(rep.backend, b.name());
+        assert_eq!(rep.workload, "va@64k");
+    }
+}
+
+#[test]
+fn session_sweep_reports_one_point_each_with_sane_ordering() {
+    // ideal ≤ gpuvm ≤ uvm on VA, at every sweep point.
+    let reports = Session::new(small_cfg())
+        .workload("va@256k")
+        .backends(["ideal", "gpuvm", "uvm"])
+        .sweep_nics([1, 2])
+        .threads(2)
+        .run_all()
+        .unwrap();
+    assert_eq!(reports.len(), 6, "2 sweep points × 3 backends");
+    for point in reports.chunks(3) {
+        let (ideal, gpuvm, uvm) = (&point[0], &point[1], &point[2]);
+        assert_eq!(ideal.backend, "ideal");
+        assert_eq!(gpuvm.backend, "gpuvm");
+        assert_eq!(uvm.backend, "uvm");
+        assert_eq!(ideal.nics, gpuvm.nics);
+        assert!(
+            ideal.finish_ns <= gpuvm.finish_ns,
+            "ideal {} !≤ gpuvm {} (nics={})",
+            ideal.finish_ns,
+            gpuvm.finish_ns,
+            gpuvm.nics
+        );
+        assert!(
+            gpuvm.finish_ns <= uvm.finish_ns,
+            "gpuvm {} !≤ uvm {} (nics={})",
+            gpuvm.finish_ns,
+            uvm.finish_ns,
+            uvm.nics
+        );
+    }
+    // More NICs can only help GPUVM (tiny tolerance for tie points).
+    assert!(reports[4].finish_ns as f64 <= reports[1].finish_ns as f64 * 1.05);
+}
+
+#[test]
+fn session_validates_before_running() {
+    let err = Session::new(small_cfg())
+        .workload("va")
+        .backend("gpuvm")
+        .backend("flux-capacitor")
+        .run_all()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("flux-capacitor") && err.contains("gpuvm"), "{err}");
+
+    let err = Session::new(small_cfg()).backend("gpuvm").run_all().unwrap_err();
+    assert!(err.to_string().contains("no workloads"), "{err:#}");
+}
+
+#[test]
+fn reports_serialize_to_csv_and_json() {
+    let reports = Session::new(small_cfg())
+        .workload("va@64k")
+        .backends(["ideal", "gdr"])
+        .run_all()
+        .unwrap();
+    let dir = std::env::temp_dir().join("gpuvm_session_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("reports.csv");
+    let json_path = dir.join("reports.json");
+    report::write_csv(&csv_path, &reports).unwrap();
+    report::write_json(&json_path, &reports).unwrap();
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("backend,workload,"));
+    assert_eq!(csv.lines().count(), 1 + reports.len());
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.trim().starts_with('[') && json.contains("\"backend\":\"gdr\""));
+}
+
+#[test]
+fn memadvise_and_bulk_backends_order_sensibly_on_queries() {
+    // Fig 15's shape at miniature scale: GPUVM touches a sliver of the
+    // value column, RAPIDS ships both columns wholesale.
+    let cfg = small_cfg();
+    let reports = Session::new(cfg)
+        .workload("q1@256k")
+        .backends(["gpuvm", "rapids"])
+        .run_all()
+        .unwrap();
+    let (g, r) = (&reports[0], &reports[1]);
+    assert!(g.bytes_in < r.bytes_in, "GPUVM must move less than RAPIDS");
+    assert!(r.io_amplification() > g.io_amplification());
+}

@@ -11,7 +11,7 @@
 use gpuvm::apps::StreamWorkload;
 use gpuvm::baselines::{nic_ceiling, run_gdr};
 use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::{simulate, MemSysKind};
+use gpuvm::coordinator::simulate;
 use gpuvm::sim::us;
 
 fn full_machine() -> SystemConfig {
@@ -36,7 +36,7 @@ fn fig2_host_involvement_about_7x_transfer() {
 fn fig8_gpuvm_saturates_at_4k_one_nic() {
     let cfg = full_machine();
     let mut w = StreamWorkload::new(96 << 20, 4096, cfg.total_warps());
-    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+    let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
     let bw = r.metrics.throughput_in();
     let ceiling = nic_ceiling(&cfg);
     assert!(
@@ -51,7 +51,7 @@ fn fig8_two_nics_reach_full_pcie() {
     let mut cfg = full_machine();
     cfg.rnic.num_nics = 2;
     let mut w = StreamWorkload::new(96 << 20, 4096, cfg.total_warps());
-    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+    let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
     let bw = r.metrics.throughput_in();
     assert!(
         bw > 0.85 * cfg.pcie.link_bw,
@@ -77,7 +77,7 @@ fn uvm_streaming_about_half_pcie() {
     // the available bandwidth."
     let cfg = full_machine();
     let mut w = StreamWorkload::new(64 << 20, 4096, cfg.total_warps());
-    let r = simulate(&cfg, &mut w, MemSysKind::Uvm).unwrap();
+    let r = simulate(&cfg, &mut w, "uvm").unwrap();
     let bw = r.metrics.throughput_in() / 1e9;
     assert!(
         (4.5..8.5).contains(&bw),
@@ -96,7 +96,7 @@ fn fig11_queue_count_knee() {
         cfg.gpuvm.page_size = 8192;
         cfg.gpuvm.num_qps = qps;
         let mut w = StreamWorkload::new(32 << 20, 8192, cfg.total_warps());
-        let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+        let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
         times.push(r.metrics.finish_ns as f64);
     }
     let (t8, t16, t48, t84) = (times[0], times[1], times[2], times[3]);
@@ -126,7 +126,7 @@ fn unloaded_gpuvm_fault_near_verb_latency() {
     cfg.gpu.warps_per_sm = 1;
     cfg.gpu.mem_bytes = 64 << 20;
     let mut w = StreamWorkload::new(1 << 20, 4096, 1);
-    let r = simulate(&cfg, &mut w, MemSysKind::GpuVm).unwrap();
+    let r = simulate(&cfg, &mut w, "gpuvm").unwrap();
     let mean = r.metrics.fault_latency.mean_ns() as f64;
     let verb = us(cfg.rnic.verb_latency_us) as f64;
     assert!(
