@@ -8,6 +8,7 @@
 //! fault-handling overhead ≈ 7× the 64 KB transfer time.
 
 use super::toml::{parse, Doc, Value};
+use crate::prefetch::PrefetchPolicy;
 use crate::util::cli::Args;
 use anyhow::{Context, Result};
 
@@ -90,6 +91,16 @@ pub struct GpuVmConfig {
     /// prototype ("we have not yet implemented asynchronous write-back",
     /// §5.3); the flag exists for the extension/ablation.
     pub async_writeback: bool,
+    /// Prefetch policy for the GPUVM runtime (config set-path
+    /// `("gpuvm", "prefetch_policy")`, CLI `--prefetch`): candidate
+    /// pages from [`crate::prefetch`] ride the RNIC queue pairs as
+    /// extra speculative work requests. The paper's prototype has no
+    /// prefetcher, so the default is `none`.
+    pub prefetch_policy: PrefetchPolicy,
+    /// Max pages the stride/history policies run ahead per fault
+    /// (set-path `("gpuvm", "prefetch_degree")`, CLI
+    /// `--prefetch-degree`).
+    pub prefetch_degree: usize,
 }
 
 /// RNIC model (ConnectX-5/6-shaped, §3.2).
@@ -156,6 +167,16 @@ pub struct UvmConfig {
     /// One-time cost of applying the advice, ms (reported separately and
     /// excluded from speedups, as in the paper).
     pub memadvise_setup_ms: f64,
+    /// Prefetch policy for the UVM driver model (config set-path
+    /// `("uvm", "prefetch_policy")`, CLI `--prefetch`). The default
+    /// `fixed` reproduces the real driver: every 4 KB fault moves a
+    /// 64 KB group. `none` transfers bare pages; `stride`/`density`/
+    /// `history` transfer bare pages plus policy-chosen speculative
+    /// groups that retire through the same driver batches.
+    pub prefetch_policy: PrefetchPolicy,
+    /// Max speculative transfer units the stride/history policies add
+    /// per fault (set-path `("uvm", "prefetch_degree")`).
+    pub prefetch_degree: usize,
 }
 
 /// CPU-initiated GPUDirect-RDMA bulk-transfer baseline (Fig 8's "GDR").
@@ -213,6 +234,8 @@ impl Default for SystemConfig {
                 eviction_check_ns: 80,
                 eviction_policy: EvictionPolicy::FifoRefCount,
                 async_writeback: false,
+                prefetch_policy: PrefetchPolicy::None,
+                prefetch_degree: 8,
             },
             rnic: RnicConfig {
                 num_nics: 1,
@@ -242,6 +265,8 @@ impl Default for SystemConfig {
                 gmmu_fault_ns: 600,
                 readmostly_factor: 0.55,
                 memadvise_setup_ms: 120.0,
+                prefetch_policy: PrefetchPolicy::Fixed,
+                prefetch_degree: 8,
             },
             gdr: GdrConfig {
                 threads: 16,
@@ -315,6 +340,12 @@ impl SystemConfig {
                 )?
             }
             ("gpuvm", "async_writeback") => self.gpuvm.async_writeback = boolv(v)?,
+            ("gpuvm", "prefetch_policy") => {
+                self.gpuvm.prefetch_policy = PrefetchPolicy::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
+            ("gpuvm", "prefetch_degree") => self.gpuvm.prefetch_degree = usizev(v)?,
             ("rnic", "num_nics") => self.rnic.num_nics = usizev(v)?,
             ("rnic", "verb_latency_us") => self.rnic.verb_latency_us = f64v(v)?,
             ("rnic", "wr_process_ns") => self.rnic.wr_process_ns = u64v(v)?,
@@ -333,6 +364,12 @@ impl SystemConfig {
             ("uvm", "gmmu_fault_ns") => self.uvm.gmmu_fault_ns = u64v(v)?,
             ("uvm", "readmostly_factor") => self.uvm.readmostly_factor = f64v(v)?,
             ("uvm", "memadvise_setup_ms") => self.uvm.memadvise_setup_ms = f64v(v)?,
+            ("uvm", "prefetch_policy") => {
+                self.uvm.prefetch_policy = PrefetchPolicy::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
+            ("uvm", "prefetch_degree") => self.uvm.prefetch_degree = usizev(v)?,
             ("gdr", "threads") => self.gdr.threads = usizev(v)?,
             ("gdr", "issue_overhead_us") => self.gdr.issue_overhead_us = f64v(v)?,
             ("gdr", "request_bytes") => self.gdr.request_bytes = u64v(v)?,
@@ -359,6 +396,22 @@ impl SystemConfig {
         self.gpuvm.fault_batch = args.get_u64("fault-batch", self.gpuvm.fault_batch as u64)? as u32;
         if let Some(ev) = args.get("eviction") {
             self.gpuvm.eviction_policy = EvictionPolicy::parse(ev)?;
+        }
+        // `--prefetch POLICY` sets both systems' policies at once. A
+        // comma-separated value is a sweep list (`gpuvm sweep
+        // --prefetch none,density`) and is handled by the sweep axis,
+        // not the scalar config.
+        if let Some(p) = args.get("prefetch") {
+            if !p.contains(',') {
+                let policy = PrefetchPolicy::parse(p)?;
+                self.gpuvm.prefetch_policy = policy;
+                self.uvm.prefetch_policy = policy;
+            }
+        }
+        if args.has("prefetch-degree") {
+            let d = args.get_usize("prefetch-degree", self.gpuvm.prefetch_degree)?;
+            self.gpuvm.prefetch_degree = d;
+            self.uvm.prefetch_degree = d;
         }
         Ok(())
     }
@@ -434,6 +487,50 @@ mod tests {
         assert_eq!(cfg.gpuvm.page_size, 4096);
         assert_eq!(cfg.rnic.num_nics, 2);
         assert_eq!(cfg.gpuvm.eviction_policy, EvictionPolicy::Random);
+    }
+
+    #[test]
+    fn prefetch_keys_and_flags() {
+        let doc = parse(
+            "[gpuvm]\nprefetch_policy = \"density\"\nprefetch_degree = 4\n\
+             [uvm]\nprefetch_policy = \"none\"\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.gpuvm.prefetch_policy, PrefetchPolicy::Density);
+        assert_eq!(cfg.gpuvm.prefetch_degree, 4);
+        assert_eq!(cfg.uvm.prefetch_policy, PrefetchPolicy::None);
+
+        let args = Args::parse(
+            "t".into(),
+            ["--prefetch", "stride", "--prefetch-degree", "16"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.gpuvm.prefetch_policy, PrefetchPolicy::Stride);
+        assert_eq!(cfg.uvm.prefetch_policy, PrefetchPolicy::Stride);
+        assert_eq!(cfg.uvm.prefetch_degree, 16);
+
+        // Unknown names fail with the valid set, like eviction policies.
+        let bad = Args::parse(
+            "t".into(),
+            ["--prefetch", "clairvoyant"].iter().map(|s| s.to_string()).collect(),
+        );
+        let err = SystemConfig::default().apply_args(&bad).unwrap_err().to_string();
+        assert!(err.contains("none") && err.contains("density"), "{err}");
+
+        // Comma-separated values are sweep lists, left to the sweep axis.
+        let listy = Args::parse(
+            "t".into(),
+            ["--prefetch", "none,fixed"].iter().map(|s| s.to_string()).collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&listy).unwrap();
+        assert_eq!(cfg.gpuvm.prefetch_policy, PrefetchPolicy::None);
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct RunReport {
     pub page_size: u64,
     pub gpu_mem_bytes: u64,
     pub qps: usize,
+    /// Prefetch policy name the run's memory system used (`gpuvm.*` for
+    /// GPUVM and the bulk engines, `uvm.*` for the UVM variants).
+    pub prefetch: String,
     // Headline results.
     pub finish_ns: u64,
     /// One-time setup cost reported separately (e.g. memadvise).
@@ -35,17 +38,24 @@ pub struct RunReport {
     pub useful_bytes: u64,
     pub evictions: u64,
     pub refetches: u64,
+    /// Speculative transfer units the prefetch policy issued.
+    pub prefetched_pages: u64,
+    /// Prefetched units later touched by the application.
+    pub prefetch_hits: u64,
+    /// Prefetched units evicted untouched.
+    pub prefetch_wasted: u64,
 }
 
 impl RunReport {
     /// Column names matching [`RunReport::csv_row`].
-    pub const CSV_HEADER: [&'static str; 19] = [
+    pub const CSV_HEADER: [&'static str; 23] = [
         "backend",
         "workload",
         "nics",
         "page_size",
         "gpu_mem_bytes",
         "qps",
+        "prefetch",
         "finish_ns",
         "setup_ns",
         "kernels",
@@ -58,12 +68,22 @@ impl RunReport {
         "useful_bytes",
         "evictions",
         "refetches",
+        "prefetched_pages",
+        "prefetch_hits",
+        "prefetch_wasted",
         "io_amplification",
     ];
 
     /// A report with zeroed metrics, tagged with the run's identity and
     /// sweep axes. Bulk backends fill in their own fields from here.
     pub fn empty(backend: &str, workload: &str, cfg: &SystemConfig) -> Self {
+        // The UVM variants run under their own policy key; everything
+        // else (GPUVM, ideal, bulk engines) reports the gpuvm key.
+        let prefetch = if backend.starts_with("uvm") {
+            cfg.uvm.prefetch_policy
+        } else {
+            cfg.gpuvm.prefetch_policy
+        };
         Self {
             backend: backend.to_string(),
             workload: workload.to_string(),
@@ -71,6 +91,7 @@ impl RunReport {
             page_size: cfg.gpuvm.page_size,
             gpu_mem_bytes: cfg.gpu.mem_bytes,
             qps: cfg.gpuvm.num_qps,
+            prefetch: prefetch.name().to_string(),
             finish_ns: 0,
             setup_ns: 0,
             kernels: 0,
@@ -83,6 +104,9 @@ impl RunReport {
             useful_bytes: 0,
             evictions: 0,
             refetches: 0,
+            prefetched_pages: 0,
+            prefetch_hits: 0,
+            prefetch_wasted: 0,
         }
     }
 
@@ -102,8 +126,19 @@ impl RunReport {
             useful_bytes: m.useful_bytes,
             evictions: m.evictions,
             refetches: m.refetches,
+            prefetched_pages: m.prefetched_pages,
+            prefetch_hits: m.prefetch_hits,
+            prefetch_wasted: m.prefetch_wasted,
             ..Self::empty(backend, workload, cfg)
         }
+    }
+
+    /// Prefetch accuracy: prefetched-then-used over issued (0 if none).
+    pub fn prefetch_accuracy(&self) -> f64 {
+        if self.prefetched_pages == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / self.prefetched_pages as f64
     }
 
     /// Achieved host→GPU bandwidth over the run, bytes/s.
@@ -131,6 +166,7 @@ impl RunReport {
             self.page_size.to_string(),
             self.gpu_mem_bytes.to_string(),
             self.qps.to_string(),
+            self.prefetch.clone(),
             self.finish_ns.to_string(),
             self.setup_ns.to_string(),
             self.kernels.to_string(),
@@ -143,6 +179,9 @@ impl RunReport {
             self.useful_bytes.to_string(),
             self.evictions.to_string(),
             self.refetches.to_string(),
+            self.prefetched_pages.to_string(),
+            self.prefetch_hits.to_string(),
+            self.prefetch_wasted.to_string(),
             format!("{:.4}", self.io_amplification()),
         ]
     }
@@ -152,10 +191,12 @@ impl RunReport {
         format!(
             concat!(
                 "{{\"backend\":{},\"workload\":{},\"nics\":{},\"page_size\":{},",
-                "\"gpu_mem_bytes\":{},\"qps\":{},\"finish_ns\":{},\"setup_ns\":{},",
-                "\"kernels\":{},\"events\":{},\"faults\":{},\"coalesced_faults\":{},",
-                "\"hits\":{},\"bytes_in\":{},\"bytes_out\":{},\"useful_bytes\":{},",
-                "\"evictions\":{},\"refetches\":{},\"io_amplification\":{:.4},",
+                "\"gpu_mem_bytes\":{},\"qps\":{},\"prefetch\":{},\"finish_ns\":{},",
+                "\"setup_ns\":{},\"kernels\":{},\"events\":{},\"faults\":{},",
+                "\"coalesced_faults\":{},\"hits\":{},\"bytes_in\":{},\"bytes_out\":{},",
+                "\"useful_bytes\":{},\"evictions\":{},\"refetches\":{},",
+                "\"prefetched_pages\":{},\"prefetch_hits\":{},\"prefetch_wasted\":{},",
+                "\"io_amplification\":{:.4},",
                 "\"bandwidth_in_bytes_per_sec\":{:.1}}}"
             ),
             json_string(&self.backend),
@@ -164,6 +205,7 @@ impl RunReport {
             self.page_size,
             self.gpu_mem_bytes,
             self.qps,
+            json_string(&self.prefetch),
             self.finish_ns,
             self.setup_ns,
             self.kernels,
@@ -176,6 +218,9 @@ impl RunReport {
             self.useful_bytes,
             self.evictions,
             self.refetches,
+            self.prefetched_pages,
+            self.prefetch_hits,
+            self.prefetch_wasted,
             self.io_amplification(),
             self.bandwidth_in(),
         )
@@ -217,6 +262,16 @@ impl RunReport {
             "  evictions          {:>14}   (refetches: {})\n",
             self.evictions, self.refetches
         ));
+        if self.prefetch != "none" || self.prefetched_pages > 0 {
+            s.push_str(&format!(
+                "  prefetch ({})   {:>6} issued   (used: {}, evicted unused: {}, accuracy {:.0}%)\n",
+                self.prefetch,
+                self.prefetched_pages,
+                self.prefetch_hits,
+                self.prefetch_wasted,
+                self.prefetch_accuracy() * 100.0
+            ));
+        }
         if self.setup_ns > 0 {
             s.push_str(&format!(
                 "  one-time setup     {:>14}   (reported separately, per paper)\n",
@@ -303,6 +358,15 @@ pub fn run_report(app: &str, memsys: &str, r: &RunResult) -> String {
         fmt_ns(m.fault_latency.mean_ns() as u64),
         fmt_ns(m.fault_latency.percentile(99.0))
     ));
+    if m.prefetched_pages > 0 {
+        s.push_str(&format!(
+            "  prefetch           {:>14}   (used: {}, evicted unused: {}, accuracy {:.0}%)\n",
+            m.prefetched_pages,
+            m.prefetch_hits,
+            m.prefetch_wasted,
+            m.prefetch_accuracy() * 100.0
+        ));
+    }
     if m.setup_ns > 0 {
         s.push_str(&format!(
             "  one-time setup     {:>14}   (reported separately, per paper)\n",
@@ -347,6 +411,32 @@ mod tests {
         let r = sample();
         assert_eq!(r.csv_row().len(), RunReport::CSV_HEADER.len());
         assert!(r.text().contains("app=va memsys=gpuvm"));
+    }
+
+    #[test]
+    fn prefetch_accuracy_columns_round_trip() {
+        let mut r = sample();
+        r.prefetch = "density".into();
+        r.prefetched_pages = 100;
+        r.prefetch_hits = 75;
+        r.prefetch_wasted = 20;
+        assert!((r.prefetch_accuracy() - 0.75).abs() < 1e-12);
+        let row = r.csv_row();
+        assert_eq!(row.len(), RunReport::CSV_HEADER.len());
+        let hdr_idx = |name: &str| {
+            RunReport::CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap()
+        };
+        assert_eq!(row[hdr_idx("prefetch")], "density");
+        assert_eq!(row[hdr_idx("prefetched_pages")], "100");
+        assert_eq!(row[hdr_idx("prefetch_hits")], "75");
+        assert_eq!(row[hdr_idx("prefetch_wasted")], "20");
+        let j = r.to_json();
+        assert!(j.contains("\"prefetch\":\"density\""));
+        assert!(j.contains("\"prefetched_pages\":100"));
+        assert!(r.text().contains("prefetch (density)"));
     }
 
     #[test]

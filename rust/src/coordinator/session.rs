@@ -29,6 +29,7 @@ use crate::apps::{BuildOpts, WorkloadSpec};
 use crate::config::SystemConfig;
 use crate::coordinator::backend::{self, Backend};
 use crate::coordinator::report::RunReport;
+use crate::prefetch::PrefetchPolicy;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -40,6 +41,7 @@ enum Axis {
     GpuMem(Vec<u64>),
     Qps(Vec<usize>),
     FaultBatch(Vec<u32>),
+    Prefetch(Vec<PrefetchPolicy>),
 }
 
 /// Builder for one or many runs over the simulated testbed.
@@ -134,6 +136,14 @@ impl Session {
         self
     }
 
+    /// Sweep the prefetch policy. Each point sets the policy for *both*
+    /// paged systems (`gpuvm.prefetch_policy` and `uvm.prefetch_policy`),
+    /// so a mixed-backend sweep compares like with like.
+    pub fn sweep_prefetch<I: IntoIterator<Item = PrefetchPolicy>>(mut self, ps: I) -> Self {
+        self.axes.push(Axis::Prefetch(ps.into_iter().collect()));
+        self
+    }
+
     /// Dataset scale for graph workloads (1.0 = default bench size).
     pub fn graph_scale(mut self, scale: f64) -> Self {
         self.graph_scale = scale;
@@ -163,6 +173,7 @@ impl Session {
                 Axis::GpuMem(v) => v.len(),
                 Axis::Qps(v) => v.len(),
                 Axis::FaultBatch(v) => v.len(),
+                Axis::Prefetch(v) => v.len(),
             })
             .product();
         sweep * self.workloads.len() * self.backends.len().max(1)
@@ -207,6 +218,14 @@ impl Session {
                         for &v in vs {
                             let mut c = base.clone();
                             c.gpuvm.fault_batch = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::Prefetch(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.gpuvm.prefetch_policy = v;
+                            c.uvm.prefetch_policy = v;
                             next.push(c);
                         }
                     }
@@ -364,6 +383,38 @@ mod tests {
             key,
             vec![(1, "ideal"), (1, "gpuvm"), (2, "ideal"), (2, "gpuvm")]
         );
+    }
+
+    #[test]
+    fn prefetch_axis_expands_and_labels_reports() {
+        let reports = Session::new(small_cfg())
+            .workload("va@64k")
+            .backends(["gpuvm", "uvm"])
+            .sweep_prefetch([PrefetchPolicy::None, PrefetchPolicy::Density])
+            .run_all()
+            .unwrap();
+        assert_eq!(reports.len(), 4, "2 policies × 2 backends");
+        let key: Vec<(&str, &str)> = reports
+            .iter()
+            .map(|r| (r.prefetch.as_str(), r.backend.as_str()))
+            .collect();
+        assert_eq!(
+            key,
+            vec![
+                ("none", "gpuvm"),
+                ("none", "uvm"),
+                ("density", "gpuvm"),
+                ("density", "uvm"),
+            ]
+        );
+        // The density points actually speculated on the dense stream,
+        // and the accounting invariant held on every point.
+        assert!(reports[2].prefetched_pages > 0);
+        assert!(reports[3].prefetched_pages > 0);
+        assert!(reports[0].prefetched_pages == 0 && reports[1].prefetched_pages == 0);
+        for r in &reports {
+            assert!(r.prefetch_hits + r.prefetch_wasted <= r.prefetched_pages);
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::mem::{FrameId, FramePool, FrameState, HostMemory, PageId};
 use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
 use crate::metrics::Metrics;
 use crate::pcie::{Dir, Topology};
+use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
 use crate::rnic::{NicBank, WorkRequest};
 use crate::sim::{us, Engine, SimTime};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
@@ -39,6 +40,9 @@ struct Inflight {
     write: bool,
     /// When the first miss occurred (fault-latency histogram).
     started: SimTime,
+    /// Issued by the prefetcher, no demand waiter yet; such fetches
+    /// don't enter the fault-latency histogram.
+    speculative: bool,
 }
 
 /// Per-queue doorbell batching state (§3.2: post_number / batch_counter /
@@ -109,6 +113,16 @@ pub struct GpuVmSystem {
     slot_pending: FxHashMap<SlotId, u32>,
     /// Pages that were resident once and got evicted (refetch accounting).
     evicted_once: FxHashSet<FaultKey>,
+    /// The pluggable prefetch policy observing the demand-fault stream.
+    prefetcher: Box<dyn Prefetcher>,
+    /// Fast gate: skip the prefetch path entirely under `none`.
+    prefetch_enabled: bool,
+    /// Prefetched pages (in flight or resident) not yet touched by a
+    /// demand access — resolved into `prefetch_hits` on first use or
+    /// `prefetch_wasted` on eviction.
+    prefetched: FxHashSet<FaultKey>,
+    /// Reused candidate buffer (one `on_fault` call per leader fault).
+    pf_buf: Vec<u64>,
     rng: Rng,
     backed: bool,
 }
@@ -146,6 +160,14 @@ impl GpuVmSystem {
             holds: FxHashMap::default(),
             slot_pending: FxHashMap::default(),
             evicted_once: FxHashSet::default(),
+            prefetcher: prefetch::build(
+                cfg.gpuvm.prefetch_policy,
+                cfg,
+                cfg.gpuvm.prefetch_degree,
+            ),
+            prefetch_enabled: cfg.gpuvm.prefetch_policy != PrefetchPolicy::None,
+            prefetched: FxHashSet::default(),
+            pf_buf: Vec::new(),
             rng: Rng::new(cfg.seed ^ 0x6b75_766d),
             backed,
             cfg: cfg.clone(),
@@ -279,6 +301,10 @@ impl GpuVmSystem {
             let (old_page, dirty) = self.pools[gpu].evict(f).expect("evict checked usable");
             m.evictions += 1;
             self.evicted_once.insert((gpu, old_page));
+            if self.prefetched.remove(&(gpu, old_page)) {
+                // Prefetched, never touched, now evicted: pure waste.
+                m.prefetch_wasted += 1;
+            }
             if dirty {
                 if let Some(b) = bytes {
                     hm.write_page(old_page, &b).expect("write-back target");
@@ -326,6 +352,124 @@ impl GpuVmSystem {
                 m,
             );
         }
+    }
+
+    /// Take a frame for a speculative fetch of `page` *without ever
+    /// waiting*: follow the configured eviction policy's frame-choice
+    /// discipline (so the §5.4 ablations stay meaningful with prefetch
+    /// on), but where a demand fault would enqueue behind a busy frame,
+    /// a prefetch is simply dropped — waiter slots belong to demand.
+    /// Returns false when no frame is takeable now.
+    fn acquire_frame_speculative(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        page: PageId,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) -> bool {
+        let n = self.pools[gpu].num_frames();
+        match self.cfg.gpuvm.eviction_policy {
+            EvictionPolicy::FifoRefCount => {
+                for _ in 0..n {
+                    let f = FrameId((self.cursor[gpu] % n) as u32);
+                    self.cursor[gpu] += 1;
+                    if self.frame_usable(gpu, f) {
+                        self.start_fill(now, gpu, f, page, hm, eng, m);
+                        return true;
+                    }
+                }
+                false
+            }
+            EvictionPolicy::FifoStrict => {
+                // Strict head-take or nothing; an unusable head is left
+                // untouched for the next demand fault.
+                let f = FrameId((self.cursor[gpu] % n) as u32);
+                if self.frame_usable(gpu, f) {
+                    self.cursor[gpu] += 1;
+                    self.start_fill(now, gpu, f, page, hm, eng, m);
+                    true
+                } else {
+                    false
+                }
+            }
+            EvictionPolicy::Random => {
+                for _ in 0..8 {
+                    let f = FrameId(self.rng.gen_range(n as u64) as u32);
+                    if self.frame_usable(gpu, f) {
+                        self.start_fill(now, gpu, f, page, hm, eng, m);
+                        return true;
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    /// Ask the policy for candidates around a demand fault and post
+    /// speculative fetches for them. Candidates ride the same RNIC
+    /// queue pairs as demand work requests (extra WQEs in the current
+    /// batch) but take no waiters and record no fault latency.
+    #[allow(clippy::too_many_arguments)]
+    fn issue_prefetches(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        page: PageId,
+        warp: u32,
+        write: bool,
+        hm: &mut HostMemory,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) {
+        let Some(rid) = hm.region_of_page(page) else {
+            return;
+        };
+        let (base, region_pages) = {
+            let r = hm.region(rid);
+            (r.base_page, r.num_pages)
+        };
+        let ev = FaultEvent {
+            gpu,
+            region: rid,
+            page_in_region: page.0 - base,
+            region_pages,
+            warp,
+            write,
+            now,
+        };
+        let mut buf = std::mem::take(&mut self.pf_buf);
+        buf.clear();
+        self.prefetcher.on_fault(&ev, &mut buf);
+        for &idx in &buf {
+            if idx >= region_pages {
+                continue; // defensive: policies are bounds-tested
+            }
+            let key = (gpu, PageId(base + idx));
+            if self.pools[gpu].lookup(key.1).is_some() || self.inflight.contains_key(&key) {
+                continue; // already resident or in flight
+            }
+            self.inflight.insert(
+                key,
+                Inflight {
+                    frame: None,
+                    waiters: Vec::new(),
+                    write: false,
+                    started: now,
+                    speculative: true,
+                },
+            );
+            if self.acquire_frame_speculative(now, gpu, key.1, hm, eng, m) {
+                m.prefetched_pages += 1;
+                self.prefetched.insert(key);
+            } else {
+                // Pool saturated: back out and stop speculating.
+                self.inflight.remove(&key);
+                break;
+            }
+        }
+        self.pf_buf = buf;
     }
 
     /// Submit a WR: post it on a free queue, or enqueue the leader in the
@@ -429,7 +573,10 @@ impl GpuVmSystem {
     }
 
     /// A fetch completed: install bytes, mark resident, hand out refs,
-    /// wake waiters.
+    /// wake waiters. Returns the filled frame so the caller can service
+    /// pages queued behind it when nobody takes a reference (a
+    /// speculative fill completing with demand faults parked on its
+    /// frame must not strand them).
     fn complete_fetch(
         &mut self,
         now: SimTime,
@@ -437,7 +584,7 @@ impl GpuVmSystem {
         hm: &mut HostMemory,
         m: &mut Metrics,
         wakes: &mut Wakes,
-    ) {
+    ) -> (usize, FrameId) {
         let (gpu, page) = key;
         let fl = self.inflight.remove(&key).expect("inflight fetch");
         let frame = fl.frame.expect("fetch had a frame");
@@ -450,7 +597,9 @@ impl GpuVmSystem {
             .complete_fill(frame, bytes.as_deref())
             .expect("filling frame");
         m.bytes_in += self.cfg.gpuvm.page_size;
-        m.fault_latency.record(now.saturating_sub(fl.started));
+        if !fl.speculative {
+            m.fault_latency.record(now.saturating_sub(fl.started));
+        }
         if fl.write {
             self.pools[gpu].mark_dirty(frame);
         }
@@ -469,6 +618,7 @@ impl GpuVmSystem {
                 wakes.push((slot, resume));
             }
         }
+        (gpu, frame)
     }
 
     /// A frame's refcount hit zero: if pages queue on it, start the next.
@@ -520,6 +670,10 @@ impl MemorySystem for GpuVmSystem {
             match self.pools[gpu].lookup(pa.page) {
                 Some((frame, true)) => {
                     ctx.m.hits += 1;
+                    if self.prefetched.remove(&(gpu, pa.page)) {
+                        // First demand touch of a prefetched page.
+                        ctx.m.prefetch_hits += 1;
+                    }
                     self.pools[gpu].addref(frame);
                     if pa.write {
                         self.pools[gpu].mark_dirty(frame);
@@ -535,6 +689,17 @@ impl MemorySystem for GpuVmSystem {
                         .expect("filling frame has inflight entry");
                     fl.waiters.push(slot);
                     fl.write |= pa.write;
+                    if std::mem::replace(&mut fl.speculative, false) {
+                        // First demand join of a speculative fetch:
+                        // fault latency counts from this miss, not from
+                        // the prefetch issue.
+                        fl.started = now;
+                        if self.prefetched.remove(&(gpu, pa.page)) {
+                            // Demanded while still in flight: the
+                            // prefetch hid most of the latency.
+                            ctx.m.prefetch_hits += 1;
+                        }
+                    }
                     misses += 1;
                 }
                 None => {
@@ -543,6 +708,7 @@ impl MemorySystem for GpuVmSystem {
                         ctx.m.coalesced_faults += 1;
                         fl.waiters.push(slot);
                         fl.write |= pa.write;
+                        fl.speculative = false;
                         misses += 1;
                         continue;
                     }
@@ -558,10 +724,25 @@ impl MemorySystem for GpuVmSystem {
                             waiters: vec![slot],
                             write: pa.write,
                             started: now,
+                            speculative: false,
                         },
                     );
                     let t_leader = t + self.cfg.gpuvm.leader_election_ns;
                     self.acquire_frame(t_leader, gpu, pa.page, &mut *ctx.hm, &mut *ctx.eng, &mut *ctx.m);
+                    if self.prefetch_enabled {
+                        // The leader's fault is the policy's observation
+                        // point; candidates ride the same QPs.
+                        self.issue_prefetches(
+                            t_leader,
+                            gpu,
+                            pa.page,
+                            slot.0,
+                            pa.write,
+                            &mut *ctx.hm,
+                            &mut *ctx.eng,
+                            &mut *ctx.m,
+                        );
+                    }
                     misses += 1;
                 }
             }
@@ -615,7 +796,23 @@ impl MemorySystem for GpuVmSystem {
                 debug_assert!(self.queue_busy[queue] > 0);
                 self.queue_busy[queue] -= 1;
                 if let Some(key) = self.wr_fault.remove(&wr_id) {
-                    self.complete_fetch(now, key, &mut *ctx.hm, &mut *ctx.m, &mut *ctx.wakes);
+                    let (gpu, frame) =
+                        self.complete_fetch(now, key, &mut *ctx.hm, &mut *ctx.m, &mut *ctx.wakes);
+                    if self.pools[gpu].frame(frame).refcount == 0
+                        && !self.frame_waiters[gpu][frame.0 as usize].is_empty()
+                    {
+                        // A speculative fill completed with no demand
+                        // reference while pages queue behind its frame:
+                        // release() will never fire for it, so service
+                        // the waiters through the usual event.
+                        ctx.eng.schedule(
+                            now,
+                            Ev::Mem(MemEvent::FrameFree {
+                                gpu,
+                                frame: frame.0,
+                            }),
+                        );
+                    }
                 } else if let Some(fw) = self.wr_writeback.remove(&wr_id) {
                     // Synchronous write-back done: launch the fetch.
                     self.submit(
@@ -686,5 +883,156 @@ impl MemorySystem for GpuVmSystem {
         m.bump("nic_wrs", wrs);
         m.bump("nic_doorbells", dbs);
         m.bump("nic_bytes", bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::exec::run;
+    use crate::gpu::kernel::{Access, Launch, WarpOp, Workload};
+    use crate::mem::RegionId;
+
+    /// Sequential streaming reader at one page per op.
+    struct Stream {
+        warps: usize,
+        reads_per_warp: usize,
+        region: Option<RegionId>,
+        launched: bool,
+        state: Vec<usize>,
+    }
+
+    impl Stream {
+        fn new(warps: usize, reads: usize) -> Self {
+            Self {
+                warps,
+                reads_per_warp: reads,
+                region: None,
+                launched: false,
+                state: vec![0; warps],
+            }
+        }
+    }
+
+    impl Workload for Stream {
+        fn name(&self) -> &str {
+            "gpuvm-stream"
+        }
+        fn setup(&mut self, hm: &mut HostMemory) {
+            let bytes = (self.warps * self.reads_per_warp) as u64 * 4096;
+            self.region = Some(hm.register("d", bytes));
+        }
+        fn next_kernel(&mut self) -> Option<Launch> {
+            if self.launched {
+                return None;
+            }
+            self.launched = true;
+            Some(Launch {
+                warps: self.warps,
+                tag: 0,
+            })
+        }
+        fn next_op(&mut self, warp: usize) -> WarpOp {
+            let s = self.state[warp];
+            if s >= self.reads_per_warp {
+                return WarpOp::Done;
+            }
+            self.state[warp] += 1;
+            let idx = (warp * self.reads_per_warp + s) as u64;
+            WarpOp::Access(vec![Access::Seq {
+                region: self.region.unwrap(),
+                start: idx * 4096,
+                len: 4096,
+                write: false,
+            }])
+        }
+    }
+
+    fn cfg(policy: PrefetchPolicy) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpu.sms = 2;
+        c.gpu.warps_per_sm = 1;
+        c.gpuvm.page_size = 4096;
+        c.gpu.mem_bytes = 8 << 20;
+        c.gpuvm.num_qps = 16;
+        c.gpuvm.prefetch_policy = policy;
+        c
+    }
+
+    fn stream_run(policy: PrefetchPolicy) -> Metrics {
+        let c = cfg(policy);
+        let mut w = Stream::new(2, 64);
+        let mut mem = GpuVmSystem::new(&c);
+        run(&c, &mut w, &mut mem).unwrap().metrics
+    }
+
+    #[test]
+    fn no_policy_means_every_page_faults() {
+        let m = stream_run(PrefetchPolicy::None);
+        assert_eq!(m.faults, 128);
+        assert_eq!(m.prefetched_pages, 0);
+        assert_eq!(m.prefetch_hits, 0);
+        assert_eq!(m.bytes_in, 128 * 4096);
+    }
+
+    #[test]
+    fn stride_policy_hides_faults_on_streaming() {
+        let m = stream_run(PrefetchPolicy::Stride);
+        assert!(m.prefetched_pages > 0, "stride must speculate");
+        assert!(m.prefetch_hits > 0, "sequential stream uses its prefetches");
+        assert!(
+            m.faults < 128,
+            "prefetch must absorb leader faults: {} of 128 pages",
+            m.faults
+        );
+        // Every transfer is either a demand fetch or a counted prefetch.
+        assert_eq!(m.bytes_in, (m.faults + m.prefetched_pages) * 4096);
+        assert!(m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages);
+    }
+
+    #[test]
+    fn fixed_policy_rounds_faults_up_to_groups() {
+        let m = stream_run(PrefetchPolicy::Fixed);
+        // 128 sequential pages = 8 groups of 16: one leader fault each
+        // brings the other 15 along (modulo warp interleaving).
+        assert!(m.faults < 128);
+        assert!(m.prefetched_pages > 0);
+        assert!(m.prefetch_hits > 0);
+        assert_eq!(m.bytes_in, (m.faults + m.prefetched_pages) * 4096);
+    }
+
+    #[test]
+    fn density_policy_promotes_dense_groups() {
+        let m = stream_run(PrefetchPolicy::Density);
+        assert!(m.prefetched_pages > 0, "dense stream must promote");
+        assert!(m.faults < 128);
+        assert!(m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages);
+    }
+
+    #[test]
+    fn speculation_survives_oversubscription() {
+        // Working set 512 KB, GPU memory 128 KB: heavy eviction churn
+        // must keep accounting consistent and the run terminating.
+        for policy in PrefetchPolicy::all() {
+            let mut c = cfg(policy);
+            c.gpu.mem_bytes = 128 << 10;
+            let mut w = Stream::new(2, 64);
+            let mut mem = GpuVmSystem::new(&c);
+            let r = run(&c, &mut w, &mut mem).unwrap();
+            mem.check_invariants().unwrap();
+            let m = &r.metrics;
+            assert_eq!(
+                m.bytes_in,
+                (m.faults + m.prefetched_pages) * 4096,
+                "{policy:?}"
+            );
+            assert!(
+                m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages,
+                "{policy:?}: {} + {} > {}",
+                m.prefetch_hits,
+                m.prefetch_wasted,
+                m.prefetched_pages
+            );
+        }
     }
 }

@@ -37,6 +37,7 @@ pub mod mem;
 pub mod memsys;
 pub mod metrics;
 pub mod pcie;
+pub mod prefetch;
 pub mod rnic;
 pub mod runtime;
 pub mod sim;

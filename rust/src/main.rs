@@ -17,6 +17,7 @@ use anyhow::Result;
 use gpuvm::apps::{BuildOpts, WorkloadSpec};
 use gpuvm::config::SystemConfig;
 use gpuvm::coordinator::{backend, report, Session};
+use gpuvm::prefetch::PrefetchPolicy;
 use gpuvm::util::bench::{fmt_bytes, fmt_ns};
 use gpuvm::util::cli::Args;
 
@@ -54,16 +55,18 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--eviction fifo|fifo-strict|random] [--fault-batch N]
-           [--scale F] [--src V]
+           [--prefetch POLICY] [--prefetch-degree N] [--scale F] [--src V]
   compare  same flags; runs gpuvm vs uvm and prints the speedup
   sweep    --app S [--app S2 ...] [--mem B1,B2,..] [--nics 1,2]
            [--page-sizes 4k,8k] [--gpu-mems 16m,32m] [--qp-counts 16,48,84]
-           [--threads N] [--csv FILE] [--json FILE]
+           [--prefetch none,fixed,density] [--threads N]
+           [--csv FILE] [--json FILE]
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
-  list     apps, backends, and AOT artifacts
+  list     apps, backends, prefetch policies, and AOT artifacts
   info     resolved system configuration
 apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp (:GU/:GK/:FS/:MO[:naive]) q1..q5[@ROWS]
-backends: gpuvm uvm uvm-memadvise ideal gdr subway rapids";
+backends: gpuvm uvm uvm-memadvise ideal gdr subway rapids
+prefetch: none fixed stride density history";
 
 fn config_from(args: &Args) -> Result<SystemConfig> {
     let mut cfg = SystemConfig::default();
@@ -79,7 +82,22 @@ fn opts_from(args: &Args, cfg: &SystemConfig) -> Result<BuildOpts> {
     Ok(o)
 }
 
+/// `--prefetch a,b` is a sweep list; `run`/`compare` take one policy.
+/// (`apply_args` skips list values, so without this check they would be
+/// silently dropped.)
+fn reject_prefetch_list(args: &Args) -> Result<()> {
+    if let Some(p) = args.get("prefetch") {
+        anyhow::ensure!(
+            !p.contains(','),
+            "--prefetch takes a single policy here (got '{p}'); \
+             sweep policies with `gpuvm sweep --prefetch {p}`"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
+    reject_prefetch_list(args)?;
     let cfg = config_from(args)?;
     let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
     let b = backend::lookup(args.get_or("mem", "gpuvm"))?;
@@ -89,6 +107,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
+    reject_prefetch_list(args)?;
     let cfg = config_from(args)?;
     let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
     let opts = opts_from(args, &cfg)?;
@@ -170,6 +189,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?;
         session = session.sweep_qps(qs);
     }
+    let prefetch = list_flag(args, "prefetch");
+    if !prefetch.is_empty() {
+        // Always sweep the axis when the flag is present (a one-policy
+        // axis degenerates to the plain run), so list values that
+        // collapse to a single policy — `--prefetch stride,` — are
+        // still honored rather than silently dropped by `apply_args`.
+        let ps: Vec<PrefetchPolicy> = prefetch
+            .iter()
+            .map(|s| PrefetchPolicy::parse(s))
+            .collect::<Result<_>>()?;
+        session = session.sweep_prefetch(ps);
+    }
     if args.has("threads") {
         session = session.threads(args.get_usize("threads", 1)?);
     }
@@ -179,17 +210,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let reports = session.run_all()?;
 
     println!(
-        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>12} {:>9} {:>10} {:>6}",
-        "backend", "workload", "nics", "page", "gpu-mem", "time", "faults", "moved", "amp"
+        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>12} {:>9} {:>10} {:>6}",
+        "backend", "workload", "nics", "page", "gpu-mem", "prefetch", "time", "faults", "moved",
+        "amp"
     );
     for r in &reports {
         println!(
-            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>12} {:>9} {:>10} {:>5.2}×",
+            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>12} {:>9} {:>10} {:>5.2}×",
             r.backend,
             r.workload,
             r.nics,
             fmt_bytes(r.page_size),
             fmt_bytes(r.gpu_mem_bytes),
+            r.prefetch,
             fmt_ns(r.finish_ns),
             r.faults,
             fmt_bytes(r.bytes_in),
@@ -288,6 +321,10 @@ fn cmd_list() -> Result<()> {
     for b in backend::registry() {
         println!("  {:<14} {}", b.name(), b.describe());
     }
+    println!("prefetch policies (--prefetch, both paged backends):");
+    for p in PrefetchPolicy::all() {
+        println!("  {:<14} {}", p.name(), p.describe());
+    }
     match gpuvm::runtime::Runtime::load_default() {
         Ok(rt) => println!("artifacts ({}): {:?}", rt.dir().display(), rt.names()),
         Err(_) => println!("artifacts: none built (run `make artifacts`)"),
@@ -296,6 +333,7 @@ fn cmd_list() -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    reject_prefetch_list(args)?;
     let cfg = config_from(args)?;
     println!("{cfg:#?}");
     println!("total hardware warps: {}", cfg.total_warps());

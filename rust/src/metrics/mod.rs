@@ -29,6 +29,16 @@ pub struct Metrics {
     pub eviction_waits: u64,
     /// Pages that were evicted and later re-fetched (redundant transfer).
     pub refetches: u64,
+    /// Speculative transfer units issued by the prefetch policy
+    /// (GPUVM: extra pages posted to the RNIC; UVM: ride-along group
+    /// pages for `fixed`, speculative fault-buffer entries otherwise).
+    pub prefetched_pages: u64,
+    /// Prefetched pages later touched by the application
+    /// (prefetched-then-used; always ≤ `prefetched_pages`).
+    pub prefetch_hits: u64,
+    /// Prefetched pages evicted without ever being touched
+    /// (`prefetch_hits + prefetch_wasted ≤ prefetched_pages`).
+    pub prefetch_wasted: u64,
     /// Doorbell rings.
     pub doorbells: u64,
     /// Work requests posted to RNIC queues.
@@ -92,6 +102,15 @@ impl Metrics {
         (self.bytes_in + self.bytes_out) as f64 / self.useful_bytes as f64
     }
 
+    /// Prefetch accuracy so far: prefetched-then-used over issued.
+    /// (Pages still resident and untouched count against accuracy.)
+    pub fn prefetch_accuracy(&self) -> f64 {
+        if self.prefetched_pages == 0 {
+            return 0.0;
+        }
+        self.prefetch_hits as f64 / self.prefetched_pages as f64
+    }
+
     /// Fault hit rate = hits / (hits + faults + coalesced).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.faults + self.coalesced_faults;
@@ -112,6 +131,9 @@ impl Metrics {
         self.evictions += other.evictions;
         self.eviction_waits += other.eviction_waits;
         self.refetches += other.refetches;
+        self.prefetched_pages += other.prefetched_pages;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_wasted += other.prefetch_wasted;
         self.doorbells += other.doorbells;
         self.work_requests += other.work_requests;
         self.stall_ns += other.stall_ns;

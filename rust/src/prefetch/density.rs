@@ -1,0 +1,160 @@
+//! The `density` policy: fault-density tree promotion.
+//!
+//! Models the NVIDIA-UVM driver's prefetch tree: faults are counted per
+//! 64 KB group and per 2 MB block of the virtual address space. A group
+//! whose fault count crosses a threshold is *promoted* — the rest of
+//! its pages are prefetched in one go (the 4 KB → 64 KB escalation).
+//! Once enough groups inside one block have been promoted, the whole
+//! block is fetched (the 64 KB → 2 MB escalation). Sparse access never
+//! crosses the thresholds, so — unlike `fixed` — cold neighbourhoods
+//! are left on the host.
+//!
+//! Geometry follows the same constants the UVM model uses
+//! (`uvm.prefetch_size`, `uvm.evict_block`); thresholds are a quarter
+//! of the node's children, minimum 2 — dense-enough, not merely
+//! touched.
+
+use super::{FaultEvent, Prefetcher};
+use crate::config::SystemConfig;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+
+/// (gpu, region, node index) — one tree node's identity.
+type NodeKey = (usize, u32, u64);
+
+pub struct DensityPrefetcher {
+    group_pages: u64,
+    groups_per_block: u64,
+    group_threshold: u32,
+    block_threshold: u32,
+    /// Demand faults seen per 64 KB group.
+    group_faults: FxHashMap<NodeKey, u32>,
+    /// Groups already promoted (emit once).
+    promoted_groups: FxHashSet<NodeKey>,
+    /// Promoted groups per 2 MB block.
+    block_density: FxHashMap<NodeKey, u32>,
+    /// Blocks already escalated (emit once).
+    promoted_blocks: FxHashSet<NodeKey>,
+}
+
+impl DensityPrefetcher {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let group_pages = super::fixed::pages_per_group(cfg);
+        let groups_per_block = super::fixed::groups_per_block(cfg);
+        Self {
+            group_pages,
+            groups_per_block,
+            group_threshold: (group_pages / 4).max(2) as u32,
+            block_threshold: (groups_per_block / 4).max(2) as u32,
+            group_faults: FxHashMap::default(),
+            promoted_groups: FxHashSet::default(),
+            block_density: FxHashMap::default(),
+            promoted_blocks: FxHashSet::default(),
+        }
+    }
+
+    fn emit_range(ev: &FaultEvent, start: u64, end: u64, out: &mut Vec<u64>) {
+        for p in start..end.min(ev.region_pages) {
+            if p != ev.page_in_region {
+                out.push(p);
+            }
+        }
+    }
+}
+
+impl Prefetcher for DensityPrefetcher {
+    fn name(&self) -> &'static str {
+        "density"
+    }
+
+    fn on_fault(&mut self, ev: &FaultEvent, out: &mut Vec<u64>) {
+        let group = ev.page_in_region / self.group_pages;
+        let gk: NodeKey = (ev.gpu, ev.region.0, group);
+        let count = self.group_faults.entry(gk).or_insert(0);
+        *count += 1;
+        if *count < self.group_threshold || !self.promoted_groups.insert(gk) {
+            return;
+        }
+        // 4 KB → 64 KB: the group is dense, fetch the rest of it.
+        let gstart = group * self.group_pages;
+        Self::emit_range(ev, gstart, gstart + self.group_pages, out);
+        // Propagate the promotion up the tree.
+        let block = group / self.groups_per_block;
+        let bk: NodeKey = (ev.gpu, ev.region.0, block);
+        let dense = self.block_density.entry(bk).or_insert(0);
+        *dense += 1;
+        if *dense >= self.block_threshold && self.promoted_blocks.insert(bk) {
+            // 64 KB → 2 MB: escalate to the whole block.
+            let bstart = block * self.groups_per_block * self.group_pages;
+            let bend = bstart + self.groups_per_block * self.group_pages;
+            Self::emit_range(ev, bstart, bend, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::test_event;
+
+    fn policy() -> DensityPrefetcher {
+        let mut c = SystemConfig::default();
+        c.gpuvm.page_size = 4096;
+        // 16 pages / group, 32 groups / block; thresholds 4 and 8.
+        DensityPrefetcher::new(&c)
+    }
+
+    #[test]
+    fn sparse_faults_stay_below_threshold() {
+        let mut p = policy();
+        let mut out = Vec::new();
+        // One fault in each of many distinct groups: never dense.
+        for g in 0..40 {
+            p.on_fault(&test_event(g * 16, 4096, 0), &mut out);
+        }
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn dense_group_is_promoted_once() {
+        let mut p = policy();
+        let mut out = Vec::new();
+        for page in 32..36 {
+            p.on_fault(&test_event(page, 4096, 0), &mut out);
+        }
+        // Fourth fault in group 2 crosses the threshold: rest of 32..48.
+        assert_eq!(out.len(), 15);
+        assert!(out.iter().all(|&c| (32..48).contains(&c) && c != 35));
+        // Further faults in the same group don't re-emit.
+        out.clear();
+        p.on_fault(&test_event(36, 4096, 0), &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn enough_dense_groups_escalate_to_the_block() {
+        let mut p = policy();
+        let mut out = Vec::new();
+        // Make 8 groups of block 0 dense (threshold = 32/4 = 8).
+        for g in 0..8u64 {
+            for k in 0..4u64 {
+                out.clear();
+                p.on_fault(&test_event(g * 16 + k, 4096, 0), &mut out);
+            }
+        }
+        // The last promotion also fetched the whole 2 MB block
+        // (512 pages) minus the already-emitted group and the fault.
+        assert!(out.len() > 400, "block escalation missing: {}", out.len());
+        assert!(out.iter().all(|&c| c < 512));
+    }
+
+    #[test]
+    fn promotion_clips_at_region_tail() {
+        let mut p = policy();
+        let mut out = Vec::new();
+        // Region of 20 pages; group 1 holds pages 16..20 only.
+        for page in 16..20 {
+            p.on_fault(&test_event(page, 20, 0), &mut out);
+        }
+        assert!(out.iter().all(|&c| c < 20), "{out:?}");
+    }
+}

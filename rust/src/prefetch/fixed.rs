@@ -1,0 +1,88 @@
+//! The `fixed` policy: the classic driver heuristic, extracted.
+//!
+//! Every fault is rounded up to an aligned group of
+//! `uvm.prefetch_size` bytes (64 KB by default): the faulting page's
+//! group-mates are the prefetch candidates. This is exactly the
+//! speculative-prefetch behaviour the UVM model used to hard-code as
+//! `pages_per_group` / `groups_per_block` arithmetic; the geometry
+//! helpers below are now the single source of that math — the UVM
+//! model derives its fault-group and VABlock shapes from them.
+
+use super::{FaultEvent, Prefetcher};
+use crate::config::SystemConfig;
+
+/// Pages per fixed prefetch group (64 KB / page size by default).
+pub fn pages_per_group(cfg: &SystemConfig) -> u64 {
+    (cfg.uvm.prefetch_size / cfg.gpuvm.page_size).max(1)
+}
+
+/// Fixed groups per eviction VABlock (2 MB / 64 KB by default).
+pub fn groups_per_block(cfg: &SystemConfig) -> u64 {
+    (cfg.uvm.evict_block / cfg.uvm.prefetch_size).max(1)
+}
+
+pub struct FixedPrefetcher {
+    pages_per_group: u64,
+}
+
+impl FixedPrefetcher {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            pages_per_group: pages_per_group(cfg),
+        }
+    }
+}
+
+impl Prefetcher for FixedPrefetcher {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn on_fault(&mut self, ev: &FaultEvent, out: &mut Vec<u64>) {
+        let start = (ev.page_in_region / self.pages_per_group) * self.pages_per_group;
+        let end = (start + self.pages_per_group).min(ev.region_pages);
+        for p in start..end {
+            if p != ev.page_in_region {
+                out.push(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::test_event;
+
+    fn cfg_4k() -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpuvm.page_size = 4096;
+        c
+    }
+
+    #[test]
+    fn geometry_matches_the_historic_constants() {
+        let cfg = cfg_4k();
+        assert_eq!(pages_per_group(&cfg), 16); // 64 KB / 4 KB
+        assert_eq!(groups_per_block(&cfg), 32); // 2 MB / 64 KB
+    }
+
+    #[test]
+    fn emits_group_mates_excluding_the_fault() {
+        let mut p = FixedPrefetcher::new(&cfg_4k());
+        let mut out = Vec::new();
+        p.on_fault(&test_event(18, 1024, 0), &mut out);
+        // Page 18 lives in group 1 = pages 16..32.
+        assert_eq!(out.len(), 15);
+        assert!(out.iter().all(|&c| (16..32).contains(&c) && c != 18));
+    }
+
+    #[test]
+    fn region_tail_group_is_clipped() {
+        let mut p = FixedPrefetcher::new(&cfg_4k());
+        let mut out = Vec::new();
+        // Region of 20 pages: the second group holds only pages 16..20.
+        p.on_fault(&test_event(17, 20, 0), &mut out);
+        assert_eq!(out, vec![16, 18, 19]);
+    }
+}

@@ -1,0 +1,130 @@
+//! The `history` policy: a first-order Markov table over fault
+//! successors (the table-driven sibling of the learned fault-history
+//! prefetchers in the related work).
+//!
+//! Faults are bucketed into 64 KB groups; for every observed transition
+//! `prev group → next group` a counter is bumped. On each fault the
+//! policy looks up the current group's most frequent successor and — if
+//! it has been seen at least twice — prefetches up to `degree` pages
+//! from the start of that group. Irregular-but-repeating access (graph
+//! iterations re-walking the same frontier order, query re-scans) is
+//! where this wins; on a first cold pass it stays silent.
+
+use super::{FaultEvent, Prefetcher};
+use crate::config::SystemConfig;
+use crate::util::fxhash::FxHashMap;
+
+/// (region, group) — one node of the transition graph.
+type Node = (u32, u64);
+
+pub struct HistoryPrefetcher {
+    group_pages: u64,
+    degree: usize,
+    /// Last fault group seen per GPU.
+    last: FxHashMap<usize, Node>,
+    /// Successor counts per node.
+    table: FxHashMap<Node, FxHashMap<Node, u32>>,
+}
+
+impl HistoryPrefetcher {
+    pub fn new(cfg: &SystemConfig, degree: usize) -> Self {
+        Self {
+            group_pages: super::fixed::pages_per_group(cfg),
+            degree,
+            last: FxHashMap::default(),
+            table: FxHashMap::default(),
+        }
+    }
+}
+
+impl Prefetcher for HistoryPrefetcher {
+    fn name(&self) -> &'static str {
+        "history"
+    }
+
+    fn on_fault(&mut self, ev: &FaultEvent, out: &mut Vec<u64>) {
+        let cur: Node = (ev.region.0, ev.page_in_region / self.group_pages);
+        if let Some(prev) = self.last.insert(ev.gpu, cur) {
+            if prev != cur {
+                *self
+                    .table
+                    .entry(prev)
+                    .or_default()
+                    .entry(cur)
+                    .or_insert(0) += 1;
+            }
+        }
+        let Some(succs) = self.table.get(&cur) else {
+            return;
+        };
+        // Deterministic argmax: highest count, ties broken by node id.
+        let Some((&(reg, group), &count)) = succs
+            .iter()
+            .max_by_key(|(node, count)| (**count, std::cmp::Reverse(**node)))
+        else {
+            return;
+        };
+        // Only replay confident successors within the faulting region
+        // (its bounds are the only ones the event carries).
+        if count < 2 || reg != ev.region.0 {
+            return;
+        }
+        let start = group * self.group_pages;
+        let end = (start + self.group_pages).min(ev.region_pages);
+        for p in (start..end).take(self.degree) {
+            if p != ev.page_in_region {
+                out.push(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::test_event;
+
+    fn policy(degree: usize) -> HistoryPrefetcher {
+        let mut c = SystemConfig::default();
+        c.gpuvm.page_size = 4096; // 16 pages per group
+        HistoryPrefetcher::new(&c, degree)
+    }
+
+    #[test]
+    fn repeated_transition_is_replayed() {
+        let mut p = policy(4);
+        let mut out = Vec::new();
+        // Walk group 0 → group 5 twice (pages 0 and 80).
+        p.on_fault(&test_event(0, 4096, 0), &mut out);
+        p.on_fault(&test_event(80, 4096, 0), &mut out);
+        p.on_fault(&test_event(0, 4096, 0), &mut out);
+        p.on_fault(&test_event(80, 4096, 0), &mut out);
+        assert!(out.is_empty(), "one observation is not confidence");
+        // Third visit to group 0: 0 → 5 has been seen twice.
+        p.on_fault(&test_event(1, 4096, 0), &mut out);
+        assert_eq!(out, vec![80, 81, 82, 83]);
+    }
+
+    #[test]
+    fn cold_stream_stays_silent() {
+        let mut p = policy(8);
+        let mut out = Vec::new();
+        for g in 0..20 {
+            p.on_fault(&test_event(g * 16, 4096, 0), &mut out);
+        }
+        assert!(out.is_empty(), "no transition repeats on a cold pass");
+    }
+
+    #[test]
+    fn replay_clips_at_region_tail() {
+        let mut p = policy(16);
+        let mut out = Vec::new();
+        // Region of 20 pages: group 1 is pages 16..20.
+        for _ in 0..3 {
+            p.on_fault(&test_event(0, 20, 0), &mut out);
+            p.on_fault(&test_event(17, 20, 0), &mut out);
+        }
+        assert!(!out.is_empty(), "transition 0→1 repeats");
+        assert!(out.iter().all(|&c| c < 20), "{out:?}");
+    }
+}

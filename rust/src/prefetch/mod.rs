@@ -1,0 +1,244 @@
+//! Pluggable prefetch & migration policies.
+//!
+//! The paper's UVM baseline loses to GPUVM largely because of the
+//! driver's rigid speculative-prefetch heuristic (§2, Fig 2): every
+//! 4 KB fault drags a fixed 64 KB group across PCIe whether or not the
+//! neighbours will ever be touched. Related work (learned fault-history
+//! prefetchers, smart oversubscription managers) shows the *policy* is
+//! the dominant lever — so this module turns it into one.
+//!
+//! A [`Prefetcher`] observes the demand-fault stream (page, warp,
+//! region, timestamp) and proposes candidate pages to piggyback onto
+//! in-flight migrations. Both paged memory systems consume it:
+//!
+//! - `gpuvm/runtime.rs` turns candidates into extra RDMA work requests
+//!   that ride the RNIC queue pairs (speculative fetches with no
+//!   waiters);
+//! - `uvm/mod.rs` turns candidates into speculative fault-buffer
+//!   entries that retire through the same driver batches, and the
+//!   `fixed` policy *is* the extracted 64 KB-group behaviour the UVM
+//!   model used to hard-code.
+//!
+//! Policies (`PrefetchPolicy`): `none`, `fixed` (the classic driver
+//! heuristic), `stride` (per-warp stride detection for streaming
+//! va/mvt/query patterns), `density` (NVIDIA-UVM-style tree promotion:
+//! escalate 4 KB → 64 KB → 2 MB transfers as fault density in a VA
+//! block grows), and `history` (first-order Markov table over fault
+//! successors).
+//!
+//! Accuracy accounting lives in [`crate::metrics::Metrics`]:
+//! `prefetched_pages` (speculative transfer units issued),
+//! `prefetch_hits` (prefetched then used), `prefetch_wasted`
+//! (prefetched then evicted untouched). Every run upholds
+//! `prefetch_hits + prefetch_wasted ≤ prefetched_pages`.
+
+pub mod density;
+pub mod fixed;
+pub mod history;
+pub mod stride;
+
+use crate::config::SystemConfig;
+use crate::mem::RegionId;
+use crate::sim::SimTime;
+use anyhow::Result;
+
+/// Selectable prefetch policy (config keys `[gpuvm]`/`[uvm]`
+/// `prefetch_policy`, CLI `--prefetch`, `Session::sweep_prefetch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchPolicy {
+    /// No speculation: move exactly the faulting page.
+    None,
+    /// The classic driver heuristic: round every fault up to a fixed
+    /// aligned group (`uvm.prefetch_size`, 64 KB by default).
+    Fixed,
+    /// Per-warp stride detection: after two consecutive faults with the
+    /// same non-zero stride, run ahead of the warp by `prefetch_degree`
+    /// pages.
+    Stride,
+    /// Fault-density tree promotion: count faults per 64 KB group and
+    /// per 2 MB block; promote a group once it is dense, escalate to
+    /// the whole block once enough of its groups are.
+    Density,
+    /// First-order Markov table over fault-group successors; replays
+    /// the most probable successor group.
+    History,
+}
+
+impl PrefetchPolicy {
+    /// Parse a policy name (the `EvictionPolicy::parse` counterpart);
+    /// unknown names list the valid set.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Self::None,
+            "fixed" => Self::Fixed,
+            "stride" => Self::Stride,
+            "density" => Self::Density,
+            "history" => Self::History,
+            _ => anyhow::bail!(
+                "unknown prefetch policy '{s}' (valid: {})",
+                Self::names().join("|")
+            ),
+        })
+    }
+
+    /// Registry key, round-tripping through [`PrefetchPolicy::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Fixed => "fixed",
+            Self::Stride => "stride",
+            Self::Density => "density",
+            Self::History => "history",
+        }
+    }
+
+    /// One-line description for `gpuvm list`.
+    pub fn describe(self) -> &'static str {
+        match self {
+            Self::None => "demand paging only; move exactly the faulting page",
+            Self::Fixed => "round each fault up to a fixed 64 KB group (the driver heuristic)",
+            Self::Stride => "per-warp stride detector; runs ahead of streaming access",
+            Self::Density => "fault-density tree promotion (4 KB → 64 KB → 2 MB escalation)",
+            Self::History => "Markov table over fault successors; replays likely follow-ups",
+        }
+    }
+
+    /// Every registered policy, in display order.
+    pub fn all() -> [Self; 5] {
+        [
+            Self::None,
+            Self::Fixed,
+            Self::Stride,
+            Self::Density,
+            Self::History,
+        ]
+    }
+
+    /// Registered policy names, in display order.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|p| p.name()).collect()
+    }
+}
+
+/// One demand fault, as observed by a policy. Page coordinates are
+/// region-relative indices in units of the run's page size
+/// (`gpuvm.page_size`), so policies never see global addresses and can
+/// be bounds-checked against `region_pages` alone.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    pub gpu: usize,
+    pub region: RegionId,
+    /// Faulting page, relative to the region base.
+    pub page_in_region: u64,
+    /// Total pages in the region (candidates must stay below this).
+    pub region_pages: u64,
+    /// Hardware warp slot that faulted (stride streams are per-warp).
+    pub warp: u32,
+    pub write: bool,
+    pub now: SimTime,
+}
+
+/// A prefetch policy: observes the demand-fault stream and emits
+/// candidate pages (region-relative indices) to piggyback onto
+/// in-flight migrations.
+///
+/// Contract: every candidate pushed into `out` lies in
+/// `0..ev.region_pages` and refers to `ev.region`. Callers dedup
+/// against residency and in-flight state, so duplicates and the
+/// faulting page itself are allowed (and dropped) — but out-of-region
+/// indices are a policy bug (see `rust/tests/properties.rs`).
+pub trait Prefetcher {
+    fn name(&self) -> &'static str;
+
+    /// Observe one demand fault; append candidate pages to `out`.
+    fn on_fault(&mut self, ev: &FaultEvent, out: &mut Vec<u64>);
+}
+
+/// The `none` policy: never speculate.
+struct NonePrefetcher;
+
+impl Prefetcher for NonePrefetcher {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn on_fault(&mut self, _ev: &FaultEvent, _out: &mut Vec<u64>) {}
+}
+
+/// Build a policy instance for one run. `degree` caps how far the
+/// stride/history policies run ahead per fault (density promotes whole
+/// groups/blocks and is bounded by its own geometry instead).
+pub fn build(policy: PrefetchPolicy, cfg: &SystemConfig, degree: usize) -> Box<dyn Prefetcher> {
+    match policy {
+        PrefetchPolicy::None => Box::new(NonePrefetcher),
+        PrefetchPolicy::Fixed => Box::new(fixed::FixedPrefetcher::new(cfg)),
+        PrefetchPolicy::Stride => Box::new(stride::StridePrefetcher::new(degree)),
+        PrefetchPolicy::Density => Box::new(density::DensityPrefetcher::new(cfg)),
+        PrefetchPolicy::History => Box::new(history::HistoryPrefetcher::new(cfg, degree)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_event(page_in_region: u64, region_pages: u64, warp: u32) -> FaultEvent {
+    FaultEvent {
+        gpu: 0,
+        region: RegionId(0),
+        page_in_region,
+        region_pages,
+        warp,
+        write: false,
+        now: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in PrefetchPolicy::all() {
+            assert_eq!(PrefetchPolicy::parse(p.name()).unwrap(), p);
+            assert!(!p.describe().is_empty());
+        }
+        assert_eq!(PrefetchPolicy::names().len(), PrefetchPolicy::all().len());
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_valid_set() {
+        let err = PrefetchPolicy::parse("clairvoyant").unwrap_err().to_string();
+        for name in ["none", "fixed", "stride", "density", "history"] {
+            assert!(err.contains(name), "'{name}' missing from: {err}");
+        }
+    }
+
+    #[test]
+    fn none_policy_never_speculates() {
+        let cfg = SystemConfig::default();
+        let mut p = build(PrefetchPolicy::None, &cfg, 8);
+        let mut out = Vec::new();
+        for i in 0..64 {
+            p.on_fault(&test_event(i, 128, 0), &mut out);
+        }
+        assert!(out.is_empty());
+        assert_eq!(p.name(), "none");
+    }
+
+    #[test]
+    fn every_policy_builds_and_stays_in_bounds() {
+        let mut cfg = SystemConfig::default();
+        cfg.gpuvm.page_size = 4096;
+        for policy in PrefetchPolicy::all() {
+            let mut p = build(policy, &cfg, 8);
+            let mut out = Vec::new();
+            // A short sequential burst near the region tail exercises
+            // the clipping paths of every policy.
+            for i in 90..100 {
+                p.on_fault(&test_event(i, 100, 0), &mut out);
+            }
+            assert!(
+                out.iter().all(|&c| c < 100),
+                "{policy:?} proposed out-of-region candidates: {out:?}"
+            );
+        }
+    }
+}

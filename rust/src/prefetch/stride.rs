@@ -1,0 +1,146 @@
+//! The `stride` policy: per-warp stride detection.
+//!
+//! Streaming kernels (va, mvt row walks, query column scans) fault at a
+//! constant per-warp stride — sequential for row-major streams, one
+//! row-length apart for column walks. A tiny per-warp table tracks the
+//! last faulting page and the last observed delta; once the same
+//! non-zero delta repeats (two confirmations), the policy runs ahead of
+//! the warp by `degree` strides. Unlike `fixed`, the lookahead is
+//! *directional*: a column walk prefetches the next column entries, not
+//! 15 never-touched row neighbours.
+
+use super::{FaultEvent, Prefetcher};
+use crate::util::fxhash::FxHashMap;
+
+#[derive(Debug, Clone, Copy)]
+struct StreamState {
+    last: i64,
+    stride: i64,
+    confidence: u8,
+}
+
+pub struct StridePrefetcher {
+    degree: usize,
+    /// One detector per (gpu, warp, region): kernels that walk several
+    /// arrays in lock-step (va touches A, B and C every op) keep an
+    /// independent stream per array instead of resetting on every
+    /// region switch.
+    streams: FxHashMap<(usize, u32, u32), StreamState>,
+}
+
+impl StridePrefetcher {
+    pub fn new(degree: usize) -> Self {
+        Self {
+            degree,
+            streams: FxHashMap::default(),
+        }
+    }
+}
+
+impl Prefetcher for StridePrefetcher {
+    fn name(&self) -> &'static str {
+        "stride"
+    }
+
+    fn on_fault(&mut self, ev: &FaultEvent, out: &mut Vec<u64>) {
+        let cur = ev.page_in_region as i64;
+        let e = self
+            .streams
+            .entry((ev.gpu, ev.warp, ev.region.0))
+            .or_insert(StreamState {
+                last: cur,
+                stride: 0,
+                confidence: 0,
+            });
+        let d = cur - e.last;
+        e.last = cur;
+        if d == 0 {
+            return;
+        }
+        if d == e.stride {
+            e.confidence = e.confidence.saturating_add(1);
+        } else {
+            e.stride = d;
+            e.confidence = 1;
+        }
+        if e.confidence >= 2 {
+            let mut next = cur;
+            for _ in 0..self.degree {
+                next += d;
+                if next < 0 || next as u64 >= ev.region_pages {
+                    break;
+                }
+                out.push(next as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::test_event;
+
+    #[test]
+    fn sequential_stream_triggers_lookahead() {
+        let mut p = StridePrefetcher::new(4);
+        let mut out = Vec::new();
+        p.on_fault(&test_event(10, 1000, 3), &mut out);
+        assert!(out.is_empty(), "first fault can't establish a stride");
+        p.on_fault(&test_event(11, 1000, 3), &mut out);
+        assert!(out.is_empty(), "one delta is not yet a confirmed stride");
+        p.on_fault(&test_event(12, 1000, 3), &mut out);
+        assert_eq!(out, vec![13, 14, 15, 16]);
+    }
+
+    #[test]
+    fn column_walk_stride_is_detected() {
+        let mut p = StridePrefetcher::new(3);
+        let mut out = Vec::new();
+        for k in 0..3 {
+            p.on_fault(&test_event(k * 17, 1000, 0), &mut out);
+        }
+        assert_eq!(out, vec![51, 68, 85]);
+    }
+
+    #[test]
+    fn warps_track_independent_streams() {
+        let mut p = StridePrefetcher::new(2);
+        let mut out = Vec::new();
+        // Interleaved faults from two warps with different strides.
+        for k in 0..4 {
+            p.on_fault(&test_event(k, 1000, 0), &mut out);
+            p.on_fault(&test_event(500 + 2 * k, 1000, 1), &mut out);
+        }
+        assert_eq!(out, vec![3, 4, 506, 508, 4, 5, 508, 510]);
+    }
+
+    #[test]
+    fn lookahead_clips_at_region_bounds() {
+        let mut p = StridePrefetcher::new(8);
+        let mut out = Vec::new();
+        for k in 0..4 {
+            p.on_fault(&test_event(94 + 2 * k, 102, 0), &mut out);
+        }
+        assert!(out.iter().all(|&c| c < 102), "{out:?}");
+        // Backward streams clip at zero.
+        out.clear();
+        let mut p = StridePrefetcher::new(8);
+        for k in 0..4 {
+            p.on_fault(&test_event(9 - 3 * k, 102, 0), &mut out);
+        }
+        assert!(out.iter().all(|&c| c < 102), "{out:?}");
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn same_page_refault_keeps_the_stream_alive() {
+        let mut p = StridePrefetcher::new(2);
+        let mut out = Vec::new();
+        p.on_fault(&test_event(5, 100, 0), &mut out);
+        p.on_fault(&test_event(6, 100, 0), &mut out);
+        p.on_fault(&test_event(6, 100, 0), &mut out); // duplicate (delta 0)
+        p.on_fault(&test_event(7, 100, 0), &mut out);
+        assert_eq!(out, vec![8, 9]);
+    }
+}

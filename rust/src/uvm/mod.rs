@@ -19,11 +19,15 @@ use crate::mem::{HostMemory, PageId, RegionId};
 use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId};
 use crate::metrics::Metrics;
 use crate::pcie::{Dir, Topology};
+use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
 use crate::sim::{ms, us, Engine, SimTime};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 use std::collections::VecDeque;
 
-/// A 64 KB fault/transfer group: (gpu, region, group index within region).
+/// A fault/transfer group: (gpu, region, group index within region).
+/// Under the default `fixed` prefetch policy a group is 64 KB (the
+/// driver's speculative-transfer unit); under every other policy the
+/// group is a single page and speculation is explicit.
 type GroupKey = (usize, u32, u64);
 
 #[derive(Debug, Default)]
@@ -35,6 +39,10 @@ struct GroupState {
     /// eviction picks the block of the least-recently-used group, but
     /// still throws out the *whole* 2 MB block — the paper's complaint).
     last_access: u64,
+    /// Bitmap of pages-in-group touched since arrival (bit 63 saturates
+    /// for giant groups). Pages that arrived but never set their bit
+    /// are wasted prefetch at eviction time.
+    touched: u64,
 }
 
 #[derive(Debug)]
@@ -42,6 +50,12 @@ struct PendingFault {
     waiters: Vec<SlotId>,
     write: bool,
     started: SimTime,
+    /// Policy-issued speculative transfer (no demand waiter yet): no
+    /// fault-latency sample, and a pre-arrival demand join counts as a
+    /// prefetch hit.
+    speculative: bool,
+    /// Pages-in-group bits demanded while the transfer was in flight.
+    touched: u64,
 }
 
 pub struct UvmSystem {
@@ -63,13 +77,32 @@ pub struct UvmSystem {
     next_token: u64,
     /// Logical access clock for the block-LRU.
     access_clock: u64,
+    /// Bytes one fault group transfers (the `fixed` policy's 64 KB, or
+    /// one bare page under the explicit-speculation policies). All
+    /// three transfer sites below use this — the prefetch math itself
+    /// lives in [`crate::prefetch::fixed`].
+    group_bytes: u64,
     pages_per_group: u64,
     groups_per_block: u64,
+    /// The pluggable policy; under page-granular geometry it emits
+    /// speculative fault-buffer entries, under `fixed` geometry the
+    /// grouping itself is the speculation.
+    prefetcher: Box<dyn Prefetcher>,
+    /// Reused candidate buffer.
+    pf_buf: Vec<u64>,
 }
 
 impl UvmSystem {
     pub fn new(cfg: &SystemConfig) -> Self {
-        let frames = (cfg.gpu.mem_bytes / cfg.uvm.prefetch_size).max(1) as usize;
+        // The transfer-group geometry is owned by the prefetch policy:
+        // `fixed` reproduces the driver's 64 KB speculative groups;
+        // every other policy works at page granularity and speculates
+        // explicitly through the fault buffer.
+        let group_bytes = match cfg.uvm.prefetch_policy {
+            PrefetchPolicy::Fixed => cfg.uvm.prefetch_size,
+            _ => cfg.gpuvm.page_size,
+        };
+        let frames = (cfg.gpu.mem_bytes / group_bytes).max(1) as usize;
         Self {
             topo: Topology::new(cfg),
             groups: FxHashMap::default(),
@@ -85,27 +118,97 @@ impl UvmSystem {
             transfers: FxHashMap::default(),
             next_token: 1,
             access_clock: 0,
-            pages_per_group: cfg.uvm.prefetch_size / cfg.gpuvm.page_size,
-            groups_per_block: cfg.uvm.evict_block / cfg.uvm.prefetch_size,
+            group_bytes,
+            pages_per_group: (group_bytes / cfg.gpuvm.page_size).max(1),
+            groups_per_block: (cfg.uvm.evict_block / group_bytes).max(1),
+            prefetcher: prefetch::build(cfg.uvm.prefetch_policy, cfg, cfg.uvm.prefetch_degree),
+            pf_buf: Vec::new(),
             cfg: cfg.clone(),
         }
     }
 
-    fn group_of(&self, hm: &HostMemory, gpu: usize, page: PageId) -> GroupKey {
+    /// Group of a page plus its touched-bitmap bit within the group.
+    fn group_and_bit(&self, hm: &HostMemory, gpu: usize, page: PageId) -> (GroupKey, u64) {
         let rid = hm
             .region_of_page(page)
             .expect("access to unregistered page");
         let base = hm.region(rid).base_page;
-        (gpu, rid.0, (page.0 - base) / self.pages_per_group.max(1))
+        let rel = page.0 - base;
+        let ppg = self.pages_per_group.max(1);
+        ((gpu, rid.0, rel / ppg), 1u64 << (rel % ppg).min(63))
     }
 
     fn region_read_mostly(&self, hm: &HostMemory, key: GroupKey) -> bool {
         hm.region(RegionId(key.1)).read_mostly
     }
 
+    /// Pages a group really spans (< `pages_per_group` at region tails).
+    fn group_span(&self, hm: &HostMemory, key: GroupKey) -> u64 {
+        let pages = hm.region(RegionId(key.1)).num_pages;
+        pages
+            .saturating_sub(key.2 * self.pages_per_group)
+            .min(self.pages_per_group)
+            .max(1)
+    }
+
     /// VABlock of a group.
     fn block_of(&self, key: GroupKey) -> (usize, u32, u64) {
         (key.0, key.1, key.2 / self.groups_per_block.max(1))
+    }
+
+    /// Page-granular geometry only: feed the leader fault to the policy
+    /// and append speculative entries to the fault buffer. They retire
+    /// through the same driver batches and transfer path as demand
+    /// faults — the piggyback the real driver does within a 64 KB
+    /// group, generalized to arbitrary policies.
+    #[allow(clippy::too_many_arguments)]
+    fn speculate(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        key: GroupKey,
+        slot: SlotId,
+        write: bool,
+        hm: &HostMemory,
+        m: &mut Metrics,
+    ) {
+        let region = RegionId(key.1);
+        let region_pages = hm.region(region).num_pages;
+        let ev = FaultEvent {
+            gpu,
+            region,
+            page_in_region: key.2,
+            region_pages,
+            warp: slot.0,
+            write,
+            now,
+        };
+        let mut buf = std::mem::take(&mut self.pf_buf);
+        buf.clear();
+        self.prefetcher.on_fault(&ev, &mut buf);
+        for &idx in &buf {
+            if idx >= region_pages {
+                continue; // defensive: policies are bounds-tested
+            }
+            let ck: GroupKey = (gpu, key.1, idx);
+            let resident = self.groups.get(&ck).map(|g| g.resident).unwrap_or(false);
+            if resident || self.pending.contains_key(&ck) {
+                continue;
+            }
+            m.prefetched_pages += 1;
+            self.pending.insert(
+                ck,
+                PendingFault {
+                    waiters: Vec::new(),
+                    write: false,
+                    started: now,
+                    speculative: true,
+                    touched: 0,
+                },
+            );
+            self.fault_buffer.push_back(ck);
+        }
+        self.pf_buf = buf;
     }
 
     fn schedule_driver(&mut self, now: SimTime, eng: &mut Engine<Ev>) {
@@ -127,7 +230,14 @@ impl UvmSystem {
     /// CAN unmap pages that GPU threads are actively touching (they just
     /// refault and replay) — so when every resident group is referenced,
     /// forced eviction thrashes rather than deadlocks.
-    fn evict_vablock(&mut self, now: SimTime, gpu: usize, force: bool, m: &mut Metrics) -> usize {
+    fn evict_vablock(
+        &mut self,
+        now: SimTime,
+        gpu: usize,
+        force: bool,
+        hm: &HostMemory,
+        m: &mut Metrics,
+    ) -> usize {
         // Least-recently-used resident group on this GPU → its block.
         let Some(victim) = self
             .fifo
@@ -147,6 +257,7 @@ impl UvmSystem {
             .collect();
         let mut freed = 0;
         for key in victims {
+            let span = self.group_span(hm, key);
             let g = self.groups.get_mut(&key).expect("fifo entry has state");
             if g.refcount > 0 && !force {
                 m.eviction_waits += 1;
@@ -157,15 +268,21 @@ impl UvmSystem {
             }
             g.resident = false;
             let dirty = std::mem::take(&mut g.dirty);
+            // Pages that arrived with this group but were never touched
+            // are wasted speculation (the paper's useless-64 KB story).
+            let cap = span.min(64) as u32;
+            let used = g.touched.count_ones().min(cap);
+            m.prefetch_wasted += (cap - used) as u64;
+            g.touched = 0;
             self.fifo.retain(|k| *k != key);
             self.evicted_once.insert(key);
             self.free_frames[gpu] += 1;
             freed += 1;
             m.evictions += 1;
             if dirty {
-                m.bytes_out += self.cfg.uvm.prefetch_size;
+                m.bytes_out += self.group_bytes;
                 let path = self.topo.path_direct(gpu, Dir::Out);
-                self.topo.transfer(now, self.cfg.uvm.prefetch_size, &path);
+                self.topo.transfer(now, self.group_bytes, &path);
             }
         }
         freed
@@ -196,16 +313,21 @@ impl MemorySystem for UvmSystem {
     ) -> AccessResult {
         let now = ctx.now;
         let t = now + self.cfg.uvm.tlb_hit_ns;
-        // Pages → 64 KB groups (dedup).
+        // Pages → fault groups (dedup), carrying each group's
+        // touched-page bits for prefetch-accuracy accounting.
         let hm: &HostMemory = &*ctx.hm;
-        let mut groups: Vec<(GroupKey, bool)> = pages
+        let mut groups: Vec<(GroupKey, bool, u64)> = pages
             .iter()
-            .map(|pa| (self.group_of(hm, gpu, pa.page), pa.write))
+            .map(|pa| {
+                let (key, bit) = self.group_and_bit(hm, gpu, pa.page);
+                (key, pa.write, bit)
+            })
             .collect();
-        groups.sort_by_key(|(k, w)| (*k, !*w));
+        groups.sort_by_key(|(k, w, _)| (*k, !*w));
         groups.dedup_by(|b, a| {
             if a.0 == b.0 {
                 a.1 |= b.1;
+                a.2 |= b.2;
                 true
             } else {
                 false
@@ -213,7 +335,7 @@ impl MemorySystem for UvmSystem {
         });
 
         let mut misses = 0u32;
-        for (key, write) in groups {
+        for (key, write, bits) in groups {
             self.access_clock += 1;
             let clock = self.access_clock;
             let resident = self.groups.get(&key).map(|g| g.resident).unwrap_or(false);
@@ -223,6 +345,10 @@ impl MemorySystem for UvmSystem {
                 g.refcount += 1;
                 g.dirty |= write;
                 g.last_access = clock;
+                // First touch of pages that arrived speculatively.
+                let fresh = bits & !g.touched;
+                g.touched |= bits;
+                ctx.m.prefetch_hits += fresh.count_ones() as u64;
                 self.holds.entry(slot).or_default().push(key);
                 continue;
             }
@@ -231,6 +357,18 @@ impl MemorySystem for UvmSystem {
                 ctx.m.coalesced_faults += 1;
                 p.waiters.push(slot);
                 p.write |= write;
+                // Pages demanded while their transfer is in flight are
+                // prefetched-then-used, whether they ride a demand-led
+                // fixed group or an explicit speculative entry (fresh
+                // bits exclude the leader's own pages).
+                let fresh = bits & !p.touched;
+                p.touched |= bits;
+                ctx.m.prefetch_hits += fresh.count_ones() as u64;
+                if std::mem::take(&mut p.speculative) {
+                    // First demand join: fault latency counts from the
+                    // miss, not from the speculative issue.
+                    p.started = now;
+                }
                 continue;
             }
             // New fault: GMMU writes the fault buffer, driver is poked.
@@ -238,16 +376,30 @@ impl MemorySystem for UvmSystem {
             if self.evicted_once.contains(&key) {
                 ctx.m.refetches += 1;
             }
+            if self.pages_per_group > 1 {
+                // Fixed-group geometry: the ride-along pages are the
+                // speculation (4 KB fault → 64 KB transfer). Region
+                // tails count only the pages that actually exist, like
+                // the GPUVM fixed policy.
+                ctx.m.prefetched_pages += self.group_span(hm, key) - 1;
+            }
             self.pending.insert(
                 key,
                 PendingFault {
                     waiters: vec![slot],
                     write,
                     started: now,
+                    speculative: false,
+                    touched: bits,
                 },
             );
             self.fault_buffer.push_back(key);
             self.schedule_driver(t + self.cfg.uvm.gmmu_fault_ns, &mut *ctx.eng);
+            if self.pages_per_group == 1 {
+                // Page-granular geometry: ask the policy for
+                // speculative groups to ride the same driver batches.
+                self.speculate(now, gpu, key, slot, write, hm, &mut *ctx.m);
+            }
         }
 
         if misses == 0 {
@@ -306,12 +458,12 @@ impl MemorySystem for UvmSystem {
                     // Make room (may evict a VABlock — the 2 MB hammer).
                     let mut spins = 0;
                     while self.free_frames[gpu] == 0 {
-                        if self.evict_vablock(t_done, gpu, false, &mut *ctx.m) == 0 {
+                        if self.evict_vablock(t_done, gpu, false, &*ctx.hm, &mut *ctx.m) == 0 {
                             spins += 1;
                             if spins > self.fifo.len().max(4) {
                                 // Everything resident is referenced:
                                 // thrash (forced unmap + replay).
-                                self.evict_vablock(t_done, gpu, true, &mut *ctx.m);
+                                self.evict_vablock(t_done, gpu, true, &*ctx.hm, &mut *ctx.m);
                                 break;
                             }
                         }
@@ -324,10 +476,10 @@ impl MemorySystem for UvmSystem {
                         continue;
                     }
                     self.free_frames[gpu] -= 1;
-                    // DMA the 64 KB group over the direct path.
+                    // DMA the fault group over the direct path.
                     let path = self.topo.path_direct(gpu, Dir::In);
-                    let arrive = self.topo.transfer(t_done, self.cfg.uvm.prefetch_size, &path);
-                    ctx.m.bytes_in += self.cfg.uvm.prefetch_size;
+                    let arrive = self.topo.transfer(t_done, self.group_bytes, &path);
+                    ctx.m.bytes_in += self.group_bytes;
                     let token = self.next_token;
                     self.next_token += 1;
                     self.transfers.insert(token, key);
@@ -347,8 +499,13 @@ impl MemorySystem for UvmSystem {
                 g.resident = true;
                 g.dirty |= p.write;
                 g.last_access = clock;
+                // Fresh residency epoch: only the leader and pre-arrival
+                // demand bits count as touched.
+                g.touched = p.touched;
                 self.fifo.push_back(key);
-                ctx.m.fault_latency.record(now.saturating_sub(p.started));
+                if !p.speculative {
+                    ctx.m.fault_latency.record(now.saturating_sub(p.started));
+                }
                 for slot in p.waiters {
                     let g = self.groups.get_mut(&key).unwrap();
                     g.refcount += 1;
@@ -606,6 +763,56 @@ mod tests {
         );
         assert!(ra.metrics.setup_ns > 0, "advice setup cost reported");
         assert_eq!(rp.metrics.setup_ns, 0);
+    }
+
+    #[test]
+    fn fixed_policy_accounts_ride_along_prefetch() {
+        let c = cfg(1, 32 << 20);
+        let mut w = Stream::new(1, 64);
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        let m = &r.metrics;
+        // 4 leader faults each drag 15 ride-along pages; the sequential
+        // pass touches every one of them.
+        assert_eq!(m.prefetched_pages, 4 * 15);
+        assert_eq!(m.prefetch_hits, 60);
+        assert_eq!(m.prefetch_wasted, 0);
+    }
+
+    #[test]
+    fn none_policy_transfers_bare_pages() {
+        let mut c = cfg(1, 32 << 20);
+        c.uvm.prefetch_policy = crate::prefetch::PrefetchPolicy::None;
+        let mut w = Stream::new(1, 64);
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        let m = &r.metrics;
+        // Every page faults on its own and moves exactly 4 KB.
+        assert_eq!(m.faults, 64);
+        assert_eq!(m.bytes_in, 64 * 4096);
+        assert_eq!(m.prefetched_pages, 0);
+        assert_eq!(m.prefetch_hits, 0);
+        assert_eq!(m.prefetch_wasted, 0);
+    }
+
+    #[test]
+    fn stride_policy_speculates_through_the_fault_buffer() {
+        let mut c = cfg(1, 32 << 20);
+        c.uvm.prefetch_policy = crate::prefetch::PrefetchPolicy::Stride;
+        let mut w = Stream::new(1, 64);
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        let m = &r.metrics;
+        assert!(m.prefetched_pages > 0, "stride must speculate");
+        assert!(
+            m.faults < 64,
+            "speculation must absorb demand faults ({} faults)",
+            m.faults
+        );
+        // Demand + speculative transfers all move one bare page.
+        assert_eq!(m.bytes_in, (m.faults + m.prefetched_pages) * 4096);
+        assert!(m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages);
+        assert!(m.prefetch_hits > 0, "sequential stream uses its prefetches");
     }
 
     #[test]

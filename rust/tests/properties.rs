@@ -15,6 +15,7 @@ use gpuvm::gpu::kernel::{Access, Launch, WarpOp, Workload};
 use gpuvm::gpuvm::GpuVmSystem;
 use gpuvm::graph::{BalancedCsr, Csr};
 use gpuvm::mem::{HostMemory, RegionId};
+use gpuvm::prefetch::{self, FaultEvent, PrefetchPolicy};
 use gpuvm::util::proptest::check;
 use gpuvm::util::rng::Rng;
 use gpuvm::uvm::UvmSystem;
@@ -213,6 +214,92 @@ fn prop_batching_conserves_work() {
         // Doorbells can only go down with batching (same WR volume ± the
         // timing-dependent refetch handful).
         assert!(m4.doorbells <= m1.doorbells + m4.refetches.max(m1.refetches));
+    });
+}
+
+#[test]
+fn prop_prefetch_candidates_stay_in_region() {
+    // Feed every policy a random fault stream over a random region and
+    // assert it never proposes a page outside the region's bounds.
+    check("prefetch candidates in bounds", 120, |rng| {
+        let mut cfg = SystemConfig::default();
+        cfg.gpuvm.page_size = if rng.bool(0.5) { 4096 } else { 8192 };
+        let policies = PrefetchPolicy::all();
+        let policy = policies[rng.gen_range(policies.len() as u64) as usize];
+        let degree = 1 + rng.gen_range(16) as usize;
+        let mut p = prefetch::build(policy, &cfg, degree);
+        let region_pages = 1 + rng.gen_range(3000);
+        let mut out = Vec::new();
+        for step in 0..200u64 {
+            let ev = FaultEvent {
+                gpu: rng.gen_range(2) as usize,
+                region: RegionId(0),
+                page_in_region: rng.gen_range(region_pages),
+                region_pages,
+                warp: rng.gen_range(8) as u32,
+                write: rng.bool(0.3),
+                now: step,
+            };
+            out.clear();
+            p.on_fault(&ev, &mut out);
+            for &c in &out {
+                assert!(
+                    c < region_pages,
+                    "{policy:?} proposed page {c} outside region of {region_pages} pages"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_prefetch_accounting_bounded() {
+    // For both paged systems under every policy: prefetched-then-used
+    // plus prefetched-then-evicted-unused never exceeds what was
+    // prefetched, and byte accounting stays exact.
+    check("prefetch accounting", 40, |rng| {
+        let mut cfg = random_cfg(rng);
+        let policies = PrefetchPolicy::all();
+        let policy = policies[rng.gen_range(policies.len() as u64) as usize];
+        cfg.gpuvm.prefetch_policy = policy;
+        cfg.gpuvm.prefetch_degree = 1 + rng.gen_range(12) as usize;
+        let mut w = RandomWorkload::generate(rng, false);
+        let mut mem = GpuVmSystem::new(&cfg);
+        let r = run(&cfg, &mut w, &mut mem).expect("gpuvm run terminates");
+        mem.check_invariants().expect("pool invariants");
+        let m = &r.metrics;
+        assert!(
+            m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages,
+            "gpuvm/{policy:?}: {} + {} > {}",
+            m.prefetch_hits,
+            m.prefetch_wasted,
+            m.prefetched_pages
+        );
+        // Every transfer is a demand fetch or a counted prefetch.
+        assert_eq!(m.bytes_in, (m.faults + m.prefetched_pages) * 4096);
+
+        let mut ucfg = random_cfg(rng);
+        ucfg.gpu.mem_bytes = ucfg.gpu.mem_bytes.max(8 << 20);
+        ucfg.uvm.prefetch_policy = policy;
+        ucfg.uvm.prefetch_degree = 1 + rng.gen_range(12) as usize;
+        let mut w = RandomWorkload::generate(rng, false);
+        let mut mem = UvmSystem::new(&ucfg);
+        let r = run(&ucfg, &mut w, &mut mem).expect("uvm run terminates");
+        let m = &r.metrics;
+        assert!(
+            m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages,
+            "uvm/{policy:?}: {} + {} > {}",
+            m.prefetch_hits,
+            m.prefetch_wasted,
+            m.prefetched_pages
+        );
+        if policy == PrefetchPolicy::Fixed {
+            // Ride-along geometry: each fault moves a whole group.
+            assert_eq!(m.bytes_in, m.faults * ucfg.uvm.prefetch_size);
+        } else {
+            // Page geometry: demand + speculative transfers, one page each.
+            assert_eq!(m.bytes_in, (m.faults + m.prefetched_pages) * 4096);
+        }
     });
 }
 
