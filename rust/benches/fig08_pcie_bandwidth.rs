@@ -11,11 +11,14 @@ use gpuvm::coordinator::simulate;
 use gpuvm::util::bench::banner;
 use gpuvm::util::csv::CsvWriter;
 
-fn gpuvm_bw(nics: usize, req: u64, payload: u64) -> f64 {
+fn gpuvm_bw(nics: usize, req: u64, payload: u64, smoke: bool) -> f64 {
     let mut cfg = SystemConfig::default();
     cfg.rnic.num_nics = nics;
     cfg.gpuvm.page_size = req;
     cfg.gpu.mem_bytes = 1 << 30; // no eviction: pure transfer study
+    if smoke {
+        cfg.gpu.sms = 16; // enough warps for steady state, CI-sized
+    }
     let mut w = StreamWorkload::new(payload, req, cfg.total_warps());
     let r = simulate(&cfg, &mut w, "gpuvm").expect("gpuvm run");
     r.metrics.throughput_in()
@@ -23,9 +26,11 @@ fn gpuvm_bw(nics: usize, req: u64, payload: u64) -> f64 {
 
 fn main() {
     banner("Fig 8: achieved PCIe bandwidth vs request size");
+    let smoke = std::env::var("GPUVM_BENCH_SMOKE").is_ok();
     let cfg = SystemConfig::default();
     // Paper moves 12 GB; we scale the payload with the request size to
-    // keep runtimes in seconds while staying in steady state.
+    // keep runtimes in seconds while staying in steady state (a tiny
+    // smoke payload under GPUVM_BENCH_SMOKE keeps CI honest but fast).
     let mut csv = CsvWriter::bench_result(
         "fig08_pcie_bandwidth",
         &["request_kb", "gdr_1n_gbps", "gpuvm_1n_gbps", "gpuvm_2n_gbps"],
@@ -34,12 +39,21 @@ fn main() {
         "{:>9} {:>12} {:>14} {:>14}",
         "request", "GDR 1N", "GPUVM 1N", "GPUVM 2N"
     );
-    for req_kb in [4u64, 8, 16, 32, 64, 128, 256, 512, 1024] {
+    let requests_kb: &[u64] = if smoke {
+        &[4, 64, 1024]
+    } else {
+        &[4, 8, 16, 32, 64, 128, 256, 512, 1024]
+    };
+    for &req_kb in requests_kb {
         let req = req_kb * 1024;
-        let payload = (req * 4096).clamp(64 << 20, 512 << 20);
+        let payload = if smoke {
+            (req * 512).clamp(4 << 20, 32 << 20)
+        } else {
+            (req * 4096).clamp(64 << 20, 512 << 20)
+        };
         let gdr = run_gdr(&cfg, payload, req).bandwidth();
-        let g1 = gpuvm_bw(1, req, payload);
-        let g2 = gpuvm_bw(2, req, payload);
+        let g1 = gpuvm_bw(1, req, payload, smoke);
+        let g2 = gpuvm_bw(2, req, payload, smoke);
         println!(
             "{:>7}KB {:>9.2} GB/s {:>11.2} GB/s {:>11.2} GB/s",
             req_kb,

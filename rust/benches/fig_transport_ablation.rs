@@ -1,0 +1,188 @@
+//! Transport ablation: the same paged protocols over different
+//! page-migration engines — gpuvm × {rdma, rdma×2 (dual-NIC striping),
+//! nvlink} and uvm × {pcie-dma} — across streaming (va), irregular
+//! (bfs) and selective-scan (q3) workloads at 50 % and 100 % memory
+//! oversubscription.
+//!
+//! The paper uses an RDMA NIC because the CPU chipset path is closed to
+//! GPU-driven programming (§3.1), not because RDMA is the ideal fabric:
+//! this experiment asks what the *same* GPU-driven protocol would buy
+//! over an open chipset DMA engine or an NVLink-class peer link, and
+//! anchors the UVM baseline on the engine it really drives. Expected
+//! shape: nvlink's µs-class latency floor beats the 23 µs verb on
+//! latency-bound points; rdma×2 recovers bandwidth-bound ones.
+//!
+//! `GPUVM_BENCH_SMOKE=1` shrinks every point to a CI-sized run so the
+//! transport timing paths are *executed* in CI, not just compiled.
+
+use gpuvm::apps::{BuildOpts, WorkloadSpec};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::backend;
+use gpuvm::graph::{generate, DatasetId};
+use gpuvm::util::bench::{banner, fmt_bytes, fmt_ns};
+use gpuvm::util::csv::CsvWriter;
+
+const GRAPH_SEED: u64 = 42;
+
+/// One sweep point: a backend on an engine (plus the NIC count, so
+/// dual-NIC striping is an explicit point rather than a hidden default).
+struct Point {
+    label: &'static str,
+    backend: &'static str,
+    transport: &'static str,
+    nics: usize,
+}
+
+const POINTS: [Point; 4] = [
+    Point {
+        label: "gpuvm/rdma",
+        backend: "gpuvm",
+        transport: "rdma",
+        nics: 1,
+    },
+    Point {
+        label: "gpuvm/rdma*2",
+        backend: "gpuvm",
+        transport: "rdma",
+        nics: 2,
+    },
+    Point {
+        label: "gpuvm/nvlink",
+        backend: "gpuvm",
+        transport: "nvlink",
+        nics: 1,
+    },
+    Point {
+        label: "uvm/pcie-dma",
+        backend: "uvm",
+        transport: "pcie-dma",
+        nics: 1,
+    },
+];
+
+fn main() {
+    banner("Transport ablation: engine × workload × oversubscription");
+    let smoke = std::env::var("GPUVM_BENCH_SMOKE").is_ok();
+    let graph_scale = if smoke { 0.05 } else { 0.4 };
+    let graph = generate(DatasetId::GK, graph_scale, GRAPH_SEED).graph;
+    let graph_bytes = graph.edge_bytes() + (graph.num_vertices as u64 * 12);
+    // (spec, approximate working-set bytes)
+    let apps: [(&str, u64); 3] = if smoke {
+        [
+            ("va@64k", 3 * (64 << 10) * 4),
+            ("bfs:GK:balanced", graph_bytes),
+            ("q3@128k", 2 * (128 << 10) * 4),
+        ]
+    } else {
+        [
+            ("va@1m", 3 * (1 << 20) * 4),
+            ("bfs:GK:balanced", graph_bytes),
+            ("q3@512k", 2 * (512 << 10) * 4),
+        ]
+    };
+    let levels: &[u64] = if smoke { &[50] } else { &[50, 100] };
+
+    let mut csv = CsvWriter::bench_result(
+        "fig_transport_ablation",
+        &[
+            "app",
+            "oversub_pct",
+            "point",
+            "backend",
+            "transport",
+            "nics",
+            "finish_ns",
+            "faults",
+            "bytes_in",
+            "transport_wrs",
+            "transport_doorbells",
+            "transport_bytes",
+            "bandwidth_gbps",
+        ],
+    );
+    println!(
+        "{:<16} {:>7} {:<14} | {:>11} {:>9} {:>10} {:>9} {:>10}",
+        "app", "oversub", "point", "time", "faults", "moved", "fab WRs", "fab bytes"
+    );
+
+    let mut winners: Vec<String> = Vec::new();
+    for (name, ws) in &apps {
+        let spec = WorkloadSpec::parse(name).expect("bench spec parses");
+        for &pct in levels {
+            // Frame floor: enough for the concurrently-referenced set
+            // (warps × pages-per-op) — and low enough that the smoke
+            // working sets above stay genuinely oversubscribed.
+            let floor = if smoke { 96 * 4096 } else { 192 * 4096 };
+            let mem = (ws * 100 / (100 + pct)).max(floor);
+            let mut baseline_ns = 0u64;
+            for p in &POINTS {
+                let mut cfg = SystemConfig::default();
+                cfg.gpu.sms = if smoke { 8 } else { 28 };
+                cfg.gpu.warps_per_sm = if smoke { 4 } else { 8 };
+                cfg.gpuvm.page_size = 4096;
+                cfg.gpu.mem_bytes = mem;
+                cfg.rnic.num_nics = p.nics;
+                cfg.seed = GRAPH_SEED;
+                if p.backend == "uvm" {
+                    cfg.uvm.transport = p.transport.to_string();
+                } else {
+                    cfg.gpuvm.transport = p.transport.to_string();
+                }
+                let mut opts = BuildOpts::for_cfg(&cfg);
+                opts.graph_scale = graph_scale;
+                let rep = backend::lookup(p.backend)
+                    .expect("registered backend")
+                    .run(&cfg, &spec, &opts)
+                    .expect("ablation point runs");
+                if p.label == "gpuvm/rdma" {
+                    baseline_ns = rep.finish_ns;
+                } else if rep.finish_ns < baseline_ns {
+                    winners.push(format!(
+                        "{} @{}%: {} ({} vs {})",
+                        name,
+                        pct,
+                        p.label,
+                        fmt_ns(rep.finish_ns),
+                        fmt_ns(baseline_ns)
+                    ));
+                }
+                println!(
+                    "{:<16} {:>6}% {:<14} | {:>11} {:>9} {:>10} {:>9} {:>10}",
+                    name,
+                    pct,
+                    p.label,
+                    fmt_ns(rep.finish_ns),
+                    rep.faults,
+                    fmt_bytes(rep.bytes_in),
+                    rep.transport_wrs,
+                    fmt_bytes(rep.transport_bytes)
+                );
+                csv.row([
+                    name.to_string(),
+                    pct.to_string(),
+                    p.label.to_string(),
+                    p.backend.to_string(),
+                    rep.transport.clone(),
+                    p.nics.to_string(),
+                    rep.finish_ns.to_string(),
+                    rep.faults.to_string(),
+                    rep.bytes_in.to_string(),
+                    rep.transport_wrs.to_string(),
+                    rep.transport_doorbells.to_string(),
+                    rep.transport_bytes.to_string(),
+                    format!("{:.3}", rep.bandwidth_in() / 1e9),
+                ]);
+            }
+        }
+    }
+    csv.flush().unwrap();
+    println!("\npoints beating gpuvm/rdma (single NIC) on wall clock:");
+    if winners.is_empty() {
+        println!("  (none — the single-NIC RDMA engine wins everywhere)");
+    } else {
+        for w in &winners {
+            println!("  {w}");
+        }
+    }
+    println!("csv: target/bench_results/fig_transport_ablation.csv");
+}

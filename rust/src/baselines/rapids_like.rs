@@ -9,7 +9,10 @@
 
 use crate::apps::query::TaxiTable;
 use crate::config::SystemConfig;
-use crate::pcie::{Dir, Topology};
+use crate::fabric::pcie_dma::PcieDmaTransport;
+use crate::fabric::{Transport, TransportStats, WorkRequest};
+use crate::mem::PageId;
+use crate::pcie::Dir;
 use crate::sim::{us, SimTime};
 
 #[derive(Debug, Clone)]
@@ -19,6 +22,8 @@ pub struct RapidsResult {
     pub total_ns: SimTime,
     pub bytes_transferred: u64,
     pub useful_bytes: u64,
+    /// Copy-engine accounting for the column staging.
+    pub stats: TransportStats,
 }
 
 impl RapidsResult {
@@ -36,14 +41,25 @@ const QUERY_FIXED_US: f64 = 60.0;
 /// Execute query `q` RAPIDS-style: bulk-transfer the predicate column and
 /// the value column, then scan.
 pub fn run_rapids(cfg: &SystemConfig, table: &TaxiTable, _q: usize) -> RapidsResult {
-    let mut topo = Topology::new(cfg);
+    // Pinned-buffer H2D rides the CPU-driven copy engine (`pcie-dma`).
+    let mut fab = PcieDmaTransport::new(cfg);
     let col_bytes = table.rows as u64 * 4;
-    // Pinned-buffer H2D of both whole columns over the direct path.
-    let path = topo.path_direct(0, Dir::In);
     let mut now: SimTime = us(QUERY_FIXED_US);
     let t0 = now;
-    now = topo.transfer(now, col_bytes, &path);
-    now = topo.transfer(now, col_bytes, &path);
+    for wr_id in 1..=2u64 {
+        fab.post(
+            0,
+            WorkRequest {
+                wr_id,
+                page: PageId(0),
+                bytes: col_bytes,
+                dir: Dir::In,
+                gpu: 0,
+            },
+        )
+        .expect("one column copy per doorbell");
+        now = fab.ring_doorbell(now, 0).expect("valid queue")[0].at;
+    }
     let transfer = now - t0;
     // Device-side scan of both columns.
     let compute = (2.0 * col_bytes as f64 / GPU_SCAN_BYTES_PER_SEC * 1e9) as u64;
@@ -56,6 +72,7 @@ pub fn run_rapids(cfg: &SystemConfig, table: &TaxiTable, _q: usize) -> RapidsRes
         total_ns: now,
         bytes_transferred: 2 * col_bytes,
         useful_bytes: useful,
+        stats: fab.stats(),
     }
 }
 
@@ -70,6 +87,8 @@ mod tests {
         let r = run_rapids(&cfg, &t, 0);
         assert!(r.transfer_ns > r.compute_ns * 5);
         assert_eq!(r.bytes_transferred, 2 * (1 << 20) * 4);
+        assert_eq!(r.stats.bytes_moved, r.bytes_transferred);
+        assert_eq!(r.stats.wrs_serviced, 2);
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //! class (MOLIERE) are unsupported — as noted in the paper's Table 3.
 
 use crate::config::SystemConfig;
+use crate::fabric::pcie_dma::PcieDmaTransport;
+use crate::fabric::{Transport, TransportStats, WorkRequest};
 use crate::graph::{algo, Csr};
-use crate::pcie::{Dir, Topology};
+use crate::mem::PageId;
+use crate::pcie::Dir;
 use crate::sim::{ns_for_bytes, us, SimTime};
 
 #[derive(Debug, Clone)]
@@ -22,6 +25,8 @@ pub struct SubwayResult {
     pub compute_ns: SimTime,
     pub total_ns: SimTime,
     pub bytes_transferred: u64,
+    /// Copy-engine accounting for the bulk-copy loop.
+    pub stats: TransportStats,
 }
 
 /// CPU-side subgraph compaction throughput (edges/s): a parallel
@@ -46,7 +51,9 @@ pub fn run_subway(cfg: &SystemConfig, g: &Csr, which: SubwayAlgo, src: u32) -> S
         (g.num_vertices as u64) < (1u64 << 32),
         "Subway is limited to < 2^32 vertices (paper Table 3)"
     );
-    let mut topo = Topology::new(cfg);
+    // The bulk copies ride the CPU-driven copy engine (`pcie-dma`
+    // fabric transport) — a cudaMemcpy over the direct PCIe path.
+    let mut fab = PcieDmaTransport::new(cfg);
     // Active vertex sets per iteration (CC processes only the vertices
     // whose label changed last round, as Subway's active-subgraph build
     // does).
@@ -61,6 +68,7 @@ pub fn run_subway(cfg: &SystemConfig, g: &Csr, which: SubwayAlgo, src: u32) -> S
     let mut compute = 0u64;
     let mut bytes_total = 0u64;
 
+    let mut wr_id = 0u64;
     for active in actives.iter().filter(|a| !a.is_empty()) {
         let active_edges: u64 = active.iter().map(|&v| g.degree(v as usize)).sum();
         // 1. CPU compaction: scan the active vertices' adjacency and pack
@@ -77,8 +85,19 @@ pub fn run_subway(cfg: &SystemConfig, g: &Csr, which: SubwayAlgo, src: u32) -> S
         //    the iteration pays max(transfer, compute).
         let bytes = active.len() as u64 * 12 + active_edges * 4;
         bytes_total += bytes;
-        let path = topo.path_direct(0, Dir::In);
-        let arrive = topo.transfer(now, bytes, &path);
+        wr_id += 1;
+        fab.post(
+            0,
+            WorkRequest {
+                wr_id,
+                page: PageId(0),
+                bytes,
+                dir: Dir::In,
+                gpu: 0,
+            },
+        )
+        .expect("one bulk copy per doorbell");
+        let arrive = fab.ring_doorbell(now, 0).expect("valid queue")[0].at;
         let xfer = arrive - now;
         transfer += xfer;
         let comp = (active_edges as f64 / GPU_TRAVERSE_EDGES_PER_SEC * 1e9) as u64;
@@ -93,6 +112,7 @@ pub fn run_subway(cfg: &SystemConfig, g: &Csr, which: SubwayAlgo, src: u32) -> S
         compute_ns: compute,
         total_ns: now,
         bytes_transferred: bytes_total,
+        stats: fab.stats(),
     }
 }
 
@@ -109,6 +129,9 @@ mod tests {
         assert!(bfs.iterations >= 1);
         assert!(bfs.total_ns > 0);
         assert!(bfs.bytes_transferred > 0);
+        // The copy engine carried exactly the staged bytes.
+        assert_eq!(bfs.stats.bytes_moved, bfs.bytes_transferred);
+        assert_eq!(bfs.stats.wrs_serviced, bfs.iterations as u64);
         let cc = run_subway(&cfg, &g, SubwayAlgo::Cc, 0);
         assert!(cc.total_ns > bfs.total_ns, "CC touches all edges each round");
     }

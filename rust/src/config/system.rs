@@ -8,6 +8,7 @@
 //! fault-handling overhead ≈ 7× the 64 KB transfer time.
 
 use super::toml::{parse, Doc, Value};
+use crate::fabric::Striping;
 use crate::prefetch::PrefetchPolicy;
 use crate::util::cli::Args;
 use anyhow::{Context, Result};
@@ -101,6 +102,12 @@ pub struct GpuVmConfig {
     /// (set-path `("gpuvm", "prefetch_degree")`, CLI
     /// `--prefetch-degree`).
     pub prefetch_degree: usize,
+    /// Page-migration engine the runtime's doorbells drive (registry
+    /// key in [`crate::fabric`]; set-path `("gpuvm", "transport")`,
+    /// CLI `--transport`). The paper's system is `rdma`; `pcie-dma`
+    /// and `nvlink` answer "what if the same GPU-driven protocol ran
+    /// over a different fabric?".
+    pub transport: String,
 }
 
 /// RNIC model (ConnectX-5/6-shaped, §3.2).
@@ -113,6 +120,11 @@ pub struct RnicConfig {
     /// processor, ns (limits message rate; ConnectX-5 ~100M msg/s class,
     /// so this is small but nonzero).
     pub wr_process_ns: u64,
+    /// How the `rdma` transport spreads queues over the NIC bank
+    /// (set-path `("rnic", "striping")`, CLI `--striping`): the
+    /// round-robin default interleaves adjacent queues across NICs
+    /// (§4.1's dual-NIC bandwidth recovery); `block` partitions them.
+    pub striping: Striping,
 }
 
 /// PCIe topology (Fig 7): GPU and NIC hang off distinct bridges under the
@@ -177,6 +189,11 @@ pub struct UvmConfig {
     /// Max speculative transfer units the stride/history policies add
     /// per fault (set-path `("uvm", "prefetch_degree")`).
     pub prefetch_degree: usize,
+    /// Page-migration engine the driver's fault groups ride (registry
+    /// key in [`crate::fabric`]; set-path `("uvm", "transport")`, CLI
+    /// `--transport`). The real driver drives the chipset copy engine:
+    /// `pcie-dma`.
+    pub transport: String,
 }
 
 /// CPU-initiated GPUDirect-RDMA bulk-transfer baseline (Fig 8's "GDR").
@@ -194,6 +211,33 @@ pub struct GdrConfig {
     pub request_bytes: u64,
 }
 
+/// NVLink peer-channel model (the `nvlink` transport's
+/// latency/bandwidth point; NVLink2 / V100-class defaults).
+#[derive(Debug, Clone)]
+pub struct NvLinkConfig {
+    /// Bonded links per GPU channel (V100 exposes up to 6; 4 is a
+    /// common bonding).
+    pub num_links: usize,
+    /// Per-link one-direction bandwidth, bytes/s (NVLink2: 25 GB/s).
+    pub link_bw: f64,
+    /// End-to-end doorbell → completion latency floor, µs (peer-memory
+    /// access latency class — an order of magnitude under the 23 µs
+    /// RDMA verb).
+    pub latency_us: f64,
+    /// Copy-descriptor processing occupancy per WR, ns.
+    pub wr_process_ns: u64,
+}
+
+/// CPU-driven copy-engine model (the `pcie-dma` transport).
+#[derive(Debug, Clone)]
+pub struct PcieDmaConfig {
+    /// Per-WR engine setup (descriptor fetch + launch), µs. Default 0:
+    /// the UVM driver models its host costs itself and must not pay
+    /// them twice; standalone callers can set this to study
+    /// CPU-mediated issue overhead.
+    pub setup_us: f64,
+}
+
 /// Top-level simulated system.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -203,6 +247,8 @@ pub struct SystemConfig {
     pub pcie: PcieConfig,
     pub uvm: UvmConfig,
     pub gdr: GdrConfig,
+    pub nvlink: NvLinkConfig,
+    pub pcie_dma: PcieDmaConfig,
     /// Base RNG seed for the run.
     pub seed: u64,
 }
@@ -236,11 +282,13 @@ impl Default for SystemConfig {
                 async_writeback: false,
                 prefetch_policy: PrefetchPolicy::None,
                 prefetch_degree: 8,
+                transport: "rdma".to_string(),
             },
             rnic: RnicConfig {
                 num_nics: 1,
                 verb_latency_us: 23.0,
                 wr_process_ns: 80,
+                striping: Striping::RoundRobin,
             },
             pcie: PcieConfig {
                 link_bw: 13.0e9,
@@ -267,12 +315,20 @@ impl Default for SystemConfig {
                 memadvise_setup_ms: 120.0,
                 prefetch_policy: PrefetchPolicy::Fixed,
                 prefetch_degree: 8,
+                transport: "pcie-dma".to_string(),
             },
             gdr: GdrConfig {
                 threads: 16,
                 issue_overhead_us: 72.0,
                 request_bytes: 1 << 20,
             },
+            nvlink: NvLinkConfig {
+                num_links: 4,
+                link_bw: 25.0e9,
+                latency_us: 2.0,
+                wr_process_ns: 40,
+            },
+            pcie_dma: PcieDmaConfig { setup_us: 0.0 },
             seed: 0x5EED,
         }
     }
@@ -346,9 +402,19 @@ impl SystemConfig {
                 )?
             }
             ("gpuvm", "prefetch_degree") => self.gpuvm.prefetch_degree = usizev(v)?,
+            ("gpuvm", "transport") => {
+                let s = v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?;
+                crate::fabric::lookup(s)?;
+                self.gpuvm.transport = s.to_string();
+            }
             ("rnic", "num_nics") => self.rnic.num_nics = usizev(v)?,
             ("rnic", "verb_latency_us") => self.rnic.verb_latency_us = f64v(v)?,
             ("rnic", "wr_process_ns") => self.rnic.wr_process_ns = u64v(v)?,
+            ("rnic", "striping") => {
+                self.rnic.striping = Striping::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
             ("pcie", "link_bw") => self.pcie.link_bw = f64v(v)?,
             ("pcie", "nic_bridge_shared") => self.pcie.nic_bridge_shared = boolv(v)?,
             ("pcie", "mem_bw") => self.pcie.mem_bw = f64v(v)?,
@@ -370,9 +436,19 @@ impl SystemConfig {
                 )?
             }
             ("uvm", "prefetch_degree") => self.uvm.prefetch_degree = usizev(v)?,
+            ("uvm", "transport") => {
+                let s = v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?;
+                crate::fabric::lookup(s)?;
+                self.uvm.transport = s.to_string();
+            }
             ("gdr", "threads") => self.gdr.threads = usizev(v)?,
             ("gdr", "issue_overhead_us") => self.gdr.issue_overhead_us = f64v(v)?,
             ("gdr", "request_bytes") => self.gdr.request_bytes = u64v(v)?,
+            ("nvlink", "num_links") => self.nvlink.num_links = usizev(v)?,
+            ("nvlink", "link_bw") => self.nvlink.link_bw = f64v(v)?,
+            ("nvlink", "latency_us") => self.nvlink.latency_us = f64v(v)?,
+            ("nvlink", "wr_process_ns") => self.nvlink.wr_process_ns = u64v(v)?,
+            ("pcie_dma", "setup_us") => self.pcie_dma.setup_us = f64v(v)?,
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
@@ -413,6 +489,19 @@ impl SystemConfig {
             self.gpuvm.prefetch_degree = d;
             self.uvm.prefetch_degree = d;
         }
+        // `--transport ENGINE` sets both systems' engines at once (like
+        // `--prefetch`); a comma-separated value is a sweep list handled
+        // by the sweep axis, not the scalar config.
+        if let Some(t) = args.get("transport") {
+            if !t.contains(',') {
+                crate::fabric::lookup(t)?;
+                self.gpuvm.transport = t.to_string();
+                self.uvm.transport = t.to_string();
+            }
+        }
+        if let Some(s) = args.get("striping") {
+            self.rnic.striping = Striping::parse(s)?;
+        }
         Ok(())
     }
 
@@ -442,6 +531,14 @@ impl SystemConfig {
         anyhow::ensure!(self.gpu_frames() >= 2, "GPU memory must hold ≥2 pages");
         anyhow::ensure!(self.uvm.prefetch_size >= self.uvm.fault_granularity);
         anyhow::ensure!(self.uvm.evict_block >= self.uvm.prefetch_size);
+        crate::fabric::lookup(&self.gpuvm.transport)
+            .context("gpuvm.transport")?;
+        crate::fabric::lookup(&self.uvm.transport).context("uvm.transport")?;
+        anyhow::ensure!(
+            self.nvlink.num_links >= 1 && self.nvlink.link_bw > 0.0,
+            "nvlink channel needs ≥1 link with positive bandwidth"
+        );
+        anyhow::ensure!(self.pcie_dma.setup_us >= 0.0, "pcie_dma.setup_us < 0");
         Ok(())
     }
 }
@@ -531,6 +628,60 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.apply_args(&listy).unwrap();
         assert_eq!(cfg.gpuvm.prefetch_policy, PrefetchPolicy::None);
+    }
+
+    #[test]
+    fn transport_keys_and_flags() {
+        let doc = parse(
+            "[gpuvm]\ntransport = \"nvlink\"\n[uvm]\ntransport = \"rdma\"\n\
+             [rnic]\nstriping = \"block\"\n[nvlink]\nnum_links = 6\n\
+             [pcie_dma]\nsetup_us = 3.5\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.gpuvm.transport, "nvlink");
+        assert_eq!(cfg.uvm.transport, "rdma");
+        assert_eq!(cfg.rnic.striping, Striping::Block);
+        assert_eq!(cfg.nvlink.num_links, 6);
+        assert!((cfg.pcie_dma.setup_us - 3.5).abs() < 1e-12);
+        cfg.validate().unwrap();
+
+        // `--transport` sets both systems; unknown engines fail loudly
+        // with the valid set.
+        let args = Args::parse(
+            "t".into(),
+            ["--transport", "pcie-dma", "--striping", "block"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.gpuvm.transport, "pcie-dma");
+        assert_eq!(cfg.uvm.transport, "pcie-dma");
+        assert_eq!(cfg.rnic.striping, Striping::Block);
+
+        let bad = Args::parse(
+            "t".into(),
+            ["--transport", "token-ring"].iter().map(|s| s.to_string()).collect(),
+        );
+        let err = SystemConfig::default().apply_args(&bad).unwrap_err().to_string();
+        assert!(err.contains("rdma") && err.contains("nvlink"), "{err}");
+
+        // Comma-separated values are sweep lists, left to the sweep axis.
+        let listy = Args::parse(
+            "t".into(),
+            ["--transport", "rdma,nvlink"].iter().map(|s| s.to_string()).collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&listy).unwrap();
+        assert_eq!(cfg.gpuvm.transport, "rdma");
+
+        // A bogus name in the config file is rejected at parse time.
+        let doc = parse("[gpuvm]\ntransport = \"morse\"\n").unwrap();
+        let mut cfg = SystemConfig::default();
+        assert!(cfg.apply_doc(&doc).is_err());
     }
 
     #[test]

@@ -7,7 +7,6 @@
 //! scope.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -59,11 +58,20 @@ impl Value {
     }
 }
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum TomlError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// `section -> key -> value`; keys before any section land in `""`.
 pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;

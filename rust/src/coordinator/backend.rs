@@ -21,14 +21,40 @@ use crate::apps::{BuildOpts, SpecKind, WorkloadSpec};
 use crate::baselines::{run_gdr, run_rapids, run_subway, SubwayAlgo};
 use crate::config::SystemConfig;
 use crate::coordinator::report::RunReport;
+use crate::fabric::pcie_dma::PcieDmaTransport;
+use crate::fabric::{Transport, WorkRequest};
 use crate::gpu::exec;
 use crate::gpuvm::GpuVmSystem;
+use crate::mem::PageId;
 use crate::memsys::ideal::IdealSystem;
 use crate::memsys::MemorySystem;
-use crate::pcie::{Dir, Topology};
+use crate::pcie::Dir;
 use crate::sim::{ns_for_bytes, SimTime};
 use crate::uvm::UvmSystem;
 use anyhow::{bail, Result};
+
+/// Stage `bytes` in one bulk copy over the CPU-driven copy engine,
+/// starting at `now`; returns the arrival time and the engine's stats.
+fn bulk_stage(
+    cfg: &SystemConfig,
+    now: SimTime,
+    bytes: u64,
+) -> (SimTime, crate::fabric::TransportStats) {
+    let mut fab = PcieDmaTransport::new(cfg);
+    fab.post(
+        0,
+        WorkRequest {
+            wr_id: 1,
+            page: PageId(0),
+            bytes,
+            dir: Dir::In,
+            gpu: 0,
+        },
+    )
+    .expect("one staging copy per doorbell");
+    let at = fab.ring_doorbell(now, 0).expect("valid queue")[0].at;
+    (at, fab.stats())
+}
 
 /// A comparison system, addressable by name.
 pub trait Backend: Sync {
@@ -170,14 +196,9 @@ impl Backend for GdrBackend {
     fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
         let (r, total) = ideal_execute(cfg, spec, opts)?;
         let gdr = run_gdr(cfg, total, cfg.gdr.request_bytes.max(1));
-        Ok(bulk_report(
-            self.name(),
-            spec,
-            cfg,
-            &r,
-            gdr.finish_ns,
-            total,
-        ))
+        let mut rep = bulk_report(self.name(), spec, cfg, &r, gdr.finish_ns, total);
+        rep.set_transport("rdma", &gdr.stats);
+        Ok(rep)
     }
 }
 
@@ -222,6 +243,7 @@ impl Backend for SubwayBackend {
             rep.bytes_in = s.bytes_transferred;
             rep.kernels = s.iterations as u64;
             rep.useful_bytes = s.bytes_transferred;
+            rep.set_transport("pcie-dma", &s.stats);
             return Ok(rep);
         }
         // Non-graph apps: Subway degenerates to its partition-and-copy
@@ -230,10 +252,10 @@ impl Backend for SubwayBackend {
         // Subway is graph-only).
         let (r, total) = ideal_execute(cfg, spec, opts)?;
         let preprocess = ns_for_bytes(total, SUBWAY_PREPROCESS_BYTES_PER_SEC);
-        let mut topo = Topology::new(cfg);
-        let path = topo.path_direct(0, Dir::In);
-        let staged = topo.transfer(preprocess, total, &path);
-        Ok(bulk_report(self.name(), spec, cfg, &r, staged, total))
+        let (staged, stats) = bulk_stage(cfg, preprocess, total);
+        let mut rep = bulk_report(self.name(), spec, cfg, &r, staged, total);
+        rep.set_transport("pcie-dma", &stats);
+        Ok(rep)
     }
 }
 
@@ -259,15 +281,16 @@ impl Backend for RapidsBackend {
             rep.bytes_in = rr.bytes_transferred;
             rep.useful_bytes = rr.useful_bytes;
             rep.kernels = 1;
+            rep.set_transport("pcie-dma", &rr.stats);
             return Ok(rep);
         }
         // Other apps: bulk-stage every referenced byte over the direct
         // DMA path (the RAPIDS philosophy), then compute at device speed.
         let (r, total) = ideal_execute(cfg, spec, opts)?;
-        let mut topo = Topology::new(cfg);
-        let path = topo.path_direct(0, Dir::In);
-        let staged = topo.transfer(0, total, &path);
-        Ok(bulk_report(self.name(), spec, cfg, &r, staged, total))
+        let (staged, stats) = bulk_stage(cfg, 0, total);
+        let mut rep = bulk_report(self.name(), spec, cfg, &r, staged, total);
+        rep.set_transport("pcie-dma", &stats);
+        Ok(rep)
     }
 }
 
@@ -347,6 +370,53 @@ mod tests {
             assert!(rep.finish_ns > 0, "{name}");
             assert_eq!(rep.bytes_in, footprint, "{name} stages the whole footprint");
             assert_eq!(rep.faults, 0, "{name} takes no page faults");
+        }
+    }
+
+    #[test]
+    fn transports_produce_distinct_stats_and_timing() {
+        // The acceptance shape: the same backend over two engines
+        // completes both ways and reports different TransportStats.
+        let mut cfg = small_cfg();
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let opts = BuildOpts::for_cfg(&cfg);
+        let rdma = lookup("gpuvm").unwrap().run(&cfg, &spec, &opts).unwrap();
+        cfg.gpuvm.transport = "nvlink".to_string();
+        let nvl = lookup("gpuvm").unwrap().run(&cfg, &spec, &opts).unwrap();
+        assert_eq!(rdma.transport, "rdma");
+        assert_eq!(nvl.transport, "nvlink");
+        for r in [&rdma, &nvl] {
+            assert!(r.finish_ns > 0);
+            assert_eq!(
+                r.transport_bytes,
+                r.bytes_in + r.bytes_out,
+                "{}: engine must carry exactly the paged bytes",
+                r.transport
+            );
+            assert!(r.transport_wrs > 0 && r.transport_doorbells > 0);
+        }
+        assert_ne!(
+            rdma.transport_engines[0].name, nvl.transport_engines[0].name,
+            "per-engine breakdown identifies the fabric"
+        );
+        assert!(
+            nvl.finish_ns < rdma.finish_ns,
+            "µs-class peer link beats the 23 µs verb floor"
+        );
+    }
+
+    #[test]
+    fn bulk_backends_report_their_engines() {
+        let cfg = small_cfg();
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let opts = BuildOpts::for_cfg(&cfg);
+        for (name, engine) in [("gdr", "rdma"), ("subway", "pcie-dma"), ("rapids", "pcie-dma")] {
+            let rep = lookup(name).unwrap().run(&cfg, &spec, &opts).unwrap();
+            assert_eq!(rep.transport, engine, "{name}");
+            // GDR pads the tail request to its scatter-gather size, so
+            // the engine may carry slightly more than the footprint.
+            assert!(rep.transport_bytes >= rep.bytes_in, "{name}");
+            assert!(rep.transport_wrs > 0, "{name}");
         }
     }
 

@@ -3,6 +3,7 @@
 //! the CLI and examples print.
 
 use crate::config::SystemConfig;
+use crate::fabric::EngineStats;
 use crate::gpu::exec::RunResult;
 use crate::util::bench::{fmt_bytes, fmt_gbps, fmt_ns};
 use std::io::Write as _;
@@ -23,6 +24,9 @@ pub struct RunReport {
     /// Prefetch policy name the run's memory system used (`gpuvm.*` for
     /// GPUVM and the bulk engines, `uvm.*` for the UVM variants).
     pub prefetch: String,
+    /// Page-migration engine the run's data path rode (`gpuvm.transport`
+    /// / `uvm.transport`; bulk engines report their fixed engine).
+    pub transport: String,
     // Headline results.
     pub finish_ns: u64,
     /// One-time setup cost reported separately (e.g. memadvise).
@@ -44,11 +48,19 @@ pub struct RunReport {
     pub prefetch_hits: u64,
     /// Prefetched units evicted untouched.
     pub prefetch_wasted: u64,
+    /// Doorbell rings the transport serviced.
+    pub transport_doorbells: u64,
+    /// Work requests the transport completed.
+    pub transport_wrs: u64,
+    /// Bytes the transport carried (both directions).
+    pub transport_bytes: u64,
+    /// Per-engine (per-NIC / copy-engine / link) breakdown; JSON only.
+    pub transport_engines: Vec<EngineStats>,
 }
 
 impl RunReport {
     /// Column names matching [`RunReport::csv_row`].
-    pub const CSV_HEADER: [&'static str; 23] = [
+    pub const CSV_HEADER: [&'static str; 27] = [
         "backend",
         "workload",
         "nics",
@@ -56,6 +68,7 @@ impl RunReport {
         "gpu_mem_bytes",
         "qps",
         "prefetch",
+        "transport",
         "finish_ns",
         "setup_ns",
         "kernels",
@@ -71,18 +84,26 @@ impl RunReport {
         "prefetched_pages",
         "prefetch_hits",
         "prefetch_wasted",
+        "transport_doorbells",
+        "transport_wrs",
+        "transport_bytes",
         "io_amplification",
     ];
 
     /// A report with zeroed metrics, tagged with the run's identity and
     /// sweep axes. Bulk backends fill in their own fields from here.
     pub fn empty(backend: &str, workload: &str, cfg: &SystemConfig) -> Self {
-        // The UVM variants run under their own policy key; everything
-        // else (GPUVM, ideal, bulk engines) reports the gpuvm key.
-        let prefetch = if backend.starts_with("uvm") {
-            cfg.uvm.prefetch_policy
+        // The UVM variants run under their own policy/transport keys;
+        // everything else (GPUVM, bulk engines) reports the gpuvm keys.
+        // Bulk engines overwrite `transport` with their fixed engine in
+        // their own `run()`; `ideal` moves nothing over any engine, so
+        // its rows say `none` rather than claiming a phantom fabric.
+        let (prefetch, transport) = if backend.starts_with("uvm") {
+            (cfg.uvm.prefetch_policy, cfg.uvm.transport.clone())
+        } else if backend == "ideal" {
+            (cfg.gpuvm.prefetch_policy, "none".to_string())
         } else {
-            cfg.gpuvm.prefetch_policy
+            (cfg.gpuvm.prefetch_policy, cfg.gpuvm.transport.clone())
         };
         Self {
             backend: backend.to_string(),
@@ -92,6 +113,7 @@ impl RunReport {
             gpu_mem_bytes: cfg.gpu.mem_bytes,
             qps: cfg.gpuvm.num_qps,
             prefetch: prefetch.name().to_string(),
+            transport,
             finish_ns: 0,
             setup_ns: 0,
             kernels: 0,
@@ -107,6 +129,10 @@ impl RunReport {
             prefetched_pages: 0,
             prefetch_hits: 0,
             prefetch_wasted: 0,
+            transport_doorbells: 0,
+            transport_wrs: 0,
+            transport_bytes: 0,
+            transport_engines: Vec::new(),
         }
     }
 
@@ -129,8 +155,22 @@ impl RunReport {
             prefetched_pages: m.prefetched_pages,
             prefetch_hits: m.prefetch_hits,
             prefetch_wasted: m.prefetch_wasted,
+            transport_doorbells: m.transport.doorbells,
+            transport_wrs: m.transport.wrs_serviced,
+            transport_bytes: m.transport.bytes_moved,
+            transport_engines: m.transport.per_engine.clone(),
             ..Self::empty(backend, workload, cfg)
         }
+    }
+
+    /// Overwrite the transport columns from an engine's stats (bulk
+    /// backends, whose staging does not flow through `Metrics`).
+    pub fn set_transport(&mut self, name: &str, stats: &crate::fabric::TransportStats) {
+        self.transport = name.to_string();
+        self.transport_doorbells = stats.doorbells;
+        self.transport_wrs = stats.wrs_serviced;
+        self.transport_bytes = stats.bytes_moved;
+        self.transport_engines = stats.per_engine.clone();
     }
 
     /// Prefetch accuracy: prefetched-then-used over issued (0 if none).
@@ -167,6 +207,7 @@ impl RunReport {
             self.gpu_mem_bytes.to_string(),
             self.qps.to_string(),
             self.prefetch.clone(),
+            self.transport.clone(),
             self.finish_ns.to_string(),
             self.setup_ns.to_string(),
             self.kernels.to_string(),
@@ -182,20 +223,39 @@ impl RunReport {
             self.prefetched_pages.to_string(),
             self.prefetch_hits.to_string(),
             self.prefetch_wasted.to_string(),
+            self.transport_doorbells.to_string(),
+            self.transport_wrs.to_string(),
+            self.transport_bytes.to_string(),
             format!("{:.4}", self.io_amplification()),
         ]
     }
 
     /// One JSON object (hand-rolled; the offline build has no serde).
     pub fn to_json(&self) -> String {
+        let engines: Vec<String> = self
+            .transport_engines
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"name\":{},\"doorbells\":{},\"wrs\":{},\"bytes\":{}}}",
+                    json_string(&e.name),
+                    e.doorbells,
+                    e.wrs_serviced,
+                    e.bytes_moved
+                )
+            })
+            .collect();
         format!(
             concat!(
                 "{{\"backend\":{},\"workload\":{},\"nics\":{},\"page_size\":{},",
-                "\"gpu_mem_bytes\":{},\"qps\":{},\"prefetch\":{},\"finish_ns\":{},",
+                "\"gpu_mem_bytes\":{},\"qps\":{},\"prefetch\":{},\"transport\":{},",
+                "\"finish_ns\":{},",
                 "\"setup_ns\":{},\"kernels\":{},\"events\":{},\"faults\":{},",
                 "\"coalesced_faults\":{},\"hits\":{},\"bytes_in\":{},\"bytes_out\":{},",
                 "\"useful_bytes\":{},\"evictions\":{},\"refetches\":{},",
                 "\"prefetched_pages\":{},\"prefetch_hits\":{},\"prefetch_wasted\":{},",
+                "\"transport_doorbells\":{},\"transport_wrs\":{},",
+                "\"transport_bytes\":{},\"transport_engines\":[{}],",
                 "\"io_amplification\":{:.4},",
                 "\"bandwidth_in_bytes_per_sec\":{:.1}}}"
             ),
@@ -206,6 +266,7 @@ impl RunReport {
             self.gpu_mem_bytes,
             self.qps,
             json_string(&self.prefetch),
+            json_string(&self.transport),
             self.finish_ns,
             self.setup_ns,
             self.kernels,
@@ -221,6 +282,10 @@ impl RunReport {
             self.prefetched_pages,
             self.prefetch_hits,
             self.prefetch_wasted,
+            self.transport_doorbells,
+            self.transport_wrs,
+            self.transport_bytes,
+            engines.join(","),
             self.io_amplification(),
             self.bandwidth_in(),
         )
@@ -262,6 +327,26 @@ impl RunReport {
             "  evictions          {:>14}   (refetches: {})\n",
             self.evictions, self.refetches
         ));
+        if self.transport_wrs > 0 {
+            let breakdown = if self.transport_engines.len() > 1 {
+                let parts: Vec<String> = self
+                    .transport_engines
+                    .iter()
+                    .map(|e| format!("{} {}", e.name, fmt_bytes(e.bytes_moved)))
+                    .collect();
+                format!("  [{}]", parts.join(", "))
+            } else {
+                String::new()
+            };
+            s.push_str(&format!(
+                "  fabric ({})     {:>6} WRs / {} doorbells / {}{}\n",
+                self.transport,
+                self.transport_wrs,
+                self.transport_doorbells,
+                fmt_bytes(self.transport_bytes),
+                breakdown
+            ));
+        }
         if self.prefetch != "none" || self.prefetched_pages > 0 {
             s.push_str(&format!(
                 "  prefetch ({})   {:>6} issued   (used: {}, evicted unused: {}, accuracy {:.0}%)\n",
@@ -437,6 +522,55 @@ mod tests {
         assert!(j.contains("\"prefetch\":\"density\""));
         assert!(j.contains("\"prefetched_pages\":100"));
         assert!(r.text().contains("prefetch (density)"));
+    }
+
+    #[test]
+    fn transport_columns_round_trip() {
+        let mut r = sample();
+        assert_eq!(r.transport, "rdma", "gpuvm default engine");
+        r.set_transport(
+            "nvlink",
+            &crate::fabric::TransportStats {
+                doorbells: 7,
+                wrs_serviced: 9,
+                bytes_moved: 4096,
+                per_engine: vec![crate::fabric::EngineStats {
+                    name: "nvlink0".into(),
+                    doorbells: 7,
+                    wrs_serviced: 9,
+                    bytes_moved: 4096,
+                }],
+            },
+        );
+        let row = r.csv_row();
+        assert_eq!(row.len(), RunReport::CSV_HEADER.len());
+        let hdr_idx = |name: &str| {
+            RunReport::CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap()
+        };
+        assert_eq!(row[hdr_idx("transport")], "nvlink");
+        assert_eq!(row[hdr_idx("transport_doorbells")], "7");
+        assert_eq!(row[hdr_idx("transport_wrs")], "9");
+        assert_eq!(row[hdr_idx("transport_bytes")], "4096");
+        let j = r.to_json();
+        assert!(j.contains("\"transport\":\"nvlink\""));
+        assert!(j.contains("\"transport_engines\":[{\"name\":\"nvlink0\""));
+        assert!(r.text().contains("fabric (nvlink)"));
+    }
+
+    #[test]
+    fn uvm_reports_its_own_transport_key() {
+        let mut cfg = SystemConfig::default();
+        cfg.uvm.transport = "nvlink".to_string();
+        let r = RunReport::empty("uvm", "va", &cfg);
+        assert_eq!(r.transport, "nvlink");
+        let g = RunReport::empty("gpuvm", "va", &cfg);
+        assert_eq!(g.transport, "rdma");
+        // Ideal moves nothing over any engine — no phantom fabric rows.
+        let i = RunReport::empty("ideal", "va", &cfg);
+        assert_eq!(i.transport, "none");
     }
 
     #[test]

@@ -42,6 +42,7 @@ enum Axis {
     Qps(Vec<usize>),
     FaultBatch(Vec<u32>),
     Prefetch(Vec<PrefetchPolicy>),
+    Transport(Vec<String>),
 }
 
 /// Builder for one or many runs over the simulated testbed.
@@ -144,6 +145,19 @@ impl Session {
         self
     }
 
+    /// Sweep the page-migration engine ([`crate::fabric`] registry
+    /// names). Each point sets `gpuvm.transport` *and* `uvm.transport`,
+    /// so a mixed-backend sweep compares like with like.
+    pub fn sweep_transport<I, S>(mut self, ts: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.axes
+            .push(Axis::Transport(ts.into_iter().map(Into::into).collect()));
+        self
+    }
+
     /// Dataset scale for graph workloads (1.0 = default bench size).
     pub fn graph_scale(mut self, scale: f64) -> Self {
         self.graph_scale = scale;
@@ -174,6 +188,7 @@ impl Session {
                 Axis::Qps(v) => v.len(),
                 Axis::FaultBatch(v) => v.len(),
                 Axis::Prefetch(v) => v.len(),
+                Axis::Transport(v) => v.len(),
             })
             .product();
         sweep * self.workloads.len() * self.backends.len().max(1)
@@ -226,6 +241,14 @@ impl Session {
                             let mut c = base.clone();
                             c.gpuvm.prefetch_policy = v;
                             c.uvm.prefetch_policy = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::Transport(vs) => {
+                        for v in vs {
+                            let mut c = base.clone();
+                            c.gpuvm.transport = v.clone();
+                            c.uvm.transport = v.clone();
                             next.push(c);
                         }
                     }
@@ -415,6 +438,35 @@ mod tests {
         for r in &reports {
             assert!(r.prefetch_hits + r.prefetch_wasted <= r.prefetched_pages);
         }
+    }
+
+    #[test]
+    fn transport_axis_expands_and_labels_reports() {
+        let reports = Session::new(small_cfg())
+            .workload("va@64k")
+            .backend("gpuvm")
+            .sweep_transport(["rdma", "nvlink"])
+            .run_all()
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].transport, "rdma");
+        assert_eq!(reports[1].transport, "nvlink");
+        for r in &reports {
+            assert!(r.transport_wrs > 0, "{}", r.transport);
+            assert_eq!(r.transport_bytes, r.bytes_in + r.bytes_out);
+        }
+        assert_ne!(
+            reports[0].finish_ns, reports[1].finish_ns,
+            "engines must land at different timing points"
+        );
+        // A bogus engine fails during sweep validation, before any run.
+        let err = Session::new(small_cfg())
+            .workload("va@64k")
+            .backend("gpuvm")
+            .sweep_transport(["smoke-signals"])
+            .run_all()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("smoke-signals"), "{err:#}");
     }
 
     #[test]

@@ -2,24 +2,26 @@
 //!
 //! GPU threads manage their own virtual memory: on a page-table miss the
 //! warp's leader acquires a frame from the circular page buffer (evicting
-//! the FIFO head once its reference counter drains, §3.3), builds an RDMA
-//! work request, posts it to one of many parallel queue pairs, rings the
-//! doorbell (batched, §3.2), and polls the completion queue. Warps that
-//! fault on a page already in flight join its waiter list instead of
-//! posting again (inter-warp coalescing, Fig 6). The host OS is never on
-//! the path; the RNIC moves the page host-mem → NIC → GPU.
+//! the FIFO head once its reference counter drains, §3.3), builds a
+//! work request, posts it to one of many parallel queues on the
+//! configured [`crate::fabric::Transport`], rings the doorbell (batched,
+//! §3.2), and polls the completion queue. Warps that fault on a page
+//! already in flight join its waiter list instead of posting again
+//! (inter-warp coalescing, Fig 6). The host OS is never on the path;
+//! the engine (RDMA NIC by default — `gpuvm.transport`) moves the page
+//! across the fabric.
 //!
 //! Functionally, backed host regions really move bytes into the frame
 //! pool, so data integrity under paging + eviction is testable; timing
-//! flows through the RNIC and PCIe models on the shared DES clock.
+//! flows through the transport and PCIe models on the shared DES clock.
 
 use crate::config::{EvictionPolicy, SystemConfig};
+use crate::fabric::{self, Completion, Transport, WorkRequest};
 use crate::mem::{FrameId, FramePool, FrameState, HostMemory, PageId};
 use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
 use crate::metrics::Metrics;
-use crate::pcie::{Dir, Topology};
+use crate::pcie::Dir;
 use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
-use crate::rnic::{NicBank, WorkRequest};
 use crate::sim::{us, Engine, SimTime};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 use crate::util::rng::Rng;
@@ -88,8 +90,9 @@ struct PendingWr {
 
 pub struct GpuVmSystem {
     cfg: SystemConfig,
-    topo: Topology,
-    nics: NicBank,
+    /// The page-migration engine (`gpuvm.transport`): owns the link
+    /// topology and services posted WRs doorbell by doorbell.
+    fabric: Box<dyn Transport>,
     /// Per-GPU frame pool and circular head cursor.
     pools: Vec<FramePool>,
     cursor: Vec<usize>,
@@ -106,7 +109,7 @@ pub struct GpuVmSystem {
     /// Leaders waiting for a free queue (FIFO).
     backlog: VecDeque<PendingWr>,
     /// Reused completion buffer (hot path, §Perf).
-    completion_buf: Vec<crate::rnic::Completion>,
+    completion_buf: Vec<Completion>,
     /// Frames each slot currently references.
     holds: FxHashMap<SlotId, Vec<(usize, FrameId)>>,
     /// Outstanding pages per blocked slot; wake at 0.
@@ -143,8 +146,8 @@ impl GpuVmSystem {
             .map(|_| vec![VecDeque::new(); frames])
             .collect();
         Self {
-            topo: Topology::new(cfg),
-            nics: NicBank::new(cfg),
+            fabric: fabric::build(&cfg.gpuvm.transport, cfg)
+                .expect("transport name validated by SystemConfig::validate"),
             pools,
             cursor: vec![0; cfg.gpu.num_gpus],
             frame_waiters,
@@ -486,7 +489,7 @@ impl GpuVmSystem {
     /// A queue can take a post if its current batch is still filling and
     /// it has no batch in flight.
     fn find_free_queue(&self) -> Option<usize> {
-        let n = self.nics.num_queues();
+        let n = self.fabric.num_queues();
         for off in 0..n {
             let q = (self.next_queue + off) % n;
             if self.queue_busy[q] == 0 && self.batches[q].pending < self.cfg.gpuvm.fault_batch {
@@ -529,12 +532,12 @@ impl GpuVmSystem {
             gpu: pw.gpu,
         };
         let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
-        self.nics.post(queue, wr).expect("free queue accepts a post");
+        self.fabric.post(queue, wr).expect("free queue accepts a post");
         m.work_requests += 1;
         let b = &mut self.batches[queue];
         b.pending += 1;
         if b.pending >= self.cfg.gpuvm.fault_batch {
-            self.next_queue = (queue + 1) % self.nics.num_queues();
+            self.next_queue = (queue + 1) % self.fabric.num_queues();
             self.ring(t_posted + self.cfg.gpuvm.doorbell_ns, queue, eng, m);
         } else if b.pending == 1 {
             // First of a batch: arm the flush timer.
@@ -557,8 +560,8 @@ impl GpuVmSystem {
         m.doorbells += 1;
         self.completion_buf.clear();
         let mut buf = std::mem::take(&mut self.completion_buf);
-        self.nics
-            .ring_doorbell_into(now, queue, &mut self.topo, &mut buf)
+        self.fabric
+            .ring_doorbell_into(now, queue, &mut buf)
             .expect("valid queue");
         for c in &buf {
             eng.schedule(
@@ -878,11 +881,14 @@ impl MemorySystem for GpuVmSystem {
     }
 
     fn finalize(&mut self, m: &mut Metrics) {
-        self.topo.export_utilization(m);
-        let (wrs, dbs, bytes) = self.nics.stats();
-        m.bump("nic_wrs", wrs);
-        m.bump("nic_doorbells", dbs);
-        m.bump("nic_bytes", bytes);
+        self.fabric.export_utilization(m);
+        let stats = self.fabric.stats();
+        // Legacy counter names, kept for the property tests and ablation
+        // benches that predate the named TransportStats.
+        m.bump("nic_wrs", stats.wrs_serviced);
+        m.bump("nic_doorbells", stats.doorbells);
+        m.bump("nic_bytes", stats.bytes_moved);
+        m.transport.merge(&stats);
     }
 }
 
@@ -1007,6 +1013,41 @@ mod tests {
         assert!(m.prefetched_pages > 0, "dense stream must promote");
         assert!(m.faults < 128);
         assert!(m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages);
+    }
+
+    #[test]
+    fn transports_swap_under_the_runtime() {
+        // The same GPU-driven protocol over each engine: all complete,
+        // conserve bytes, and land at their engine's latency point.
+        let base = cfg(PrefetchPolicy::None);
+        let run_with = |name: &str| {
+            let mut c = base.clone();
+            c.gpuvm.transport = name.to_string();
+            let mut w = Stream::new(2, 64);
+            let mut mem = GpuVmSystem::new(&c);
+            run(&c, &mut w, &mut mem).unwrap().metrics
+        };
+        let rdma = run_with("rdma");
+        let nvl = run_with("nvlink");
+        let dma = run_with("pcie-dma");
+        for (name, m) in [("rdma", &rdma), ("nvlink", &nvl), ("pcie-dma", &dma)] {
+            assert_eq!(m.faults, 128, "{name}");
+            assert_eq!(
+                m.transport.bytes_moved,
+                m.bytes_in + m.bytes_out,
+                "{name} must conserve bytes"
+            );
+            assert_eq!(m.transport.wrs_serviced, m.work_requests, "{name}");
+        }
+        // A µs-class peer link beats the 23 µs verb floor end to end.
+        assert!(
+            nvl.finish_ns < rdma.finish_ns,
+            "nvlink {} !< rdma {}",
+            nvl.finish_ns,
+            rdma.finish_ns
+        );
+        assert_eq!(rdma.transport.per_engine[0].name, "nic0");
+        assert_eq!(nvl.transport.per_engine[0].name, "nvlink0");
     }
 
     #[test]

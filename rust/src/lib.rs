@@ -30,6 +30,7 @@ pub mod apps;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod fabric;
 pub mod gpu;
 pub mod graph;
 pub mod gpuvm;

@@ -55,18 +55,21 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--eviction fifo|fifo-strict|random] [--fault-batch N]
-           [--prefetch POLICY] [--prefetch-degree N] [--scale F] [--src V]
+           [--prefetch POLICY] [--prefetch-degree N]
+           [--transport ENGINE] [--striping round-robin|block]
+           [--scale F] [--src V]
   compare  same flags; runs gpuvm vs uvm and prints the speedup
   sweep    --app S [--app S2 ...] [--mem B1,B2,..] [--nics 1,2]
            [--page-sizes 4k,8k] [--gpu-mems 16m,32m] [--qp-counts 16,48,84]
-           [--prefetch none,fixed,density] [--threads N]
-           [--csv FILE] [--json FILE]
+           [--prefetch none,fixed,density] [--transport rdma,nvlink]
+           [--threads N] [--csv FILE] [--json FILE]
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
-  list     apps, backends, prefetch policies, and AOT artifacts
+  list     apps, backends, prefetch policies, transports, and AOT artifacts
   info     resolved system configuration
 apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp (:GU/:GK/:FS/:MO[:naive]) q1..q5[@ROWS]
 backends: gpuvm uvm uvm-memadvise ideal gdr subway rapids
-prefetch: none fixed stride density history";
+prefetch: none fixed stride density history
+transports: rdma pcie-dma nvlink";
 
 fn config_from(args: &Args) -> Result<SystemConfig> {
     let mut cfg = SystemConfig::default();
@@ -82,15 +85,22 @@ fn opts_from(args: &Args, cfg: &SystemConfig) -> Result<BuildOpts> {
     Ok(o)
 }
 
-/// `--prefetch a,b` is a sweep list; `run`/`compare` take one policy.
-/// (`apply_args` skips list values, so without this check they would be
-/// silently dropped.)
+/// `--prefetch a,b` / `--transport a,b` are sweep lists; `run`/`compare`
+/// take one value. (`apply_args` skips list values, so without this
+/// check they would be silently dropped.)
 fn reject_prefetch_list(args: &Args) -> Result<()> {
     if let Some(p) = args.get("prefetch") {
         anyhow::ensure!(
             !p.contains(','),
             "--prefetch takes a single policy here (got '{p}'); \
              sweep policies with `gpuvm sweep --prefetch {p}`"
+        );
+    }
+    if let Some(t) = args.get("transport") {
+        anyhow::ensure!(
+            !t.contains(','),
+            "--transport takes a single engine here (got '{t}'); \
+             sweep engines with `gpuvm sweep --transport {t}`"
         );
     }
     Ok(())
@@ -189,6 +199,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?;
         session = session.sweep_qps(qs);
     }
+    let transport = list_flag(args, "transport");
+    if !transport.is_empty() {
+        // Sweep the axis whenever the flag is present (a one-engine
+        // axis degenerates to the plain run), mirroring --prefetch.
+        for t in &transport {
+            gpuvm::fabric::lookup(t)?;
+        }
+        session = session.sweep_transport(transport);
+    }
     let prefetch = list_flag(args, "prefetch");
     if !prefetch.is_empty() {
         // Always sweep the axis when the flag is present (a one-policy
@@ -210,19 +229,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let reports = session.run_all()?;
 
     println!(
-        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>12} {:>9} {:>10} {:>6}",
-        "backend", "workload", "nics", "page", "gpu-mem", "prefetch", "time", "faults", "moved",
-        "amp"
+        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>9} {:>12} {:>9} {:>10} {:>6}",
+        "backend", "workload", "nics", "page", "gpu-mem", "prefetch", "fabric", "time", "faults",
+        "moved", "amp"
     );
     for r in &reports {
         println!(
-            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>12} {:>9} {:>10} {:>5.2}×",
+            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>9} {:>12} {:>9} {:>10} {:>5.2}×",
             r.backend,
             r.workload,
             r.nics,
             fmt_bytes(r.page_size),
             fmt_bytes(r.gpu_mem_bytes),
             r.prefetch,
+            r.transport,
             fmt_ns(r.finish_ns),
             r.faults,
             fmt_bytes(r.bytes_in),
@@ -324,6 +344,10 @@ fn cmd_list() -> Result<()> {
     println!("prefetch policies (--prefetch, both paged backends):");
     for p in PrefetchPolicy::all() {
         println!("  {:<14} {}", p.name(), p.describe());
+    }
+    println!("transports (--transport, page-migration engines):");
+    for t in gpuvm::fabric::registry() {
+        println!("  {:<14} {}", t.name(), t.describe());
     }
     match gpuvm::runtime::Runtime::load_default() {
         Ok(rt) => println!("artifacts ({}): {:?}", rt.dir().display(), rt.names()),

@@ -1,6 +1,7 @@
 //! Run metrics: counters, latency histograms, link utilization, and the
 //! I/O-amplification accounting Fig 12/15 report.
 
+use crate::fabric::TransportStats;
 use crate::sim::SimTime;
 use crate::util::stats::LatencyHist;
 use std::collections::BTreeMap;
@@ -53,6 +54,9 @@ pub struct Metrics {
     pub finish_ns: SimTime,
     /// Per-link busy nanoseconds (keyed by link name) for utilization.
     pub link_busy_ns: BTreeMap<String, u64>,
+    /// Page-migration engine accounting (doorbells, WRs, bytes, per-NIC
+    /// breakdown), exported by the memory system's `finalize`.
+    pub transport: TransportStats,
     /// One-time setup cost reported separately (e.g. memadvise), ns.
     pub setup_ns: u64,
     /// Extra named counters (ablations, per-app detail).
@@ -140,6 +144,7 @@ impl Metrics {
         self.compute_ns += other.compute_ns;
         self.finish_ns = self.finish_ns.max(other.finish_ns);
         self.setup_ns += other.setup_ns;
+        self.transport.merge(&other.transport);
         for (k, v) in &other.link_busy_ns {
             *self.link_busy_ns.entry(k.clone()).or_insert(0) += v;
         }

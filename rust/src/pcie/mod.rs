@@ -66,6 +66,10 @@ pub struct Topology {
     nic_bridge_shared: bool,
     /// separate up-links for NIC bridges when not shared
     nic_bridge_up: Vec<LinkId>,
+    /// per GPU: full-duplex NVLink peer channel (down, up) — aggregate
+    /// bandwidth of `nvlink.num_links` links, used only by the `nvlink`
+    /// transport.
+    nvlink: Vec<(LinkId, LinkId)>,
 }
 
 impl Topology {
@@ -90,6 +94,13 @@ impl Topology {
             let up = add(format!("gpu{g}.up"), cfg.pcie.link_bw);
             gpu_bridge.push((down, up));
         }
+        let nvlink_bw = cfg.nvlink.num_links.max(1) as f64 * cfg.nvlink.link_bw;
+        let mut nvlink = Vec::new();
+        for g in 0..cfg.gpu.num_gpus {
+            let down = add(format!("nvlink{g}.down"), nvlink_bw);
+            let up = add(format!("nvlink{g}.up"), nvlink_bw);
+            nvlink.push((down, up));
+        }
         Self {
             links,
             hop_ns: cfg.pcie.hop_ns,
@@ -98,6 +109,7 @@ impl Topology {
             gpu_bridge,
             nic_bridge_shared: cfg.pcie.nic_bridge_shared,
             nic_bridge_up,
+            nvlink,
         }
     }
 
@@ -145,6 +157,19 @@ impl Topology {
         match dir {
             Dir::In => vec![self.mem, down],
             Dir::Out => vec![up, self.mem],
+        }
+    }
+
+    /// Path over GPU `gpu`'s NVLink peer channel (the `nvlink`
+    /// transport's data path). The backing store is NVLink-attached
+    /// remote memory — a peer GPU's HBM or an NVLink-connected host —
+    /// so the path is the peer channel alone: the remote memory end is
+    /// not the PCIe root-complex `mem` link and never bottlenecks it.
+    pub fn path_nvlink(&self, gpu: usize, dir: Dir) -> Vec<LinkId> {
+        let (down, up) = self.nvlink[gpu];
+        match dir {
+            Dir::In => vec![down],
+            Dir::Out => vec![up],
         }
     }
 
@@ -293,6 +318,24 @@ mod tests {
         topo.export_utilization(&mut m);
         let u = m.link_utilization("gpu0.down");
         assert!((0.4..=0.6).contains(&u), "u={u}");
+    }
+
+    #[test]
+    fn nvlink_channel_carries_aggregate_bandwidth() {
+        let c = cfg(1);
+        let mut topo = Topology::new(&c);
+        let path = topo.path_nvlink(0, Dir::In);
+        let nvl = topo.find_link("nvlink0.down").unwrap();
+        assert!(path.contains(&nvl), "nvlink path uses its channel");
+        let n = 2000u64;
+        let bytes = 64 * 1024;
+        let mut finish = 0;
+        for _ in 0..n {
+            finish = topo.transfer(0, bytes, &path);
+        }
+        let bw = n as f64 * bytes as f64 / (finish as f64 / 1e9);
+        let expect = c.nvlink.num_links as f64 * c.nvlink.link_bw;
+        assert!((bw - expect).abs() / expect < 0.05, "bw={bw:.2e}");
     }
 
     #[test]

@@ -15,41 +15,22 @@
 //! reservations (crate::pcie) add queueing on top. This is the Little's
 //! law regime of §3.2: sustaining 12 GB/s at 23 µs needs ≈72 in-flight
 //! 4 KB requests.
+//!
+//! The doorbell/completion vocabulary ([`WorkRequest`], [`Completion`],
+//! [`TransportError`]) lives in [`crate::fabric`]; this module is the
+//! `rdma` engine's hardware model. Callers normally go through
+//! [`crate::fabric::rdma::RdmaTransport`], which owns the topology.
 
 use crate::config::SystemConfig;
-use crate::mem::PageId;
-use crate::pcie::{Dir, Topology};
+use crate::fabric::{Striping, TransportStats};
+use crate::pcie::Topology;
 use crate::sim::{us, SimTime};
 use std::collections::VecDeque;
-use thiserror::Error;
 
-/// A one-sided RDMA work request posted by a GPU leader thread.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct WorkRequest {
-    /// The leader's post_number: unique per run, used to match the CQ entry.
-    pub wr_id: u64,
-    pub page: PageId,
-    pub bytes: u64,
-    pub dir: Dir,
-    /// Which GPU's memory is the local endpoint.
-    pub gpu: usize,
-}
+pub use crate::fabric::{Completion, TransportError, WorkRequest};
 
-/// A completion-queue entry: WR `wr_id` finished at `at`.
-#[derive(Debug, Clone, Copy)]
-pub struct Completion {
-    pub wr_id: u64,
-    pub at: SimTime,
-    pub wr: WorkRequest,
-}
-
-#[derive(Debug, Error)]
-pub enum RnicError {
-    #[error("send queue {qp} full ({depth} entries)")]
-    QueueFull { qp: usize, depth: usize },
-    #[error("no such queue pair {0}")]
-    NoSuchQp(usize),
-}
+/// Backward-compatible alias: RNIC errors are transport errors.
+pub type RnicError = TransportError;
 
 /// One RNIC with `num_qps` send queues.
 pub struct Rnic {
@@ -91,11 +72,14 @@ impl Rnic {
 
     /// Insert a WR into a send queue (leader's step 5, Fig 4). Does not
     /// start service — the NIC only sees it once the doorbell rings.
-    pub fn post(&mut self, qp: usize, wr: WorkRequest) -> Result<(), RnicError> {
-        let q = self.queues.get_mut(qp).ok_or(RnicError::NoSuchQp(qp))?;
+    pub fn post(&mut self, qp: usize, wr: WorkRequest) -> Result<(), TransportError> {
+        let q = self
+            .queues
+            .get_mut(qp)
+            .ok_or(TransportError::NoSuchQueue(qp))?;
         if q.len() >= self.qp_entries {
-            return Err(RnicError::QueueFull {
-                qp,
+            return Err(TransportError::QueueFull {
+                queue: qp,
                 depth: self.qp_entries,
             });
         }
@@ -113,7 +97,7 @@ impl Rnic {
         now: SimTime,
         qp: usize,
         topo: &mut Topology,
-    ) -> Result<Vec<Completion>, RnicError> {
+    ) -> Result<Vec<Completion>, TransportError> {
         let mut completions = Vec::new();
         self.ring_doorbell_into(now, qp, topo, &mut completions)?;
         Ok(completions)
@@ -127,9 +111,9 @@ impl Rnic {
         qp: usize,
         topo: &mut Topology,
         completions: &mut Vec<Completion>,
-    ) -> Result<(), RnicError> {
+    ) -> Result<(), TransportError> {
         if qp >= self.queues.len() {
-            return Err(RnicError::NoSuchQp(qp));
+            return Err(TransportError::NoSuchQueue(qp));
         }
         self.doorbells += 1;
         completions.reserve(self.queues[qp].len());
@@ -154,13 +138,14 @@ impl Rnic {
     }
 }
 
-/// A bank of NICs with QPs striped across them round-robin: global queue
-/// index `q` lives on NIC `q % nics`, local QP `q / nics`. This is how the
-/// runtime uses "both RNICs available on the node" (§4.1) to recover the
-/// full PCIe bandwidth.
+/// A bank of NICs with global queues spread over them by an explicit
+/// [`Striping`] policy (`rnic.striping`; the default round-robin is how
+/// the runtime uses "both RNICs available on the node" (§4.1) to recover
+/// the full PCIe bandwidth — adjacent queues land on different NICs).
 pub struct NicBank {
     nics: Vec<Rnic>,
     num_queues: usize,
+    striping: Striping,
 }
 
 impl NicBank {
@@ -171,6 +156,7 @@ impl NicBank {
         Self {
             nics: (0..n).map(|i| Rnic::new(i, cfg, per_nic)).collect(),
             num_queues,
+            striping: cfg.rnic.striping,
         }
     }
 
@@ -182,18 +168,33 @@ impl NicBank {
         self.nics.len()
     }
 
+    pub fn striping(&self) -> Striping {
+        self.striping
+    }
+
     pub fn nic_of(&self, queue: usize) -> usize {
-        queue % self.nics.len()
+        self.striping
+            .locate(queue, self.num_queues, self.nics.len())
+            .0
     }
 
     fn local_qp(&self, queue: usize) -> usize {
-        queue / self.nics.len()
+        self.striping
+            .locate(queue, self.num_queues, self.nics.len())
+            .1
     }
 
-    pub fn post(&mut self, queue: usize, wr: WorkRequest) -> Result<(), RnicError> {
+    pub fn post(&mut self, queue: usize, wr: WorkRequest) -> Result<(), TransportError> {
+        if queue >= self.num_queues {
+            return Err(TransportError::NoSuchQueue(queue));
+        }
         let nic = self.nic_of(queue);
         let qp = self.local_qp(queue);
-        self.nics[nic].post(qp, wr)
+        // Report queue-full against the global queue index.
+        self.nics[nic].post(qp, wr).map_err(|e| match e {
+            TransportError::QueueFull { depth, .. } => TransportError::QueueFull { queue, depth },
+            other => other,
+        })
     }
 
     pub fn ring_doorbell(
@@ -201,7 +202,10 @@ impl NicBank {
         now: SimTime,
         queue: usize,
         topo: &mut Topology,
-    ) -> Result<Vec<Completion>, RnicError> {
+    ) -> Result<Vec<Completion>, TransportError> {
+        if queue >= self.num_queues {
+            return Err(TransportError::NoSuchQueue(queue));
+        }
         let nic = self.nic_of(queue);
         let qp = self.local_qp(queue);
         self.nics[nic].ring_doorbell(now, qp, topo)
@@ -214,32 +218,46 @@ impl NicBank {
         queue: usize,
         topo: &mut Topology,
         out: &mut Vec<Completion>,
-    ) -> Result<(), RnicError> {
+    ) -> Result<(), TransportError> {
+        if queue >= self.num_queues {
+            return Err(TransportError::NoSuchQueue(queue));
+        }
         let nic = self.nic_of(queue);
         let qp = self.local_qp(queue);
         self.nics[nic].ring_doorbell_into(now, qp, topo, out)
     }
 
     pub fn queue_depth(&self, queue: usize) -> usize {
+        if queue >= self.num_queues {
+            return 0;
+        }
         self.nics[self.nic_of(queue)].queue_depth(self.local_qp(queue))
     }
 
-    pub fn stats(&self) -> (u64, u64, u64) {
-        let mut wrs = 0;
-        let mut dbs = 0;
-        let mut bytes = 0;
+    /// Named stats with the per-NIC breakdown (the old anonymous
+    /// `(wrs, doorbells, bytes)` tuple, grown up).
+    pub fn stats(&self) -> TransportStats {
+        let mut s = TransportStats::default();
         for n in &self.nics {
-            wrs += n.wrs_serviced;
-            dbs += n.doorbells;
-            bytes += n.bytes_moved;
+            s.wrs_serviced += n.wrs_serviced;
+            s.doorbells += n.doorbells;
+            s.bytes_moved += n.bytes_moved;
+            s.per_engine.push(crate::fabric::EngineStats {
+                name: format!("nic{}", n.id),
+                doorbells: n.doorbells,
+                wrs_serviced: n.wrs_serviced,
+                bytes_moved: n.bytes_moved,
+            });
         }
-        (wrs, dbs, bytes)
+        s
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::PageId;
+    use crate::pcie::Dir;
 
     fn setup(nics: usize) -> (SystemConfig, Topology) {
         let mut cfg = SystemConfig::default();
@@ -288,7 +306,7 @@ mod tests {
         }
         assert!(matches!(
             nic.post(0, wr(999, 4096)),
-            Err(RnicError::QueueFull { .. })
+            Err(TransportError::QueueFull { .. })
         ));
     }
 
@@ -321,6 +339,20 @@ mod tests {
         assert_eq!(bank.nic_of(0), 0);
         assert_eq!(bank.nic_of(1), 1);
         assert_eq!(bank.nic_of(2), 0);
+        assert_eq!(bank.striping(), Striping::RoundRobin);
+    }
+
+    #[test]
+    fn bank_block_striping_partitions() {
+        let mut cfg = SystemConfig::default();
+        cfg.rnic.num_nics = 2;
+        cfg.gpuvm.num_qps = 8;
+        cfg.rnic.striping = Striping::Block;
+        let bank = NicBank::new(&cfg);
+        assert_eq!(bank.nic_of(0), 0);
+        assert_eq!(bank.nic_of(3), 0);
+        assert_eq!(bank.nic_of(4), 1);
+        assert_eq!(bank.nic_of(7), 1);
     }
 
     #[test]
@@ -338,7 +370,17 @@ mod tests {
             got.extend(bank.ring_doorbell(0, q, &mut topo).unwrap());
         }
         assert_eq!(got.len(), 4);
-        let (wrs, dbs, bytes) = bank.stats();
-        assert_eq!((wrs, dbs, bytes), (4, 4, 4 * 4096));
+        let s = bank.stats();
+        assert_eq!(
+            (s.wrs_serviced, s.doorbells, s.bytes_moved),
+            (4, 4, 4 * 4096)
+        );
+        // Per-NIC breakdown covers both NICs and sums to the totals.
+        assert_eq!(s.per_engine.len(), 2);
+        assert_eq!(
+            s.per_engine.iter().map(|e| e.bytes_moved).sum::<u64>(),
+            s.bytes_moved
+        );
+        assert!(s.per_engine.iter().all(|e| e.wrs_serviced == 2));
     }
 }

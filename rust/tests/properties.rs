@@ -10,11 +10,13 @@
 //! 7. CSR ↔ Balanced CSR traversal equivalence on random graphs.
 
 use gpuvm::config::{EvictionPolicy, SystemConfig};
+use gpuvm::fabric::{self, WorkRequest};
 use gpuvm::gpu::exec::run;
 use gpuvm::gpu::kernel::{Access, Launch, WarpOp, Workload};
 use gpuvm::gpuvm::GpuVmSystem;
 use gpuvm::graph::{BalancedCsr, Csr};
-use gpuvm::mem::{HostMemory, RegionId};
+use gpuvm::mem::{HostMemory, PageId, RegionId};
+use gpuvm::pcie::Dir;
 use gpuvm::prefetch::{self, FaultEvent, PrefetchPolicy};
 use gpuvm::util::proptest::check;
 use gpuvm::util::rng::Rng;
@@ -299,6 +301,109 @@ fn prop_prefetch_accounting_bounded() {
         } else {
             // Page geometry: demand + speculative transfers, one page each.
             assert_eq!(m.bytes_in, (m.faults + m.prefetched_pages) * 4096);
+        }
+    });
+}
+
+#[test]
+fn prop_transports_conserve_bytes_and_complete_monotone() {
+    // Every fabric engine, under a random post/ring schedule:
+    // 1. byte conservation — the byte sum of completed WRs equals the
+    //    engine's `bytes_moved` (nothing lost, nothing invented), and
+    //    every posted WR completes exactly once after a final flush;
+    // 2. per-queue monotonicity — each queue carries one flow (fixed
+    //    gpu + direction, as the runtimes use them), so its completion
+    //    times never run backwards across doorbells with advancing time.
+    check("transport conservation", 40, |rng| {
+        let mut cfg = SystemConfig::default();
+        cfg.rnic.num_nics = 1 + rng.gen_range(2) as usize;
+        cfg.gpu.num_gpus = 1 + rng.gen_range(2) as usize;
+        cfg.gpuvm.num_qps = 2 + rng.gen_range(14) as usize;
+        if rng.bool(0.3) {
+            cfg.rnic.striping = gpuvm::fabric::Striping::Block;
+        }
+        let schedule_seed = rng.next_u64();
+        for factory in fabric::registry() {
+            let mut t = factory.build(&cfg);
+            let name = factory.name();
+            let nq = t.num_queues();
+            // One flow per queue: fixed endpoint GPU and direction.
+            let flow = |q: usize| {
+                (
+                    q % cfg.gpu.num_gpus,
+                    if q % 3 == 0 { Dir::Out } else { Dir::In },
+                )
+            };
+            let mut local = Rng::new(schedule_seed);
+            let mut posted = 0u64;
+            let mut posted_bytes = 0u64;
+            let mut completed_bytes = 0u64;
+            let mut seen = std::collections::BTreeSet::new();
+            let mut last_at = vec![0u64; nq];
+            let mut now = 0u64;
+            let mut wr_id = 0u64;
+            let drain = |t: &mut Box<dyn fabric::Transport>,
+                             now: u64,
+                             q: usize,
+                             last_at: &mut Vec<u64>,
+                             seen: &mut std::collections::BTreeSet<u64>,
+                             completed_bytes: &mut u64| {
+                for c in t.ring_doorbell(now, q).expect("valid queue") {
+                    assert!(c.at >= now, "{name}: completion {} before ring {now}", c.at);
+                    assert!(
+                        c.at >= last_at[q],
+                        "{name}: queue {q} ran backwards ({} < {})",
+                        c.at,
+                        last_at[q]
+                    );
+                    last_at[q] = c.at;
+                    assert!(seen.insert(c.wr_id), "{name}: duplicate WR {}", c.wr_id);
+                    *completed_bytes += c.wr.bytes;
+                }
+            };
+            for _ in 0..120 {
+                now += local.gen_range(20_000);
+                let q = local.gen_range(nq as u64) as usize;
+                let (gpu, dir) = flow(q);
+                for _ in 0..1 + local.gen_range(3) {
+                    wr_id += 1;
+                    let bytes = 1 + local.gen_range(128 * 1024);
+                    let wr = WorkRequest {
+                        wr_id,
+                        page: PageId(wr_id),
+                        bytes,
+                        dir,
+                        gpu,
+                    };
+                    if t.post(q, wr).is_ok() {
+                        posted += 1;
+                        posted_bytes += bytes;
+                    }
+                }
+                if local.bool(0.75) {
+                    drain(&mut t, now, q, &mut last_at, &mut seen, &mut completed_bytes);
+                }
+            }
+            now += 1;
+            for q in 0..nq {
+                drain(&mut t, now, q, &mut last_at, &mut seen, &mut completed_bytes);
+            }
+            let st = t.stats();
+            assert_eq!(seen.len() as u64, posted, "{name}: lost completions");
+            assert_eq!(st.wrs_serviced, posted, "{name}");
+            assert_eq!(
+                st.bytes_moved, posted_bytes,
+                "{name}: stats bytes diverge from posted bytes"
+            );
+            assert_eq!(
+                completed_bytes, posted_bytes,
+                "{name}: completed bytes diverge from posted bytes"
+            );
+            assert_eq!(
+                st.per_engine.iter().map(|e| e.bytes_moved).sum::<u64>(),
+                st.bytes_moved,
+                "{name}: per-engine breakdown must sum to the total"
+            );
         }
     });
 }

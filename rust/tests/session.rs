@@ -120,14 +120,26 @@ fn reports_serialize_to_csv_and_json() {
     let csv = std::fs::read_to_string(&csv_path).unwrap();
     assert!(csv.starts_with("backend,workload,"));
     assert_eq!(csv.lines().count(), 1 + reports.len());
-    // Prefetch accuracy columns ride every report.
+    // Prefetch accuracy and transport columns ride every report.
     let header = csv.lines().next().unwrap();
-    for col in ["prefetch", "prefetched_pages", "prefetch_hits", "prefetch_wasted"] {
+    for col in [
+        "prefetch",
+        "prefetched_pages",
+        "prefetch_hits",
+        "prefetch_wasted",
+        "transport",
+        "transport_doorbells",
+        "transport_wrs",
+        "transport_bytes",
+    ] {
         assert!(header.contains(col), "'{col}' missing from: {header}");
     }
     let json = std::fs::read_to_string(&json_path).unwrap();
     assert!(json.trim().starts_with('[') && json.contains("\"backend\":\"gdr\""));
     assert!(json.contains("\"prefetch\":\"none\"") && json.contains("\"prefetched_pages\":0"));
+    // GDR staged over the rdma engine and says so.
+    assert!(json.contains("\"transport\":\"rdma\""));
+    assert!(json.contains("\"transport_engines\":[{\"name\":\"nic0\""));
 }
 
 #[test]
