@@ -9,8 +9,9 @@
 //!    on a write-heavy oversubscribed workload.
 
 use gpuvm::apps::{MatrixApp, MatrixSeq, StreamWorkload, VaWorkload};
-use gpuvm::config::{EvictionPolicy, SystemConfig};
+use gpuvm::config::SystemConfig;
 use gpuvm::coordinator::simulate;
+use gpuvm::residency::ResidencyPolicyKind;
 use gpuvm::util::bench::{banner, fmt_ns};
 use gpuvm::util::csv::CsvWriter;
 
@@ -26,12 +27,12 @@ fn main() {
     banner("Ablation 1: eviction policy under pressure (MVT@4096, 16 MiB frames)");
     let mut csv = CsvWriter::bench_result("ablation_eviction", &["policy", "ms", "refetches", "waits"]);
     for (name, policy) in [
-        ("fifo-refpriority", EvictionPolicy::FifoRefCount),
-        ("fifo-strict", EvictionPolicy::FifoStrict),
-        ("random", EvictionPolicy::Random),
+        ("fifo-refpriority", ResidencyPolicyKind::FifoRefcount),
+        ("fifo-strict", ResidencyPolicyKind::FifoStrict),
+        ("random", ResidencyPolicyKind::Random),
     ] {
         let mut cfg = base();
-        cfg.gpuvm.eviction_policy = policy;
+        cfg.gpuvm.residency_policy = policy;
         // The column pass touches ~33 MiB of distinct pages; 16 MiB of
         // frames forces sustained eviction so the policies differ.
         cfg.gpu.mem_bytes = 16 << 20;

@@ -10,34 +10,57 @@
 use super::toml::{parse, Doc, Value};
 use crate::fabric::Striping;
 use crate::prefetch::PrefetchPolicy;
+use crate::residency::ResidencyPolicyKind;
 use crate::util::cli::Args;
 use anyhow::{Context, Result};
 
-/// Eviction policy for the GPUVM circular page buffer (the paper ships
-/// FIFO+refcount; the alternatives exist for the ablation benches).
+/// Legacy eviction-policy selector for the GPUVM circular page buffer.
+/// Victim selection now lives in the pluggable [`crate::residency`]
+/// subsystem; this enum survives as the compatibility parser behind the
+/// original `--eviction` flag and `("gpuvm", "eviction_policy")` config
+/// key, mapping the three historical names onto residency engines via
+/// [`EvictionPolicy::to_residency`]. New code should use
+/// [`ResidencyPolicyKind`] (`--residency`, `residency_policy`), which
+/// also exposes `lru`, `clock`, `tree-lru`, and `prefetch-aware`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EvictionPolicy {
-    /// Paper §5.4 "FIFO-based reference priority eviction": the circular
-    /// head cursor advances past frames whose reference counter is
-    /// nonzero (hot pages are skipped, not waited on); only a full
-    /// fruitless sweep queues behind the head for liveness.
+    /// Paper §5.4 "FIFO-based reference priority eviction".
     FifoRefCount,
-    /// Ablation: the naive reading of §3.3 — always take the head frame
-    /// and *wait* for its reference counter to drain. Serializes on hot
-    /// shared pages; kept to quantify what reference priority buys.
+    /// Ablation: the naive reading of §3.3 — take the head frame and
+    /// *wait* for its reference counter to drain.
     FifoStrict,
     /// Ablation: random frame choice.
     Random,
 }
 
 impl EvictionPolicy {
+    /// Parse a legacy policy name; unknown names list the valid set
+    /// (matching [`PrefetchPolicy::parse`]'s UX).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "fifo" | "fifo-refcount" => Self::FifoRefCount,
             "fifo-strict" => Self::FifoStrict,
             "random" => Self::Random,
-            _ => anyhow::bail!("unknown eviction policy '{s}'"),
+            _ => anyhow::bail!(
+                "unknown eviction policy '{s}' (valid: {}; \
+                 see --residency for the full policy set)",
+                Self::names().join("|")
+            ),
         })
+    }
+
+    /// Legacy policy names, in display order.
+    pub fn names() -> Vec<&'static str> {
+        vec!["fifo", "fifo-refcount", "fifo-strict", "random"]
+    }
+
+    /// The residency engine this legacy name selects.
+    pub fn to_residency(self) -> ResidencyPolicyKind {
+        match self {
+            Self::FifoRefCount => ResidencyPolicyKind::FifoRefcount,
+            Self::FifoStrict => ResidencyPolicyKind::FifoStrict,
+            Self::Random => ResidencyPolicyKind::Random,
+        }
     }
 }
 
@@ -87,7 +110,12 @@ pub struct GpuVmConfig {
     pub doorbell_ns: u64,
     pub cq_poll_interval_ns: u64,
     pub eviction_check_ns: u64,
-    pub eviction_policy: EvictionPolicy,
+    /// Residency (victim-selection) policy for the circular frame
+    /// buffer (set-path `("gpuvm", "residency_policy")`, CLI
+    /// `--residency`; the legacy `("gpuvm", "eviction_policy")` /
+    /// `--eviction` spellings map here too). The paper ships
+    /// `fifo-refcount`; the engines live in [`crate::residency`].
+    pub residency_policy: ResidencyPolicyKind,
     /// Write-back of dirty pages on eviction is synchronous in the paper's
     /// prototype ("we have not yet implemented asynchronous write-back",
     /// §5.3); the flag exists for the extension/ablation.
@@ -154,7 +182,11 @@ pub struct UvmConfig {
     /// Speculative prefetch rounds each fault to this transfer size
     /// (4 KB fault + 60 KB prefetch = 64 KB).
     pub prefetch_size: u64,
-    /// Eviction granularity: a VABlock (2 MB).
+    /// VABlock granularity (2 MB). This is the eviction unit of the UVM
+    /// driver model AND the shared VA-block geometry the block-aware
+    /// `tree-lru` residency policy clusters on — in both paged systems
+    /// (GPUVM derives its block hints from it too, there being exactly
+    /// one notion of a VA block in the machine).
     pub evict_block: u64,
     /// Max faults the driver retires per batch.
     pub batch_size: usize,
@@ -189,6 +221,12 @@ pub struct UvmConfig {
     /// Max speculative transfer units the stride/history policies add
     /// per fault (set-path `("uvm", "prefetch_degree")`).
     pub prefetch_degree: usize,
+    /// Residency (victim-selection) policy the driver uses to seed its
+    /// VABlock evictions (set-path `("uvm", "residency_policy")`, CLI
+    /// `--residency`). The default `tree-lru` reproduces the real
+    /// driver's block-LRU choice — the whole 2 MB block of the chosen
+    /// seed still goes, whatever the policy picked.
+    pub residency_policy: ResidencyPolicyKind,
     /// Page-migration engine the driver's fault groups ride (registry
     /// key in [`crate::fabric`]; set-path `("uvm", "transport")`, CLI
     /// `--transport`). The real driver drives the chipset copy engine:
@@ -278,7 +316,7 @@ impl Default for SystemConfig {
                 doorbell_ns: 700, // PCIe write to BAR-mapped doorbell
                 cq_poll_interval_ns: 200,
                 eviction_check_ns: 80,
-                eviction_policy: EvictionPolicy::FifoRefCount,
+                residency_policy: ResidencyPolicyKind::FifoRefcount,
                 async_writeback: false,
                 prefetch_policy: PrefetchPolicy::None,
                 prefetch_degree: 8,
@@ -315,6 +353,7 @@ impl Default for SystemConfig {
                 memadvise_setup_ms: 120.0,
                 prefetch_policy: PrefetchPolicy::Fixed,
                 prefetch_degree: 8,
+                residency_policy: ResidencyPolicyKind::TreeLru,
                 transport: "pcie-dma".to_string(),
             },
             gdr: GdrConfig {
@@ -391,7 +430,15 @@ impl SystemConfig {
             ("gpuvm", "cq_poll_interval_ns") => self.gpuvm.cq_poll_interval_ns = u64v(v)?,
             ("gpuvm", "eviction_check_ns") => self.gpuvm.eviction_check_ns = u64v(v)?,
             ("gpuvm", "eviction_policy") => {
-                self.gpuvm.eviction_policy = EvictionPolicy::parse(
+                // Legacy key: the three historical names map onto
+                // residency engines.
+                self.gpuvm.residency_policy = EvictionPolicy::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+                .to_residency()
+            }
+            ("gpuvm", "residency_policy") => {
+                self.gpuvm.residency_policy = ResidencyPolicyKind::parse(
                     v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
                 )?
             }
@@ -436,6 +483,11 @@ impl SystemConfig {
                 )?
             }
             ("uvm", "prefetch_degree") => self.uvm.prefetch_degree = usizev(v)?,
+            ("uvm", "residency_policy") => {
+                self.uvm.residency_policy = ResidencyPolicyKind::parse(
+                    v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?,
+                )?
+            }
             ("uvm", "transport") => {
                 let s = v.as_str().ok_or_else(|| anyhow::anyhow!("expected string"))?;
                 crate::fabric::lookup(s)?;
@@ -471,7 +523,19 @@ impl SystemConfig {
         self.gpu.warps_per_sm = args.get_usize("warps-per-sm", self.gpu.warps_per_sm)?;
         self.gpuvm.fault_batch = args.get_u64("fault-batch", self.gpuvm.fault_batch as u64)? as u32;
         if let Some(ev) = args.get("eviction") {
-            self.gpuvm.eviction_policy = EvictionPolicy::parse(ev)?;
+            // Legacy flag: GPUVM only, three historical names.
+            self.gpuvm.residency_policy = EvictionPolicy::parse(ev)?.to_residency();
+        }
+        // `--residency POLICY` sets both paged systems' policies at
+        // once (like `--prefetch`); a comma-separated value is a sweep
+        // list (`gpuvm sweep --residency lru,clock`) handled by the
+        // sweep axis, not the scalar config.
+        if let Some(r) = args.get("residency") {
+            if !r.contains(',') {
+                let policy = ResidencyPolicyKind::parse(r)?;
+                self.gpuvm.residency_policy = policy;
+                self.uvm.residency_policy = policy;
+            }
         }
         // `--prefetch POLICY` sets both systems' policies at once. A
         // comma-separated value is a sweep list (`gpuvm sweep
@@ -583,7 +647,70 @@ mod tests {
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.gpuvm.page_size, 4096);
         assert_eq!(cfg.rnic.num_nics, 2);
-        assert_eq!(cfg.gpuvm.eviction_policy, EvictionPolicy::Random);
+        assert_eq!(cfg.gpuvm.residency_policy, ResidencyPolicyKind::Random);
+    }
+
+    #[test]
+    fn residency_keys_and_flags() {
+        // New keys accept the full policy set, per system.
+        let doc = parse(
+            "[gpuvm]\nresidency_policy = \"clock\"\n\
+             [uvm]\nresidency_policy = \"lru\"\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.gpuvm.residency_policy, ResidencyPolicyKind::Clock);
+        assert_eq!(cfg.uvm.residency_policy, ResidencyPolicyKind::Lru);
+        cfg.validate().unwrap();
+
+        // The legacy key still works and maps onto the new engines.
+        let doc = parse("[gpuvm]\neviction_policy = \"fifo-strict\"\n").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.gpuvm.residency_policy, ResidencyPolicyKind::FifoStrict);
+
+        // `--residency` sets both systems; `--eviction` stays GPUVM-only.
+        let args = Args::parse(
+            "t".into(),
+            ["--residency", "tree-lru"].iter().map(|s| s.to_string()).collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.gpuvm.residency_policy, ResidencyPolicyKind::TreeLru);
+        assert_eq!(cfg.uvm.residency_policy, ResidencyPolicyKind::TreeLru);
+
+        let args = Args::parse(
+            "t".into(),
+            ["--eviction", "random"].iter().map(|s| s.to_string()).collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.gpuvm.residency_policy, ResidencyPolicyKind::Random);
+        assert_eq!(cfg.uvm.residency_policy, ResidencyPolicyKind::TreeLru);
+
+        // Unknown names fail with the valid set, both spellings.
+        let bad = Args::parse(
+            "t".into(),
+            ["--residency", "belady"].iter().map(|s| s.to_string()).collect(),
+        );
+        let err = SystemConfig::default().apply_args(&bad).unwrap_err().to_string();
+        assert!(err.contains("fifo-refcount") && err.contains("prefetch-aware"), "{err}");
+        let bad = Args::parse(
+            "t".into(),
+            ["--eviction", "belady"].iter().map(|s| s.to_string()).collect(),
+        );
+        let err = SystemConfig::default().apply_args(&bad).unwrap_err().to_string();
+        assert!(err.contains("fifo-strict") && err.contains("random"), "{err}");
+
+        // Comma-separated values are sweep lists, left to the sweep axis.
+        let listy = Args::parse(
+            "t".into(),
+            ["--residency", "lru,clock"].iter().map(|s| s.to_string()).collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&listy).unwrap();
+        assert_eq!(cfg.gpuvm.residency_policy, ResidencyPolicyKind::FifoRefcount);
     }
 
     #[test]

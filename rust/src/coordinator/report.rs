@@ -24,6 +24,10 @@ pub struct RunReport {
     /// Prefetch policy name the run's memory system used (`gpuvm.*` for
     /// GPUVM and the bulk engines, `uvm.*` for the UVM variants).
     pub prefetch: String,
+    /// Residency (eviction) policy name the run's paged memory system
+    /// used (`gpuvm.residency_policy` / `uvm.residency_policy`); the
+    /// bulk engines and `ideal` never evict and report `none`.
+    pub residency: String,
     /// Page-migration engine the run's data path rode (`gpuvm.transport`
     /// / `uvm.transport`; bulk engines report their fixed engine).
     pub transport: String,
@@ -41,7 +45,20 @@ pub struct RunReport {
     pub bytes_out: u64,
     pub useful_bytes: u64,
     pub evictions: u64,
+    /// Evictions of clean pages (no write-back).
+    pub evictions_clean: u64,
+    /// Evictions of dirty pages (each wrote page/group bytes back).
+    pub evictions_dirty: u64,
+    /// UVM-only: evictions forced through a live reference count.
+    pub evictions_forced: u64,
     pub refetches: u64,
+    /// Refetches of pages evicted within the last
+    /// [`crate::residency::THRASH_WINDOW`] fills (thrash indicator).
+    pub thrash_refetches: u64,
+    /// Reuse-distance histogram p50/p99 (log2-bucket upper bounds, in
+    /// fills between eviction and refetch; 0 when nothing refetched).
+    pub reuse_p50: u64,
+    pub reuse_p99: u64,
     /// Speculative transfer units the prefetch policy issued.
     pub prefetched_pages: u64,
     /// Prefetched units later touched by the application.
@@ -59,8 +76,9 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Column names matching [`RunReport::csv_row`].
-    pub const CSV_HEADER: [&'static str; 27] = [
+    /// Column names matching [`RunReport::csv_row`] (the README's
+    /// "CSV column reference" table documents each one).
+    pub const CSV_HEADER: [&'static str; 34] = [
         "backend",
         "workload",
         "nics",
@@ -68,6 +86,7 @@ impl RunReport {
         "gpu_mem_bytes",
         "qps",
         "prefetch",
+        "residency",
         "transport",
         "finish_ns",
         "setup_ns",
@@ -80,7 +99,13 @@ impl RunReport {
         "bytes_out",
         "useful_bytes",
         "evictions",
+        "evictions_clean",
+        "evictions_dirty",
+        "evictions_forced",
         "refetches",
+        "thrash_refetches",
+        "reuse_p50",
+        "reuse_p99",
         "prefetched_pages",
         "prefetch_hits",
         "prefetch_wasted",
@@ -98,12 +123,24 @@ impl RunReport {
         // Bulk engines overwrite `transport` with their fixed engine in
         // their own `run()`; `ideal` moves nothing over any engine, so
         // its rows say `none` rather than claiming a phantom fabric.
-        let (prefetch, transport) = if backend.starts_with("uvm") {
-            (cfg.uvm.prefetch_policy, cfg.uvm.transport.clone())
+        // Only the two paged systems evict, so only they report a
+        // residency policy.
+        let (prefetch, residency, transport) = if backend.starts_with("uvm") {
+            (
+                cfg.uvm.prefetch_policy,
+                cfg.uvm.residency_policy.name(),
+                cfg.uvm.transport.clone(),
+            )
         } else if backend == "ideal" {
-            (cfg.gpuvm.prefetch_policy, "none".to_string())
+            (cfg.gpuvm.prefetch_policy, "none", "none".to_string())
+        } else if backend == "gpuvm" {
+            (
+                cfg.gpuvm.prefetch_policy,
+                cfg.gpuvm.residency_policy.name(),
+                cfg.gpuvm.transport.clone(),
+            )
         } else {
-            (cfg.gpuvm.prefetch_policy, cfg.gpuvm.transport.clone())
+            (cfg.gpuvm.prefetch_policy, "none", cfg.gpuvm.transport.clone())
         };
         Self {
             backend: backend.to_string(),
@@ -113,6 +150,7 @@ impl RunReport {
             gpu_mem_bytes: cfg.gpu.mem_bytes,
             qps: cfg.gpuvm.num_qps,
             prefetch: prefetch.name().to_string(),
+            residency: residency.to_string(),
             transport,
             finish_ns: 0,
             setup_ns: 0,
@@ -125,7 +163,13 @@ impl RunReport {
             bytes_out: 0,
             useful_bytes: 0,
             evictions: 0,
+            evictions_clean: 0,
+            evictions_dirty: 0,
+            evictions_forced: 0,
             refetches: 0,
+            thrash_refetches: 0,
+            reuse_p50: 0,
+            reuse_p99: 0,
             prefetched_pages: 0,
             prefetch_hits: 0,
             prefetch_wasted: 0,
@@ -151,7 +195,21 @@ impl RunReport {
             bytes_out: m.bytes_out,
             useful_bytes: m.useful_bytes,
             evictions: m.evictions,
+            evictions_clean: m.evictions_clean,
+            evictions_dirty: m.evictions_dirty,
+            evictions_forced: m.evictions_forced,
             refetches: m.refetches,
+            thrash_refetches: m.thrash_refetches,
+            reuse_p50: if m.reuse_distance.count() > 0 {
+                m.reuse_distance.percentile(50.0)
+            } else {
+                0
+            },
+            reuse_p99: if m.reuse_distance.count() > 0 {
+                m.reuse_distance.percentile(99.0)
+            } else {
+                0
+            },
             prefetched_pages: m.prefetched_pages,
             prefetch_hits: m.prefetch_hits,
             prefetch_wasted: m.prefetch_wasted,
@@ -207,6 +265,7 @@ impl RunReport {
             self.gpu_mem_bytes.to_string(),
             self.qps.to_string(),
             self.prefetch.clone(),
+            self.residency.clone(),
             self.transport.clone(),
             self.finish_ns.to_string(),
             self.setup_ns.to_string(),
@@ -219,7 +278,13 @@ impl RunReport {
             self.bytes_out.to_string(),
             self.useful_bytes.to_string(),
             self.evictions.to_string(),
+            self.evictions_clean.to_string(),
+            self.evictions_dirty.to_string(),
+            self.evictions_forced.to_string(),
             self.refetches.to_string(),
+            self.thrash_refetches.to_string(),
+            self.reuse_p50.to_string(),
+            self.reuse_p99.to_string(),
             self.prefetched_pages.to_string(),
             self.prefetch_hits.to_string(),
             self.prefetch_wasted.to_string(),
@@ -248,11 +313,14 @@ impl RunReport {
         format!(
             concat!(
                 "{{\"backend\":{},\"workload\":{},\"nics\":{},\"page_size\":{},",
-                "\"gpu_mem_bytes\":{},\"qps\":{},\"prefetch\":{},\"transport\":{},",
+                "\"gpu_mem_bytes\":{},\"qps\":{},\"prefetch\":{},\"residency\":{},",
+                "\"transport\":{},",
                 "\"finish_ns\":{},",
                 "\"setup_ns\":{},\"kernels\":{},\"events\":{},\"faults\":{},",
                 "\"coalesced_faults\":{},\"hits\":{},\"bytes_in\":{},\"bytes_out\":{},",
-                "\"useful_bytes\":{},\"evictions\":{},\"refetches\":{},",
+                "\"useful_bytes\":{},\"evictions\":{},\"evictions_clean\":{},",
+                "\"evictions_dirty\":{},\"evictions_forced\":{},\"refetches\":{},",
+                "\"thrash_refetches\":{},\"reuse_p50\":{},\"reuse_p99\":{},",
                 "\"prefetched_pages\":{},\"prefetch_hits\":{},\"prefetch_wasted\":{},",
                 "\"transport_doorbells\":{},\"transport_wrs\":{},",
                 "\"transport_bytes\":{},\"transport_engines\":[{}],",
@@ -266,6 +334,7 @@ impl RunReport {
             self.gpu_mem_bytes,
             self.qps,
             json_string(&self.prefetch),
+            json_string(&self.residency),
             json_string(&self.transport),
             self.finish_ns,
             self.setup_ns,
@@ -278,7 +347,13 @@ impl RunReport {
             self.bytes_out,
             self.useful_bytes,
             self.evictions,
+            self.evictions_clean,
+            self.evictions_dirty,
+            self.evictions_forced,
             self.refetches,
+            self.thrash_refetches,
+            self.reuse_p50,
+            self.reuse_p99,
             self.prefetched_pages,
             self.prefetch_hits,
             self.prefetch_wasted,
@@ -327,6 +402,18 @@ impl RunReport {
             "  evictions          {:>14}   (refetches: {})\n",
             self.evictions, self.refetches
         ));
+        if self.evictions > 0 {
+            s.push_str(&format!(
+                "  residency ({})   {} clean / {} dirty / {} forced; \
+                 thrash refetches: {} (reuse p50 ≲{} fills)\n",
+                self.residency,
+                self.evictions_clean,
+                self.evictions_dirty,
+                self.evictions_forced,
+                self.thrash_refetches,
+                self.reuse_p50
+            ));
+        }
         if self.transport_wrs > 0 {
             let breakdown = if self.transport_engines.len() > 1 {
                 let parts: Vec<String> = self
@@ -522,6 +609,59 @@ mod tests {
         assert!(j.contains("\"prefetch\":\"density\""));
         assert!(j.contains("\"prefetched_pages\":100"));
         assert!(r.text().contains("prefetch (density)"));
+    }
+
+    #[test]
+    fn residency_columns_round_trip() {
+        let mut r = sample();
+        assert_eq!(r.residency, "fifo-refcount", "gpuvm default policy");
+        r.residency = "clock".into();
+        r.evictions = 10;
+        r.evictions_clean = 7;
+        r.evictions_dirty = 3;
+        r.refetches = 4;
+        r.thrash_refetches = 2;
+        r.reuse_p50 = 16;
+        r.reuse_p99 = 128;
+        let row = r.csv_row();
+        assert_eq!(row.len(), RunReport::CSV_HEADER.len());
+        let hdr_idx = |name: &str| {
+            RunReport::CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap()
+        };
+        assert_eq!(row[hdr_idx("residency")], "clock");
+        assert_eq!(row[hdr_idx("evictions_clean")], "7");
+        assert_eq!(row[hdr_idx("evictions_dirty")], "3");
+        assert_eq!(row[hdr_idx("evictions_forced")], "0");
+        assert_eq!(row[hdr_idx("thrash_refetches")], "2");
+        assert_eq!(row[hdr_idx("reuse_p50")], "16");
+        let j = r.to_json();
+        assert!(j.contains("\"residency\":\"clock\""));
+        assert!(j.contains("\"thrash_refetches\":2"));
+        assert!(j.contains("\"reuse_p99\":128"));
+        let t = r.text();
+        assert!(t.contains("residency (clock)"), "{t}");
+        assert!(t.contains("thrash refetches: 2"), "{t}");
+    }
+
+    #[test]
+    fn only_paged_backends_report_a_residency_policy() {
+        let mut cfg = SystemConfig::default();
+        cfg.uvm.residency_policy = crate::residency::ResidencyPolicyKind::Lru;
+        assert_eq!(RunReport::empty("uvm", "va", &cfg).residency, "lru");
+        assert_eq!(
+            RunReport::empty("uvm-memadvise", "va", &cfg).residency,
+            "lru"
+        );
+        assert_eq!(
+            RunReport::empty("gpuvm", "va", &cfg).residency,
+            "fifo-refcount"
+        );
+        for bulk in ["ideal", "gdr", "subway", "rapids"] {
+            assert_eq!(RunReport::empty(bulk, "va", &cfg).residency, "none", "{bulk}");
+        }
     }
 
     #[test]

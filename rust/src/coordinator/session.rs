@@ -30,6 +30,7 @@ use crate::config::SystemConfig;
 use crate::coordinator::backend::{self, Backend};
 use crate::coordinator::report::RunReport;
 use crate::prefetch::PrefetchPolicy;
+use crate::residency::ResidencyPolicyKind;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -42,6 +43,7 @@ enum Axis {
     Qps(Vec<usize>),
     FaultBatch(Vec<u32>),
     Prefetch(Vec<PrefetchPolicy>),
+    Residency(Vec<ResidencyPolicyKind>),
     Transport(Vec<String>),
 }
 
@@ -145,6 +147,15 @@ impl Session {
         self
     }
 
+    /// Sweep the residency (eviction) policy. Each point sets the
+    /// policy for *both* paged systems (`gpuvm.residency_policy` and
+    /// `uvm.residency_policy`), so a mixed-backend sweep compares like
+    /// with like.
+    pub fn sweep_residency<I: IntoIterator<Item = ResidencyPolicyKind>>(mut self, ps: I) -> Self {
+        self.axes.push(Axis::Residency(ps.into_iter().collect()));
+        self
+    }
+
     /// Sweep the page-migration engine ([`crate::fabric`] registry
     /// names). Each point sets `gpuvm.transport` *and* `uvm.transport`,
     /// so a mixed-backend sweep compares like with like.
@@ -188,6 +199,7 @@ impl Session {
                 Axis::Qps(v) => v.len(),
                 Axis::FaultBatch(v) => v.len(),
                 Axis::Prefetch(v) => v.len(),
+                Axis::Residency(v) => v.len(),
                 Axis::Transport(v) => v.len(),
             })
             .product();
@@ -241,6 +253,14 @@ impl Session {
                             let mut c = base.clone();
                             c.gpuvm.prefetch_policy = v;
                             c.uvm.prefetch_policy = v;
+                            next.push(c);
+                        }
+                    }
+                    Axis::Residency(vs) => {
+                        for &v in vs {
+                            let mut c = base.clone();
+                            c.gpuvm.residency_policy = v;
+                            c.uvm.residency_policy = v;
                             next.push(c);
                         }
                     }
@@ -437,6 +457,44 @@ mod tests {
         assert!(reports[0].prefetched_pages == 0 && reports[1].prefetched_pages == 0);
         for r in &reports {
             assert!(r.prefetch_hits + r.prefetch_wasted <= r.prefetched_pages);
+        }
+    }
+
+    #[test]
+    fn residency_axis_expands_and_labels_reports() {
+        let mut cfg = small_cfg();
+        // Force eviction so policies matter, with few enough warps that
+        // the concurrently-referenced set always fits (liveness for the
+        // waiting policies).
+        cfg.gpu.mem_bytes = 256 << 10;
+        cfg.gpu.sms = 4;
+        cfg.gpu.warps_per_sm = 2;
+        let reports = Session::new(cfg)
+            .workload("va@128k")
+            .backends(["gpuvm", "uvm"])
+            .sweep_residency([
+                ResidencyPolicyKind::FifoRefcount,
+                ResidencyPolicyKind::Lru,
+            ])
+            .run_all()
+            .unwrap();
+        assert_eq!(reports.len(), 4, "2 policies × 2 backends");
+        let key: Vec<(&str, &str)> = reports
+            .iter()
+            .map(|r| (r.residency.as_str(), r.backend.as_str()))
+            .collect();
+        assert_eq!(
+            key,
+            vec![
+                ("fifo-refcount", "gpuvm"),
+                ("fifo-refcount", "uvm"),
+                ("lru", "gpuvm"),
+                ("lru", "uvm"),
+            ]
+        );
+        for r in &reports {
+            assert!(r.evictions > 0, "{}/{}", r.backend, r.residency);
+            assert_eq!(r.evictions, r.evictions_clean + r.evictions_dirty);
         }
     }
 

@@ -7,7 +7,8 @@ pub use runtime::GpuVmSystem;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{EvictionPolicy, SystemConfig};
+    use crate::config::SystemConfig;
+    use crate::residency::ResidencyPolicyKind;
     use crate::gpu::exec::run;
     use crate::gpu::kernel::{Access, Launch, WarpOp, Workload};
     use crate::mem::{HostMemory, RegionId};
@@ -284,13 +285,9 @@ mod tests {
 
     #[test]
     fn eviction_policies_all_complete() {
-        for policy in [
-            EvictionPolicy::FifoRefCount,
-            EvictionPolicy::FifoStrict,
-            EvictionPolicy::Random,
-        ] {
+        for policy in ResidencyPolicyKind::all() {
             let mut c = cfg(4, 8);
-            c.gpuvm.eviction_policy = policy;
+            c.gpuvm.residency_policy = policy;
             let mut w = Reader::new(4, 8, 4096);
             let mut mem = GpuVmSystem::new(&c);
             let r = run(&c, &mut w, &mut mem).unwrap();

@@ -1,8 +1,10 @@
 //! The GPUVM runtime — the paper's contribution (§3).
 //!
 //! GPU threads manage their own virtual memory: on a page-table miss the
-//! warp's leader acquires a frame from the circular page buffer (evicting
-//! the FIFO head once its reference counter drains, §3.3), builds a
+//! warp's leader acquires a frame from the circular page buffer — victim
+//! choice delegated to the pluggable [`crate::residency`] policy
+//! (`gpuvm.residency_policy`; the default `fifo-refcount` is §3.3/§5.4's
+//! reference-priority FIFO, extracted bit for bit) — builds a
 //! work request, posts it to one of many parallel queues on the
 //! configured [`crate::fabric::Transport`], rings the doorbell (batched,
 //! §3.2), and polls the completion queue. Warps that fault on a page
@@ -15,20 +17,34 @@
 //! pool, so data integrity under paging + eviction is testable; timing
 //! flows through the transport and PCIe models on the shared DES clock.
 
-use crate::config::{EvictionPolicy, SystemConfig};
+use crate::config::SystemConfig;
 use crate::fabric::{self, Completion, Transport, WorkRequest};
 use crate::mem::{FrameId, FramePool, FrameState, HostMemory, PageId};
 use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess, SlotId, Wakes};
 use crate::metrics::Metrics;
 use crate::pcie::Dir;
 use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
+use crate::residency::{self, ResidencyPolicy, Universe, VictimChoice, VictimQuery};
 use crate::sim::{us, Engine, SimTime};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
-use crate::util::rng::Rng;
 use std::collections::VecDeque;
 
 /// Key for a fault: which GPU wants which host page.
 type FaultKey = (usize, PageId);
+
+/// Can this frame be taken *right now*? The single definition behind
+/// both `GpuVmSystem::frame_usable` and the residency policy's usable
+/// oracle: no queued waiters, and Free or Resident-with-drained
+/// references (never mid-fill).
+fn usable_frame(pool: &FramePool, waiters: &[VecDeque<PageId>], f: FrameId) -> bool {
+    let fr = pool.frame(f);
+    waiters[f.0 as usize].is_empty()
+        && match fr.state {
+            FrameState::Free => true,
+            FrameState::Resident(_) => fr.refcount == 0,
+            FrameState::Filling(_) => false,
+        }
+}
 
 /// A fault from first miss to data-resident.
 #[derive(Debug)]
@@ -93,9 +109,9 @@ pub struct GpuVmSystem {
     /// The page-migration engine (`gpuvm.transport`): owns the link
     /// topology and services posted WRs doorbell by doorbell.
     fabric: Box<dyn Transport>,
-    /// Per-GPU frame pool and circular head cursor.
+    /// Per-GPU frame pool; victim selection is delegated to the
+    /// pluggable residency policy below.
     pools: Vec<FramePool>,
-    cursor: Vec<usize>,
     /// Per-GPU, per-frame queue of pages waiting to take over the frame.
     frame_waiters: Vec<Vec<VecDeque<PageId>>>,
     inflight: FxHashMap<FaultKey, Inflight>,
@@ -114,8 +130,18 @@ pub struct GpuVmSystem {
     holds: FxHashMap<SlotId, Vec<(usize, FrameId)>>,
     /// Outstanding pages per blocked slot; wake at 0.
     slot_pending: FxHashMap<SlotId, u32>,
-    /// Pages that were resident once and got evicted (refetch accounting).
-    evicted_once: FxHashSet<FaultKey>,
+    /// Pages that were resident once and got evicted, with the fill
+    /// count at eviction time (refetch + reuse-distance accounting).
+    evicted_at: FxHashMap<FaultKey, u64>,
+    /// Per-GPU fills started so far (the reuse-distance clock; per-GPU
+    /// so one GPU's traffic can't dilute another's thrash signal).
+    fills: Vec<u64>,
+    /// The pluggable residency policy answering victim selection
+    /// (`gpuvm.residency_policy`); slots are frame indices.
+    residency: Box<dyn ResidencyPolicy>,
+    /// Pages per 2 MB VABlock (`uvm.evict_block`), the block hint the
+    /// `tree-lru` policy clusters on.
+    pages_per_block: u64,
     /// The pluggable prefetch policy observing the demand-fault stream.
     prefetcher: Box<dyn Prefetcher>,
     /// Fast gate: skip the prefetch path entirely under `none`.
@@ -126,7 +152,6 @@ pub struct GpuVmSystem {
     prefetched: FxHashSet<FaultKey>,
     /// Reused candidate buffer (one `on_fault` call per leader fault).
     pf_buf: Vec<u64>,
-    rng: Rng,
     backed: bool,
 }
 
@@ -149,7 +174,6 @@ impl GpuVmSystem {
             fabric: fabric::build(&cfg.gpuvm.transport, cfg)
                 .expect("transport name validated by SystemConfig::validate"),
             pools,
-            cursor: vec![0; cfg.gpu.num_gpus],
             frame_waiters,
             inflight: FxHashMap::default(),
             wr_fault: FxHashMap::default(),
@@ -162,7 +186,20 @@ impl GpuVmSystem {
             completion_buf: Vec::with_capacity(64),
             holds: FxHashMap::default(),
             slot_pending: FxHashMap::default(),
-            evicted_once: FxHashSet::default(),
+            evicted_at: FxHashMap::default(),
+            fills: vec![0; cfg.gpu.num_gpus],
+            // The seed derivation is the historical inline one, so the
+            // extracted `random` engine replays the exact pre-subsystem
+            // probe sequence.
+            residency: residency::build(
+                cfg.gpuvm.residency_policy,
+                Universe::Frames {
+                    frames_per_gpu: frames,
+                },
+                cfg.gpu.num_gpus,
+                cfg.seed ^ 0x6b75_766d,
+            ),
+            pages_per_block: (cfg.uvm.evict_block / cfg.gpuvm.page_size).max(1),
             prefetcher: prefetch::build(
                 cfg.gpuvm.prefetch_policy,
                 cfg,
@@ -171,7 +208,6 @@ impl GpuVmSystem {
             prefetch_enabled: cfg.gpuvm.prefetch_policy != PrefetchPolicy::None,
             prefetched: FxHashSet::default(),
             pf_buf: Vec::new(),
-            rng: Rng::new(cfg.seed ^ 0x6b75_766d),
             backed,
             cfg: cfg.clone(),
         }
@@ -196,7 +232,24 @@ impl GpuVmSystem {
 
     // ---- frame acquisition (the circular buffer of Fig 5) ----
 
-    /// Try to take the next frame per the eviction policy. Returns the
+    /// Ask the residency policy for a victim. The `usable` oracle it
+    /// sees is exactly the `frame_usable` predicate (one shared
+    /// definition, so the oracle and the defensive re-checks can't
+    /// drift).
+    fn choose_victim(&mut self, gpu: usize, demand: bool, m: &Metrics) -> VictimChoice {
+        let pool = &self.pools[gpu];
+        let waiters = &self.frame_waiters[gpu];
+        let usable = move |s: u64| usable_frame(pool, waiters, FrameId(s as u32));
+        self.residency.pick_victim(&VictimQuery {
+            gpu,
+            demand,
+            prefetch_issued: m.prefetched_pages,
+            prefetch_accuracy: m.prefetch_accuracy(),
+            usable: &usable,
+        })
+    }
+
+    /// Try to take the next frame per the residency policy. Returns the
     /// frame if usable now, or None after enqueueing `page` on a busy
     /// frame's waiter list.
     fn acquire_frame(
@@ -208,54 +261,27 @@ impl GpuVmSystem {
         eng: &mut Engine<Ev>,
         m: &mut Metrics,
     ) -> Option<FrameId> {
-        let n = self.pools[gpu].num_frames();
-        match self.cfg.gpuvm.eviction_policy {
-            EvictionPolicy::FifoRefCount => {
-                // Paper §5.4: FIFO with reference priority — the head
-                // cursor skips referenced (hot) frames; if a full sweep
-                // finds nothing evictable, queue behind the head frame
-                // (liveness).
-                for _ in 0..n {
-                    let f = FrameId((self.cursor[gpu] % n) as u32);
-                    self.cursor[gpu] += 1;
-                    if self.frame_usable(gpu, f) {
-                        return self.try_take_frame(now, gpu, f, page, hm, eng, m);
-                    }
-                }
-                let f = FrameId((self.cursor[gpu] % n) as u32);
-                self.cursor[gpu] += 1;
-                self.enqueue_frame_wait(gpu, f, page, m);
+        match self.choose_victim(gpu, true, m) {
+            VictimChoice::Take(s) => {
+                self.try_take_frame(now, gpu, FrameId(s as u32), page, hm, eng, m)
+            }
+            VictimChoice::WaitOn(s) => {
+                self.enqueue_frame_wait(gpu, FrameId(s as u32), page, m);
                 None
             }
-            EvictionPolicy::FifoStrict => {
-                // Ablation: take the head frame unconditionally; wait for
-                // its reference counter to drain if needed.
-                let f = FrameId((self.cursor[gpu] % n) as u32);
-                self.cursor[gpu] += 1;
-                self.try_take_frame(now, gpu, f, page, hm, eng, m)
-            }
-            EvictionPolicy::Random => {
-                for _ in 0..8 {
-                    let f = FrameId(self.rng.gen_range(n as u64) as u32);
-                    if self.frame_usable(gpu, f) {
-                        return self.try_take_frame(now, gpu, f, page, hm, eng, m);
-                    }
-                }
-                let f = FrameId(self.rng.gen_range(n as u64) as u32);
-                self.enqueue_frame_wait(gpu, f, page, m);
+            VictimChoice::GiveUp => {
+                // Contract violation (demand faults must park somewhere);
+                // fall back to waiting on frame 0 so liveness survives a
+                // buggy policy.
+                debug_assert!(false, "residency policy gave up on a demand fault");
+                self.enqueue_frame_wait(gpu, FrameId(0), page, m);
                 None
             }
         }
     }
 
     fn frame_usable(&self, gpu: usize, f: FrameId) -> bool {
-        let fr = self.pools[gpu].frame(f);
-        self.frame_waiters[gpu][f.0 as usize].is_empty()
-            && match fr.state {
-                FrameState::Free => true,
-                FrameState::Resident(_) => fr.refcount == 0,
-                FrameState::Filling(_) => false,
-            }
+        usable_frame(&self.pools[gpu], &self.frame_waiters[gpu], f)
     }
 
     /// Take `f` for `page` if possible now; otherwise enqueue and return
@@ -303,7 +329,13 @@ impl GpuVmSystem {
             let bytes = self.pools[gpu].frame_bytes(f).map(|b| b.to_vec());
             let (old_page, dirty) = self.pools[gpu].evict(f).expect("evict checked usable");
             m.evictions += 1;
-            self.evicted_once.insert((gpu, old_page));
+            if dirty {
+                m.evictions_dirty += 1;
+            } else {
+                m.evictions_clean += 1;
+            }
+            self.evicted_at.insert((gpu, old_page), self.fills[gpu]);
+            self.residency.on_evict(gpu, f.0 as u64);
             if self.prefetched.remove(&(gpu, old_page)) {
                 // Prefetched, never touched, now evicted: pure waste.
                 m.prefetch_wasted += 1;
@@ -338,9 +370,14 @@ impl GpuVmSystem {
         self.pools[gpu]
             .begin_fill(page, f)
             .expect("frame free after evict");
+        self.fills[gpu] += 1;
+        let mut speculative = false;
         if let Some(fl) = self.inflight.get_mut(&(gpu, page)) {
             fl.frame = Some(f);
+            speculative = fl.speculative;
         }
+        self.residency
+            .on_fill(gpu, f.0 as u64, page.0 / self.pages_per_block, speculative);
         if !fetch_deferred {
             self.submit(
                 t,
@@ -358,11 +395,11 @@ impl GpuVmSystem {
     }
 
     /// Take a frame for a speculative fetch of `page` *without ever
-    /// waiting*: follow the configured eviction policy's frame-choice
-    /// discipline (so the §5.4 ablations stay meaningful with prefetch
-    /// on), but where a demand fault would enqueue behind a busy frame,
-    /// a prefetch is simply dropped — waiter slots belong to demand.
-    /// Returns false when no frame is takeable now.
+    /// waiting*: the policy sees a non-demand query (so the §5.4
+    /// ablations stay meaningful with prefetch on), and where a demand
+    /// fault would enqueue behind a busy frame, a prefetch is simply
+    /// dropped — waiter slots belong to demand. Returns false when no
+    /// frame is takeable now.
     fn acquire_frame_speculative(
         &mut self,
         now: SimTime,
@@ -372,41 +409,19 @@ impl GpuVmSystem {
         eng: &mut Engine<Ev>,
         m: &mut Metrics,
     ) -> bool {
-        let n = self.pools[gpu].num_frames();
-        match self.cfg.gpuvm.eviction_policy {
-            EvictionPolicy::FifoRefCount => {
-                for _ in 0..n {
-                    let f = FrameId((self.cursor[gpu] % n) as u32);
-                    self.cursor[gpu] += 1;
-                    if self.frame_usable(gpu, f) {
-                        self.start_fill(now, gpu, f, page, hm, eng, m);
-                        return true;
-                    }
-                }
-                false
-            }
-            EvictionPolicy::FifoStrict => {
-                // Strict head-take or nothing; an unusable head is left
-                // untouched for the next demand fault.
-                let f = FrameId((self.cursor[gpu] % n) as u32);
+        match self.choose_victim(gpu, false, m) {
+            VictimChoice::Take(s) => {
+                let f = FrameId(s as u32);
                 if self.frame_usable(gpu, f) {
-                    self.cursor[gpu] += 1;
                     self.start_fill(now, gpu, f, page, hm, eng, m);
                     true
                 } else {
+                    // Defensive re-check of the Take contract; a buggy
+                    // policy costs a dropped prefetch, never a stall.
                     false
                 }
             }
-            EvictionPolicy::Random => {
-                for _ in 0..8 {
-                    let f = FrameId(self.rng.gen_range(n as u64) as u32);
-                    if self.frame_usable(gpu, f) {
-                        self.start_fill(now, gpu, f, page, hm, eng, m);
-                        return true;
-                    }
-                }
-                false
-            }
+            VictimChoice::WaitOn(_) | VictimChoice::GiveUp => false,
         }
     }
 
@@ -676,6 +691,9 @@ impl MemorySystem for GpuVmSystem {
                     if self.prefetched.remove(&(gpu, pa.page)) {
                         // First demand touch of a prefetched page.
                         ctx.m.prefetch_hits += 1;
+                        self.residency.on_promote(gpu, frame.0 as u64);
+                    } else {
+                        self.residency.on_touch(gpu, frame.0 as u64);
                     }
                     self.pools[gpu].addref(frame);
                     if pa.write {
@@ -683,7 +701,7 @@ impl MemorySystem for GpuVmSystem {
                     }
                     self.holds.entry(slot).or_default().push((gpu, frame));
                 }
-                Some((_frame, false)) => {
+                Some((frame, false)) => {
                     // Fault in flight (another leader owns it): coalesce.
                     ctx.m.coalesced_faults += 1;
                     let fl = self
@@ -702,6 +720,9 @@ impl MemorySystem for GpuVmSystem {
                             // prefetch hid most of the latency.
                             ctx.m.prefetch_hits += 1;
                         }
+                        self.residency.on_promote(gpu, frame.0 as u64);
+                    } else {
+                        self.residency.on_touch(gpu, frame.0 as u64);
                     }
                     misses += 1;
                 }
@@ -717,8 +738,16 @@ impl MemorySystem for GpuVmSystem {
                     }
                     // New fault: this warp's leader takes it (Fig 4).
                     ctx.m.faults += 1;
-                    if self.evicted_once.contains(&(gpu, pa.page)) {
+                    if let Some(&at) = self.evicted_at.get(&(gpu, pa.page)) {
                         ctx.m.refetches += 1;
+                        // Reuse distance in fills since the eviction; a
+                        // short distance is thrash — the policy threw
+                        // out the live working set.
+                        let d = self.fills[gpu].saturating_sub(at);
+                        ctx.m.reuse_distance.record(d);
+                        if d <= residency::THRASH_WINDOW {
+                            ctx.m.thrash_refetches += 1;
+                        }
                     }
                     self.inflight.insert(
                         (gpu, pa.page),
@@ -778,6 +807,7 @@ impl MemorySystem for GpuVmSystem {
             }
         }
         for (gpu, frame) in freed {
+            self.residency.on_drain(gpu, frame.0 as u64);
             if !self.frame_waiters[gpu][frame.0 as usize].is_empty() {
                 // Defer to a zero-delay event so the eviction (and its
                 // functional write-back) runs with a fresh context.
@@ -1048,6 +1078,91 @@ mod tests {
         );
         assert_eq!(rdma.transport.per_engine[0].name, "nic0");
         assert_eq!(nvl.transport.per_engine[0].name, "nvlink0");
+    }
+
+    #[test]
+    fn residency_policies_swap_under_the_runtime() {
+        use crate::residency::ResidencyPolicyKind;
+        // Working set 512 KB, GPU memory 128 KB: every policy must keep
+        // the run terminating with exact byte accounting and intact
+        // pool invariants under heavy eviction churn.
+        for kind in ResidencyPolicyKind::all() {
+            let mut c = cfg(PrefetchPolicy::None);
+            c.gpu.mem_bytes = 128 << 10;
+            c.gpuvm.residency_policy = kind;
+            let mut w = Stream::new(2, 64);
+            let mut mem = GpuVmSystem::new(&c);
+            let r = run(&c, &mut w, &mut mem).unwrap();
+            mem.check_invariants().unwrap();
+            let m = &r.metrics;
+            assert_eq!(m.bytes_in, m.faults * 4096, "{kind:?}");
+            assert_eq!(
+                m.evictions,
+                m.evictions_clean + m.evictions_dirty,
+                "{kind:?}"
+            );
+            assert_eq!(m.evictions_dirty, 0, "{kind:?}: read-only stream");
+            assert!(m.evictions > 0, "{kind:?} must evict under pressure");
+        }
+    }
+
+    #[test]
+    fn default_policy_telemetry_counts_thrash() {
+        // Two passes over a working set 4× GPU memory: the second pass
+        // refetches pages the first pass evicted, at short reuse
+        // distance.
+        let mut c = cfg(PrefetchPolicy::None);
+        c.gpu.mem_bytes = 128 << 10;
+        struct TwoPass {
+            region: Option<RegionId>,
+            kernel: u32,
+            step: usize,
+            pages: usize,
+        }
+        impl Workload for TwoPass {
+            fn name(&self) -> &str {
+                "two-pass"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("d", self.pages as u64 * 4096));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                self.kernel += 1;
+                self.step = 0;
+                (self.kernel <= 2).then_some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                let s = self.step;
+                self.step += 1;
+                if s >= self.pages {
+                    return WarpOp::Done;
+                }
+                WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: (s as u64) * 4096,
+                    len: 4096,
+                    write: false,
+                }])
+            }
+        }
+        // 80 pages over 32 frames: a page evicted in pass 1 is refaulted
+        // ~48 fills later — inside the 64-fill thrash window.
+        let mut w = TwoPass {
+            region: None,
+            kernel: 0,
+            step: 0,
+            pages: 80,
+        };
+        let mut mem = GpuVmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        let m = &r.metrics;
+        assert!(m.refetches > 0, "second pass must refetch");
+        assert!(
+            m.thrash_refetches > 0,
+            "32-frame pool over 80 sequential pages is textbook thrash"
+        );
+        assert!(m.thrash_refetches <= m.refetches);
+        assert_eq!(m.reuse_distance.count(), m.refetches);
     }
 
     #[test]

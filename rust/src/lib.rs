@@ -39,6 +39,7 @@ pub mod memsys;
 pub mod metrics;
 pub mod pcie;
 pub mod prefetch;
+pub mod residency;
 pub mod rnic;
 pub mod runtime;
 pub mod sim;

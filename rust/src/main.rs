@@ -18,6 +18,7 @@ use gpuvm::apps::{BuildOpts, WorkloadSpec};
 use gpuvm::config::SystemConfig;
 use gpuvm::coordinator::{backend, report, Session};
 use gpuvm::prefetch::PrefetchPolicy;
+use gpuvm::residency::ResidencyPolicyKind;
 use gpuvm::util::bench::{fmt_bytes, fmt_ns};
 use gpuvm::util::cli::Args;
 
@@ -54,21 +55,23 @@ fn dispatch(args: &Args) -> Result<()> {
 const USAGE: &str = "usage: gpuvm <run|compare|sweep|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
-           [--eviction fifo|fifo-strict|random] [--fault-batch N]
-           [--prefetch POLICY] [--prefetch-degree N]
+           [--residency POLICY] [--eviction fifo|fifo-strict|random (legacy)]
+           [--fault-batch N] [--prefetch POLICY] [--prefetch-degree N]
            [--transport ENGINE] [--striping round-robin|block]
            [--scale F] [--src V]
   compare  same flags; runs gpuvm vs uvm and prints the speedup
   sweep    --app S [--app S2 ...] [--mem B1,B2,..] [--nics 1,2]
            [--page-sizes 4k,8k] [--gpu-mems 16m,32m] [--qp-counts 16,48,84]
-           [--prefetch none,fixed,density] [--transport rdma,nvlink]
+           [--prefetch none,fixed,density] [--residency fifo-refcount,lru]
+           [--transport rdma,nvlink]
            [--threads N] [--csv FILE] [--json FILE]
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
-  list     apps, backends, prefetch policies, transports, and AOT artifacts
+  list     apps, backends, prefetch/residency policies, transports, artifacts
   info     resolved system configuration
 apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp (:GU/:GK/:FS/:MO[:naive]) q1..q5[@ROWS]
 backends: gpuvm uvm uvm-memadvise ideal gdr subway rapids
 prefetch: none fixed stride density history
+residency: fifo-refcount fifo-strict random lru clock tree-lru prefetch-aware
 transports: rdma pcie-dma nvlink";
 
 fn config_from(args: &Args) -> Result<SystemConfig> {
@@ -85,15 +88,22 @@ fn opts_from(args: &Args, cfg: &SystemConfig) -> Result<BuildOpts> {
     Ok(o)
 }
 
-/// `--prefetch a,b` / `--transport a,b` are sweep lists; `run`/`compare`
-/// take one value. (`apply_args` skips list values, so without this
-/// check they would be silently dropped.)
+/// `--prefetch a,b` / `--residency a,b` / `--transport a,b` are sweep
+/// lists; `run`/`compare` take one value. (`apply_args` skips list
+/// values, so without this check they would be silently dropped.)
 fn reject_prefetch_list(args: &Args) -> Result<()> {
     if let Some(p) = args.get("prefetch") {
         anyhow::ensure!(
             !p.contains(','),
             "--prefetch takes a single policy here (got '{p}'); \
              sweep policies with `gpuvm sweep --prefetch {p}`"
+        );
+    }
+    if let Some(r) = args.get("residency") {
+        anyhow::ensure!(
+            !r.contains(','),
+            "--residency takes a single policy here (got '{r}'); \
+             sweep policies with `gpuvm sweep --residency {r}`"
         );
     }
     if let Some(t) = args.get("transport") {
@@ -208,6 +218,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         session = session.sweep_transport(transport);
     }
+    let residency = list_flag(args, "residency");
+    if !residency.is_empty() {
+        // Always sweep the axis when the flag is present (a one-policy
+        // axis degenerates to the plain run), mirroring --prefetch.
+        let rs: Vec<ResidencyPolicyKind> = residency
+            .iter()
+            .map(|s| ResidencyPolicyKind::parse(s))
+            .collect::<Result<_>>()?;
+        session = session.sweep_residency(rs);
+    }
     let prefetch = list_flag(args, "prefetch");
     if !prefetch.is_empty() {
         // Always sweep the axis when the flag is present (a one-policy
@@ -229,19 +249,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let reports = session.run_all()?;
 
     println!(
-        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>9} {:>12} {:>9} {:>10} {:>6}",
-        "backend", "workload", "nics", "page", "gpu-mem", "prefetch", "fabric", "time", "faults",
-        "moved", "amp"
+        "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>14} {:>9} {:>12} {:>9} {:>10} {:>6}",
+        "backend", "workload", "nics", "page", "gpu-mem", "prefetch", "residency", "fabric",
+        "time", "faults", "moved", "amp"
     );
     for r in &reports {
         println!(
-            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>9} {:>12} {:>9} {:>10} {:>5.2}×",
+            "{:<14} {:<16} {:>4} {:>6} {:>8} {:>8} {:>14} {:>9} {:>12} {:>9} {:>10} {:>5.2}×",
             r.backend,
             r.workload,
             r.nics,
             fmt_bytes(r.page_size),
             fmt_bytes(r.gpu_mem_bytes),
             r.prefetch,
+            r.residency,
             r.transport,
             fmt_ns(r.finish_ns),
             r.faults,
@@ -343,6 +364,10 @@ fn cmd_list() -> Result<()> {
     }
     println!("prefetch policies (--prefetch, both paged backends):");
     for p in PrefetchPolicy::all() {
+        println!("  {:<14} {}", p.name(), p.describe());
+    }
+    println!("residency policies (--residency, victim selection on both paged backends):");
+    for p in ResidencyPolicyKind::all() {
         println!("  {:<14} {}", p.name(), p.describe());
     }
     println!("transports (--transport, page-migration engines):");

@@ -26,10 +26,27 @@ pub struct Metrics {
     pub useful_bytes: u64,
     /// Pages evicted.
     pub evictions: u64,
+    /// Evictions of clean pages (no write-back; `evictions_clean +
+    /// evictions_dirty == evictions`).
+    pub evictions_clean: u64,
+    /// Evictions of dirty pages — each one writes `page/group` bytes
+    /// back (`bytes_out` is the write-back byte total).
+    pub evictions_dirty: u64,
+    /// UVM-only: evictions forced through a nonzero reference count
+    /// (the driver unmaps pages GPU threads are actively touching; they
+    /// refault and replay — thrash, not deadlock).
+    pub evictions_forced: u64,
     /// Evictions that had to wait for a nonzero reference count.
     pub eviction_waits: u64,
     /// Pages that were evicted and later re-fetched (redundant transfer).
     pub refetches: u64,
+    /// Refetches of pages evicted within the last
+    /// [`crate::residency::THRASH_WINDOW`] fills — the thrash
+    /// indicator: the policy threw out the working set.
+    pub thrash_refetches: u64,
+    /// Reuse distance of refetched pages, in *fills* between eviction
+    /// and refault (log2 buckets; not nanoseconds).
+    pub reuse_distance: LatencyHist,
     /// Speculative transfer units issued by the prefetch policy
     /// (GPUVM: extra pages posted to the RNIC; UVM: ride-along group
     /// pages for `fixed`, speculative fault-buffer entries otherwise).
@@ -133,8 +150,14 @@ impl Metrics {
         self.bytes_out += other.bytes_out;
         self.useful_bytes += other.useful_bytes;
         self.evictions += other.evictions;
+        self.evictions_clean += other.evictions_clean;
+        self.evictions_dirty += other.evictions_dirty;
+        self.evictions_forced += other.evictions_forced;
         self.eviction_waits += other.eviction_waits;
         self.refetches += other.refetches;
+        self.thrash_refetches += other.thrash_refetches;
+        self.fault_latency.merge(&other.fault_latency);
+        self.reuse_distance.merge(&other.reuse_distance);
         self.prefetched_pages += other.prefetched_pages;
         self.prefetch_hits += other.prefetch_hits;
         self.prefetch_wasted += other.prefetch_wasted;
@@ -200,14 +223,21 @@ mod tests {
         a.faults = 5;
         a.finish_ns = 10;
         a.bump("x", 1);
+        a.reuse_distance.record(4);
         let mut b = Metrics::new();
         b.faults = 7;
         b.finish_ns = 20;
         b.bump("x", 2);
+        b.reuse_distance.record(16);
+        b.fault_latency.record(1000);
         a.merge(&b);
         assert_eq!(a.faults, 12);
         assert_eq!(a.finish_ns, 20);
         assert_eq!(a.counter("x"), 3);
+        // Histograms fold in too (multi-GPU aggregation keeps telemetry).
+        assert_eq!(a.reuse_distance.count(), 2);
+        assert_eq!(a.fault_latency.count(), 1);
+        assert!((a.reuse_distance.mean_ns() - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Prefetch-aware eviction: victimize cold speculation first.
+//!
+//! Wraps the paper's reference-priority FIFO, but when PR 2's accuracy
+//! counters say the prefetcher is running cold (enough issued, low
+//! hit rate), the oldest *unconsumed speculative fill* goes first —
+//! reclaiming frames from speculation that is not paying off before
+//! touching demand-fetched pages. A speculative fill stops being a
+//! preferred victim the moment a demand access promotes it.
+
+use super::{fifo::FifoEngine, ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+use std::collections::BTreeSet;
+
+/// Minimum speculative units issued before the accuracy gate can open
+/// (below this the sample is noise).
+const MIN_ISSUED: u64 = 32;
+/// Accuracy below which unconsumed speculative fills are victimized
+/// first.
+const ACCURACY_GATE: f64 = 0.5;
+
+pub struct PrefetchAwareEngine {
+    fifo: FifoEngine,
+    fillseq: u64,
+    /// Per-GPU slot → fill sequence number.
+    seq: Vec<FxHashMap<Slot, u64>>,
+    /// Per-GPU unconsumed speculative fills, oldest first.
+    spec_byfill: Vec<BTreeSet<(u64, Slot)>>,
+    spec: Vec<FxHashSet<Slot>>,
+}
+
+impl PrefetchAwareEngine {
+    pub fn new(universe: Universe, num_gpus: usize) -> Self {
+        Self {
+            fifo: FifoEngine::new(false, universe, num_gpus),
+            fillseq: 0,
+            seq: vec![FxHashMap::default(); num_gpus],
+            spec_byfill: vec![BTreeSet::new(); num_gpus],
+            spec: vec![FxHashSet::default(); num_gpus],
+        }
+    }
+
+    fn clear_spec(&mut self, gpu: usize, slot: Slot) {
+        if self.spec[gpu].remove(&slot) {
+            if let Some(&sq) = self.seq[gpu].get(&slot) {
+                self.spec_byfill[gpu].remove(&(sq, slot));
+            }
+        }
+    }
+}
+
+impl ResidencyPolicy for PrefetchAwareEngine {
+    fn name(&self) -> &'static str {
+        "prefetch-aware"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, block: u64, speculative: bool) {
+        self.fifo.on_fill(gpu, slot, block, speculative);
+        self.clear_spec(gpu, slot);
+        self.fillseq += 1;
+        self.seq[gpu].insert(slot, self.fillseq);
+        if speculative {
+            self.spec[gpu].insert(slot);
+            self.spec_byfill[gpu].insert((self.fillseq, slot));
+        }
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.clear_spec(gpu, slot);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        self.clear_spec(gpu, slot);
+        self.seq[gpu].remove(&slot);
+        self.fifo.on_evict(gpu, slot);
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        if q.prefetch_issued >= MIN_ISSUED && q.prefetch_accuracy < ACCURACY_GATE {
+            for &(_, s) in self.spec_byfill[q.gpu].iter() {
+                if (q.usable)(s) {
+                    return VictimChoice::Take(s);
+                }
+            }
+        }
+        self.fifo.pick_victim(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::residency::{Slot, VictimQuery};
+
+    fn q<'a>(
+        demand: bool,
+        issued: u64,
+        accuracy: f64,
+        usable: &'a dyn Fn(Slot) -> bool,
+    ) -> VictimQuery<'a> {
+        VictimQuery {
+            gpu: 0,
+            demand,
+            prefetch_issued: issued,
+            prefetch_accuracy: accuracy,
+            usable,
+        }
+    }
+
+    #[test]
+    fn cold_speculation_is_victimized_first() {
+        let mut p = PrefetchAwareEngine::new(Universe::Frames { frames_per_gpu: 4 }, 1);
+        p.on_fill(0, 0, 0, false);
+        p.on_fill(0, 1, 0, true); // speculative, unconsumed
+        p.on_fill(0, 2, 0, true);
+        p.on_fill(0, 3, 0, false);
+        let all = |_: Slot| true;
+        // Accuracy cold and enough issued: the oldest speculative fill
+        // (slot 1) goes before the FIFO head (slot 0).
+        assert_eq!(
+            p.pick_victim(&q(true, 100, 0.1, &all)),
+            VictimChoice::Take(1)
+        );
+        // A promote consumes the speculation: slot 2 stops being
+        // preferred once demand touches it.
+        p.on_promote(0, 2);
+        assert_eq!(
+            p.pick_victim(&q(true, 100, 0.1, &all)),
+            VictimChoice::Take(0),
+            "no unconsumed speculation left → FIFO order"
+        );
+    }
+
+    #[test]
+    fn accurate_speculation_falls_back_to_fifo() {
+        let mut p = PrefetchAwareEngine::new(Universe::Frames { frames_per_gpu: 4 }, 1);
+        p.on_fill(0, 0, 0, false);
+        p.on_fill(0, 1, 0, true);
+        let all = |_: Slot| true;
+        // High accuracy: behave exactly like fifo-refcount.
+        assert_eq!(p.pick_victim(&q(true, 100, 0.9, &all)), VictimChoice::Take(0));
+        // Too few issued for the gate, even if cold.
+        assert_eq!(p.pick_victim(&q(true, 8, 0.0, &all)), VictimChoice::Take(1));
+    }
+}

@@ -1,0 +1,181 @@
+//! The extracted FIFO engines: `fifo-refcount` (paper §5.4 reference
+//! priority) and `fifo-strict` (the naive §3.3 reading).
+//!
+//! In a [`Universe::Frames`] universe these replicate the circular-
+//! cursor logic that used to live inline in `gpuvm/runtime.rs`, bit for
+//! bit: the same cursor advancement on every probe (including fruitless
+//! speculative sweeps), the same head-queue fallback. In a
+//! [`Universe::Dynamic`] universe the cursor becomes a fill-order queue
+//! over live slots — true FIFO VABlock seeding for UVM.
+
+use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
+use std::collections::VecDeque;
+
+pub struct FifoEngine {
+    strict: bool,
+    /// `Some(n)` in a frames universe: the circular buffer size.
+    frames: Option<usize>,
+    /// Per-GPU circular head cursor (frames universe).
+    cursor: Vec<usize>,
+    /// Per-GPU live slots in fill order (dynamic universe).
+    queue: Vec<VecDeque<Slot>>,
+}
+
+impl FifoEngine {
+    pub fn new(strict: bool, universe: Universe, num_gpus: usize) -> Self {
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
+        };
+        Self {
+            strict,
+            frames,
+            cursor: vec![0; num_gpus],
+            queue: vec![VecDeque::new(); num_gpus],
+        }
+    }
+
+    fn pick_fixed(&mut self, n: usize, q: &VictimQuery<'_>) -> VictimChoice {
+        if self.strict {
+            // Strict head-take or wait; a speculative fill leaves an
+            // unusable head untouched for the next demand fault.
+            let f = (self.cursor[q.gpu] % n) as Slot;
+            if q.demand {
+                self.cursor[q.gpu] += 1;
+                if (q.usable)(f) {
+                    VictimChoice::Take(f)
+                } else {
+                    VictimChoice::WaitOn(f)
+                }
+            } else if (q.usable)(f) {
+                self.cursor[q.gpu] += 1;
+                VictimChoice::Take(f)
+            } else {
+                VictimChoice::GiveUp
+            }
+        } else {
+            // Reference priority: skip referenced frames; a full
+            // fruitless sweep queues behind the head (liveness) for
+            // demand, or gives up for speculation.
+            for _ in 0..n {
+                let f = (self.cursor[q.gpu] % n) as Slot;
+                self.cursor[q.gpu] += 1;
+                if (q.usable)(f) {
+                    return VictimChoice::Take(f);
+                }
+            }
+            if q.demand {
+                let f = (self.cursor[q.gpu] % n) as Slot;
+                self.cursor[q.gpu] += 1;
+                VictimChoice::WaitOn(f)
+            } else {
+                VictimChoice::GiveUp
+            }
+        }
+    }
+
+    fn pick_dynamic(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        let queue = &self.queue[q.gpu];
+        if self.strict {
+            match queue.front() {
+                Some(&s) if (q.usable)(s) => VictimChoice::Take(s),
+                Some(&s) if q.demand => VictimChoice::WaitOn(s),
+                _ => VictimChoice::GiveUp,
+            }
+        } else {
+            for &s in queue {
+                if (q.usable)(s) {
+                    return VictimChoice::Take(s);
+                }
+            }
+            match queue.front() {
+                Some(&s) if q.demand => VictimChoice::WaitOn(s),
+                _ => VictimChoice::GiveUp,
+            }
+        }
+    }
+}
+
+impl ResidencyPolicy for FifoEngine {
+    fn name(&self) -> &'static str {
+        if self.strict {
+            "fifo-strict"
+        } else {
+            "fifo-refcount"
+        }
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
+        if self.frames.is_none() {
+            self.queue[gpu].push_back(slot);
+        }
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        if self.frames.is_none() {
+            if let Some(pos) = self.queue[gpu].iter().position(|s| *s == slot) {
+                self.queue[gpu].remove(pos);
+            }
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        match self.frames {
+            Some(n) => self.pick_fixed(n, q),
+            None => self.pick_dynamic(q),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::residency::query;
+
+    #[test]
+    fn refcount_skips_unusable_and_queues_after_full_sweep() {
+        let mut p = FifoEngine::new(false, Universe::Frames { frames_per_gpu: 4 }, 1);
+        let only_two = |s: Slot| s == 2;
+        assert_eq!(
+            p.pick_victim(&query(0, true, &only_two)),
+            VictimChoice::Take(2)
+        );
+        // Cursor advanced past 2; nothing usable now → full sweep then
+        // wait on the head the sweep ends at.
+        let none = |_: Slot| false;
+        assert_eq!(
+            p.pick_victim(&query(0, true, &none)),
+            VictimChoice::WaitOn(3)
+        );
+        // Speculation never waits.
+        assert_eq!(p.pick_victim(&query(0, false, &none)), VictimChoice::GiveUp);
+    }
+
+    #[test]
+    fn strict_takes_or_waits_on_the_head_only() {
+        let mut p = FifoEngine::new(true, Universe::Frames { frames_per_gpu: 4 }, 1);
+        let none = |_: Slot| false;
+        let all = |_: Slot| true;
+        assert_eq!(p.pick_victim(&query(0, true, &none)), VictimChoice::WaitOn(0));
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(1));
+        // Speculative strict leaves an unusable head untouched.
+        assert_eq!(p.pick_victim(&query(0, false, &none)), VictimChoice::GiveUp);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(2));
+    }
+
+    #[test]
+    fn dynamic_mode_is_fill_order() {
+        let mut p = FifoEngine::new(false, Universe::Dynamic, 1);
+        for s in [5u64, 7, 9] {
+            p.on_fill(0, s, 0, false);
+        }
+        let not_head = |s: Slot| s != 5;
+        assert_eq!(
+            p.pick_victim(&query(0, true, &not_head)),
+            VictimChoice::Take(7)
+        );
+        p.on_evict(0, 7);
+        let none = |_: Slot| false;
+        assert_eq!(p.pick_victim(&query(0, true, &none)), VictimChoice::WaitOn(5));
+    }
+}

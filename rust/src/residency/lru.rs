@@ -1,0 +1,125 @@
+//! Exact least-recently-used victim selection.
+//!
+//! Every fill and demand touch restamps the slot on a shared logical
+//! clock; victims are taken in ascending stamp order, skipping slots
+//! the caller reports unusable. In a frames universe never-filled
+//! frames carry stamp 0 and are handed out first, in index order, so
+//! the engine fills the buffer before it evicts.
+
+use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
+use crate::util::fxhash::FxHashMap;
+use std::collections::BTreeSet;
+
+pub struct LruEngine {
+    fixed: bool,
+    clock: u64,
+    /// Per-GPU slot → stamp.
+    stamp: Vec<FxHashMap<Slot, u64>>,
+    /// Per-GPU (stamp, slot), ascending = LRU first.
+    order: Vec<BTreeSet<(u64, Slot)>>,
+}
+
+impl LruEngine {
+    pub fn new(universe: Universe, num_gpus: usize) -> Self {
+        let mut e = Self {
+            fixed: matches!(universe, Universe::Frames { .. }),
+            clock: 0,
+            stamp: vec![FxHashMap::default(); num_gpus],
+            order: vec![BTreeSet::new(); num_gpus],
+        };
+        if let Universe::Frames { frames_per_gpu } = universe {
+            for gpu in 0..num_gpus {
+                for f in 0..frames_per_gpu as Slot {
+                    e.stamp[gpu].insert(f, 0);
+                    e.order[gpu].insert((0, f));
+                }
+            }
+        }
+        e
+    }
+
+    fn restamp(&mut self, gpu: usize, slot: Slot) {
+        self.clock += 1;
+        if let Some(old) = self.stamp[gpu].insert(slot, self.clock) {
+            self.order[gpu].remove(&(old, slot));
+        }
+        self.order[gpu].insert((self.clock, slot));
+    }
+}
+
+impl ResidencyPolicy for LruEngine {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
+        self.restamp(gpu, slot);
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.restamp(gpu, slot);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        if let Some(old) = self.stamp[gpu].remove(&slot) {
+            self.order[gpu].remove(&(old, slot));
+        }
+        if self.fixed {
+            // The frame is free again: oldest possible, reused first.
+            self.stamp[gpu].insert(slot, 0);
+            self.order[gpu].insert((0, slot));
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        for &(_, s) in self.order[q.gpu].iter() {
+            if (q.usable)(s) {
+                return VictimChoice::Take(s);
+            }
+        }
+        if q.demand {
+            match self.order[q.gpu].iter().next() {
+                Some(&(_, s)) => VictimChoice::WaitOn(s),
+                None => VictimChoice::GiveUp,
+            }
+        } else {
+            VictimChoice::GiveUp
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::residency::query;
+
+    #[test]
+    fn takes_the_least_recently_touched_usable_slot() {
+        let mut p = LruEngine::new(Universe::Dynamic, 1);
+        for s in [1u64, 2, 3] {
+            p.on_fill(0, s, 0, false);
+        }
+        p.on_touch(0, 1); // 1 becomes most recent; LRU is now 2
+        let all = |_: Slot| true;
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(2));
+        let not_two = |s: Slot| s != 2;
+        assert_eq!(
+            p.pick_victim(&query(0, true, &not_two)),
+            VictimChoice::Take(3)
+        );
+        let none = |_: Slot| false;
+        assert_eq!(p.pick_victim(&query(0, true, &none)), VictimChoice::WaitOn(2));
+        assert_eq!(p.pick_victim(&query(0, false, &none)), VictimChoice::GiveUp);
+    }
+
+    #[test]
+    fn evicted_frames_return_to_the_front_in_a_fixed_universe() {
+        let mut p = LruEngine::new(Universe::Frames { frames_per_gpu: 3 }, 1);
+        for f in 0..3u64 {
+            p.on_fill(0, f, 0, false);
+        }
+        p.on_evict(0, 2);
+        let all = |_: Slot| true;
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(2));
+    }
+}

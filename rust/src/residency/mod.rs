@@ -1,0 +1,407 @@
+//! Pluggable residency & oversubscription-management policies.
+//!
+//! The eviction-side twin of [`crate::prefetch`]: the paper's headline
+//! oversubscription wins hinge on §5.4's FIFO reference-priority
+//! eviction, and related work (intelligent oversubscription managers,
+//! UVMBench) shows the *eviction* policy dominates at high
+//! oversubscription and which policy wins is workload-dependent. This
+//! module turns victim selection into a swept axis.
+//!
+//! A [`ResidencyPolicy`] observes residency events — fill, demand
+//! touch, reference-count drain, speculative-fill promotion, eviction —
+//! and answers victim selection through [`ResidencyPolicy::pick_victim`].
+//! Both paged memory systems consume it:
+//!
+//! - `gpuvm/runtime.rs` drives its circular frame buffer through the
+//!   policy: slots are frame indices ([`Universe::Frames`]), and the
+//!   extracted `fifo-refcount` / `fifo-strict` / `random` engines
+//!   reproduce the pre-subsystem inline logic bit for bit (cursor and
+//!   RNG sequences included);
+//! - `uvm/mod.rs` interns each resident fault group as a dynamic slot
+//!   ([`Universe::Dynamic`]); the policy picks the *seed* group and the
+//!   driver still evicts the seed's whole 2 MB VABlock (the paper's
+//!   complaint). The default `tree-lru` reproduces the previous
+//!   hard-coded LRU-group selection bit for bit.
+//!
+//! Policies ([`ResidencyPolicyKind`]): `fifo-refcount` (paper §5.4),
+//! `fifo-strict` (naive §3.3 reading), `random`, `lru` (exact
+//! least-recently-used), `clock` (second-chance over the circular
+//! buffer), `tree-lru` (VABlock-aware, the NVIDIA-driver shape), and
+//! `prefetch-aware` (deprioritizes unconsumed speculative fills when
+//! the prefetcher's accuracy counters from PR 2 run cold).
+//!
+//! Eviction telemetry lives in [`crate::metrics::Metrics`]:
+//! `evictions_clean` / `evictions_dirty` (write-back cause),
+//! `evictions_forced` (UVM unmap-under-reference thrash), a
+//! reuse-distance histogram (fills between a page's eviction and its
+//! refetch), and `thrash_refetches` — refetches of pages evicted within
+//! the last [`THRASH_WINDOW`] fills.
+
+pub mod aware;
+pub mod clock;
+pub mod fifo;
+pub mod lru;
+pub mod random;
+pub mod tree;
+
+use anyhow::Result;
+
+/// A policy-visible residency slot. For GPUVM this is a frame index in
+/// `0..frames_per_gpu`; for UVM it is an interned id for one resident
+/// fault group (fresh per residency epoch).
+pub type Slot = u64;
+
+/// Refetches of pages evicted within this many fills count as thrash
+/// (`Metrics::thrash_refetches`): the page was thrown out and needed
+/// again almost immediately, the signature of a policy losing to the
+/// working set.
+pub const THRASH_WINDOW: u64 = 64;
+
+/// Selectable residency policy (config keys `[gpuvm]`/`[uvm]`
+/// `residency_policy`, CLI `--residency`, `Session::sweep_residency`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidencyPolicyKind {
+    /// Paper §5.4 "FIFO-based reference priority eviction": the circular
+    /// head cursor advances past referenced (hot) frames; only a full
+    /// fruitless sweep queues behind the head for liveness. The GPUVM
+    /// default.
+    FifoRefcount,
+    /// Naive §3.3 reading: always take the head frame and wait for its
+    /// reference counter to drain. Serializes on hot shared pages.
+    FifoStrict,
+    /// Random victim choice (bounded probes, then queue).
+    Random,
+    /// Exact least-recently-used over demand touches.
+    Lru,
+    /// Second-chance (clock) sweep over the circular buffer: a demand
+    /// touch sets a reference bit; the sweeping hand clears it once
+    /// before taking the frame.
+    Clock,
+    /// VABlock-aware LRU, the NVIDIA-driver shape: pick the block that
+    /// holds the globally least-recently-used page and evict within it.
+    /// Ignores GPU-side reference counts when choosing (the host driver
+    /// cannot see them — the paper's complaint). The UVM default,
+    /// reproducing its previous hard-coded LRU-group VABlock choice.
+    TreeLru,
+    /// FIFO with reference priority that first victimizes speculative
+    /// fills never demand-touched — but only while the prefetcher's
+    /// accuracy counters (PR 2) say speculation is running cold.
+    PrefetchAware,
+}
+
+impl ResidencyPolicyKind {
+    /// Parse a policy name (the residency-side counterpart of
+    /// [`crate::config::EvictionPolicy::parse`] and
+    /// [`crate::prefetch::PrefetchPolicy::parse`]); unknown names list
+    /// the valid set.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fifo" | "fifo-refcount" => Self::FifoRefcount,
+            "fifo-strict" => Self::FifoStrict,
+            "random" => Self::Random,
+            "lru" => Self::Lru,
+            "clock" => Self::Clock,
+            "tree-lru" => Self::TreeLru,
+            "prefetch-aware" => Self::PrefetchAware,
+            _ => anyhow::bail!(
+                "unknown residency policy '{s}' (valid: {})",
+                Self::names().join("|")
+            ),
+        })
+    }
+
+    /// Registry key, round-tripping through [`ResidencyPolicyKind::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::FifoRefcount => "fifo-refcount",
+            Self::FifoStrict => "fifo-strict",
+            Self::Random => "random",
+            Self::Lru => "lru",
+            Self::Clock => "clock",
+            Self::TreeLru => "tree-lru",
+            Self::PrefetchAware => "prefetch-aware",
+        }
+    }
+
+    /// One-line description for `gpuvm list`.
+    pub fn describe(self) -> &'static str {
+        match self {
+            Self::FifoRefcount => "FIFO skipping referenced frames (paper §5.4; GPUVM default)",
+            Self::FifoStrict => "strict FIFO: take the head and wait for its references to drain",
+            Self::Random => "random victim choice (bounded probes)",
+            Self::Lru => "exact least-recently-used over demand touches",
+            Self::Clock => "second-chance sweep over the circular buffer",
+            Self::TreeLru => "VABlock-aware LRU, the NVIDIA-driver shape (UVM default)",
+            Self::PrefetchAware => "victimize unconsumed speculative fills when prefetch accuracy is cold",
+        }
+    }
+
+    /// Every registered policy, in display order.
+    pub fn all() -> [Self; 7] {
+        [
+            Self::FifoRefcount,
+            Self::FifoStrict,
+            Self::Random,
+            Self::Lru,
+            Self::Clock,
+            Self::TreeLru,
+            Self::PrefetchAware,
+        ]
+    }
+
+    /// Registered policy names, in display order.
+    pub fn names() -> Vec<&'static str> {
+        Self::all().iter().map(|p| p.name()).collect()
+    }
+}
+
+/// The slot universe a policy instance manages.
+#[derive(Debug, Clone, Copy)]
+pub enum Universe {
+    /// Fixed per-GPU frame pools (GPUVM): slots are frame indices
+    /// `0..frames_per_gpu`, alive for the whole run.
+    Frames { frames_per_gpu: usize },
+    /// Dynamic slot space (UVM fault groups): slots appear at `on_fill`
+    /// and die at `on_evict`.
+    Dynamic,
+}
+
+/// One victim query. `usable` answers whether a slot can be taken *right
+/// now* (GPUVM: frame free or resident-unreferenced with no queued
+/// waiters; UVM: group unreferenced, or anything under forced
+/// eviction). The prefetch-accuracy fields expose PR 2's counters to
+/// accuracy-gated policies.
+pub struct VictimQuery<'a> {
+    pub gpu: usize,
+    /// Demand faults must park somewhere (`Take` or `WaitOn`);
+    /// speculative fills may `GiveUp` instead of waiting.
+    pub demand: bool,
+    /// Speculative transfer units issued so far (`Metrics::prefetched_pages`).
+    pub prefetch_issued: u64,
+    /// Prefetched-then-used over issued so far, in [0, 1].
+    pub prefetch_accuracy: f64,
+    pub usable: &'a dyn Fn(Slot) -> bool,
+}
+
+/// A policy's answer to a victim query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimChoice {
+    /// Take this slot now. Contract: `usable(slot)` held at pick time —
+    /// no engine ever nominates a live-referenced frame for immediate
+    /// freeing, and callers re-check defensively before evicting (see
+    /// `rust/tests/properties.rs`).
+    Take(Slot),
+    /// Nothing takeable: queue the fault behind this slot (GPUVM) or
+    /// use it as the block-eviction seed anyway (UVM, whose 2 MB hammer
+    /// skips still-referenced groups unless forced). `tree-lru` waits
+    /// on the LRU slot whether or not it is referenced — the host
+    /// driver cannot see GPU-side reference counts (the paper's
+    /// complaint).
+    WaitOn(Slot),
+    /// Nothing to offer (speculative fills, or an empty dynamic
+    /// universe).
+    GiveUp,
+}
+
+/// A residency policy: observes the residency-event stream and answers
+/// victim selection. Event methods default to no-ops so stateless
+/// engines (the extracted FIFO/random trio) implement only
+/// [`ResidencyPolicy::pick_victim`].
+pub trait ResidencyPolicy {
+    fn name(&self) -> &'static str;
+
+    /// A slot starts holding a page. `block` is a caller-computed
+    /// VABlock hint (GPUVM: global page index / pages-per-2 MB-block;
+    /// UVM: region-qualified block index); `speculative` marks
+    /// prefetcher-issued fills with no demand waiter yet.
+    fn on_fill(&mut self, _gpu: usize, _slot: Slot, _block: u64, _speculative: bool) {}
+
+    /// A demand access touched the slot's page.
+    fn on_touch(&mut self, _gpu: usize, _slot: Slot) {}
+
+    /// First demand touch of a speculative fill (the prefetch paid off).
+    fn on_promote(&mut self, gpu: usize, slot: Slot) {
+        self.on_touch(gpu, slot);
+    }
+
+    /// The slot's reference count drained to zero.
+    fn on_drain(&mut self, _gpu: usize, _slot: Slot) {}
+
+    /// The slot's page was evicted (dynamic universes free the slot).
+    fn on_evict(&mut self, _gpu: usize, _slot: Slot) {}
+
+    /// Answer a victim query. Demand queries return `Take` or `WaitOn`
+    /// whenever the universe is non-empty.
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice;
+}
+
+/// Build a policy instance for one run. `seed` feeds the `random`
+/// engine (GPUVM passes its historical `cfg.seed ^ 0x6b75_766d`
+/// derivation so the extracted engine replays the pre-subsystem RNG
+/// sequence bit for bit).
+pub fn build(
+    kind: ResidencyPolicyKind,
+    universe: Universe,
+    num_gpus: usize,
+    seed: u64,
+) -> Box<dyn ResidencyPolicy> {
+    match kind {
+        ResidencyPolicyKind::FifoRefcount => {
+            Box::new(fifo::FifoEngine::new(false, universe, num_gpus))
+        }
+        ResidencyPolicyKind::FifoStrict => {
+            Box::new(fifo::FifoEngine::new(true, universe, num_gpus))
+        }
+        ResidencyPolicyKind::Random => Box::new(random::RandomEngine::new(universe, num_gpus, seed)),
+        ResidencyPolicyKind::Lru => Box::new(lru::LruEngine::new(universe, num_gpus)),
+        ResidencyPolicyKind::Clock => Box::new(clock::ClockEngine::new(universe, num_gpus)),
+        ResidencyPolicyKind::TreeLru => Box::new(tree::TreeLruEngine::new(universe, num_gpus)),
+        ResidencyPolicyKind::PrefetchAware => {
+            Box::new(aware::PrefetchAwareEngine::new(universe, num_gpus))
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn all_usable() -> impl Fn(Slot) -> bool {
+    |_| true
+}
+
+#[cfg(test)]
+pub(crate) fn query<'a>(
+    gpu: usize,
+    demand: bool,
+    usable: &'a dyn Fn(Slot) -> bool,
+) -> VictimQuery<'a> {
+    VictimQuery {
+        gpu,
+        demand,
+        prefetch_issued: 0,
+        prefetch_accuracy: 0.0,
+        usable,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in ResidencyPolicyKind::all() {
+            assert_eq!(ResidencyPolicyKind::parse(p.name()).unwrap(), p);
+            assert!(!p.describe().is_empty());
+        }
+        assert_eq!(
+            ResidencyPolicyKind::names().len(),
+            ResidencyPolicyKind::all().len()
+        );
+        // The legacy spelling maps to the paper policy.
+        assert_eq!(
+            ResidencyPolicyKind::parse("fifo").unwrap(),
+            ResidencyPolicyKind::FifoRefcount
+        );
+    }
+
+    #[test]
+    fn unknown_policy_error_lists_valid_set() {
+        let err = ResidencyPolicyKind::parse("belady").unwrap_err().to_string();
+        for name in ResidencyPolicyKind::names() {
+            assert!(err.contains(name), "'{name}' missing from: {err}");
+        }
+    }
+
+    #[test]
+    fn every_engine_builds_in_both_universes() {
+        for kind in ResidencyPolicyKind::all() {
+            for universe in [Universe::Frames { frames_per_gpu: 8 }, Universe::Dynamic] {
+                let mut p = build(kind, universe, 2, 0x5EED);
+                assert_eq!(p.name(), kind.name());
+                // Dynamic universes start empty; fixed ones always answer
+                // a demand query.
+                let u = all_usable();
+                let choice = p.pick_victim(&query(0, true, &u));
+                match universe {
+                    Universe::Frames { .. } => {
+                        assert!(
+                            matches!(choice, VictimChoice::Take(_)),
+                            "{kind:?} must take a free frame"
+                        );
+                    }
+                    Universe::Dynamic => {
+                        assert_eq!(choice, VictimChoice::GiveUp, "{kind:?} empty universe");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_universe_engines_hand_out_free_frames_first() {
+        // With everything usable (all frames free), deterministic
+        // engines walk the buffer in index order.
+        for kind in [
+            ResidencyPolicyKind::FifoRefcount,
+            ResidencyPolicyKind::FifoStrict,
+            ResidencyPolicyKind::Lru,
+            ResidencyPolicyKind::Clock,
+            ResidencyPolicyKind::TreeLru,
+            ResidencyPolicyKind::PrefetchAware,
+        ] {
+            let mut p = build(kind, Universe::Frames { frames_per_gpu: 4 }, 1, 0);
+            let u = all_usable();
+            for expect in 0..4u64 {
+                match p.pick_victim(&query(0, true, &u)) {
+                    VictimChoice::Take(s) => {
+                        assert_eq!(s, expect, "{kind:?} frame order");
+                        p.on_fill(0, s, 0, false);
+                    }
+                    other => panic!("{kind:?} answered {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_universe_engines_track_live_slots() {
+        for kind in ResidencyPolicyKind::all() {
+            let mut p = build(kind, Universe::Dynamic, 1, 7);
+            p.on_fill(0, 10, 0, false);
+            p.on_fill(0, 11, 0, false);
+            p.on_fill(0, 12, 1, false);
+            let u = all_usable();
+            let choice = p.pick_victim(&query(0, true, &u));
+            let s = match choice {
+                VictimChoice::Take(s) | VictimChoice::WaitOn(s) => s,
+                VictimChoice::GiveUp => panic!("{kind:?} gave up with live slots"),
+            };
+            assert!((10..=12).contains(&s), "{kind:?} picked dead slot {s}");
+            // Evict everything: the policy must go back to GiveUp.
+            for slot in 10..=12 {
+                p.on_evict(0, slot);
+            }
+            assert_eq!(
+                p.pick_victim(&query(0, true, &u)),
+                VictimChoice::GiveUp,
+                "{kind:?} after drain"
+            );
+        }
+    }
+
+    #[test]
+    fn promote_defaults_to_touch() {
+        // lru treats promote as touch: a promoted slot stops being the
+        // LRU victim.
+        let mut p = build(
+            ResidencyPolicyKind::Lru,
+            Universe::Dynamic,
+            1,
+            0,
+        );
+        p.on_fill(0, 1, 0, true);
+        p.on_fill(0, 2, 0, false);
+        p.on_promote(0, 1); // slot 1 now most recent
+        let u = all_usable();
+        assert_eq!(p.pick_victim(&query(0, true, &u)), VictimChoice::Take(2));
+    }
+}

@@ -1,0 +1,138 @@
+//! The extracted `random` engine: bounded random probes, then queue.
+//!
+//! In a frames universe this replays the pre-subsystem inline logic
+//! from `gpuvm/runtime.rs` bit for bit — the same eight `gen_range`
+//! probes per demand fault, one extra draw for the wait target, and no
+//! extra draw on a fruitless speculative pass — provided the caller
+//! seeds it with the historical `cfg.seed ^ 0x6b75_766d` derivation.
+
+use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
+use crate::util::fxhash::FxHashMap;
+use crate::util::rng::Rng;
+
+/// Probes per victim query before falling back to a wait (the
+/// pre-subsystem constant).
+const PROBES: usize = 8;
+
+pub struct RandomEngine {
+    frames: Option<usize>,
+    rng: Rng,
+    /// Per-GPU live slots (dynamic universe), with an index map for
+    /// O(1) swap-removal.
+    live: Vec<Vec<Slot>>,
+    pos: Vec<FxHashMap<Slot, usize>>,
+}
+
+impl RandomEngine {
+    pub fn new(universe: Universe, num_gpus: usize, seed: u64) -> Self {
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
+        };
+        Self {
+            frames,
+            rng: Rng::new(seed),
+            live: vec![Vec::new(); num_gpus],
+            pos: vec![FxHashMap::default(); num_gpus],
+        }
+    }
+}
+
+impl ResidencyPolicy for RandomEngine {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
+        if self.frames.is_none() && !self.pos[gpu].contains_key(&slot) {
+            self.pos[gpu].insert(slot, self.live[gpu].len());
+            self.live[gpu].push(slot);
+        }
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        if self.frames.is_none() {
+            if let Some(i) = self.pos[gpu].remove(&slot) {
+                let last = self.live[gpu].pop().expect("pos entries track live slots");
+                if last != slot {
+                    self.live[gpu][i] = last;
+                    self.pos[gpu].insert(last, i);
+                }
+            }
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        match self.frames {
+            Some(n) => {
+                let n = n as u64;
+                for _ in 0..PROBES {
+                    let f = self.rng.gen_range(n);
+                    if (q.usable)(f) {
+                        return VictimChoice::Take(f);
+                    }
+                }
+                if q.demand {
+                    VictimChoice::WaitOn(self.rng.gen_range(n))
+                } else {
+                    VictimChoice::GiveUp
+                }
+            }
+            None => {
+                let live = &self.live[q.gpu];
+                if live.is_empty() {
+                    return VictimChoice::GiveUp;
+                }
+                let len = live.len() as u64;
+                for _ in 0..PROBES {
+                    let s = live[self.rng.gen_range(len) as usize];
+                    if (q.usable)(s) {
+                        return VictimChoice::Take(s);
+                    }
+                }
+                if q.demand {
+                    VictimChoice::WaitOn(live[self.rng.gen_range(len) as usize])
+                } else {
+                    VictimChoice::GiveUp
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::residency::query;
+
+    #[test]
+    fn probes_find_the_single_usable_frame_eventually() {
+        let mut p = RandomEngine::new(Universe::Frames { frames_per_gpu: 4 }, 1, 1);
+        let only_three = |s: Slot| s == 3;
+        let mut takes = 0;
+        for _ in 0..64 {
+            if let VictimChoice::Take(s) = p.pick_victim(&query(0, true, &only_three)) {
+                assert_eq!(s, 3);
+                takes += 1;
+            }
+        }
+        assert!(takes > 0, "8 probes over 4 frames should hit slot 3");
+    }
+
+    #[test]
+    fn dynamic_mode_only_offers_live_slots() {
+        let mut p = RandomEngine::new(Universe::Dynamic, 1, 2);
+        p.on_fill(0, 40, 0, false);
+        p.on_fill(0, 41, 0, false);
+        p.on_evict(0, 40);
+        let all = |_: Slot| true;
+        for _ in 0..16 {
+            match p.pick_victim(&query(0, true, &all)) {
+                VictimChoice::Take(s) | VictimChoice::WaitOn(s) => assert_eq!(s, 41),
+                VictimChoice::GiveUp => panic!("live slot available"),
+            }
+        }
+        p.on_evict(0, 41);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::GiveUp);
+    }
+}

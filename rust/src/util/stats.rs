@@ -65,6 +65,24 @@ impl Online {
             self.max
         }
     }
+
+    /// Fold another accumulator in (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Log2-bucketed histogram for latencies in nanoseconds. Bucket `i` covers
@@ -103,6 +121,15 @@ impl LatencyHist {
     }
     pub fn max_ns(&self) -> f64 {
         self.online.max()
+    }
+
+    /// Fold another histogram in (bucket-wise; summary stats via
+    /// [`Online::merge`]).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.online.merge(&other.online);
     }
 
     /// Approximate percentile from the log buckets (upper bucket bound).

@@ -8,8 +8,11 @@
 //! transfers a 64 KB group (fault + speculative prefetch) over the
 //! configured [`crate::fabric::Transport`] — by default `pcie-dma`, the
 //! CPU-driven copy engine over the direct host→GPU path (no NIC) the
-//! real driver assumes. Eviction frees a whole 2 MB VABlock chosen
-//! FIFO, which under memory pressure throws out pages that are still
+//! real driver assumes. Eviction frees a whole 2 MB VABlock: the
+//! pluggable [`crate::residency`] policy (`uvm.residency_policy`) picks
+//! the *seed* group — the default `tree-lru` reproduces the real
+//! driver's block-LRU choice — and the driver hammers the seed's whole
+//! block, which under memory pressure throws out pages that are still
 //! needed — the refetch traffic Figs 12/14 quantify.
 //!
 //! The model is timing + accounting only: application data never moves
@@ -23,8 +26,9 @@ use crate::memsys::{AccessResult, Ev, MemCtx, MemEvent, MemorySystem, PageAccess
 use crate::metrics::Metrics;
 use crate::pcie::Dir;
 use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
+use crate::residency::{self, ResidencyPolicy, Universe, VictimChoice, VictimQuery};
 use crate::sim::{ms, us, Engine, SimTime};
-use crate::util::fxhash::{FxHashMap, FxHashSet};
+use crate::util::fxhash::FxHashMap;
 use std::collections::VecDeque;
 
 /// A fault/transfer group: (gpu, region, group index within region).
@@ -38,14 +42,23 @@ struct GroupState {
     refcount: u32,
     dirty: bool,
     resident: bool,
-    /// Logical access clock (driver-side LRU at VABlock granularity:
-    /// eviction picks the block of the least-recently-used group, but
-    /// still throws out the *whole* 2 MB block — the paper's complaint).
-    last_access: u64,
+    /// Residency slot interned for the current residency epoch (the
+    /// policy's handle; fresh per arrival).
+    slot: u64,
+    /// The current epoch's transfer was policy-issued speculation with
+    /// no demand waiter; cleared on the first demand touch (promote).
+    spec_epoch: bool,
     /// Bitmap of pages-in-group touched since arrival (bit 63 saturates
     /// for giant groups). Pages that arrived but never set their bit
     /// are wasted prefetch at eviction time.
     touched: u64,
+    /// Pages already counted in `prefetch_wasted` and not demand-touched
+    /// since: a speculative page evicted unused, refaulted, and evicted
+    /// unused again is one wasted speculation, not two — the verdict is
+    /// per page, not per transfer. Demand touches clear bits so a page
+    /// that later pays off (and is then re-speculated) can be judged
+    /// afresh.
+    wasted_once: u64,
 }
 
 #[derive(Debug)]
@@ -67,7 +80,8 @@ pub struct UvmSystem {
     /// topology; the driver posts one WR per fault-group transfer.
     fabric: Box<dyn Transport>,
     groups: FxHashMap<GroupKey, GroupState>,
-    /// Residency arrival order (FIFO VABlock eviction picks from the head).
+    /// Residency arrival order (block membership scans walk this; the
+    /// eviction *seed* comes from the residency policy).
     fifo: VecDeque<GroupKey>,
     free_frames: Vec<usize>,
     pending: FxHashMap<GroupKey, PendingFault>,
@@ -77,11 +91,22 @@ pub struct UvmSystem {
     driver_scheduled: bool,
     holds: FxHashMap<SlotId, Vec<GroupKey>>,
     slot_pending: FxHashMap<SlotId, u32>,
-    evicted_once: FxHashSet<GroupKey>,
+    /// Groups evicted at least once, with the fill count at the last
+    /// eviction (refetch + reuse-distance accounting).
+    evicted_at: FxHashMap<GroupKey, u64>,
     transfers: FxHashMap<u64, GroupKey>,
     next_token: u64,
-    /// Logical access clock for the block-LRU.
-    access_clock: u64,
+    /// The pluggable residency policy seeding VABlock eviction
+    /// (`uvm.residency_policy`); resident groups are interned as
+    /// dynamic slots.
+    residency: Box<dyn ResidencyPolicy>,
+    /// Residency slot → group, for mapping the policy's pick back.
+    slot_groups: FxHashMap<u64, GroupKey>,
+    next_slot: u64,
+    /// Per-GPU group transfers completed so far (the reuse-distance
+    /// clock; per-GPU so one GPU's traffic can't dilute another's
+    /// thrash signal).
+    fills: Vec<u64>,
     /// Bytes one fault group transfers (the `fixed` policy's 64 KB, or
     /// one bare page under the explicit-speculation policies). All
     /// three transfer sites below use this — the prefetch math itself
@@ -124,10 +149,18 @@ impl UvmSystem {
             driver_scheduled: false,
             holds: FxHashMap::default(),
             slot_pending: FxHashMap::default(),
-            evicted_once: FxHashSet::default(),
+            evicted_at: FxHashMap::default(),
             transfers: FxHashMap::default(),
             next_token: 1,
-            access_clock: 0,
+            residency: residency::build(
+                cfg.uvm.residency_policy,
+                Universe::Dynamic,
+                cfg.gpu.num_gpus,
+                cfg.seed ^ 0x7576_6d65,
+            ),
+            slot_groups: FxHashMap::default(),
+            next_slot: 1,
+            fills: vec![0; cfg.gpu.num_gpus],
             group_bytes,
             pages_per_group: (group_bytes / cfg.gpuvm.page_size).max(1),
             groups_per_block: (cfg.uvm.evict_block / group_bytes).max(1),
@@ -260,10 +293,12 @@ impl UvmSystem {
         }
     }
 
-    /// Free frames by evicting an entire VABlock — the one holding the
-    /// least-recently-used resident group (block-granular LRU, as the
-    /// real driver does; the paper's point is that the *whole 2 MB* goes,
-    /// including pages that were about to be used). Returns frames freed.
+    /// Free frames by evicting an entire VABlock. The residency policy
+    /// picks the *seed* group (default `tree-lru` = the block holding
+    /// the least-recently-used group, as the real driver does); the
+    /// driver then throws out the seed's *whole 2 MB block*, including
+    /// pages that were about to be used — the paper's point. Returns
+    /// frames freed.
     ///
     /// `force` models UVM's behaviour under extreme pressure: the driver
     /// CAN unmap pages that GPU threads are actively touching (they just
@@ -277,14 +312,33 @@ impl UvmSystem {
         hm: &HostMemory,
         m: &mut Metrics,
     ) -> usize {
-        // Least-recently-used resident group on this GPU → its block.
-        let Some(victim) = self
-            .fifo
-            .iter()
-            .filter(|k| k.0 == gpu)
-            .min_by_key(|k| self.groups.get(k).map(|g| g.last_access).unwrap_or(0))
-            .copied()
-        else {
+        let choice = {
+            let groups = &self.groups;
+            let slots = &self.slot_groups;
+            let usable = move |s: u64| {
+                force
+                    || slots
+                        .get(&s)
+                        .and_then(|k| groups.get(k))
+                        .map(|g| g.refcount == 0)
+                        .unwrap_or(false)
+            };
+            self.residency.pick_victim(&VictimQuery {
+                gpu,
+                demand: true,
+                prefetch_issued: m.prefetched_pages,
+                prefetch_accuracy: m.prefetch_accuracy(),
+                usable: &usable,
+            })
+        };
+        // The block hammer never waits: a `WaitOn` answer still seeds
+        // the eviction (referenced groups inside the block are skipped
+        // below unless forced).
+        let seed = match choice {
+            VictimChoice::Take(s) | VictimChoice::WaitOn(s) => s,
+            VictimChoice::GiveUp => return 0,
+        };
+        let Some(&victim) = self.slot_groups.get(&seed) else {
             return 0;
         };
         let block = self.block_of(victim);
@@ -303,28 +357,40 @@ impl UvmSystem {
                 continue; // prefer not to evict a group under active access
             }
             if g.refcount > 0 {
-                m.bump("uvm_forced_evictions", 1);
+                m.evictions_forced += 1;
             }
             g.resident = false;
             let dirty = std::mem::take(&mut g.dirty);
             // Pages that arrived with this group but were never touched
-            // are wasted speculation (the paper's useless-64 KB story).
+            // are wasted speculation (the paper's useless-64 KB story) —
+            // counted once per page, not once per eviction, so a page
+            // evicted-then-refaulted-then-evicted again does not double
+            // count (see `wasted_once`).
             let cap = span.min(64) as u32;
-            let used = g.touched.count_ones().min(cap);
-            m.prefetch_wasted += (cap - used) as u64;
+            let mask = if cap >= 64 { u64::MAX } else { (1u64 << cap) - 1 };
+            let untouched = mask & !g.touched;
+            m.prefetch_wasted += (untouched & !g.wasted_once).count_ones() as u64;
+            g.wasted_once |= untouched;
             g.touched = 0;
+            g.spec_epoch = false;
+            let slot = g.slot;
             self.fifo.retain(|k| *k != key);
-            self.evicted_once.insert(key);
+            self.evicted_at.insert(key, self.fills[gpu]);
+            self.slot_groups.remove(&slot);
+            self.residency.on_evict(gpu, slot);
             self.free_frames[gpu] += 1;
             freed += 1;
             m.evictions += 1;
             if dirty {
+                m.evictions_dirty += 1;
                 m.bytes_out += self.group_bytes;
                 // Asynchronous write-back: nothing gates on the returned
                 // completion time, but the engine's link reservation
                 // still delays the fetch DMAs that share the path —
                 // queueing is accounted, not dropped.
                 self.group_dma(now, key, hm, Dir::Out);
+            } else {
+                m.evictions_clean += 1;
             }
         }
         freed
@@ -378,20 +444,26 @@ impl MemorySystem for UvmSystem {
 
         let mut misses = 0u32;
         for (key, write, bits) in groups {
-            self.access_clock += 1;
-            let clock = self.access_clock;
             let resident = self.groups.get(&key).map(|g| g.resident).unwrap_or(false);
             if resident {
                 ctx.m.hits += 1;
                 let g = self.groups.get_mut(&key).unwrap();
                 g.refcount += 1;
                 g.dirty |= write;
-                g.last_access = clock;
-                // First touch of pages that arrived speculatively.
+                // First touch of pages that arrived speculatively; a
+                // demand touch also re-arms the per-page waste verdict.
                 let fresh = bits & !g.touched;
                 g.touched |= bits;
+                g.wasted_once &= !bits;
                 ctx.m.prefetch_hits += fresh.count_ones() as u64;
+                let rslot = g.slot;
+                let promote = std::mem::take(&mut g.spec_epoch);
                 self.holds.entry(slot).or_default().push(key);
+                if promote {
+                    self.residency.on_promote(gpu, rslot);
+                } else {
+                    self.residency.on_touch(gpu, rslot);
+                }
                 continue;
             }
             misses += 1;
@@ -415,8 +487,16 @@ impl MemorySystem for UvmSystem {
             }
             // New fault: GMMU writes the fault buffer, driver is poked.
             ctx.m.faults += 1;
-            if self.evicted_once.contains(&key) {
+            if let Some(&at) = self.evicted_at.get(&key) {
                 ctx.m.refetches += 1;
+                // Reuse distance in group fills since the eviction; a
+                // short distance means the 2 MB hammer hit the live
+                // working set (thrash).
+                let d = self.fills[gpu].saturating_sub(at);
+                ctx.m.reuse_distance.record(d);
+                if d <= residency::THRASH_WINDOW {
+                    ctx.m.thrash_refetches += 1;
+                }
             }
             if self.pages_per_group > 1 {
                 // Fixed-group geometry: the ride-along pages are the
@@ -534,16 +614,25 @@ impl MemorySystem for UvmSystem {
             MemEvent::UvmTransferDone { token } => {
                 let key = self.transfers.remove(&token).expect("transfer token");
                 let p = self.pending.remove(&key).expect("pending fault");
-                self.access_clock += 1;
-                let clock = self.access_clock;
+                self.fills[key.0] += 1;
+                let rslot = self.next_slot;
+                self.next_slot += 1;
+                self.slot_groups.insert(rslot, key);
+                let block_hint =
+                    ((key.1 as u64) << 32) | (key.2 / self.groups_per_block.max(1));
                 let g = self.groups.entry(key).or_default();
                 g.resident = true;
                 g.dirty |= p.write;
-                g.last_access = clock;
+                g.slot = rslot;
+                g.spec_epoch = p.speculative;
                 // Fresh residency epoch: only the leader and pre-arrival
-                // demand bits count as touched.
+                // demand bits count as touched; those demand touches
+                // also re-arm the per-page waste verdict.
                 g.touched = p.touched;
+                g.wasted_once &= !p.touched;
                 self.fifo.push_back(key);
+                self.residency
+                    .on_fill(key.0, rslot, block_hint, p.speculative);
                 if !p.speculative {
                     ctx.m.fault_latency.record(now.saturating_sub(p.started));
                 }
@@ -887,6 +976,136 @@ mod tests {
             rdma.finish_ns,
             dma.finish_ns
         );
+    }
+
+    #[test]
+    fn wasted_prefetch_not_double_counted_across_refaults() {
+        /// One warp ping-pongs between two 64 KB groups with room for
+        /// only one: every access evicts the other group, whose 15
+        /// ride-along pages are never touched.
+        struct PingPong {
+            region: Option<RegionId>,
+            launched: bool,
+            step: usize,
+        }
+        impl Workload for PingPong {
+            fn name(&self) -> &str {
+                "ping-pong"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("d", 2 * 65536));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                if self.launched {
+                    return None;
+                }
+                self.launched = true;
+                Some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                let s = self.step;
+                self.step += 1;
+                if s >= 4 {
+                    return WarpOp::Done;
+                }
+                WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: (s as u64 % 2) * 65536,
+                    len: 4096,
+                    write: false,
+                }])
+            }
+        }
+        // GPU memory = exactly one 64 KB group-frame.
+        let c = cfg(1, 64 << 10);
+        let mut w = PingPong {
+            region: None,
+            launched: false,
+            step: 0,
+        };
+        let mut mem = UvmSystem::new(&c);
+        let r = run(&c, &mut w, &mut mem).unwrap();
+        let m = &r.metrics;
+        assert_eq!(m.faults, 4);
+        assert_eq!(m.refetches, 2);
+        assert_eq!(m.evictions, 3);
+        assert_eq!(m.prefetched_pages, 4 * 15, "each transfer re-speculates");
+        // The waste verdict is per page: group 0's 15 untouched
+        // ride-alongs are evicted twice but counted once (15 for group
+        // 0 + 15 for group 1), not 45 as per-eviction counting gives.
+        assert_eq!(m.prefetch_wasted, 30);
+        assert!(m.prefetch_hits + m.prefetch_wasted <= m.prefetched_pages);
+        // Ping-pong at distance 1 is textbook thrash.
+        assert_eq!(m.thrash_refetches, 2);
+        assert_eq!(m.evictions_clean, 3);
+        assert_eq!(m.evictions_dirty, 0);
+    }
+
+    #[test]
+    fn residency_policies_swap_under_the_driver() {
+        use crate::residency::ResidencyPolicyKind;
+        /// Two passes over a working set larger than GPU memory (the
+        /// oversubscription shape), per policy.
+        struct TwoPass {
+            region: Option<RegionId>,
+            kernel: u32,
+            step: usize,
+            groups: usize,
+        }
+        impl Workload for TwoPass {
+            fn name(&self) -> &str {
+                "two-pass"
+            }
+            fn setup(&mut self, hm: &mut HostMemory) {
+                self.region = Some(hm.register("d", self.groups as u64 * 65536));
+            }
+            fn next_kernel(&mut self) -> Option<Launch> {
+                self.kernel += 1;
+                self.step = 0;
+                (self.kernel <= 2).then_some(Launch { warps: 1, tag: 0 })
+            }
+            fn next_op(&mut self, _w: usize) -> WarpOp {
+                let s = self.step;
+                self.step += 1;
+                if s >= self.groups {
+                    return WarpOp::Done;
+                }
+                WarpOp::Access(vec![Access::Seq {
+                    region: self.region.unwrap(),
+                    start: (s as u64) * 65536,
+                    len: 4096,
+                    write: false,
+                }])
+            }
+        }
+        let mut default_faults = 0;
+        for kind in ResidencyPolicyKind::all() {
+            let mut c = cfg(1, 2 << 20);
+            c.uvm.residency_policy = kind;
+            let mut w = TwoPass {
+                region: None,
+                kernel: 0,
+                step: 0,
+                groups: 64,
+            };
+            let mut mem = UvmSystem::new(&c);
+            let r = run(&c, &mut w, &mut mem).unwrap();
+            let m = &r.metrics;
+            assert!(m.evictions > 0, "{kind:?} must evict under pressure");
+            assert_eq!(m.evictions, m.evictions_clean + m.evictions_dirty, "{kind:?}");
+            assert_eq!(
+                m.bytes_in,
+                m.faults * c.uvm.prefetch_size,
+                "{kind:?}: fixed geometry moves one group per fault"
+            );
+            assert_eq!(m.faults as i64, (64 + m.refetches) as i64, "{kind:?}");
+            if kind == ResidencyPolicyKind::TreeLru {
+                default_faults = m.faults;
+            }
+        }
+        // The default reproduces the pre-subsystem block-LRU behaviour:
+        // sequential two-pass over 2× memory refetches every group.
+        assert_eq!(default_faults, 128);
     }
 
     #[test]

@@ -143,6 +143,66 @@ fn reports_serialize_to_csv_and_json() {
 }
 
 #[test]
+fn residency_sweep_round_trips_through_csv_and_json() {
+    use gpuvm::residency::ResidencyPolicyKind;
+    // The CLI's `gpuvm sweep --residency ...` path: a residency axis
+    // over both paged systems, serialized and read back.
+    let mut cfg = small_cfg();
+    cfg.gpu.mem_bytes = 256 << 10; // oversubscribed: policies matter
+    cfg.gpu.sms = 4;
+    cfg.gpu.warps_per_sm = 2;
+    let reports = Session::new(cfg)
+        .workload("va@128k")
+        .backends(["gpuvm", "uvm"])
+        .sweep_residency([
+            ResidencyPolicyKind::FifoRefcount,
+            ResidencyPolicyKind::TreeLru,
+        ])
+        .run_all()
+        .unwrap();
+    assert_eq!(reports.len(), 4);
+
+    let dir = std::env::temp_dir().join("gpuvm_session_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("residency_sweep.csv");
+    let json_path = dir.join("residency_sweep.json");
+    report::write_csv(&csv_path, &reports).unwrap();
+    report::write_json(&json_path, &reports).unwrap();
+
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    let mut lines = csv.lines();
+    let header: Vec<&str> = lines.next().unwrap().split(',').collect();
+    let col = |name: &str| {
+        header
+            .iter()
+            .position(|h| *h == name)
+            .unwrap_or_else(|| panic!("'{name}' missing from header"))
+    };
+    let (c_backend, c_residency) = (col("backend"), col("residency"));
+    let (c_evict, c_clean, c_dirty) =
+        (col("evictions"), col("evictions_clean"), col("evictions_dirty"));
+    let c_thrash = col("thrash_refetches");
+    let rows: Vec<Vec<&str>> = lines.map(|l| l.split(',').collect()).collect();
+    assert_eq!(rows.len(), reports.len());
+    for (row, rep) in rows.iter().zip(&reports) {
+        // The residency column round-trips per point.
+        assert_eq!(row[c_backend], rep.backend);
+        assert_eq!(row[c_residency], rep.residency);
+        let ev: u64 = row[c_evict].parse().unwrap();
+        let clean: u64 = row[c_clean].parse().unwrap();
+        let dirty: u64 = row[c_dirty].parse().unwrap();
+        assert_eq!(ev, clean + dirty);
+        assert!(ev > 0, "{}/{} must evict", rep.backend, rep.residency);
+        let _: u64 = row[c_thrash].parse().unwrap();
+    }
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"residency\":\"fifo-refcount\""));
+    assert!(json.contains("\"residency\":\"tree-lru\""));
+    assert!(json.contains("\"thrash_refetches\":"));
+    assert!(json.contains("\"reuse_p50\":"));
+}
+
+#[test]
 fn memadvise_and_bulk_backends_order_sensibly_on_queries() {
     // Fig 15's shape at miniature scale: GPUVM touches a sliver of the
     // value column, RAPIDS ships both columns wholesale.
