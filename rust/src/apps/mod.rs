@@ -29,7 +29,7 @@ use crate::util::cli::parse_u64_with_suffix;
 use anyhow::{bail, Context, Result};
 
 /// Every spec-resolvable application, with its parsed parameters.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SpecKind {
     /// Vector add over `n` f32 elements per array.
     Va { n: usize },
@@ -44,6 +44,9 @@ pub enum SpecKind {
     },
     /// Taxi query `q` (0-based) over `rows` rows.
     Query { q: usize, rows: usize },
+    /// Replay of a recorded fault trace ([`crate::trace`]): the fourth
+    /// workload family — captured runs as first-class scenarios.
+    Trace { path: String },
 }
 
 /// Knobs a workload build needs beyond the spec itself. Constructed from
@@ -87,7 +90,7 @@ pub struct WorkloadSpec {
 }
 
 const APP_HELP: &str =
-    "va[@N]|mvt[@N]|atax[@N]|bigc[@N]|bfs|cc|sssp[:GU|GK|FS|MO[:naive|balanced]]|q1..q5[@ROWS]";
+    "va[@N]|mvt[@N]|atax[@N]|bigc[@N]|bfs|cc|sssp[:GU|GK|FS|MO[:naive|balanced]]|q1..q5[@ROWS]|trace:PATH";
 
 /// Parse a size parameter with the CLI's `k`/`m`/`g` suffixes; errors
 /// instead of silently substituting a default (the `mvt@garbage` fix).
@@ -99,8 +102,21 @@ fn parse_size(app: &str, s: &str) -> Result<usize> {
 }
 
 impl WorkloadSpec {
-    /// Parse `va@4m`, `mvt@8192`, `bfs:GK:naive`, `q3@1m`, ...
+    /// Parse `va@4m`, `mvt@8192`, `bfs:GK:naive`, `q3@1m`, `trace:PATH`, ...
     pub fn parse(spec: &str) -> Result<Self> {
+        // Trace replay first: the path may itself contain ':' or '@'.
+        if let Some(path) = spec.strip_prefix("trace:") {
+            anyhow::ensure!(
+                !path.is_empty(),
+                "trace: needs a file path (trace:PATH; capture one with `gpuvm trace capture`)"
+            );
+            return Ok(Self {
+                raw: spec.to_string(),
+                kind: SpecKind::Trace {
+                    path: path.to_string(),
+                },
+            });
+        }
         let mut parts = spec.splitn(3, ':');
         let head = parts.next().unwrap_or(spec);
         let ds = parts.next();
@@ -190,16 +206,16 @@ impl WorkloadSpec {
 
     /// Construct the workload this spec names.
     pub fn build(&self, o: &BuildOpts) -> Result<Box<dyn Workload>> {
-        let w: Box<dyn Workload> = match self.kind {
-            SpecKind::Va { n } => Box::new(VaWorkload::new(n, o.page_size)),
-            SpecKind::Matrix { app, n } => Box::new(MatrixSeq::new(app, n, o.page_size)),
+        let w: Box<dyn Workload> = match &self.kind {
+            SpecKind::Va { n } => Box::new(VaWorkload::new(*n, o.page_size)),
+            SpecKind::Matrix { app, n } => Box::new(MatrixSeq::new(*app, *n, o.page_size)),
             SpecKind::Graph {
                 algo,
                 dataset,
                 naive,
             } => {
                 let g = std::rc::Rc::new(
-                    crate::graph::generate(dataset, o.graph_scale, o.seed).graph,
+                    crate::graph::generate(*dataset, o.graph_scale, o.seed).graph,
                 );
                 anyhow::ensure!(
                     (o.graph_source as usize) < g.num_vertices,
@@ -207,7 +223,7 @@ impl WorkloadSpec {
                     o.graph_source,
                     g.num_vertices
                 );
-                let layout = if naive {
+                let layout = if *naive {
                     Layout::Csr {
                         vertices_per_warp: 8,
                     }
@@ -215,7 +231,7 @@ impl WorkloadSpec {
                     Layout::Balanced { chunk_edges: 2048 }
                 };
                 Box::new(GraphWorkload::new(
-                    algo,
+                    *algo,
                     layout,
                     g,
                     o.graph_source,
@@ -223,8 +239,13 @@ impl WorkloadSpec {
                 ))
             }
             SpecKind::Query { q, rows } => {
-                let table = std::rc::Rc::new(TaxiTable::generate(rows, o.seed));
-                Box::new(QueryWorkload::new(table, q, o.page_size))
+                let table = std::rc::Rc::new(TaxiTable::generate(*rows, o.seed));
+                Box::new(QueryWorkload::new(table, *q, o.page_size))
+            }
+            SpecKind::Trace { path } => {
+                let t = crate::trace::Trace::load(path)
+                    .with_context(|| format!("building workload 'trace:{path}'"))?;
+                Box::new(crate::trace::TraceWorkload::new(&t))
             }
         };
         Ok(if o.advise {
@@ -335,6 +356,37 @@ mod tests {
         assert!(WorkloadSpec::parse("bfs@4k").is_err(), "graph apps take :DS");
         assert!(WorkloadSpec::parse("va:GK").is_err(), "va takes no dataset");
         assert!(WorkloadSpec::parse("bfs:GK:zigzag").is_err());
+    }
+
+    #[test]
+    fn trace_specs_parse_and_fail_helpfully() {
+        let s = WorkloadSpec::parse("trace:/tmp/run.trace").unwrap();
+        assert_eq!(
+            s.kind,
+            SpecKind::Trace {
+                path: "/tmp/run.trace".into()
+            }
+        );
+        assert_eq!(s.raw(), "trace:/tmp/run.trace");
+        // Paths keep their ':' and '@' characters verbatim.
+        let s = WorkloadSpec::parse("trace:out/a@2:b.trace").unwrap();
+        assert_eq!(
+            s.kind,
+            SpecKind::Trace {
+                path: "out/a@2:b.trace".into()
+            }
+        );
+        // Empty path is a parse error; a missing file is a build error
+        // naming the path.
+        assert!(WorkloadSpec::parse("trace:").is_err());
+        let err = WorkloadSpec::parse("trace:/no/such/file.trace")
+            .unwrap()
+            .build(&BuildOpts::new(4096, 1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("/no/such/file.trace"), "{err:#}");
+        // Bare "trace" is an unknown app, and the help names the grammar.
+        let err = WorkloadSpec::parse("trace").unwrap_err();
+        assert!(err.to_string().contains("trace:PATH"), "{err:#}");
     }
 
     #[test]

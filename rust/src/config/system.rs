@@ -266,6 +266,16 @@ pub struct NvLinkConfig {
     pub wr_process_ns: u64,
 }
 
+/// Event-trace capture knobs ([`crate::trace`]).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Cap on events a capture records (set-path `("trace",
+    /// "max_events")`). Past the cap the recorder drops events and marks
+    /// the trace truncated instead of growing without bound on huge
+    /// sweeps. 0 = unlimited.
+    pub max_events: u64,
+}
+
 /// CPU-driven copy-engine model (the `pcie-dma` transport).
 #[derive(Debug, Clone)]
 pub struct PcieDmaConfig {
@@ -287,6 +297,7 @@ pub struct SystemConfig {
     pub gdr: GdrConfig,
     pub nvlink: NvLinkConfig,
     pub pcie_dma: PcieDmaConfig,
+    pub trace: TraceConfig,
     /// Base RNG seed for the run.
     pub seed: u64,
 }
@@ -368,6 +379,7 @@ impl Default for SystemConfig {
                 wr_process_ns: 40,
             },
             pcie_dma: PcieDmaConfig { setup_us: 0.0 },
+            trace: TraceConfig { max_events: 0 },
             seed: 0x5EED,
         }
     }
@@ -501,6 +513,7 @@ impl SystemConfig {
             ("nvlink", "latency_us") => self.nvlink.latency_us = f64v(v)?,
             ("nvlink", "wr_process_ns") => self.nvlink.wr_process_ns = u64v(v)?,
             ("pcie_dma", "setup_us") => self.pcie_dma.setup_us = f64v(v)?,
+            ("trace", "max_events") => self.trace.max_events = u64v(v)?,
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
@@ -809,6 +822,16 @@ mod tests {
         let doc = parse("[gpuvm]\ntransport = \"morse\"\n").unwrap();
         let mut cfg = SystemConfig::default();
         assert!(cfg.apply_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn trace_keys_parse() {
+        let doc = parse("[trace]\nmax_events = 1m\n").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.trace.max_events, 1 << 20);
+        cfg.validate().unwrap();
+        assert_eq!(SystemConfig::default().trace.max_events, 0, "unlimited by default");
     }
 
     #[test]

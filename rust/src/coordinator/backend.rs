@@ -219,10 +219,10 @@ impl Backend for SubwayBackend {
         None
     }
     fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
-        if let SpecKind::Graph { algo, dataset, .. } = spec.kind {
+        if let SpecKind::Graph { algo, dataset, .. } = &spec.kind {
             // The faithful Table 3 model: per-iteration active-subgraph
             // compaction, bulk copy, GPU traversal.
-            let salgo = match algo {
+            let salgo = match *algo {
                 crate::apps::GraphAlgo::Bfs => SubwayAlgo::Bfs,
                 crate::apps::GraphAlgo::Cc => SubwayAlgo::Cc,
                 crate::apps::GraphAlgo::Sssp => bail!(
@@ -230,7 +230,7 @@ impl Backend for SubwayBackend {
                      weighted-relaxation variant); use gpuvm/uvm for sssp"
                 ),
             };
-            let g = crate::graph::generate(dataset, opts.graph_scale, opts.seed).graph;
+            let g = crate::graph::generate(*dataset, opts.graph_scale, opts.seed).graph;
             anyhow::ensure!(
                 (opts.graph_source as usize) < g.num_vertices,
                 "graph source {} out of range (|V| = {})",
@@ -272,10 +272,10 @@ impl Backend for RapidsBackend {
         None
     }
     fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
-        if let SpecKind::Query { q, rows } = spec.kind {
+        if let SpecKind::Query { q, rows } = &spec.kind {
             // The faithful Fig 15 model.
-            let table = crate::apps::TaxiTable::generate(rows, opts.seed);
-            let rr = run_rapids(cfg, &table, q);
+            let table = crate::apps::TaxiTable::generate(*rows, opts.seed);
+            let rr = run_rapids(cfg, &table, *q);
             let mut rep = RunReport::empty(self.name(), spec.raw(), cfg);
             rep.finish_ns = rr.total_ns;
             rep.bytes_in = rr.bytes_transferred;

@@ -6,6 +6,7 @@ use crate::config::SystemConfig;
 use crate::fabric::EngineStats;
 use crate::gpu::exec::RunResult;
 use crate::util::bench::{fmt_bytes, fmt_gbps, fmt_ns};
+use crate::util::json::json_string;
 use std::io::Write as _;
 use std::path::Path;
 
@@ -452,22 +453,6 @@ impl RunReport {
         }
         s
     }
-}
-
-fn json_string(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 /// Serialize reports as a JSON array.

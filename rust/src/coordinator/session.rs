@@ -78,6 +78,9 @@ impl Session {
     }
 
     /// Add a workload by spec (`va@4m`, `bfs:GK:naive`, `q3`, ...).
+    /// Captured fault traces are specs too (`trace:PATH`,
+    /// [`crate::trace`]): a recorded run replays across every backend
+    /// and sweep point like any other app.
     pub fn workload(mut self, spec: &str) -> Self {
         self.workloads.push(spec.to_string());
         self

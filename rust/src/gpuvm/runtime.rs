@@ -26,6 +26,7 @@ use crate::pcie::Dir;
 use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
 use crate::residency::{self, ResidencyPolicy, Universe, VictimChoice, VictimQuery};
 use crate::sim::{us, Engine, SimTime};
+use crate::trace::{self, TraceEventKind};
 use crate::util::fxhash::{FxHashMap, FxHashSet};
 use std::collections::VecDeque;
 
@@ -152,6 +153,9 @@ pub struct GpuVmSystem {
     prefetched: FxHashSet<FaultKey>,
     /// Reused candidate buffer (one `on_fault` call per leader fault).
     pf_buf: Vec<u64>,
+    /// Optional event-trace sink ([`crate::trace`]): records the
+    /// canonical fault/fill/evict/WR stream when attached.
+    sink: Option<trace::SharedSink>,
     backed: bool,
 }
 
@@ -208,6 +212,7 @@ impl GpuVmSystem {
             prefetch_enabled: cfg.gpuvm.prefetch_policy != PrefetchPolicy::None,
             prefetched: FxHashSet::default(),
             pf_buf: Vec::new(),
+            sink: None,
             backed,
             cfg: cfg.clone(),
         }
@@ -336,6 +341,18 @@ impl GpuVmSystem {
             }
             self.evicted_at.insert((gpu, old_page), self.fills[gpu]);
             self.residency.on_evict(gpu, f.0 as u64);
+            trace::emit(
+                &self.sink,
+                t,
+                gpu,
+                if dirty {
+                    TraceEventKind::EvictDirty
+                } else {
+                    TraceEventKind::EvictClean
+                },
+                old_page.0,
+                if dirty { self.cfg.gpuvm.page_size } else { 0 },
+            );
             if self.prefetched.remove(&(gpu, old_page)) {
                 // Prefetched, never touched, now evicted: pure waste.
                 m.prefetch_wasted += 1;
@@ -549,6 +566,14 @@ impl GpuVmSystem {
         let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
         self.fabric.post(queue, wr).expect("free queue accepts a post");
         m.work_requests += 1;
+        trace::emit(
+            &self.sink,
+            t_posted,
+            pw.gpu,
+            TraceEventKind::WrPost,
+            pw.page.0,
+            (wr_id << 1) | matches!(pw.dir, Dir::Out) as u64,
+        );
         let b = &mut self.batches[queue];
         b.pending += 1;
         if b.pending >= self.cfg.gpuvm.fault_batch {
@@ -615,6 +640,18 @@ impl GpuVmSystem {
             .complete_fill(frame, bytes.as_deref())
             .expect("filling frame");
         m.bytes_in += self.cfg.gpuvm.page_size;
+        trace::emit(
+            &self.sink,
+            now,
+            gpu,
+            if fl.speculative {
+                TraceEventKind::SpecFill
+            } else {
+                TraceEventKind::Fill
+            },
+            page.0,
+            self.cfg.gpuvm.page_size,
+        );
         if !fl.speculative {
             m.fault_latency.record(now.saturating_sub(fl.started));
         }
@@ -691,6 +728,7 @@ impl MemorySystem for GpuVmSystem {
                     if self.prefetched.remove(&(gpu, pa.page)) {
                         // First demand touch of a prefetched page.
                         ctx.m.prefetch_hits += 1;
+                        trace::emit(&self.sink, now, gpu, TraceEventKind::Promote, pa.page.0, 0);
                         self.residency.on_promote(gpu, frame.0 as u64);
                     } else {
                         self.residency.on_touch(gpu, frame.0 as u64);
@@ -720,6 +758,7 @@ impl MemorySystem for GpuVmSystem {
                             // prefetch hid most of the latency.
                             ctx.m.prefetch_hits += 1;
                         }
+                        trace::emit(&self.sink, now, gpu, TraceEventKind::Promote, pa.page.0, 0);
                         self.residency.on_promote(gpu, frame.0 as u64);
                     } else {
                         self.residency.on_touch(gpu, frame.0 as u64);
@@ -738,6 +777,14 @@ impl MemorySystem for GpuVmSystem {
                     }
                     // New fault: this warp's leader takes it (Fig 4).
                     ctx.m.faults += 1;
+                    trace::emit(
+                        &self.sink,
+                        now,
+                        gpu,
+                        TraceEventKind::Fault,
+                        pa.page.0,
+                        pa.write as u64,
+                    );
                     if let Some(&at) = self.evicted_at.get(&(gpu, pa.page)) {
                         ctx.m.refetches += 1;
                         // Reuse distance in fills since the eviction; a
@@ -828,6 +875,9 @@ impl MemorySystem for GpuVmSystem {
             MemEvent::CqCompletion { queue, wr_id } => {
                 debug_assert!(self.queue_busy[queue] > 0);
                 self.queue_busy[queue] -= 1;
+                // Completion records are keyed by wr_id (see the trace
+                // module table); the matching WrPost carries page/dir.
+                trace::emit(&self.sink, now, 0, TraceEventKind::WrComplete, 0, wr_id << 1);
                 if let Some(key) = self.wr_fault.remove(&wr_id) {
                     let (gpu, frame) =
                         self.complete_fetch(now, key, &mut *ctx.hm, &mut *ctx.m, &mut *ctx.wakes);
@@ -908,6 +958,10 @@ impl MemorySystem for GpuVmSystem {
             }
         }
         any
+    }
+
+    fn set_trace_sink(&mut self, sink: trace::SharedSink) {
+        self.sink = Some(sink);
     }
 
     fn finalize(&mut self, m: &mut Metrics) {

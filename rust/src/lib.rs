@@ -43,5 +43,6 @@ pub mod residency;
 pub mod rnic;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod uvm;

@@ -39,6 +39,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("compare") => cmd_compare(args),
         Some("sweep") => cmd_sweep(args),
+        Some("trace") => cmd_trace(args),
         Some("e2e") => cmd_e2e(args),
         Some("list") => cmd_list(),
         Some("info") => cmd_info(args),
@@ -52,7 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: gpuvm <run|compare|sweep|e2e|list|info> [flags]
+const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--residency POLICY] [--eviction fifo|fifo-strict|random (legacy)]
@@ -65,10 +66,16 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|e2e|list|info> [flags]
            [--prefetch none,fixed,density] [--residency fifo-refcount,lru]
            [--transport rdma,nvlink]
            [--threads N] [--csv FILE] [--json FILE]
+  trace    capture --app S --out FILE [--mem B] [--jsonl FILE]  record a run's event stream
+           show FILE [--limit N]                         dump a trace as JSON lines
+           diff FILE [--mem-a B --mem-b B] [--residency-a P --residency-b P]
+                [--prefetch-a P --prefetch-b P] [--transport-a T --transport-b T]
+                [--ignore-timing]   replay under two configs, report first divergence
+           golden [--dir DIR] [--check]                  verify/bootstrap golden traces
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
   list     apps, backends, prefetch/residency policies, transports, artifacts
   info     resolved system configuration
-apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp (:GU/:GK/:FS/:MO[:naive]) q1..q5[@ROWS]
+apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp (:GU/:GK/:FS/:MO[:naive]) q1..q5[@ROWS] trace:PATH
 backends: gpuvm uvm uvm-memadvise ideal gdr subway rapids
 prefetch: none fixed stride density history
 residency: fifo-refcount fifo-strict random lru clock tree-lru prefetch-aware
@@ -281,6 +288,131 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `gpuvm trace <capture|show|diff|golden>` — the deterministic
+/// fault-trace subsystem's CLI face ([`gpuvm::trace`]).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use gpuvm::trace::{self, Trace};
+
+    const TRACE_USAGE: &str = "usage: gpuvm trace <capture|show|diff|golden> (see `gpuvm` help)";
+    match args.positional().get(1).map(|s| s.as_str()) {
+        Some("capture") => {
+            let cfg = config_from(args)?;
+            let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
+            let backend = args.get_or("mem", "gpuvm");
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow::anyhow!("trace capture needs --out FILE"))?;
+            let (t, r) = trace::capture(&cfg, &spec, &opts_from(args, &cfg)?, backend)?;
+            t.save(out)?;
+            if t.meta.truncated {
+                eprintln!(
+                    "warning: trace truncated at {} events (trace.max_events = {})",
+                    t.events.len(),
+                    cfg.trace.max_events
+                );
+            }
+            if let Some(jl) = args.get("jsonl") {
+                std::fs::write(jl, t.to_jsonl())?;
+                eprintln!("jsonl: {jl}");
+            }
+            println!(
+                "captured {} events ({} demand faults) from {} on {} → {}",
+                t.events.len(),
+                t.num_faults(),
+                spec.raw(),
+                backend,
+                out
+            );
+            print!("{}", report::RunReport::from_sim(backend, spec.raw(), &cfg, &r).text());
+            Ok(())
+        }
+        Some("show") => {
+            let path = args
+                .positional()
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("trace show needs a FILE"))?;
+            let t = Trace::load(path)?;
+            let jsonl = t.to_jsonl();
+            let limit = args.get_usize("limit", usize::MAX)?;
+            for line in jsonl.lines().take(limit.saturating_add(1)) {
+                println!("{line}");
+            }
+            Ok(())
+        }
+        Some("diff") => {
+            let path = args
+                .positional()
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("trace diff needs a FILE"))?;
+            let t = Trace::load(path)?;
+            let base = config_from(args)?;
+            let side = |suffix: &str| -> Result<(SystemConfig, String)> {
+                let mut c = base.clone();
+                let mem = args
+                    .get(&format!("mem-{suffix}"))
+                    .or_else(|| args.get("mem"))
+                    .unwrap_or("gpuvm")
+                    .to_string();
+                backend::lookup(&mem)?;
+                if let Some(r) = args.get(&format!("residency-{suffix}")) {
+                    let k = ResidencyPolicyKind::parse(r)?;
+                    c.gpuvm.residency_policy = k;
+                    c.uvm.residency_policy = k;
+                }
+                if let Some(p) = args.get(&format!("prefetch-{suffix}")) {
+                    let k = PrefetchPolicy::parse(p)?;
+                    c.gpuvm.prefetch_policy = k;
+                    c.uvm.prefetch_policy = k;
+                }
+                if let Some(tr) = args.get(&format!("transport-{suffix}")) {
+                    gpuvm::fabric::lookup(tr)?;
+                    c.gpuvm.transport = tr.to_string();
+                    c.uvm.transport = tr.to_string();
+                }
+                Ok((c, mem))
+            };
+            let (cfg_a, mem_a) = side("a")?;
+            let (cfg_b, mem_b) = side("b")?;
+            let rep = trace::replay_diff(
+                &t,
+                &cfg_a,
+                &mem_a,
+                &cfg_b,
+                &mem_b,
+                args.has("ignore-timing"),
+            )?;
+            print!(
+                "replaying {} ({} recorded demand faults)\n{}",
+                path,
+                t.num_faults(),
+                rep.render()
+            );
+            anyhow::ensure!(
+                rep.identical(),
+                "event streams diverge (see report above)"
+            );
+            Ok(())
+        }
+        Some("golden") => {
+            let dir = std::path::PathBuf::from(args.get_or("dir", "rust/tests/golden"));
+            let write_missing = !args.has("check");
+            for backend in trace::GOLDEN_BACKENDS {
+                match trace::golden_check(&dir, backend, write_missing)? {
+                    trace::GoldenStatus::Created => println!(
+                        "created {}/{backend}_default.trace — commit it",
+                        dir.display()
+                    ),
+                    trace::GoldenStatus::Verified => {
+                        println!("verified {}/{backend}_default.trace", dir.display())
+                    }
+                }
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("{TRACE_USAGE}"),
+    }
+}
+
 fn cmd_e2e(args: &Args) -> Result<()> {
     use gpuvm::apps::query::TaxiTable;
     use gpuvm::apps::VaWorkload;
@@ -356,7 +488,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp q1..q5[@ROWS]");
+    println!("apps: va[@N] mvt[@N] atax[@N] bigc[@N] bfs cc sssp q1..q5[@ROWS] trace:PATH");
     println!("datasets (graph apps, ':DS' suffix): GU GK FS MO (optional :naive|:balanced)");
     println!("backends:");
     for b in backend::registry() {

@@ -109,4 +109,9 @@ pub trait MemorySystem {
 
     /// Export final counters (link utilization etc.) into `m`.
     fn finalize(&mut self, m: &mut Metrics);
+
+    /// Attach an event-trace sink ([`crate::trace`]): the paged systems
+    /// (GPUVM, UVM) record the canonical fault/fill/evict/WR stream into
+    /// it. Default: no-op — `ideal` moves no pages and emits no events.
+    fn set_trace_sink(&mut self, _sink: crate::trace::SharedSink) {}
 }

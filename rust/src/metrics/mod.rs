@@ -176,6 +176,37 @@ impl Metrics {
         }
     }
 
+    /// Canonical deterministic counters, as (name, value) pairs in a
+    /// fixed order — the equality the trace-conformance harness
+    /// ([`crate::trace`]) asserts alongside event-stream identity. Only
+    /// integer counters that are bit-reproducible across identical runs
+    /// belong here (histogram means and derived floats are excluded).
+    pub fn fingerprint(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("finish_ns", self.finish_ns),
+            ("faults", self.faults),
+            ("coalesced_faults", self.coalesced_faults),
+            ("hits", self.hits),
+            ("bytes_in", self.bytes_in),
+            ("bytes_out", self.bytes_out),
+            ("useful_bytes", self.useful_bytes),
+            ("evictions", self.evictions),
+            ("evictions_clean", self.evictions_clean),
+            ("evictions_dirty", self.evictions_dirty),
+            ("evictions_forced", self.evictions_forced),
+            ("eviction_waits", self.eviction_waits),
+            ("refetches", self.refetches),
+            ("thrash_refetches", self.thrash_refetches),
+            ("prefetched_pages", self.prefetched_pages),
+            ("prefetch_hits", self.prefetch_hits),
+            ("prefetch_wasted", self.prefetch_wasted),
+            ("doorbells", self.doorbells),
+            ("work_requests", self.work_requests),
+            ("fault_latency_count", self.fault_latency.count()),
+            ("reuse_distance_count", self.reuse_distance.count()),
+        ]
+    }
+
     /// Compact single-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
@@ -238,6 +269,24 @@ mod tests {
         assert_eq!(a.reuse_distance.count(), 2);
         assert_eq!(a.fault_latency.count(), 1);
         assert!((a.reuse_distance.mean_ns() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprint_tracks_deterministic_counters() {
+        let mut m = Metrics::new();
+        m.faults = 3;
+        m.bytes_in = 4096;
+        m.fault_latency.record(100);
+        let fp = m.fingerprint();
+        let get = |k: &str| fp.iter().find(|(n, _)| *n == k).unwrap().1;
+        assert_eq!(get("faults"), 3);
+        assert_eq!(get("bytes_in"), 4096);
+        assert_eq!(get("fault_latency_count"), 1);
+        // Equal metrics → equal fingerprints; a drifted counter shows.
+        let mut m2 = m.clone();
+        assert_eq!(m.fingerprint(), m2.fingerprint());
+        m2.evictions += 1;
+        assert_ne!(m.fingerprint(), m2.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! Differential conformance: replay one trace under two backend/policy
+//! configurations and report the first diverging event.
+//!
+//! This is the oracle behind `gpuvm trace diff` and
+//! `rust/tests/conformance.rs`: identical configurations must replay a
+//! trace with **zero divergence** (the DES is deterministic end to end),
+//! and a policy/transport change shows exactly *where* behavior first
+//! departs — the event index, not just drifted aggregates.
+
+use super::replay::TraceWorkload;
+use super::{capture_run, Trace, TraceEvent};
+use crate::config::SystemConfig;
+use anyhow::Result;
+
+/// The first point where two event streams disagree. `a`/`b` are `None`
+/// when that side's stream ended before the index (length mismatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Divergence {
+    /// Logical timestamp (stream index) of the first disagreement.
+    pub index: usize,
+    pub a: Option<TraceEvent>,
+    pub b: Option<TraceEvent>,
+}
+
+/// Compare two streams; `ignore_timing` compares only the structural
+/// fields (kind, gpu, page, aux), useful across transports whose `at`
+/// values legitimately differ.
+pub fn first_divergence(
+    a: &[TraceEvent],
+    b: &[TraceEvent],
+    ignore_timing: bool,
+) -> Option<Divergence> {
+    let eq = |x: &TraceEvent, y: &TraceEvent| {
+        if ignore_timing {
+            (x.kind, x.gpu, x.page, x.aux) == (y.kind, y.gpu, y.page, y.aux)
+        } else {
+            x == y
+        }
+    };
+    let n = a.len().min(b.len());
+    for i in 0..n {
+        if !eq(&a[i], &b[i]) {
+            return Some(Divergence {
+                index: i,
+                a: Some(a[i]),
+                b: Some(b[i]),
+            });
+        }
+    }
+    if a.len() != b.len() {
+        return Some(Divergence {
+            index: n,
+            a: a.get(n).copied(),
+            b: b.get(n).copied(),
+        });
+    }
+    None
+}
+
+/// One side of a differential replay.
+#[derive(Debug, Clone)]
+pub struct DiffSide {
+    pub backend: String,
+    pub events: Vec<TraceEvent>,
+    /// Canonical deterministic counters ([`crate::metrics::Metrics::fingerprint`]).
+    pub fingerprint: Vec<(&'static str, u64)>,
+}
+
+/// Outcome of [`replay_diff`].
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub a: DiffSide,
+    pub b: DiffSide,
+    pub divergence: Option<Divergence>,
+}
+
+impl DiffReport {
+    pub fn identical(&self) -> bool {
+        self.divergence.is_none()
+    }
+
+    /// Human-readable report (the `gpuvm trace diff` output).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "A: {} ({} events)\nB: {} ({} events)\n",
+            self.a.backend,
+            self.a.events.len(),
+            self.b.backend,
+            self.b.events.len()
+        );
+        let differing: Vec<String> = self
+            .a
+            .fingerprint
+            .iter()
+            .zip(&self.b.fingerprint)
+            .filter(|((_, va), (_, vb))| va != vb)
+            .map(|((k, va), (_, vb))| format!("  {k}: {va} vs {vb}"))
+            .collect();
+        if differing.is_empty() {
+            s.push_str("metrics: identical\n");
+        } else {
+            s.push_str("metrics (differing):\n");
+            s.push_str(&differing.join("\n"));
+            s.push('\n');
+        }
+        match &self.divergence {
+            None => s.push_str(&format!(
+                "event streams identical ({} events, zero divergence)\n",
+                self.a.events.len()
+            )),
+            Some(d) => {
+                // A little common-prefix context helps place the split.
+                let from = d.index.saturating_sub(3);
+                for i in from..d.index {
+                    s.push_str(&format!("  #{i} (both): {}\n", self.a.events[i].describe()));
+                }
+                s.push_str(&format!("first divergence at event #{}:\n", d.index));
+                let side = |tag: &str, e: &Option<TraceEvent>| match e {
+                    Some(e) => format!("  {tag}: {}\n", e.describe()),
+                    None => format!("  {tag}: <stream ended>\n"),
+                };
+                s.push_str(&side("A", &d.a));
+                s.push_str(&side("B", &d.b));
+            }
+        }
+        s
+    }
+}
+
+/// Replay `trace` once under (`cfg`, `backend`), capturing the resulting
+/// stream and metrics fingerprint.
+pub fn replay_once(trace: &Trace, cfg: &SystemConfig, backend: &str) -> Result<DiffSide> {
+    let mut w = TraceWorkload::new(trace);
+    let (events, truncated, r) = capture_run(cfg, backend, &mut w)?;
+    anyhow::ensure!(
+        !truncated,
+        "replay capture truncated at {} events; raise trace.max_events",
+        events.len()
+    );
+    Ok(DiffSide {
+        backend: backend.to_string(),
+        events,
+        fingerprint: r.metrics.fingerprint(),
+    })
+}
+
+/// Replay `trace` under two configurations and diff the streams.
+pub fn replay_diff(
+    trace: &Trace,
+    cfg_a: &SystemConfig,
+    backend_a: &str,
+    cfg_b: &SystemConfig,
+    backend_b: &str,
+    ignore_timing: bool,
+) -> Result<DiffReport> {
+    let a = replay_once(trace, cfg_a, backend_a)?;
+    let b = replay_once(trace, cfg_b, backend_b)?;
+    let divergence = first_divergence(&a.events, &b.events, ignore_timing);
+    Ok(DiffReport { a, b, divergence })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEventKind;
+
+    fn ev(at: u64, kind: TraceEventKind, page: u64) -> TraceEvent {
+        TraceEvent {
+            at,
+            page,
+            aux: 0,
+            kind,
+            gpu: 0,
+        }
+    }
+
+    #[test]
+    fn identical_streams_have_no_divergence() {
+        let a = vec![ev(1, TraceEventKind::Fault, 0), ev(2, TraceEventKind::Fill, 0)];
+        assert_eq!(first_divergence(&a, &a.clone(), false), None);
+        assert_eq!(first_divergence(&[], &[], false), None);
+    }
+
+    #[test]
+    fn first_structural_difference_is_reported() {
+        let a = vec![ev(1, TraceEventKind::Fault, 0), ev(2, TraceEventKind::Fill, 0)];
+        let b = vec![ev(1, TraceEventKind::Fault, 0), ev(2, TraceEventKind::Fill, 1)];
+        let d = first_divergence(&a, &b, false).unwrap();
+        assert_eq!(d.index, 1);
+        assert_eq!(d.a.unwrap().page, 0);
+        assert_eq!(d.b.unwrap().page, 1);
+    }
+
+    #[test]
+    fn timing_only_differences_respect_the_flag() {
+        let a = vec![ev(1, TraceEventKind::Fault, 0)];
+        let b = vec![ev(99, TraceEventKind::Fault, 0)];
+        assert!(first_divergence(&a, &b, false).is_some());
+        assert_eq!(first_divergence(&a, &b, true), None);
+    }
+
+    #[test]
+    fn length_mismatch_diverges_at_the_shorter_end() {
+        let a = vec![ev(1, TraceEventKind::Fault, 0), ev(2, TraceEventKind::Fill, 0)];
+        let b = vec![ev(1, TraceEventKind::Fault, 0)];
+        let d = first_divergence(&a, &b, false).unwrap();
+        assert_eq!(d.index, 1);
+        assert!(d.a.is_some() && d.b.is_none());
+    }
+}

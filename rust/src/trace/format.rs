@@ -1,0 +1,363 @@
+//! Trace serialization: a compact versioned binary form plus a
+//! JSON-lines debug form.
+//!
+//! Binary layout (all integers little-endian):
+//!
+//! ```text
+//! magic      4  b"GVMT"
+//! version    2  format version (currently 1)
+//! flags      2  bit 0 = truncated (recorder hit trace.max_events)
+//! page_size  8
+//! seed       8
+//! backend    2 + n   length-prefixed UTF-8
+//! workload   2 + n   length-prefixed UTF-8
+//! regions    4 + 9·n count, then per region: len_bytes u64, read_mostly u8
+//! events     8 + 26·n count, then per event:
+//!            at u64, page u64, aux u64, kind u8, gpu u8
+//! ```
+//!
+//! Trailing bytes, bad magic, unknown versions/kinds, and short buffers
+//! are all hard errors — a golden comparison must never "mostly parse".
+
+use super::{RegionMeta, Trace, TraceEvent, TraceEventKind, TraceMeta};
+use crate::util::json::json_string as jstr;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"GVMT";
+/// Current format version.
+pub const VERSION: u16 = 1;
+/// Bytes per serialized event record.
+pub const EVENT_BYTES: usize = 26;
+
+const FLAG_TRUNCATED: u16 = 1;
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let len = b.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&b[..len]);
+}
+
+/// Bounds-checked little-endian reader.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "trace file truncated: wanted {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.b.len()
+                )
+            })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).context("trace string not UTF-8")
+    }
+}
+
+impl Trace {
+    /// Serialize to the versioned binary form.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.events.len() * EVENT_BYTES);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let flags: u16 = if self.meta.truncated { FLAG_TRUNCATED } else { 0 };
+        out.extend_from_slice(&flags.to_le_bytes());
+        out.extend_from_slice(&self.meta.page_size.to_le_bytes());
+        out.extend_from_slice(&self.meta.seed.to_le_bytes());
+        put_str(&mut out, &self.meta.backend);
+        put_str(&mut out, &self.meta.workload);
+        out.extend_from_slice(&(self.meta.regions.len() as u32).to_le_bytes());
+        for r in &self.meta.regions {
+            out.extend_from_slice(&r.len_bytes.to_le_bytes());
+            out.push(r.read_mostly as u8);
+        }
+        out.extend_from_slice(&(self.events.len() as u64).to_le_bytes());
+        for e in &self.events {
+            out.extend_from_slice(&e.at.to_le_bytes());
+            out.extend_from_slice(&e.page.to_le_bytes());
+            out.extend_from_slice(&e.aux.to_le_bytes());
+            out.push(e.kind as u8);
+            out.push(e.gpu);
+        }
+        out
+    }
+
+    /// Parse the binary form; strict about magic/version/length.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { b: bytes, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("not a gpuvm trace (bad magic {magic:02x?}, want {MAGIC:02x?})");
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            bail!("trace format version {version} unsupported (this build reads {VERSION})");
+        }
+        let flags = r.u16()?;
+        let page_size = r.u64()?;
+        let seed = r.u64()?;
+        let backend = r.str()?;
+        let workload = r.str()?;
+        let num_regions = r.u32()? as usize;
+        let mut regions = Vec::with_capacity(num_regions.min(1 << 16));
+        for _ in 0..num_regions {
+            let len_bytes = r.u64()?;
+            let read_mostly = r.u8()? != 0;
+            regions.push(RegionMeta {
+                len_bytes,
+                read_mostly,
+            });
+        }
+        let num_events = r.u64()? as usize;
+        // Validate the claimed count against the remaining bytes before
+        // reserving memory for it (checked: a corrupt count must not
+        // wrap past the comparison and panic in with_capacity).
+        let remaining = bytes.len() - r.pos;
+        if num_events.checked_mul(EVENT_BYTES) != Some(remaining) {
+            bail!(
+                "trace body length mismatch: header claims {num_events} events, \
+                 file has {remaining} bytes for them"
+            );
+        }
+        let mut events = Vec::with_capacity(num_events);
+        for _ in 0..num_events {
+            let at = r.u64()?;
+            let page = r.u64()?;
+            let aux = r.u64()?;
+            let kind = TraceEventKind::from_u8(r.u8()?)?;
+            let gpu = r.u8()?;
+            events.push(TraceEvent {
+                at,
+                page,
+                aux,
+                kind,
+                gpu,
+            });
+        }
+        Ok(Trace {
+            meta: TraceMeta {
+                backend,
+                workload,
+                page_size,
+                seed,
+                truncated: flags & FLAG_TRUNCATED != 0,
+                regions,
+            },
+            events,
+        })
+    }
+
+    /// Write the binary form to `path`.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    /// Read the binary form from `path`.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing trace {}", path.display()))
+    }
+
+    /// JSON-lines debug form: one header object, then one object per
+    /// event (`i` is the logical timestamp).
+    pub fn to_jsonl(&self) -> String {
+        let regions: Vec<String> = self
+            .meta
+            .regions
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"len_bytes\":{},\"read_mostly\":{}}}",
+                    r.len_bytes, r.read_mostly
+                )
+            })
+            .collect();
+        let mut s = format!(
+            "{{\"format\":\"gpuvm-trace\",\"version\":{},\"backend\":{},\"workload\":{},\
+             \"page_size\":{},\"seed\":{},\"truncated\":{},\"regions\":[{}],\"events\":{}}}\n",
+            VERSION,
+            jstr(&self.meta.backend),
+            jstr(&self.meta.workload),
+            self.meta.page_size,
+            self.meta.seed,
+            self.meta.truncated,
+            regions.join(","),
+            self.events.len()
+        );
+        for (i, e) in self.events.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"i\":{i},\"at\":{},\"kind\":\"{}\",\"gpu\":{},\"page\":{},\"aux\":{}}}\n",
+                e.at,
+                e.kind.name(),
+                e.gpu,
+                e.page,
+                e.aux
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            meta: TraceMeta {
+                backend: "gpuvm".into(),
+                workload: "va@64k".into(),
+                page_size: 4096,
+                seed: 0x5EED,
+                truncated: false,
+                regions: vec![
+                    RegionMeta {
+                        len_bytes: 262144,
+                        read_mostly: true,
+                    },
+                    RegionMeta {
+                        len_bytes: 100,
+                        read_mostly: false,
+                    },
+                ],
+            },
+            events: vec![
+                TraceEvent {
+                    at: 60,
+                    page: 0,
+                    aux: 1,
+                    kind: TraceEventKind::Fault,
+                    gpu: 0,
+                },
+                TraceEvent {
+                    at: 23_000,
+                    page: 0,
+                    aux: 4096,
+                    kind: TraceEventKind::Fill,
+                    gpu: 0,
+                },
+                TraceEvent {
+                    at: 23_100,
+                    page: 0,
+                    aux: 7,
+                    kind: TraceEventKind::WrComplete,
+                    gpu: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn binary_round_trip_is_exact() {
+        let t = sample();
+        let b = t.to_bytes();
+        let back = Trace::from_bytes(&b).unwrap();
+        assert_eq!(t, back);
+        // Bit-for-bit: re-serialization is byte-identical.
+        assert_eq!(b, back.to_bytes());
+    }
+
+    #[test]
+    fn truncated_flag_survives() {
+        let mut t = sample();
+        t.meta.truncated = true;
+        let back = Trace::from_bytes(&t.to_bytes()).unwrap();
+        assert!(back.meta.truncated);
+    }
+
+    #[test]
+    fn bad_inputs_are_hard_errors() {
+        let t = sample();
+        let good = t.to_bytes();
+        assert!(Trace::from_bytes(b"nope").is_err());
+        // Wrong magic.
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(Trace::from_bytes(&b).unwrap_err().to_string().contains("magic"));
+        // Future version.
+        let mut b = good.clone();
+        b[4] = 99;
+        assert!(Trace::from_bytes(&b).unwrap_err().to_string().contains("version"));
+        // Truncated body.
+        let b = &good[..good.len() - 1];
+        assert!(Trace::from_bytes(b).is_err());
+        // Trailing garbage.
+        let mut b = good.clone();
+        b.push(0);
+        assert!(Trace::from_bytes(&b).is_err());
+        // Unknown event kind.
+        let mut b = good.clone();
+        let kind_off = good.len() - 2; // last event's kind byte
+        b[kind_off] = 42;
+        assert!(Trace::from_bytes(&b).unwrap_err().to_string().contains("kind"));
+        // Absurd event count must error, not wrap/abort in with_capacity.
+        let mut b = good.clone();
+        let count_off = good.len() - 3 * EVENT_BYTES - 8;
+        b[count_off..count_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = Trace::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn jsonl_has_header_plus_one_line_per_event() {
+        let t = sample();
+        let j = t.to_jsonl();
+        let lines: Vec<&str> = j.lines().collect();
+        assert_eq!(lines.len(), 1 + t.events.len());
+        assert!(lines[0].contains("\"format\":\"gpuvm-trace\""));
+        assert!(lines[0].contains("\"read_mostly\":true"));
+        assert!(lines[1].contains("\"kind\":\"fault\""));
+        assert!(lines[2].contains("\"kind\":\"fill\""));
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let t = sample();
+        let path = std::env::temp_dir().join(format!(
+            "gpuvm-trace-fmt-{}.trace",
+            std::process::id()
+        ));
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t, back);
+        let err = Trace::load("/nonexistent/definitely.trace").unwrap_err();
+        assert!(format!("{err:#}").contains("definitely.trace"));
+    }
+}

@@ -1,0 +1,491 @@
+//! Deterministic fault-trace capture / replay.
+//!
+//! Every end-of-run number this reproduction reports is an *aggregate*;
+//! nothing in the seed pinned the **event stream** itself, so a refactor
+//! could silently reorder faults or drop migrations while every CSV
+//! column still looked plausible. This subsystem closes that hole with
+//! three parts:
+//!
+//! - **Capture** — a [`TraceSink`] observer threaded through the two
+//!   paged memory systems ([`crate::gpuvm`], [`crate::uvm`]) records the
+//!   canonical event stream (fault, fill, speculative fill, promote,
+//!   evict clean/dirty/forced, WR post/completion) with logical
+//!   timestamps. [`capture`] runs any spec under any paged backend and
+//!   returns a [`Trace`]; [`Trace::save`]/[`Trace::load`] give it a
+//!   compact versioned binary form (`format`), [`Trace::to_jsonl`] a
+//!   JSON-lines debug form.
+//! - **Replay** — `trace:PATH` is a first-class workload spec
+//!   ([`crate::apps::WorkloadSpec`]): [`TraceWorkload`] re-drives any
+//!   backend from a recorded demand-fault stream, so captured runs slot
+//!   into [`crate::coordinator::Session`] sweeps and benches like any
+//!   other app.
+//! - **Conformance** — [`replay_diff`] replays one trace under two
+//!   backend/policy configurations and reports the *first diverging
+//!   event* ([`diff`]); golden traces under `rust/tests/golden/` pin the
+//!   default-config streams of `gpuvm` and `uvm` bit for bit
+//!   ([`golden_check`], `gpuvm trace golden`).
+//!
+//! ## Event vocabulary
+//!
+//! An event's *logical timestamp* is its index in the stream (events are
+//! recorded in execution order; ties on the simulated clock keep their
+//! execution order). `at` carries the simulated time in ns. Per-kind
+//! payload:
+//!
+//! | kind            | `page`                         | `aux`                          |
+//! |-----------------|--------------------------------|--------------------------------|
+//! | `fault`         | faulting page (UVM: group head)| bit 0 = write intent           |
+//! | `fill`          | page made resident             | bytes transferred              |
+//! | `spec-fill`     | speculative fill (no waiter)   | bytes transferred              |
+//! | `promote`       | first demand touch of a        | 0                              |
+//! |                 | speculative page/group         |                                |
+//! | `evict-clean`   | page/group head evicted        | 0                              |
+//! | `evict-dirty`   | page/group head evicted        | bytes written back             |
+//! | `evict-forced`  | UVM forced unmap (live refs)   | bytes written back (0 if clean)|
+//! | `wr-post`       | page the WR moves              | `wr_id << 1 \| (dir == out)`   |
+//! | `wr-complete`   | 0 (keyed by `wr_id`)           | `wr_id << 1`                   |
+//!
+//! UVM records a transfer's `wr-complete` at doorbell time (the driver
+//! path learns its completion synchronously from the engine); GPUVM
+//! records it when the CQ entry is polled. Both are deterministic, which
+//! is all conformance needs.
+
+pub mod diff;
+pub mod format;
+pub mod replay;
+
+pub use diff::{first_divergence, replay_diff, replay_once, DiffReport, DiffSide, Divergence};
+pub use replay::TraceWorkload;
+
+use crate::apps::{BuildOpts, WorkloadSpec};
+use crate::config::SystemConfig;
+use crate::coordinator::backend;
+use crate::gpu::exec::{self, RunResult};
+use crate::gpu::kernel::Workload;
+use crate::sim::SimTime;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+
+/// What happened (see the module table for per-kind payloads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TraceEventKind {
+    /// Leader-level demand fault (post-coalescing).
+    Fault = 0,
+    /// A demanded page/group became resident.
+    Fill = 1,
+    /// A speculative (prefetch-issued, no demand waiter) fill completed.
+    SpecFill = 2,
+    /// First demand touch of a page/group that arrived speculatively.
+    Promote = 3,
+    /// Eviction of a clean page/group.
+    EvictClean = 4,
+    /// Eviction of a dirty page/group (bytes written back in `aux`).
+    EvictDirty = 5,
+    /// UVM only: eviction forced through a live reference count.
+    EvictForced = 6,
+    /// A work request was posted to the transport.
+    WrPost = 7,
+    /// A work request's completion was observed.
+    WrComplete = 8,
+}
+
+impl TraceEventKind {
+    /// Every kind, in wire order.
+    pub const ALL: [TraceEventKind; 9] = [
+        TraceEventKind::Fault,
+        TraceEventKind::Fill,
+        TraceEventKind::SpecFill,
+        TraceEventKind::Promote,
+        TraceEventKind::EvictClean,
+        TraceEventKind::EvictDirty,
+        TraceEventKind::EvictForced,
+        TraceEventKind::WrPost,
+        TraceEventKind::WrComplete,
+    ];
+
+    /// Stable wire/debug name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceEventKind::Fault => "fault",
+            TraceEventKind::Fill => "fill",
+            TraceEventKind::SpecFill => "spec-fill",
+            TraceEventKind::Promote => "promote",
+            TraceEventKind::EvictClean => "evict-clean",
+            TraceEventKind::EvictDirty => "evict-dirty",
+            TraceEventKind::EvictForced => "evict-forced",
+            TraceEventKind::WrPost => "wr-post",
+            TraceEventKind::WrComplete => "wr-complete",
+        }
+    }
+
+    /// Decode a wire byte; unknown values are a format error.
+    pub fn from_u8(b: u8) -> Result<Self> {
+        Self::ALL
+            .get(b as usize)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown trace event kind {b}"))
+    }
+}
+
+/// One recorded event. The stream index is the logical timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Simulated time, ns.
+    pub at: SimTime,
+    /// Global page id (see the module table; 0 where not applicable).
+    pub page: u64,
+    /// Kind-specific payload (see the module table).
+    pub aux: u64,
+    pub kind: TraceEventKind,
+    pub gpu: u8,
+}
+
+impl TraceEvent {
+    /// One-line human form (`diff` output, error messages).
+    pub fn describe(&self) -> String {
+        format!(
+            "{} at={}ns gpu={} page={} aux={}",
+            self.kind.name(),
+            self.at,
+            self.gpu,
+            self.page,
+            self.aux
+        )
+    }
+}
+
+/// Observer the paged memory systems feed
+/// ([`crate::memsys::MemorySystem::set_trace_sink`]).
+pub trait TraceSink {
+    fn record(&mut self, ev: TraceEvent);
+}
+
+/// The handle a memory system holds: shared, single-threaded (runs are
+/// single-threaded; sweeps build one system per worker thread).
+pub type SharedSink = Rc<RefCell<dyn TraceSink>>;
+
+/// Record `ev` into an optional sink. Free function on purpose: call
+/// sites inside the memory systems hold field-level `&mut` borrows, and
+/// `emit(&self.sink, ...)` borrows only the sink field.
+#[inline]
+pub fn emit(
+    sink: &Option<SharedSink>,
+    at: SimTime,
+    gpu: usize,
+    kind: TraceEventKind,
+    page: u64,
+    aux: u64,
+) {
+    if let Some(s) = sink {
+        s.borrow_mut().record(TraceEvent {
+            at,
+            page,
+            aux,
+            kind,
+            gpu: gpu as u8,
+        });
+    }
+}
+
+/// In-memory sink with an optional event cap (`trace.max_events`):
+/// recording past the cap drops events and sets `truncated` instead of
+/// growing without bound on huge runs.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    pub events: Vec<TraceEvent>,
+    cap: u64,
+    pub truncated: bool,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::with_cap(0)
+    }
+
+    /// `cap = 0` means unlimited.
+    pub fn with_cap(cap: u64) -> Self {
+        Self {
+            events: Vec::new(),
+            cap,
+            truncated: false,
+        }
+    }
+}
+
+impl TraceSink for Recorder {
+    fn record(&mut self, ev: TraceEvent) {
+        if self.cap != 0 && self.events.len() as u64 >= self.cap {
+            self.truncated = true;
+            return;
+        }
+        self.events.push(ev);
+    }
+}
+
+/// One registered host region, as the capture-time run laid it out.
+/// Replay re-registers regions in order, reproducing the global page
+/// numbering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionMeta {
+    pub len_bytes: u64,
+    pub read_mostly: bool,
+}
+
+/// Everything needed to interpret and replay an event stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceMeta {
+    /// Backend that produced the stream (`gpuvm`, `uvm`, ...).
+    pub backend: String,
+    /// Workload spec (or label) the capture ran.
+    pub workload: String,
+    /// Capture-time page size — recorded page ids address this geometry.
+    pub page_size: u64,
+    /// Capture-time RNG seed.
+    pub seed: u64,
+    /// The recorder hit `trace.max_events` and dropped the tail.
+    pub truncated: bool,
+    /// Host regions in registration order.
+    pub regions: Vec<RegionMeta>,
+}
+
+/// A captured run: metadata + the canonical event stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Number of leader demand faults (the replayable stream).
+    pub fn num_faults(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.kind == TraceEventKind::Fault)
+            .count()
+    }
+}
+
+/// Run `workload` under the named *paged* backend with a recorder
+/// attached; returns the raw event stream (plus the truncation flag) and
+/// the run result. Bulk backends have no paged event stream and are
+/// rejected.
+pub fn capture_run(
+    cfg: &SystemConfig,
+    backend_name: &str,
+    workload: &mut dyn Workload,
+) -> Result<(Vec<TraceEvent>, bool, RunResult)> {
+    let b = backend::lookup(backend_name)?;
+    let mut mem = b.build_memsys(cfg).ok_or_else(|| {
+        anyhow::anyhow!(
+            "backend '{backend_name}' is a bulk engine; trace capture needs \
+             a paged memory system (gpuvm|uvm|uvm-memadvise|ideal)"
+        )
+    })?;
+    let rec = Rc::new(RefCell::new(Recorder::with_cap(cfg.trace.max_events)));
+    mem.set_trace_sink(rec.clone());
+    let r = exec::run(cfg, workload, mem.as_mut())?;
+    drop(mem);
+    let rec = match Rc::try_unwrap(rec) {
+        Ok(cell) => cell.into_inner(),
+        Err(rc) => rc.borrow().clone(),
+    };
+    Ok((rec.events, rec.truncated, r))
+}
+
+/// Capture an already-constructed workload (`label` becomes the trace's
+/// workload field). The spec-based [`capture`] wraps this.
+pub fn capture_workload(
+    cfg: &SystemConfig,
+    backend_name: &str,
+    workload: &mut dyn Workload,
+    label: &str,
+) -> Result<(Trace, RunResult)> {
+    let (events, truncated, r) = capture_run(cfg, backend_name, workload)?;
+    let meta = TraceMeta {
+        backend: backend_name.to_string(),
+        workload: label.to_string(),
+        page_size: cfg.gpuvm.page_size,
+        seed: cfg.seed,
+        truncated,
+        regions: r
+            .hm
+            .regions()
+            .iter()
+            .map(|rg| RegionMeta {
+                len_bytes: rg.len_bytes,
+                read_mostly: rg.read_mostly,
+            })
+            .collect(),
+    };
+    Ok((Trace { meta, events }, r))
+}
+
+/// Capture `spec` under `backend_name` on `cfg`'s testbed. Advising
+/// backends (`uvm-memadvise`) apply their read-mostly hint exactly as in
+/// a normal run, and the advice is recorded in the trace's region table
+/// so replay reproduces it.
+pub fn capture(
+    cfg: &SystemConfig,
+    spec: &WorkloadSpec,
+    opts: &BuildOpts,
+    backend_name: &str,
+) -> Result<(Trace, RunResult)> {
+    let b = backend::lookup(backend_name)?;
+    let mut o = opts.clone();
+    o.advise = o.advise || b.advise();
+    let mut w = spec.build(&o)?;
+    capture_workload(cfg, backend_name, w.as_mut(), spec.raw())
+}
+
+// ---- golden traces ---------------------------------------------------
+
+/// The pinned golden scenario: a small machine (fast enough for every
+/// `cargo test`) oversubscribed enough that both paged systems evict —
+/// so the goldens pin fault, fill, evict *and* WR behavior. Everything
+/// else is `SystemConfig::default()`, i.e. the default policies
+/// (fifo-refcount / tree-lru, none / fixed prefetch, rdma / pcie-dma).
+pub fn golden_config() -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.gpu.sms = 4;
+    c.gpu.warps_per_sm = 2;
+    c.gpu.mem_bytes = 2 << 20; // 512 gpuvm frames / 32 uvm groups
+    c.gpuvm.page_size = 4096;
+    c.gpuvm.num_qps = 16;
+    c
+}
+
+/// The golden workload: 3 MiB of vector add over 2 MiB of GPU memory.
+pub const GOLDEN_WORKLOAD: &str = "va@256k";
+
+/// Backends with committed golden streams.
+pub const GOLDEN_BACKENDS: [&str; 2] = ["gpuvm", "uvm"];
+
+/// Capture the golden scenario for `backend`.
+pub fn golden_capture(backend_name: &str) -> Result<Trace> {
+    let cfg = golden_config();
+    let spec = WorkloadSpec::parse(GOLDEN_WORKLOAD)?;
+    let opts = BuildOpts::for_cfg(&cfg);
+    Ok(capture(&cfg, &spec, &opts, backend_name)?.0)
+}
+
+/// Outcome of a golden check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GoldenStatus {
+    /// The golden file was missing and has been created — commit it.
+    Created,
+    /// The captured stream matches the committed golden bit for bit.
+    Verified,
+}
+
+/// Verify (or bootstrap) the golden trace for `backend` in `dir`.
+///
+/// - File present and identical → [`GoldenStatus::Verified`].
+/// - File present but different → error naming the first diverging
+///   event; the fresh capture is written next to the golden as
+///   `<name>.trace.new` plus a `<name>.divergence.jsonl` report (CI
+///   uploads both as artifacts).
+/// - File missing and `write_missing` → the capture is written and
+///   [`GoldenStatus::Created`] returned (commit the file); without
+///   `write_missing`, missing is an error.
+pub fn golden_check(dir: &Path, backend_name: &str, write_missing: bool) -> Result<GoldenStatus> {
+    let path = dir.join(format!("{backend_name}_default.trace"));
+    let fresh = golden_capture(backend_name)?;
+    if !path.exists() {
+        anyhow::ensure!(
+            write_missing,
+            "golden trace {} missing (regenerate: gpuvm trace golden --dir {})",
+            path.display(),
+            dir.display()
+        );
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        fresh.save(&path)?;
+        return Ok(GoldenStatus::Created);
+    }
+    let committed = Trace::load(&path)?;
+    if committed == fresh {
+        return Ok(GoldenStatus::Verified);
+    }
+    // Divergence: leave the evidence on disk for CI artifacts.
+    let div = first_divergence(&committed.events, &fresh.events, false);
+    let new_path = dir.join(format!("{backend_name}_default.trace.new"));
+    fresh.save(&new_path)?;
+    let mut report = String::new();
+    let (idx, a, b) = match &div {
+        Some(d) => (d.index, d.a, d.b),
+        // Streams equal but meta differs (e.g. config drift).
+        None => (committed.events.len(), None, None),
+    };
+    report.push_str(&format!(
+        "{{\"golden\":\"{}\",\"divergence_index\":{},\"committed\":\"{}\",\"fresh\":\"{}\"}}\n",
+        path.display(),
+        idx,
+        a.map(|e| e.describe()).unwrap_or_else(|| "<end>".into()),
+        b.map(|e| e.describe()).unwrap_or_else(|| "<end>".into()),
+    ));
+    report.push_str(&fresh.to_jsonl());
+    let div_path = dir.join(format!("{backend_name}_default.divergence.jsonl"));
+    std::fs::write(&div_path, report)
+        .with_context(|| format!("writing {}", div_path.display()))?;
+    anyhow::bail!(
+        "golden trace mismatch for '{backend_name}': first divergence at event {idx} \
+         (committed: {}, fresh: {}); fresh capture at {}, report at {}. If the \
+         change is intended, replace the golden and commit it.",
+        a.map(|e| e.describe()).unwrap_or_else(|| "<stream ended>".into()),
+        b.map(|e| e.describe()).unwrap_or_else(|| "<stream ended>".into()),
+        new_path.display(),
+        div_path.display()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_round_trip_the_wire_byte() {
+        for (i, k) in TraceEventKind::ALL.iter().enumerate() {
+            assert_eq!(TraceEventKind::from_u8(i as u8).unwrap(), *k);
+            assert!(!k.name().is_empty());
+        }
+        assert!(TraceEventKind::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn recorder_cap_truncates_instead_of_growing() {
+        let mut r = Recorder::with_cap(2);
+        let ev = TraceEvent {
+            at: 1,
+            page: 2,
+            aux: 3,
+            kind: TraceEventKind::Fault,
+            gpu: 0,
+        };
+        for _ in 0..5 {
+            r.record(ev);
+        }
+        assert_eq!(r.events.len(), 2);
+        assert!(r.truncated);
+        let mut unlimited = Recorder::new();
+        for _ in 0..5 {
+            unlimited.record(ev);
+        }
+        assert_eq!(unlimited.events.len(), 5);
+        assert!(!unlimited.truncated);
+    }
+
+    #[test]
+    fn emit_is_a_noop_without_a_sink() {
+        // Must not panic; the hot path gates on the Option.
+        emit(&None, 1, 0, TraceEventKind::Fill, 0, 0);
+        let rec: Rc<RefCell<Recorder>> = Rc::new(RefCell::new(Recorder::new()));
+        let sink: Option<SharedSink> = Some(rec.clone());
+        emit(&sink, 7, 1, TraceEventKind::Fault, 42, 1);
+        assert_eq!(rec.borrow().events.len(), 1);
+        assert_eq!(rec.borrow().events[0].page, 42);
+        assert_eq!(rec.borrow().events[0].gpu, 1);
+    }
+}

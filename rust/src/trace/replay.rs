@@ -1,0 +1,271 @@
+//! Replay: re-drive any backend from a recorded demand-fault stream.
+//!
+//! [`TraceWorkload`] is a normal [`Workload`], so `trace:PATH` specs run
+//! everywhere specs run — `gpuvm run/sweep`, [`Session`] sweeps, benches.
+//! Replay is deliberately *canonical* rather than concurrent: the
+//! recorded leader-fault stream is already serialized in logical-
+//! timestamp order, so one warp re-issues one page-sized access per
+//! recorded fault. That makes replay deterministic by construction (no
+//! warp interleaving of its own) — exactly what a conformance oracle
+//! needs: two replays of the same trace under the same configuration
+//! must produce bit-identical event streams.
+//!
+//! Regions are re-registered with the recorded sizes and read-mostly
+//! flags, reproducing the capture-time global page numbering. Recorded
+//! page ids address the *capture-time* page size; replay converts them
+//! to byte ranges, so a trace stays meaningful when replayed under a
+//! different `gpuvm.page_size` (the range is clamped to the region's
+//! registered bytes).
+//!
+//! [`Session`]: crate::coordinator::Session
+
+use super::{Trace, TraceEventKind};
+use crate::gpu::kernel::{Access, Launch, WarpOp, Workload};
+use crate::mem::{HostMemory, RegionId};
+
+/// Capture-time layout of one region.
+#[derive(Debug, Clone, Copy)]
+struct RegionLayout {
+    base_page: u64,
+    num_pages: u64,
+    len_bytes: u64,
+    read_mostly: bool,
+}
+
+/// A workload that replays a recorded fault stream.
+pub struct TraceWorkload {
+    /// Capture-time page size (recorded page ids address this geometry).
+    page_size: u64,
+    layout: Vec<RegionLayout>,
+    /// The demand-fault stream: (global page, write intent).
+    faults: Vec<(u64, bool)>,
+    /// Replay-time region ids, filled in `setup`.
+    regions: Vec<RegionId>,
+    launched: bool,
+    step: usize,
+}
+
+impl TraceWorkload {
+    pub fn new(trace: &Trace) -> Self {
+        let ps = trace.meta.page_size.max(1);
+        let mut base = 0u64;
+        let layout: Vec<RegionLayout> = trace
+            .meta
+            .regions
+            .iter()
+            .map(|r| {
+                let num_pages = r.len_bytes.div_ceil(ps).max(1);
+                let l = RegionLayout {
+                    base_page: base,
+                    num_pages,
+                    len_bytes: r.len_bytes,
+                    read_mostly: r.read_mostly,
+                };
+                base += num_pages;
+                l
+            })
+            .collect();
+        let faults = trace
+            .events
+            .iter()
+            .filter(|e| e.kind == TraceEventKind::Fault)
+            .map(|e| (e.page, e.aux & 1 == 1))
+            .collect();
+        Self {
+            page_size: ps,
+            layout,
+            faults,
+            regions: Vec::new(),
+            launched: false,
+            step: 0,
+        }
+    }
+
+    /// Recorded demand faults to replay.
+    pub fn num_faults(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Map a recorded global page to (region index, capture-time byte
+    /// offset); None for pages outside the recorded layout (defensive —
+    /// a well-formed trace never records one).
+    fn locate(&self, page: u64) -> Option<(usize, u64)> {
+        let idx = self
+            .layout
+            .partition_point(|l| l.base_page + l.num_pages <= page);
+        let l = self.layout.get(idx)?;
+        (page >= l.base_page).then(|| (idx, (page - l.base_page) * self.page_size))
+    }
+}
+
+impl Workload for TraceWorkload {
+    fn name(&self) -> &str {
+        "trace"
+    }
+
+    fn setup(&mut self, hm: &mut HostMemory) {
+        for (i, l) in self.layout.iter().enumerate() {
+            let r = hm.register(&format!("t{i}"), l.len_bytes);
+            if l.read_mostly {
+                hm.advise_read_mostly(r);
+            }
+            self.regions.push(r);
+        }
+    }
+
+    fn next_kernel(&mut self) -> Option<Launch> {
+        if self.launched {
+            return None;
+        }
+        self.launched = true;
+        // One warp: the stream is replayed in logical-timestamp order.
+        Some(Launch { warps: 1, tag: 0 })
+    }
+
+    fn next_op(&mut self, _warp: usize) -> WarpOp {
+        loop {
+            let Some(&(page, write)) = self.faults.get(self.step) else {
+                return WarpOp::Done;
+            };
+            self.step += 1;
+            let Some((idx, offset)) = self.locate(page) else {
+                continue; // defensive: skip records outside the layout
+            };
+            let len_bytes = self.layout[idx].len_bytes;
+            // Clamp to the region's registered bytes so replay under a
+            // different page size cannot walk past its replay-time span.
+            let (start, len) = if len_bytes == 0 {
+                (0, 1)
+            } else if offset >= len_bytes {
+                (len_bytes - 1, 1)
+            } else {
+                (offset, (len_bytes - offset).min(self.page_size))
+            };
+            return WarpOp::Access(vec![Access::Seq {
+                region: self.regions[idx],
+                start,
+                len,
+                write,
+            }]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{RegionMeta, TraceEvent, TraceMeta};
+
+    fn trace_with(regions: Vec<RegionMeta>, faults: Vec<(u64, bool)>) -> Trace {
+        let events = faults
+            .iter()
+            .enumerate()
+            .map(|(i, &(page, write))| TraceEvent {
+                at: i as u64,
+                page,
+                aux: write as u64,
+                kind: TraceEventKind::Fault,
+                gpu: 0,
+            })
+            .collect();
+        Trace {
+            meta: TraceMeta {
+                backend: "gpuvm".into(),
+                workload: "synthetic".into(),
+                page_size: 4096,
+                seed: 1,
+                truncated: false,
+                regions,
+            },
+            events,
+        }
+    }
+
+    #[test]
+    fn locate_maps_pages_to_regions_and_offsets() {
+        // Region 0: 10000 B = 3 pages (0..3); region 1: 4096 B = 1 page (3).
+        let t = trace_with(
+            vec![
+                RegionMeta {
+                    len_bytes: 10_000,
+                    read_mostly: false,
+                },
+                RegionMeta {
+                    len_bytes: 4096,
+                    read_mostly: true,
+                },
+            ],
+            vec![],
+        );
+        let w = TraceWorkload::new(&t);
+        assert_eq!(w.locate(0), Some((0, 0)));
+        assert_eq!(w.locate(2), Some((0, 8192)));
+        assert_eq!(w.locate(3), Some((1, 0)));
+        assert_eq!(w.locate(4), None);
+    }
+
+    #[test]
+    fn replay_registers_recorded_regions_and_advice() {
+        let t = trace_with(
+            vec![
+                RegionMeta {
+                    len_bytes: 8192,
+                    read_mostly: true,
+                },
+                RegionMeta {
+                    len_bytes: 100,
+                    read_mostly: false,
+                },
+            ],
+            vec![(0, false)],
+        );
+        let mut w = TraceWorkload::new(&t);
+        let mut hm = HostMemory::new(4096);
+        w.setup(&mut hm);
+        assert_eq!(hm.regions().len(), 2);
+        assert!(hm.regions()[0].read_mostly);
+        assert!(!hm.regions()[1].read_mostly);
+        assert_eq!(hm.regions()[1].len_bytes, 100);
+    }
+
+    #[test]
+    fn ops_replay_the_fault_stream_in_order_with_clamped_tails() {
+        let t = trace_with(
+            vec![RegionMeta {
+                len_bytes: 10_000,
+                read_mostly: false,
+            }],
+            vec![(0, false), (2, true), (99, false), (1, false)],
+        );
+        let mut w = TraceWorkload::new(&t);
+        assert_eq!(w.num_faults(), 4);
+        let mut hm = HostMemory::new(4096);
+        w.setup(&mut hm);
+        assert!(w.next_kernel().is_some());
+        assert!(w.next_kernel().is_none());
+        let expect = [
+            (0u64, 4096u64, false),
+            // Page 2 is the region tail: 10000 - 8192 = 1808 bytes.
+            (8192, 1808, true),
+            // Page 99 is outside the layout → skipped.
+            (4096, 4096, false),
+        ];
+        for (start, len, write) in expect {
+            match w.next_op(0) {
+                WarpOp::Access(a) => match &a[0] {
+                    Access::Seq {
+                        start: s,
+                        len: l,
+                        write: wr,
+                        ..
+                    } => {
+                        assert_eq!((*s, *l, *wr), (start, len, write));
+                    }
+                    other => panic!("unexpected access {other:?}"),
+                },
+                other => panic!("unexpected op {other:?}"),
+            }
+        }
+        assert!(matches!(w.next_op(0), WarpOp::Done));
+    }
+}

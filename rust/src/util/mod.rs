@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod fxhash;
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -28,6 +28,7 @@ use crate::pcie::Dir;
 use crate::prefetch::{self, FaultEvent, PrefetchPolicy, Prefetcher};
 use crate::residency::{self, ResidencyPolicy, Universe, VictimChoice, VictimQuery};
 use crate::sim::{ms, us, Engine, SimTime};
+use crate::trace::{self, TraceEventKind};
 use crate::util::fxhash::FxHashMap;
 use std::collections::VecDeque;
 
@@ -124,6 +125,9 @@ pub struct UvmSystem {
     next_wr: u64,
     /// Reused completion buffer (one WR per ring on the driver path).
     cq_buf: Vec<Completion>,
+    /// Optional event-trace sink ([`crate::trace`]): records the
+    /// canonical fault/fill/evict/WR stream when attached.
+    sink: Option<trace::SharedSink>,
 }
 
 impl UvmSystem {
@@ -168,6 +172,7 @@ impl UvmSystem {
             pf_buf: Vec::new(),
             next_wr: 1,
             cq_buf: Vec::with_capacity(4),
+            sink: None,
             cfg: cfg.clone(),
         }
     }
@@ -196,7 +201,24 @@ impl UvmSystem {
         debug_assert_eq!(buf.len(), 1, "one WR per driver doorbell");
         let at = buf.last().map(|c| c.at).unwrap_or(now);
         self.cq_buf = buf;
+        // The driver path learns its completion synchronously from the
+        // engine, so both WR records are written at doorbell time.
+        trace::emit(
+            &self.sink,
+            now,
+            key.0,
+            TraceEventKind::WrPost,
+            wr.page.0,
+            (wr.wr_id << 1) | matches!(dir, Dir::Out) as u64,
+        );
+        trace::emit(&self.sink, at, 0, TraceEventKind::WrComplete, 0, wr.wr_id << 1);
         at
+    }
+
+    /// Global page id of a group's first page (the trace's `page` field
+    /// for group-granular events).
+    fn group_page(&self, hm: &HostMemory, key: GroupKey) -> u64 {
+        hm.region(RegionId(key.1)).base_page + key.2 * self.pages_per_group
     }
 
     /// Group of a page plus its touched-bitmap bit within the group.
@@ -351,12 +373,14 @@ impl UvmSystem {
         let mut freed = 0;
         for key in victims {
             let span = self.group_span(hm, key);
+            let gp = self.group_page(hm, key);
             let g = self.groups.get_mut(&key).expect("fifo entry has state");
             if g.refcount > 0 && !force {
                 m.eviction_waits += 1;
                 continue; // prefer not to evict a group under active access
             }
-            if g.refcount > 0 {
+            let forced = g.refcount > 0;
+            if forced {
                 m.evictions_forced += 1;
             }
             g.resident = false;
@@ -381,6 +405,23 @@ impl UvmSystem {
             self.free_frames[gpu] += 1;
             freed += 1;
             m.evictions += 1;
+            // A forced eviction may also be dirty; the trace kind keeps
+            // the forced verdict and `aux` carries the write-back bytes.
+            let kind = if forced {
+                TraceEventKind::EvictForced
+            } else if dirty {
+                TraceEventKind::EvictDirty
+            } else {
+                TraceEventKind::EvictClean
+            };
+            trace::emit(
+                &self.sink,
+                now,
+                gpu,
+                kind,
+                gp,
+                if dirty { self.group_bytes } else { 0 },
+            );
             if dirty {
                 m.evictions_dirty += 1;
                 m.bytes_out += self.group_bytes;
@@ -445,6 +486,7 @@ impl MemorySystem for UvmSystem {
         let mut misses = 0u32;
         for (key, write, bits) in groups {
             let resident = self.groups.get(&key).map(|g| g.resident).unwrap_or(false);
+            let gp = self.group_page(hm, key);
             if resident {
                 ctx.m.hits += 1;
                 let g = self.groups.get_mut(&key).unwrap();
@@ -460,6 +502,7 @@ impl MemorySystem for UvmSystem {
                 let promote = std::mem::take(&mut g.spec_epoch);
                 self.holds.entry(slot).or_default().push(key);
                 if promote {
+                    trace::emit(&self.sink, now, gpu, TraceEventKind::Promote, gp, 0);
                     self.residency.on_promote(gpu, rslot);
                 } else {
                     self.residency.on_touch(gpu, rslot);
@@ -487,6 +530,7 @@ impl MemorySystem for UvmSystem {
             }
             // New fault: GMMU writes the fault buffer, driver is poked.
             ctx.m.faults += 1;
+            trace::emit(&self.sink, now, gpu, TraceEventKind::Fault, gp, write as u64);
             if let Some(&at) = self.evicted_at.get(&key) {
                 ctx.m.refetches += 1;
                 // Reuse distance in group fills since the eviction; a
@@ -615,6 +659,18 @@ impl MemorySystem for UvmSystem {
                 let key = self.transfers.remove(&token).expect("transfer token");
                 let p = self.pending.remove(&key).expect("pending fault");
                 self.fills[key.0] += 1;
+                trace::emit(
+                    &self.sink,
+                    now,
+                    key.0,
+                    if p.speculative {
+                        TraceEventKind::SpecFill
+                    } else {
+                        TraceEventKind::Fill
+                    },
+                    self.group_page(&*ctx.hm, key),
+                    self.group_bytes,
+                );
                 let rslot = self.next_slot;
                 self.next_slot += 1;
                 self.slot_groups.insert(rslot, key);
@@ -661,6 +717,10 @@ impl MemorySystem for UvmSystem {
             return true;
         }
         false
+    }
+
+    fn set_trace_sink(&mut self, sink: trace::SharedSink) {
+        self.sink = Some(sink);
     }
 
     fn finalize(&mut self, m: &mut Metrics) {

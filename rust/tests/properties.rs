@@ -21,6 +21,7 @@ use gpuvm::prefetch::{self, FaultEvent, PrefetchPolicy};
 use gpuvm::residency::{
     self, ResidencyPolicy as _, ResidencyPolicyKind, Universe, VictimChoice, VictimQuery,
 };
+use gpuvm::trace::{self, Trace, TraceWorkload};
 use gpuvm::util::proptest::check;
 use gpuvm::util::rng::Rng;
 use gpuvm::uvm::UvmSystem;
@@ -172,6 +173,41 @@ fn prop_backed_data_round_trips() {
         for (i, v) in back.iter().enumerate() {
             let expect = ((i / 1024) * 1_000_003 + (i % 1024)) as f32;
             assert_eq!(*v, expect, "elem {i} corrupted (pages={pages})");
+        }
+    });
+}
+
+#[test]
+fn prop_trace_capture_serde_replay_round_trips() {
+    // Satellite property for the trace subsystem: capture → serialize →
+    // deserialize → replay produces an identical event stream and
+    // identical end-of-run Metrics, for every registered paged backend.
+    check("trace serde + replay is stable", 8, |rng| {
+        let mut cfg = random_cfg(rng);
+        // UVM replays the stream too: keep its 64 KB group pool generous.
+        cfg.gpu.mem_bytes = cfg.gpu.mem_bytes.max(8 << 20);
+        let mut w = RandomWorkload::generate(rng, false);
+        let (t0, _) =
+            trace::capture_workload(&cfg, "gpuvm", &mut w, "random").expect("capture");
+        // Serialization is exact, including re-serialization bytes.
+        let bytes = t0.to_bytes();
+        let t1 = Trace::from_bytes(&bytes).expect("parse back");
+        assert_eq!(t0, t1, "serde round trip");
+        assert_eq!(bytes, t1.to_bytes(), "re-serialization bit-for-bit");
+        for backend in ["gpuvm", "uvm", "uvm-memadvise", "ideal"] {
+            let mut wa = TraceWorkload::new(&t0);
+            let (ea, trunc_a, ra) = trace::capture_run(&cfg, backend, &mut wa)
+                .unwrap_or_else(|e| panic!("{backend}: {e:#}"));
+            let mut wb = TraceWorkload::new(&t1);
+            let (eb, trunc_b, rb) = trace::capture_run(&cfg, backend, &mut wb)
+                .unwrap_or_else(|e| panic!("{backend}: {e:#}"));
+            assert!(!trunc_a && !trunc_b, "{backend}: no cap configured");
+            assert_eq!(ea, eb, "{backend}: replayed event streams must match");
+            assert_eq!(
+                ra.metrics.fingerprint(),
+                rb.metrics.fingerprint(),
+                "{backend}: replayed metrics must match"
+            );
         }
     });
 }

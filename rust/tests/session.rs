@@ -216,3 +216,89 @@ fn memadvise_and_bulk_backends_order_sensibly_on_queries() {
     assert!(g.bytes_in < r.bytes_in, "GPUVM must move less than RAPIDS");
     assert!(r.io_amplification() > g.io_amplification());
 }
+
+#[test]
+fn three_policy_axes_compose_with_intact_columns() {
+    use gpuvm::coordinator::RunReport;
+    use gpuvm::prefetch::PrefetchPolicy;
+    use gpuvm::residency::ResidencyPolicyKind;
+    // The PR 2–4 axes composed: prefetch × transport × residency, both
+    // paged backends, one smoke point per cell. Asserts the cross
+    // product expands in declaration order with every label column
+    // filled, and that CSV/JSON integrity holds at the full 34-column
+    // schema on every cell.
+    let mut cfg = small_cfg();
+    cfg.gpu.mem_bytes = 512 << 10; // light pressure so residency matters
+    cfg.gpu.sms = 4;
+    cfg.gpu.warps_per_sm = 2;
+    let reports = Session::new(cfg)
+        .workload("va@128k")
+        .backends(["gpuvm", "uvm"])
+        .sweep_prefetch([PrefetchPolicy::None, PrefetchPolicy::Stride])
+        .sweep_transport(["rdma", "pcie-dma"])
+        .sweep_residency([ResidencyPolicyKind::FifoRefcount, ResidencyPolicyKind::Lru])
+        .run_all()
+        .unwrap();
+    assert_eq!(reports.len(), 16, "2 prefetch × 2 transport × 2 residency × 2 backends");
+
+    // Axis order: prefetch outermost, then transport, then residency,
+    // then backend — regardless of worker threads.
+    let labels: Vec<(String, String, String, String)> = reports
+        .iter()
+        .map(|r| {
+            (
+                r.prefetch.clone(),
+                r.transport.clone(),
+                r.residency.clone(),
+                r.backend.clone(),
+            )
+        })
+        .collect();
+    let mut expect = Vec::new();
+    for pf in ["none", "stride"] {
+        for tr in ["rdma", "pcie-dma"] {
+            for res in ["fifo-refcount", "lru"] {
+                for be in ["gpuvm", "uvm"] {
+                    expect.push((
+                        pf.to_string(),
+                        tr.to_string(),
+                        res.to_string(),
+                        be.to_string(),
+                    ));
+                }
+            }
+        }
+    }
+    assert_eq!(labels, expect);
+
+    // Column integrity at 34+ columns on every cell, CSV and JSON.
+    assert!(RunReport::CSV_HEADER.len() >= 34, "schema must not shrink");
+    for r in &reports {
+        let row = r.csv_row();
+        assert_eq!(row.len(), RunReport::CSV_HEADER.len(), "{}", r.backend);
+        assert!(row.iter().all(|c| !c.is_empty()), "no empty cells");
+        let j = r.to_json();
+        for key in ["prefetch", "transport", "residency", "evictions", "thrash_refetches"] {
+            assert!(j.contains(&format!("\"{key}\":")), "'{key}' missing in JSON");
+        }
+        // Cross-axis sanity: the fabric carried exactly the paged bytes.
+        assert_eq!(r.transport_bytes, r.bytes_in + r.bytes_out, "{}", r.backend);
+        assert!(r.prefetch_hits + r.prefetch_wasted <= r.prefetched_pages);
+    }
+    // The stride cells actually speculated on the sequential stream.
+    assert!(
+        reports[8..].iter().any(|r| r.prefetched_pages > 0),
+        "stride half of the matrix must speculate"
+    );
+    // Serialized matrix round-trips with one row per cell.
+    let dir = std::env::temp_dir().join("gpuvm_session_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("three_axes.csv");
+    report::write_csv(&csv_path, &reports).unwrap();
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert_eq!(csv.lines().count(), 1 + reports.len());
+    assert_eq!(
+        csv.lines().next().unwrap().split(',').count(),
+        RunReport::CSV_HEADER.len()
+    );
+}
