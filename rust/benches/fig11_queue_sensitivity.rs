@@ -42,7 +42,7 @@ fn main() {
             let r = simulate(&cfg, &mut w, "gpuvm").expect("run");
             times.push(r.metrics.finish_ns as f64);
         }
-        let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let best = times.iter().copied().fold(f64::INFINITY, f64::min);
         for (i, &q) in queue_counts.iter().enumerate() {
             let slow = times[i] / best;
             if algo == GraphAlgo::Bfs {

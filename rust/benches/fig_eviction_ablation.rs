@@ -142,9 +142,15 @@ fn main() {
                         Err(e) => {
                             // Strict FIFO can deadlock under pressure —
                             // precisely what reference priority (§5.4)
-                            // buys. Report it, keep sweeping.
+                            // buys. This is the model checker's
+                            // *certified* finding reproduced at full
+                            // scale: `gpuvm analyze policies` locates
+                            // the wait cycle and a minimal repro
+                            // schedule at 4p x 3f x 2w. Report it, keep
+                            // sweeping.
                             println!(
-                                "{:<16} {:>6}% {:<6} {:<14} | DEADLOCK ({e})",
+                                "{:<16} {:>6}% {:<6} {:<14} | DEADLOCK ({e}) \
+                                 [certified finding: see `gpuvm analyze policies`]",
                                 name,
                                 pct,
                                 system,

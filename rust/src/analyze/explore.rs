@@ -1,0 +1,799 @@
+//! Small-scope model checker for the victim-selection protocol.
+//!
+//! Exhaustively explores every interleaving of N pages × M frames × K
+//! warps against a [`ResidencyPolicy`]'s `Take`/`WaitOn`/`GiveUp`
+//! victim protocol, looking for deadlock cycles (WaitOn graphs with no
+//! Take exit), livelock, reference-count leaks, and contract violations
+//! (a demand fault answered `GiveUp`, or a `Take` of an unusable slot).
+//! The scope is deliberately tiny — the small-scope hypothesis: protocol
+//! bugs in this class show up at a handful of pages and frames, and at
+//! that size the whole state space fits in memory.
+//!
+//! ## The model
+//!
+//! The abstraction of `gpuvm/runtime.rs`'s frames universe:
+//!
+//! - **Frames** are `Free`, `Filling(page)`, or `Resident{page, refs}`,
+//!   each with a FIFO queue of parked demand faults (`WaitOn` targets).
+//! - **Warps** run fixed scripts of page-set accesses. Executing an op
+//!   releases the previous op's references (the paper's reference
+//!   counters), then touches its pages in ascending order: resident →
+//!   take a reference; filling/parked → join (coalesced fault);
+//!   unmapped → query the policy. `Take(f)` evicts `f`'s resident page
+//!   (if any) and starts the fill; `WaitOn(f)` parks the fault behind
+//!   `f`. A warp with unfilled pages blocks; its references pin their
+//!   frames — the hold-then-wait ingredient every deadlock needs.
+//! - **Fill completion** (one nondeterministic transition per in-flight
+//!   fill) makes the frame resident and wakes joiners.
+//! - **Parked service**: a frame that is free or has drained to zero
+//!   references starts the fill for its oldest parked fault. The model
+//!   services *liberally* (whenever eligible, as its own transition), so
+//!   a model deadlock is a genuine wait-cycle among blocked warps — a
+//!   protocol property — not a missed-wakeup artifact of one runtime's
+//!   event plumbing.
+//!
+//! The usable-slot oracle matches the runtime's `usable_frame`: free or
+//! resident-unreferenced, and no parked waiters. Policy decision state
+//! forks via [`ResidencyPolicy::clone_box`] and deduplicates via
+//! [`ResidencyPolicy::state_sig`], making `pick_victim` a checkable
+//! transition relation over `(frames, warps, policy)` states.
+//!
+//! Exploration is breadth-first, so the first deadlock found comes with
+//! a minimal repro schedule; the wait cycle is extracted from the
+//! terminal state's warp → frame → holder edges. Livelock is checked by
+//! reverse reachability from the all-done terminals (structurally it
+//! cannot occur — every non-access transition strictly shrinks the
+//! pending-fill measure — but the checker verifies rather than trusts).
+
+use super::protocol::ProtocolFamily;
+use crate::residency::{
+    build, ResidencyPolicy, ResidencyPolicyKind, Slot, Universe, VictimChoice, VictimQuery,
+};
+use crate::util::fxhash::{FxHashMap, FxHasher};
+use anyhow::Result;
+use std::collections::{BTreeSet, VecDeque};
+use std::hash::Hasher;
+
+/// Model seed for the `random` engine's probe stream (the only
+/// nondeterminism a policy owns). Fixed so certification is a stable,
+/// reproducible statement: "at this scope and seed, the state space
+/// contains no deadlock".
+pub const MODEL_SEED: u64 = 0x6b75_766d;
+
+/// Visited-state cap; past this the verdict is `Inconclusive` rather
+/// than a false certificate.
+const MAX_STATES: usize = 250_000;
+
+/// Exploration scope: the N×M×K in "small scope".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scope {
+    pub pages: usize,
+    pub frames: usize,
+    pub warps: usize,
+}
+
+impl Default for Scope {
+    /// The certified default: 4 pages × 3 frames × 2 warps — above the
+    /// ISSUE floor (3×2×2), oversubscribed (pages > frames), and small
+    /// enough to explore exhaustively for every policy.
+    fn default() -> Self {
+        Scope {
+            pages: 4,
+            frames: 3,
+            warps: 2,
+        }
+    }
+}
+
+impl Scope {
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.frames >= 2, "scope needs >= 2 frames");
+        anyhow::ensure!(self.warps >= 1, "scope needs >= 1 warp");
+        anyhow::ensure!(
+            self.pages > self.frames,
+            "scope needs pages > frames (no oversubscription, nothing to evict)"
+        );
+        Ok(())
+    }
+
+    fn label(&self) -> String {
+        format!("{}p x {}f x {}w", self.pages, self.frames, self.warps)
+    }
+}
+
+/// A located deadlock: the wait cycle plus the shortest schedule that
+/// reaches it (BFS order ⇒ minimal).
+#[derive(Debug, Clone)]
+pub struct DeadlockReport {
+    /// Human-readable wait-cycle edges (warp → frame → holder → …).
+    pub cycle: Vec<String>,
+    /// Transition labels from the initial state to the deadlock.
+    pub schedule: Vec<String>,
+}
+
+/// Model-check outcome for one policy.
+#[derive(Debug, Clone)]
+pub enum Verdict {
+    /// Every reachable terminal completes all warps with all reference
+    /// counts drained.
+    DeadlockFree { terminals: usize },
+    Deadlock(DeadlockReport),
+    /// Some reachable state cannot reach any all-done terminal.
+    Livelock {
+        trapped: usize,
+        schedule: Vec<String>,
+    },
+    /// An all-done terminal left a non-zero reference count.
+    RefcountLeak {
+        detail: String,
+        schedule: Vec<String>,
+    },
+    /// The policy broke the victim-protocol contract (demand `GiveUp`,
+    /// or `Take` of an unusable slot).
+    ContractViolation {
+        detail: String,
+        schedule: Vec<String>,
+    },
+    /// State cap hit before the space was exhausted.
+    Inconclusive { explored: usize },
+}
+
+/// One policy's certification result.
+#[derive(Debug, Clone)]
+pub struct CheckResult {
+    pub policy: ResidencyPolicyKind,
+    pub scope: Scope,
+    pub seed: u64,
+    /// Distinct states explored.
+    pub states: usize,
+    pub verdict: Verdict,
+}
+
+impl CheckResult {
+    /// The expected certification outcome: `fifo-strict` deadlocks at
+    /// the default scope (the certified finding — see
+    /// `residency/fifo.rs`); every other policy is deadlock-free.
+    pub fn expected(&self) -> bool {
+        if self.policy == ResidencyPolicyKind::FifoStrict {
+            if self.scope == Scope::default() {
+                matches!(self.verdict, Verdict::Deadlock(_))
+            } else {
+                // Other scopes may or may not exhibit it; both outcomes
+                // are legitimate explorations.
+                matches!(
+                    self.verdict,
+                    Verdict::Deadlock(_) | Verdict::DeadlockFree { .. }
+                )
+            }
+        } else {
+            matches!(self.verdict, Verdict::DeadlockFree { .. })
+        }
+    }
+
+    /// Render for terminal / CI-artifact output.
+    pub fn render(&self) -> String {
+        let mut s = format!("{:<16} @ {}: ", self.policy.name(), self.scope.label());
+        match &self.verdict {
+            Verdict::DeadlockFree { terminals } => {
+                s.push_str(&format!(
+                    "deadlock-free ({} states, {terminals} terminals, no livelock, no refcount leak)\n",
+                    self.states
+                ));
+            }
+            Verdict::Deadlock(d) => {
+                s.push_str(&format!(
+                    "DEADLOCK after {} steps ({} states explored)\n  wait cycle:\n",
+                    d.schedule.len(),
+                    self.states
+                ));
+                for edge in &d.cycle {
+                    s.push_str(&format!("    {edge}\n"));
+                }
+                s.push_str("  minimal repro schedule:\n");
+                for (i, step) in d.schedule.iter().enumerate() {
+                    s.push_str(&format!("    {}. {step}\n", i + 1));
+                }
+            }
+            Verdict::Livelock { trapped, schedule } => {
+                s.push_str(&format!(
+                    "LIVELOCK: {trapped} states cannot reach completion; e.g. after:\n"
+                ));
+                for (i, step) in schedule.iter().enumerate() {
+                    s.push_str(&format!("    {}. {step}\n", i + 1));
+                }
+            }
+            Verdict::RefcountLeak { detail, schedule } => {
+                s.push_str(&format!("REFCOUNT LEAK: {detail}; schedule:\n"));
+                for (i, step) in schedule.iter().enumerate() {
+                    s.push_str(&format!("    {}. {step}\n", i + 1));
+                }
+            }
+            Verdict::ContractViolation { detail, schedule } => {
+                s.push_str(&format!("CONTRACT VIOLATION: {detail}; schedule:\n"));
+                for (i, step) in schedule.iter().enumerate() {
+                    s.push_str(&format!("    {}. {step}\n", i + 1));
+                }
+            }
+            Verdict::Inconclusive { explored } => {
+                s.push_str(&format!("inconclusive: state cap hit after {explored} states\n"));
+            }
+        }
+        s
+    }
+}
+
+#[derive(Clone, PartialEq, Eq)]
+enum FrameSt {
+    Free,
+    Filling(u64),
+    Resident { page: u64, refs: u32 },
+}
+
+#[derive(Clone)]
+struct Frame {
+    st: FrameSt,
+    /// Demand faults parked behind this frame (`WaitOn`), FIFO.
+    parked: VecDeque<u64>,
+}
+
+#[derive(Clone)]
+struct Warp {
+    next_op: usize,
+    /// Pages of the current op still being filled; non-empty = blocked.
+    missing: BTreeSet<u64>,
+    /// Frames referenced by the current op, released when the next op
+    /// starts (or on retirement).
+    holds: Vec<usize>,
+}
+
+struct ModelState {
+    frames: Vec<Frame>,
+    warps: Vec<Warp>,
+    policy: Box<dyn ResidencyPolicy>,
+}
+
+impl Clone for ModelState {
+    fn clone(&self) -> Self {
+        ModelState {
+            frames: self.frames.clone(),
+            warps: self.warps.clone(),
+            policy: self.policy.clone_box(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Move {
+    Exec(usize),
+    Fill(usize),
+    Service(usize),
+}
+
+/// Per-warp access scripts for a scope. Warp 0 runs the hold-then-fault
+/// shape every deadlock needs — fault p0, then touch p0 (keeping its
+/// reference) while faulting p1. The remaining pages round-robin over
+/// the other warps as single-page ops, generating the cross-traffic
+/// that forces evictions.
+fn scripts(scope: &Scope) -> Vec<Vec<Vec<u64>>> {
+    let mut s: Vec<Vec<Vec<u64>>> = vec![vec![vec![0], vec![0, 1]]];
+    for _ in 1..scope.warps {
+        s.push(Vec::new());
+    }
+    for (i, p) in (2..scope.pages as u64).enumerate() {
+        let w = if scope.warps > 1 {
+            1 + i % (scope.warps - 1)
+        } else {
+            0
+        };
+        s[w].push(vec![p]);
+    }
+    s
+}
+
+fn usable(frames: &[Frame], f: Slot) -> bool {
+    let fr = &frames[f as usize];
+    fr.parked.is_empty() && matches!(fr.st, FrameSt::Free | FrameSt::Resident { refs: 0, .. })
+}
+
+fn frame_holding(frames: &[Frame], page: u64) -> Option<usize> {
+    frames.iter().position(|fr| match fr.st {
+        FrameSt::Filling(p) | FrameSt::Resident { page: p, .. } => p == page,
+        FrameSt::Free => false,
+    })
+}
+
+/// Release one warp's holds, draining reference counts.
+fn release_holds(frames: &mut [Frame], policy: &mut dyn ResidencyPolicy, warp: &mut Warp) {
+    for &f in &warp.holds {
+        if let FrameSt::Resident { refs, .. } = &mut frames[f].st {
+            *refs -= 1;
+            if *refs == 0 {
+                policy.on_drain(0, f as Slot);
+            }
+        }
+    }
+    warp.holds.clear();
+}
+
+/// Start filling `page` on frame `f`, evicting resident content.
+fn begin_fill(frames: &mut [Frame], policy: &mut dyn ResidencyPolicy, f: usize, page: u64) {
+    if matches!(frames[f].st, FrameSt::Resident { .. }) {
+        policy.on_evict(0, f as Slot);
+    }
+    frames[f].st = FrameSt::Filling(page);
+    policy.on_fill(0, f as Slot, page, false);
+}
+
+/// Apply one move; `Err` carries a contract-violation description.
+fn apply(
+    state: &mut ModelState,
+    scripts: &[Vec<Vec<u64>>],
+    mv: Move,
+) -> std::result::Result<(), String> {
+    match mv {
+        Move::Exec(w) => {
+            let op_idx = state.warps[w].next_op;
+            state.warps[w].next_op += 1;
+            {
+                let warp = &mut state.warps[w];
+                release_holds(&mut state.frames, state.policy.as_mut(), warp);
+            }
+            let op = &scripts[w][op_idx];
+            for &p in op {
+                if let Some(f) = frame_holding(&state.frames, p) {
+                    match &mut state.frames[f].st {
+                        FrameSt::Resident { refs, .. } => {
+                            *refs += 1;
+                            state.warps[w].holds.push(f);
+                            state.policy.on_touch(0, f as Slot);
+                        }
+                        FrameSt::Filling(_) => {
+                            // Join the in-flight fill; the completion
+                            // hands out the reference.
+                            state.warps[w].missing.insert(p);
+                        }
+                        FrameSt::Free => unreachable!("frame_holding never returns Free"),
+                    }
+                    continue;
+                }
+                if state.frames.iter().any(|fr| fr.parked.contains(&p)) {
+                    // Coalesce with the already-parked fault.
+                    state.warps[w].missing.insert(p);
+                    continue;
+                }
+                // Demand fault: ask the policy for a victim.
+                let choice = {
+                    let frames = &state.frames;
+                    let oracle = |s: Slot| usable(frames, s);
+                    let q = VictimQuery {
+                        gpu: 0,
+                        demand: true,
+                        prefetch_issued: 0,
+                        prefetch_accuracy: 0.0,
+                        usable: &oracle,
+                    };
+                    state.policy.pick_victim(&q)
+                };
+                match choice {
+                    VictimChoice::Take(s) => {
+                        if !usable(&state.frames, s) {
+                            return Err(format!(
+                                "policy Take(frame {s}) of an unusable slot for page p{p}"
+                            ));
+                        }
+                        begin_fill(&mut state.frames, state.policy.as_mut(), s as usize, p);
+                        state.warps[w].missing.insert(p);
+                    }
+                    VictimChoice::WaitOn(s) => {
+                        state.frames[s as usize].parked.push_back(p);
+                        state.warps[w].missing.insert(p);
+                    }
+                    VictimChoice::GiveUp => {
+                        return Err(format!(
+                            "policy answered GiveUp to a demand fault for page p{p} \
+                             (demand faults must park: Take or WaitOn)"
+                        ));
+                    }
+                }
+            }
+            if state.warps[w].missing.is_empty() && state.warps[w].next_op == scripts[w].len() {
+                // Retired: the runtime's Done step releases immediately.
+                let warp = &mut state.warps[w];
+                release_holds(&mut state.frames, state.policy.as_mut(), warp);
+            }
+            Ok(())
+        }
+        Move::Fill(f) => {
+            let FrameSt::Filling(page) = state.frames[f].st else {
+                unreachable!("Fill move on a non-filling frame");
+            };
+            state.frames[f].st = FrameSt::Resident { page, refs: 0 };
+            for w in 0..state.warps.len() {
+                if state.warps[w].missing.remove(&page) {
+                    if let FrameSt::Resident { refs, .. } = &mut state.frames[f].st {
+                        *refs += 1;
+                    }
+                    state.warps[w].holds.push(f);
+                    if state.warps[w].missing.is_empty()
+                        && state.warps[w].next_op == scripts[w].len()
+                    {
+                        let warp = &mut state.warps[w];
+                        release_holds(&mut state.frames, state.policy.as_mut(), warp);
+                    }
+                }
+            }
+            Ok(())
+        }
+        Move::Service(f) => {
+            let page = state.frames[f]
+                .parked
+                .pop_front()
+                .expect("Service move on a frame without parked faults");
+            begin_fill(&mut state.frames, state.policy.as_mut(), f, page);
+            Ok(())
+        }
+    }
+}
+
+fn enabled_moves(state: &ModelState, scripts: &[Vec<Vec<u64>>]) -> Vec<(Move, String)> {
+    let mut out = Vec::new();
+    for (w, warp) in state.warps.iter().enumerate() {
+        if warp.missing.is_empty() && warp.next_op < scripts[w].len() {
+            let pages: Vec<String> = scripts[w][warp.next_op]
+                .iter()
+                .map(|p| format!("p{p}"))
+                .collect();
+            out.push((Move::Exec(w), format!("w{w}: access {{{}}}", pages.join(","))));
+        }
+    }
+    for (f, fr) in state.frames.iter().enumerate() {
+        match fr.st {
+            FrameSt::Filling(p) => {
+                out.push((Move::Fill(f), format!("fill of p{p} on frame {f} completes")));
+            }
+            FrameSt::Free | FrameSt::Resident { .. } => {}
+        }
+        if !fr.parked.is_empty()
+            && matches!(fr.st, FrameSt::Free | FrameSt::Resident { refs: 0, .. })
+        {
+            let p = fr.parked.front().expect("checked non-empty");
+            out.push((Move::Service(f), format!("service parked fault p{p} on frame {f}")));
+        }
+    }
+    out
+}
+
+fn all_done(state: &ModelState, scripts: &[Vec<Vec<u64>>]) -> bool {
+    state
+        .warps
+        .iter()
+        .enumerate()
+        .all(|(w, warp)| warp.missing.is_empty() && warp.next_op == scripts[w].len())
+}
+
+fn sig(state: &ModelState) -> u64 {
+    let mut v: Vec<u64> = Vec::with_capacity(64);
+    for fr in &state.frames {
+        match fr.st {
+            FrameSt::Free => v.push(0),
+            FrameSt::Filling(p) => {
+                v.push(1);
+                v.push(p);
+            }
+            FrameSt::Resident { page, refs } => {
+                v.push(2);
+                v.push(page);
+                v.push(u64::from(refs));
+            }
+        }
+        v.push(fr.parked.len() as u64);
+        v.extend(fr.parked.iter().copied());
+    }
+    for warp in &state.warps {
+        v.push(3);
+        v.push(warp.next_op as u64);
+        v.push(warp.missing.len() as u64);
+        v.extend(warp.missing.iter().copied());
+        let mut holds: Vec<usize> = warp.holds.clone();
+        holds.sort_unstable();
+        v.push(holds.len() as u64);
+        v.extend(holds.iter().map(|&h| h as u64));
+    }
+    state.policy.state_sig(&mut v);
+    let mut h = FxHasher::default();
+    for x in v {
+        h.write_u64(x);
+    }
+    h.finish()
+}
+
+/// Extract the wait cycle from a deadlocked terminal state: each
+/// blocked warp waits on a page parked behind a frame whose references
+/// are held by another blocked warp.
+fn wait_cycle(state: &ModelState) -> Vec<String> {
+    // warp → (page, frame, holder) following first edges; the walk must
+    // revisit a warp (the holder of every pinned frame is blocked).
+    let next_edge = |w: usize| -> Option<(u64, usize, usize)> {
+        let p = *state.warps[w].missing.iter().next()?;
+        let f = state.frames.iter().position(|fr| fr.parked.contains(&p))?;
+        let holder = state.warps.iter().position(|warp| warp.holds.contains(&f))?;
+        Some((p, f, holder))
+    };
+    let start = match state.warps.iter().position(|w| !w.missing.is_empty()) {
+        Some(w) => w,
+        None => return vec!["no blocked warp (internal error)".into()],
+    };
+    let mut seen = vec![false; state.warps.len()];
+    let mut path = Vec::new();
+    let mut w = start;
+    loop {
+        if seen[w] {
+            break;
+        }
+        seen[w] = true;
+        match next_edge(w) {
+            Some((p, f, holder)) => {
+                path.push(format!(
+                    "w{w} waits for p{p}, parked behind frame {f}; frame {f} is held by w{holder}"
+                ));
+                w = holder;
+            }
+            None => {
+                path.push(format!(
+                    "w{w} blocked, but no parked edge found (in-flight fill pending?)"
+                ));
+                break;
+            }
+        }
+    }
+    path
+}
+
+fn schedule_to(parents: &[(usize, String)], idx: usize) -> Vec<String> {
+    let mut steps = Vec::new();
+    let mut i = idx;
+    while i != 0 {
+        let (parent, ref label) = parents[i];
+        steps.push(label.clone());
+        i = parent;
+    }
+    steps.reverse();
+    steps
+}
+
+/// Model-check one policy at one scope/seed.
+pub fn check_policy(kind: ResidencyPolicyKind, scope: Scope, seed: u64) -> Result<CheckResult> {
+    scope.validate()?;
+    let scripts = scripts(&scope);
+    let initial = ModelState {
+        frames: vec![
+            Frame {
+                st: FrameSt::Free,
+                parked: VecDeque::new(),
+            };
+            scope.frames
+        ],
+        warps: vec![
+            Warp {
+                next_op: 0,
+                missing: BTreeSet::new(),
+                holds: Vec::new(),
+            };
+            scope.warps
+        ],
+        policy: build(
+            kind,
+            Universe::Frames {
+                frames_per_gpu: scope.frames,
+            },
+            1,
+            seed,
+        ),
+    };
+
+    let mut states: Vec<ModelState> = vec![initial];
+    // parents[i] = (parent index, transition label); parents[0] unused.
+    let mut parents: Vec<(usize, String)> = vec![(0, String::new())];
+    let mut index_of: FxHashMap<u64, usize> = FxHashMap::default();
+    index_of.insert(sig(&states[0]), 0);
+    let mut edges: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut terminals: Vec<usize> = Vec::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    queue.push_back(0);
+
+    let mut verdict: Option<Verdict> = None;
+    while let Some(idx) = queue.pop_front() {
+        let moves = enabled_moves(&states[idx], &scripts);
+        if moves.is_empty() {
+            if all_done(&states[idx], &scripts) {
+                if let Some(f) = states[idx]
+                    .frames
+                    .iter()
+                    .position(|fr| matches!(fr.st, FrameSt::Resident { refs, .. } if refs > 0))
+                {
+                    verdict = Some(Verdict::RefcountLeak {
+                        detail: format!("frame {f} retains references after all warps retired"),
+                        schedule: schedule_to(&parents, idx),
+                    });
+                    break;
+                }
+                terminals.push(idx);
+            } else {
+                verdict = Some(Verdict::Deadlock(DeadlockReport {
+                    cycle: wait_cycle(&states[idx]),
+                    schedule: schedule_to(&parents, idx),
+                }));
+                break;
+            }
+            continue;
+        }
+        for (mv, label) in moves {
+            let mut next = states[idx].clone();
+            if let Err(detail) = apply(&mut next, &scripts, mv) {
+                let mut schedule = schedule_to(&parents, idx);
+                schedule.push(label);
+                verdict = Some(Verdict::ContractViolation { detail, schedule });
+                break;
+            }
+            let s = sig(&next);
+            match index_of.get(&s) {
+                Some(&existing) => edges[idx].push(existing),
+                None => {
+                    let new_idx = states.len();
+                    index_of.insert(s, new_idx);
+                    states.push(next);
+                    parents.push((idx, label));
+                    edges.push(Vec::new());
+                    edges[idx].push(new_idx);
+                    queue.push_back(new_idx);
+                }
+            }
+        }
+        if verdict.is_some() {
+            break;
+        }
+        if states.len() > MAX_STATES {
+            verdict = Some(Verdict::Inconclusive {
+                explored: states.len(),
+            });
+            break;
+        }
+    }
+
+    let verdict = match verdict {
+        Some(v) => v,
+        None => {
+            // Full exploration, no deadlock/leak: check livelock by
+            // reverse reachability from the all-done terminals.
+            let mut rev: Vec<Vec<usize>> = vec![Vec::new(); states.len()];
+            for (from, outs) in edges.iter().enumerate() {
+                for &to in outs {
+                    rev[to].push(from);
+                }
+            }
+            let mut can_finish = vec![false; states.len()];
+            let mut bfs: VecDeque<usize> = terminals.iter().copied().collect();
+            for &t in &terminals {
+                can_finish[t] = true;
+            }
+            while let Some(i) = bfs.pop_front() {
+                for &p in &rev[i] {
+                    if !can_finish[p] {
+                        can_finish[p] = true;
+                        bfs.push_back(p);
+                    }
+                }
+            }
+            let trapped: Vec<usize> = (0..states.len()).filter(|&i| !can_finish[i]).collect();
+            if trapped.is_empty() {
+                Verdict::DeadlockFree {
+                    terminals: terminals.len(),
+                }
+            } else {
+                Verdict::Livelock {
+                    trapped: trapped.len(),
+                    schedule: schedule_to(&parents, trapped[0]),
+                }
+            }
+        }
+    };
+
+    Ok(CheckResult {
+        policy: kind,
+        scope,
+        seed,
+        states: states.len(),
+        verdict,
+    })
+}
+
+/// Model-check every registered policy; the certification sweep behind
+/// `gpuvm analyze policies` and the CI gate.
+pub fn certify_all(scope: Scope, seed: u64) -> Result<Vec<CheckResult>> {
+    ResidencyPolicyKind::all()
+        .iter()
+        .map(|&kind| check_policy(kind, scope, seed))
+        .collect()
+}
+
+/// The family whose frames-universe protocol the model abstracts.
+pub fn modeled_family() -> ProtocolFamily {
+    ProtocolFamily::GpuVm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripts_cover_all_pages_once() {
+        let s = scripts(&Scope::default());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], vec![vec![0], vec![0, 1]]);
+        let mut others: Vec<u64> = s[1].iter().flatten().copied().collect();
+        others.sort_unstable();
+        assert_eq!(others, vec![2, 3]);
+    }
+
+    #[test]
+    fn degenerate_scopes_rejected() {
+        let bad = Scope {
+            pages: 2,
+            frames: 3,
+            warps: 2,
+        };
+        assert!(check_policy(ResidencyPolicyKind::FifoRefcount, bad, MODEL_SEED).is_err());
+    }
+
+    #[test]
+    fn fifo_strict_deadlocks_at_default_scope() {
+        let r = check_policy(ResidencyPolicyKind::FifoStrict, Scope::default(), MODEL_SEED)
+            .unwrap();
+        let Verdict::Deadlock(d) = &r.verdict else {
+            panic!("expected deadlock, got: {}", r.render());
+        };
+        assert!(!d.schedule.is_empty());
+        assert!(!d.cycle.is_empty());
+        // The certified shape: a self-cycle through a held frame.
+        assert!(
+            d.cycle.iter().any(|e| e.contains("held by")),
+            "cycle must name the holder: {:?}",
+            d.cycle
+        );
+        assert!(r.expected());
+    }
+
+    #[test]
+    fn other_six_policies_certify_deadlock_free_at_default_scope() {
+        for r in certify_all(Scope::default(), MODEL_SEED).unwrap() {
+            if r.policy == ResidencyPolicyKind::FifoStrict {
+                continue;
+            }
+            assert!(
+                matches!(r.verdict, Verdict::DeadlockFree { .. }),
+                "{}",
+                r.render()
+            );
+            assert!(r.expected());
+        }
+    }
+
+    #[test]
+    fn fifo_strict_survives_without_oversubscribed_reuse() {
+        // With warp 0's hold-then-fault shape but frames ample enough
+        // to hold the whole working set... pages > frames is required,
+        // so instead check a larger frame count still deadlocks or
+        // completes without a false positive.
+        let r = check_policy(
+            ResidencyPolicyKind::FifoStrict,
+            Scope {
+                pages: 5,
+                frames: 4,
+                warps: 2,
+            },
+            MODEL_SEED,
+        )
+        .unwrap();
+        assert!(r.expected(), "{}", r.render());
+    }
+}

@@ -1,0 +1,498 @@
+//! Trace linter: replay a captured event stream through the declarative
+//! page state machine and report the first violating event.
+//!
+//! One [`PageState`] machine per `(gpu, page)` plus a work-request
+//! ledger keyed by `wr_id` (decoded from the `wr-post`/`wr-complete`
+//! aux payloads per the [`crate::trace`] table). The report carries the
+//! violating event, the per-page lifecycle history leading up to it,
+//! and a stable [`ViolationKind`] so tests and CI can gate on the exact
+//! failure class. Truncated traces (recorder hit `trace.max_events`)
+//! skip the end-of-stream completeness checks — a cut stream legally
+//! ends mid-fill.
+
+use super::protocol::{self, PageState, ProtocolFamily, ViolationKind};
+use crate::coordinator::backend;
+use crate::metrics::Metrics;
+use crate::trace::{Trace, TraceEvent, TraceEventKind};
+use crate::util::fxhash::FxHashMap;
+use anyhow::Result;
+use std::collections::hash_map::Entry;
+
+/// Lifecycle-history events kept per page for violation reports.
+const HISTORY: usize = 8;
+
+/// One protocol violation: the first illegal event in the stream.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Stable failure class.
+    pub kind: ViolationKind,
+    /// Logical timestamp (stream index) of the violating event, or the
+    /// stream length for end-of-stream violations.
+    pub index: usize,
+    /// The violating event (`None` for end-of-stream violations, where
+    /// the problem is an event that never arrived).
+    pub event: Option<TraceEvent>,
+    /// Human-readable diagnosis.
+    pub detail: String,
+    /// The last [`HISTORY`] events touching the violating page (or WR),
+    /// oldest first, each with its logical timestamp.
+    pub history: Vec<(usize, TraceEvent)>,
+}
+
+/// Outcome of linting one trace.
+#[derive(Debug)]
+pub struct LintReport {
+    pub family: ProtocolFamily,
+    pub backend: String,
+    pub workload: String,
+    /// Events checked before stopping (the whole stream when clean).
+    pub events_checked: usize,
+    /// Distinct `(gpu, page)` machines driven.
+    pub pages_tracked: usize,
+    /// Distinct work requests observed.
+    pub wrs_tracked: usize,
+    pub truncated: bool,
+    pub violation: Option<Violation>,
+}
+
+impl LintReport {
+    /// Did the trace satisfy the protocol?
+    pub fn clean(&self) -> bool {
+        self.violation.is_none()
+    }
+
+    /// Render the report for terminal / CI-artifact output.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "protocol lint: backend={} (family {}) workload={}\n  events checked: {}  pages: {}  work requests: {}{}\n",
+            self.backend,
+            self.family.name(),
+            self.workload,
+            self.events_checked,
+            self.pages_tracked,
+            self.wrs_tracked,
+            if self.truncated {
+                "  [truncated stream: end-of-stream checks skipped]"
+            } else {
+                ""
+            }
+        );
+        match &self.violation {
+            None => s.push_str("  verdict: CLEAN\n"),
+            Some(v) => {
+                s.push_str(&format!("  verdict: VIOLATION [{}]\n", v.kind.name()));
+                match &v.event {
+                    Some(e) => s.push_str(&format!("  event #{}: {}\n", v.index, e.describe())),
+                    None => s.push_str(&format!("  at end of stream (after event #{})\n", v.index)),
+                }
+                s.push_str(&format!("  detail: {}\n", v.detail));
+                if !v.history.is_empty() {
+                    s.push_str("  lifecycle history (oldest first):\n");
+                    for (i, e) in &v.history {
+                        s.push_str(&format!("    #{i} {}\n", e.describe()));
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Resolve the protocol family a backend's traces must satisfy, via
+/// [`backend::Backend::protocol`]. Errors for backends that record no
+/// lintable stream (the bulk-transfer baselines).
+pub fn family_for(backend_name: &str) -> Result<ProtocolFamily> {
+    let b = backend::lookup(backend_name)?;
+    b.protocol().ok_or_else(|| {
+        anyhow::anyhow!(
+            "backend '{backend_name}' records no page-lifecycle stream to lint \
+             (paged backends: gpuvm, uvm, uvm-memadvise, ideal)"
+        )
+    })
+}
+
+/// Lint `trace`, resolving the family from its recorded backend name.
+pub fn lint_trace(trace: &Trace) -> Result<LintReport> {
+    Ok(lint(trace, family_for(&trace.meta.backend)?))
+}
+
+struct PageTrack {
+    state: PageState,
+    history: Vec<(usize, TraceEvent)>,
+}
+
+struct WrTrack {
+    posted_at: usize,
+    post_event: TraceEvent,
+    completed_at: Option<usize>,
+}
+
+/// Drive the state machine over the stream; stop at the first violation.
+pub fn lint(trace: &Trace, family: ProtocolFamily) -> LintReport {
+    let mut pages: FxHashMap<(u8, u64), PageTrack> = FxHashMap::default();
+    let mut wrs: FxHashMap<u64, WrTrack> = FxHashMap::default();
+    let mut violation = None;
+    let mut checked = trace.events.len();
+
+    for (i, e) in trace.events.iter().enumerate() {
+        let v = check_event(family, &mut pages, &mut wrs, i, e);
+        if let Some(v) = v {
+            violation = Some(v);
+            checked = i + 1;
+            break;
+        }
+    }
+
+    // End-of-stream completeness: every parked fault filled, every
+    // posted WR completed. Meaningless on a truncated stream.
+    if violation.is_none() && !trace.meta.truncated {
+        violation = end_of_stream_check(&pages, &wrs, trace.events.len());
+    }
+
+    LintReport {
+        family,
+        backend: trace.meta.backend.clone(),
+        workload: trace.meta.workload.clone(),
+        events_checked: checked,
+        pages_tracked: pages.len(),
+        wrs_tracked: wrs.len(),
+        truncated: trace.meta.truncated,
+        violation,
+    }
+}
+
+fn check_event(
+    family: ProtocolFamily,
+    pages: &mut FxHashMap<(u8, u64), PageTrack>,
+    wrs: &mut FxHashMap<u64, WrTrack>,
+    i: usize,
+    e: &TraceEvent,
+) -> Option<Violation> {
+    match e.kind {
+        TraceEventKind::WrPost => {
+            let wr_id = e.aux >> 1;
+            match wrs.entry(wr_id) {
+                Entry::Occupied(prev) => {
+                    let prev = prev.get();
+                    Some(Violation {
+                        kind: ViolationKind::DuplicateWrPost,
+                        index: i,
+                        event: Some(*e),
+                        detail: format!(
+                            "wr_id {wr_id} already posted at event #{}",
+                            prev.posted_at
+                        ),
+                        history: vec![(prev.posted_at, prev.post_event)],
+                    })
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(WrTrack {
+                        posted_at: i,
+                        post_event: *e,
+                        completed_at: None,
+                    });
+                    None
+                }
+            }
+        }
+        TraceEventKind::WrComplete => {
+            if let Some(p) = protocol::payload_error(e.kind, e.page, e.aux) {
+                return Some(Violation {
+                    kind: ViolationKind::BadPayload,
+                    index: i,
+                    event: Some(*e),
+                    detail: p,
+                    history: Vec::new(),
+                });
+            }
+            let wr_id = e.aux >> 1;
+            match wrs.get_mut(&wr_id) {
+                None => Some(Violation {
+                    kind: ViolationKind::OrphanWrComplete,
+                    index: i,
+                    event: Some(*e),
+                    detail: format!("completion for wr_id {wr_id}, which was never posted"),
+                    history: Vec::new(),
+                }),
+                Some(w) => match w.completed_at {
+                    Some(prev) => Some(Violation {
+                        kind: ViolationKind::NegativeRefcount,
+                        index: i,
+                        event: Some(*e),
+                        detail: format!(
+                            "duplicate completion for wr_id {wr_id} (first at event #{prev}): \
+                             the outstanding-WR count would go negative"
+                        ),
+                        history: vec![(w.posted_at, w.post_event)],
+                    }),
+                    None => {
+                        w.completed_at = Some(i);
+                        None
+                    }
+                },
+            }
+        }
+        kind => {
+            let track = pages.entry((e.gpu, e.page)).or_insert(PageTrack {
+                state: PageState::Unmapped,
+                history: Vec::new(),
+            });
+            let result = match protocol::step(family, track.state, kind) {
+                Some(rule) => match protocol::payload_error(kind, e.page, e.aux) {
+                    Some(p) => Some(Violation {
+                        kind: ViolationKind::BadPayload,
+                        index: i,
+                        event: Some(*e),
+                        detail: p,
+                        history: track.history.clone(),
+                    }),
+                    None => {
+                        track.state = rule.to;
+                        None
+                    }
+                },
+                None => {
+                    let vkind = if protocol::is_evict(kind) && !track.state.is_resident() {
+                        ViolationKind::EvictNonResident
+                    } else {
+                        ViolationKind::IllegalTransition
+                    };
+                    Some(Violation {
+                        kind: vkind,
+                        index: i,
+                        event: Some(*e),
+                        detail: format!(
+                            "'{}' is illegal for gpu{} page {} in state '{}' under the {} profile",
+                            kind.name(),
+                            e.gpu,
+                            e.page,
+                            track.state.name(),
+                            family.name()
+                        ),
+                        history: track.history.clone(),
+                    })
+                }
+            };
+            track.history.push((i, *e));
+            if track.history.len() > HISTORY {
+                track.history.remove(0);
+            }
+            result
+        }
+    }
+}
+
+fn end_of_stream_check(
+    pages: &FxHashMap<(u8, u64), PageTrack>,
+    wrs: &FxHashMap<u64, WrTrack>,
+    stream_len: usize,
+) -> Option<Violation> {
+    // Earliest-parked first, for a deterministic report.
+    let mut pending: Option<(usize, &PageTrack, (u8, u64))> = None;
+    for (key, t) in pages {
+        if t.state.is_pending_fill() {
+            let parked_at = t.history.last().map_or(0, |(i, _)| *i);
+            let better = match pending {
+                None => true,
+                Some((best, _, _)) => parked_at < best,
+            };
+            if better {
+                pending = Some((parked_at, t, *key));
+            }
+        }
+    }
+    if let Some((parked_at, t, (gpu, page))) = pending {
+        return Some(Violation {
+            kind: ViolationKind::UnfilledFault,
+            index: stream_len,
+            event: None,
+            detail: format!(
+                "gpu{gpu} page {page} still '{}' at end of stream \
+                 (demand fault at event #{parked_at} was never filled)",
+                t.state.name()
+            ),
+            history: t.history.clone(),
+        });
+    }
+    let mut open: Option<&WrTrack> = None;
+    for w in wrs.values() {
+        if w.completed_at.is_none() {
+            let better = match open {
+                None => true,
+                Some(best) => w.posted_at < best.posted_at,
+            };
+            if better {
+                open = Some(w);
+            }
+        }
+    }
+    open.map(|w| Violation {
+        kind: ViolationKind::UnmatchedWrPost,
+        index: stream_len,
+        event: None,
+        detail: format!(
+            "wr_id {} posted at event #{} never completed",
+            w.post_event.aux >> 1,
+            w.posted_at
+        ),
+        history: vec![(w.posted_at, w.post_event)],
+    })
+}
+
+/// Cross-check a trace's event counts against the aggregate metrics of
+/// the run that produced it ([`Metrics::trace_expectations`]). Returns
+/// one line per mismatch; empty means consistent. Truncated traces
+/// cannot be cross-checked (the recorder dropped events).
+pub fn metrics_mismatches(trace: &Trace, m: &Metrics) -> Vec<String> {
+    if trace.meta.truncated {
+        return vec!["stream truncated: count cross-check skipped".into()];
+    }
+    let mut out = Vec::new();
+    for (kind_name, expect) in m.trace_expectations() {
+        let kind = TraceEventKind::ALL.iter().find(|k| k.name() == kind_name).copied();
+        let Some(kind) = kind else { continue };
+        let got = trace.count_kind(kind) as u64;
+        if got != expect {
+            out.push(format!("metrics say {expect} '{kind_name}' events, trace has {got}"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{RegionMeta, TraceMeta};
+
+    fn ev(kind: TraceEventKind, page: u64, aux: u64) -> TraceEvent {
+        TraceEvent {
+            at: 0,
+            page,
+            aux,
+            kind,
+            gpu: 0,
+        }
+    }
+
+    fn mk(backend: &str, events: Vec<TraceEvent>) -> Trace {
+        Trace {
+            meta: TraceMeta {
+                backend: backend.into(),
+                workload: "synthetic".into(),
+                page_size: 4096,
+                seed: 0,
+                truncated: false,
+                regions: vec![RegionMeta {
+                    len_bytes: 1 << 20,
+                    read_mostly: false,
+                }],
+            },
+            events,
+        }
+    }
+
+    #[test]
+    fn clean_demand_lifecycle() {
+        use TraceEventKind as K;
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(K::Fault, 3, 1),
+                ev(K::WrPost, 3, (7 << 1) | 1),
+                ev(K::WrComplete, 0, 7 << 1),
+                ev(K::Fill, 3, 4096),
+                ev(K::EvictDirty, 3, 4096),
+            ],
+        );
+        let r = lint(&t, ProtocolFamily::GpuVm);
+        assert!(r.clean(), "{}", r.render());
+        assert_eq!(r.pages_tracked, 1);
+        assert_eq!(r.wrs_tracked, 1);
+    }
+
+    #[test]
+    fn speculative_lifecycles_per_family() {
+        use TraceEventKind as K;
+        // GPUVM: spec fill, later promoted, evicted clean.
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(K::SpecFill, 5, 4096),
+                ev(K::Promote, 5, 0),
+                ev(K::EvictClean, 5, 0),
+            ],
+        );
+        assert!(lint(&t, ProtocolFamily::GpuVm).clean());
+        // GPUVM: demand join of an in-flight spec fill — promote, then
+        // fill, no fault.
+        let t = mk("gpuvm", vec![ev(K::Promote, 5, 0), ev(K::Fill, 5, 4096)]);
+        assert!(lint(&t, ProtocolFamily::GpuVm).clean());
+        // UVM: the same join is silent — a bare fill.
+        let t = mk("uvm", vec![ev(K::Fill, 5, 4096)]);
+        assert!(lint(&t, ProtocolFamily::Uvm).clean());
+        // ...which GPUVM must reject.
+        let r = lint(&mk("gpuvm", vec![ev(K::Fill, 5, 4096)]), ProtocolFamily::GpuVm);
+        assert_eq!(
+            r.violation.as_ref().unwrap().kind,
+            ViolationKind::IllegalTransition
+        );
+    }
+
+    #[test]
+    fn truncated_stream_skips_end_checks() {
+        use TraceEventKind as K;
+        let mut t = mk("gpuvm", vec![ev(K::Fault, 1, 0), ev(K::WrPost, 1, 2 << 1)]);
+        t.meta.truncated = true;
+        assert!(lint(&t, ProtocolFamily::GpuVm).clean());
+        t.meta.truncated = false;
+        let r = lint(&t, ProtocolFamily::GpuVm);
+        assert_eq!(
+            r.violation.as_ref().unwrap().kind,
+            ViolationKind::UnfilledFault
+        );
+    }
+
+    #[test]
+    fn unmatched_wr_post_reported() {
+        use TraceEventKind as K;
+        let t = mk("gpuvm", vec![ev(K::WrPost, 1, 4 << 1)]);
+        let r = lint(&t, ProtocolFamily::GpuVm);
+        assert_eq!(
+            r.violation.as_ref().unwrap().kind,
+            ViolationKind::UnmatchedWrPost
+        );
+    }
+
+    #[test]
+    fn violation_history_is_bounded_and_ordered() {
+        use TraceEventKind as K;
+        let mut events = Vec::new();
+        for _ in 0..6 {
+            events.push(ev(K::Fault, 9, 0));
+            events.push(ev(K::Fill, 9, 4096));
+            events.push(ev(K::EvictClean, 9, 0));
+        }
+        events.push(ev(K::EvictClean, 9, 0)); // double evict
+        let r = lint(&mk("gpuvm", events), ProtocolFamily::GpuVm);
+        let v = r.violation.unwrap();
+        assert_eq!(v.kind, ViolationKind::EvictNonResident);
+        assert!(v.history.len() <= HISTORY);
+        let idxs: Vec<usize> = v.history.iter().map(|(i, _)| *i).collect();
+        let mut sorted = idxs.clone();
+        sorted.sort_unstable();
+        assert_eq!(idxs, sorted);
+    }
+
+    #[test]
+    fn bad_payloads_flagged() {
+        use TraceEventKind as K;
+        let r = lint(
+            &mk("gpuvm", vec![ev(K::Fault, 1, 0), ev(K::Fill, 1, 0)]),
+            ProtocolFamily::GpuVm,
+        );
+        assert_eq!(
+            r.violation.as_ref().unwrap().kind,
+            ViolationKind::BadPayload
+        );
+    }
+}

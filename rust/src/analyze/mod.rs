@@ -1,0 +1,40 @@
+//! Page-lifecycle protocol analysis: declarative state machine,
+//! trace linter, and small-scope model checker.
+//!
+//! Three cooperating layers, all driven from `gpuvm analyze`:
+//!
+//! - [`protocol`] — the page lifecycle as *data*: a declarative
+//!   transition table ([`protocol::RULES`]) over
+//!   [`protocol::PageState`]s, keyed by the nine
+//!   [`crate::trace::TraceEventKind`]s and masked per protocol family
+//!   (GPUVM's warp-driven paging vs UVM's host-driven VABlock model).
+//!   The payload-validity table ([`protocol::payload_error`]) mirrors
+//!   the per-kind `page`/`aux` semantics documented in
+//!   [`crate::trace`]'s event table — the two are kept in sync by the
+//!   conformance tests in `rust/tests/analyze.rs`.
+//! - [`lint`] — replays any captured [`crate::trace::Trace`] through
+//!   the state machine and reports the **first** violating event with
+//!   the offending page's lifecycle history
+//!   ([`lint::Violation::history`]) plus end-of-stream checks
+//!   (unfilled faults, unmatched work requests). Exit-code contract:
+//!   `gpuvm analyze` exits 0 on a clean trace, 1 on a violation, 2 on
+//!   usage/IO errors.
+//! - [`explore`] — exhaustively explores page-fault interleavings at
+//!   small scope against every registered
+//!   [`crate::residency::ResidencyPolicyKind`]'s victim protocol,
+//!   certifying deadlock-freedom (or locating a deadlock cycle with a
+//!   minimal repro schedule — `fifo-strict`'s head-wait deadlock is the
+//!   canonical certified finding, see `residency/fifo.rs`).
+//!
+//! The linter checks *recorded* executions (one path, real
+//! configuration); the model checker checks *all* executions (every
+//! path, tiny configuration). Together they bound the protocol from
+//! both sides.
+
+pub mod explore;
+pub mod lint;
+pub mod protocol;
+
+pub use explore::{certify_all, check_policy, CheckResult, Scope, Verdict, MODEL_SEED};
+pub use lint::{lint, lint_trace, LintReport, Violation};
+pub use protocol::{PageState, ProtocolFamily, ViolationKind};

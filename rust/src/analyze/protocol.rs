@@ -1,0 +1,359 @@
+//! The page-lifecycle protocol as *data*: states, guarded transitions,
+//! payload rules, and the violation taxonomy.
+//!
+//! This is the single source of truth the other two layers consume: the
+//! trace linter ([`crate::analyze::lint`]) drives one state machine per
+//! `(gpu, page)` through [`step`], and the model checker
+//! ([`crate::analyze::explore`]) certifies the victim-selection side of
+//! the same protocol. Event payloads follow the per-kind table in the
+//! [`crate::trace`] module docs — the linter's [`payload_error`] checks
+//! are that table, mechanized.
+//!
+//! ## States
+//!
+//! The trace stream exposes five observable per-page states. "Filling"
+//! never appears explicitly (fills are recorded at completion, not
+//! start), so it is folded into the pending states:
+//!
+//! - **Unmapped** — not resident, no fill pending.
+//! - **Faulted** — a demand fault was recorded; a fill must follow.
+//! - **SpecJoined** — GPUVM only: a demand touch joined an in-flight
+//!   speculative fill (`promote` recorded; the completion will be a
+//!   plain `fill` with no preceding `fault`).
+//! - **ResidentSpec** — speculatively filled, never demand-touched.
+//! - **Resident** — demand-filled, or speculative and since promoted.
+//!
+//! ## Family differences
+//!
+//! The two paged systems share the lifecycle but not every edge:
+//!
+//! - GPUVM records `promote` both for a demand touch of an
+//!   already-resident speculative page *and* for a demand join of an
+//!   in-flight speculative fill — so `promote` → `fill` with no `fault`
+//!   is legal GPUVM.
+//! - UVM's demand join of a speculative pending group is silent: the
+//!   completion is recorded as a plain `fill`, so `fill` straight from
+//!   **Unmapped** is legal UVM (and illegal GPUVM).
+//! - `evict-forced` (unmap under live references) exists only in UVM's
+//!   VABlock hammer; GPUVM never force-unmaps.
+
+use crate::trace::TraceEventKind;
+
+/// Which paged system's emission profile a trace must satisfy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProtocolFamily {
+    /// GPU-driven UVM (`gpuvm`; also `ideal`, which emits no events and
+    /// therefore trivially satisfies the strictest profile).
+    GpuVm,
+    /// Host-driver UVM (`uvm`, `uvm-memadvise`).
+    Uvm,
+}
+
+impl ProtocolFamily {
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::GpuVm => "gpuvm",
+            Self::Uvm => "uvm",
+        }
+    }
+
+    fn bit(self) -> u8 {
+        match self {
+            Self::GpuVm => FAM_GPUVM,
+            Self::Uvm => FAM_UVM,
+        }
+    }
+}
+
+/// Observable per-page lifecycle state (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageState {
+    Unmapped,
+    Faulted,
+    SpecJoined,
+    ResidentSpec,
+    Resident,
+}
+
+impl PageState {
+    /// Stable display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Unmapped => "unmapped",
+            Self::Faulted => "faulted",
+            Self::SpecJoined => "spec-joined",
+            Self::ResidentSpec => "resident-spec",
+            Self::Resident => "resident",
+        }
+    }
+
+    /// Is a page in this state mapped into GPU memory?
+    pub fn is_resident(self) -> bool {
+        matches!(self, Self::Resident | Self::ResidentSpec)
+    }
+
+    /// Is this state waiting on a fill that must eventually arrive?
+    pub fn is_pending_fill(self) -> bool {
+        matches!(self, Self::Faulted | Self::SpecJoined)
+    }
+}
+
+/// Family mask bit: edge legal under GPUVM.
+pub const FAM_GPUVM: u8 = 1 << 0;
+/// Family mask bit: edge legal under UVM.
+pub const FAM_UVM: u8 = 1 << 1;
+/// Edge legal under both families.
+pub const FAM_BOTH: u8 = FAM_GPUVM | FAM_UVM;
+
+/// One guarded transition of the page state machine.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub from: PageState,
+    pub on: TraceEventKind,
+    pub to: PageState,
+    /// Which families admit this edge ([`FAM_GPUVM`] / [`FAM_UVM`]).
+    pub families: u8,
+    /// Why the edge exists, for violation reports and docs.
+    pub note: &'static str,
+}
+
+/// The whole per-page protocol, as data. Everything not listed here is
+/// an illegal transition.
+pub const RULES: &[Rule] = &[
+    Rule {
+        from: PageState::Unmapped,
+        on: TraceEventKind::Fault,
+        to: PageState::Faulted,
+        families: FAM_BOTH,
+        note: "demand fault parks a fill",
+    },
+    Rule {
+        from: PageState::Faulted,
+        on: TraceEventKind::Fill,
+        to: PageState::Resident,
+        families: FAM_BOTH,
+        note: "demand fill completes the parked fault",
+    },
+    Rule {
+        from: PageState::Unmapped,
+        on: TraceEventKind::SpecFill,
+        to: PageState::ResidentSpec,
+        families: FAM_BOTH,
+        note: "speculative fill with no demand waiter",
+    },
+    Rule {
+        from: PageState::Unmapped,
+        on: TraceEventKind::Promote,
+        to: PageState::SpecJoined,
+        families: FAM_GPUVM,
+        note: "demand touch joins an in-flight speculative fill",
+    },
+    Rule {
+        from: PageState::SpecJoined,
+        on: TraceEventKind::Fill,
+        to: PageState::Resident,
+        families: FAM_GPUVM,
+        note: "joined speculative fill completes as a demand fill",
+    },
+    Rule {
+        from: PageState::Unmapped,
+        on: TraceEventKind::Fill,
+        to: PageState::Resident,
+        families: FAM_UVM,
+        note: "silent demand join of a speculative pending group",
+    },
+    Rule {
+        from: PageState::ResidentSpec,
+        on: TraceEventKind::Promote,
+        to: PageState::Resident,
+        families: FAM_BOTH,
+        note: "first demand touch of a resident speculative page",
+    },
+    Rule {
+        from: PageState::Resident,
+        on: TraceEventKind::EvictClean,
+        to: PageState::Unmapped,
+        families: FAM_BOTH,
+        note: "clean eviction of a drained page",
+    },
+    Rule {
+        from: PageState::Resident,
+        on: TraceEventKind::EvictDirty,
+        to: PageState::Unmapped,
+        families: FAM_BOTH,
+        note: "dirty eviction with write-back",
+    },
+    Rule {
+        from: PageState::ResidentSpec,
+        on: TraceEventKind::EvictClean,
+        to: PageState::Unmapped,
+        families: FAM_BOTH,
+        note: "unconsumed speculative fill discarded clean",
+    },
+    Rule {
+        from: PageState::Resident,
+        on: TraceEventKind::EvictForced,
+        to: PageState::Unmapped,
+        families: FAM_UVM,
+        note: "UVM VABlock eviction unmaps under live references",
+    },
+];
+
+/// Look up the transition for `(family, from, on)`; `None` means the
+/// event is illegal in that state.
+pub fn step(family: ProtocolFamily, from: PageState, on: TraceEventKind) -> Option<&'static Rule> {
+    RULES
+        .iter()
+        .find(|r| r.from == from && r.on == on && r.families & family.bit() != 0)
+}
+
+/// Is this event kind an eviction?
+pub fn is_evict(kind: TraceEventKind) -> bool {
+    matches!(
+        kind,
+        TraceEventKind::EvictClean | TraceEventKind::EvictDirty | TraceEventKind::EvictForced
+    )
+}
+
+/// Check an event's payload against the per-kind table in the
+/// [`crate::trace`] module docs. Returns a description of the problem,
+/// or `None` if the payload is well-formed.
+pub fn payload_error(kind: TraceEventKind, page: u64, aux: u64) -> Option<String> {
+    match kind {
+        TraceEventKind::Fault => {
+            (aux > 1).then(|| format!("fault aux must be the write bit (0/1), got {aux}"))
+        }
+        TraceEventKind::Fill | TraceEventKind::SpecFill => {
+            (aux == 0).then(|| format!("{} must carry transferred bytes in aux", kind.name()))
+        }
+        TraceEventKind::Promote => {
+            (aux != 0).then(|| format!("promote carries no payload, got aux={aux}"))
+        }
+        TraceEventKind::EvictClean => {
+            (aux != 0).then(|| format!("evict-clean wrote back {aux} bytes (clean must be 0)"))
+        }
+        TraceEventKind::EvictDirty => {
+            (aux == 0).then(|| "evict-dirty wrote back 0 bytes (that is evict-clean)".to_string())
+        }
+        // evict-forced may be clean (aux 0) or carry write-back bytes.
+        TraceEventKind::EvictForced => None,
+        // wr-post aux is `wr_id << 1 | dir`; any value decodes.
+        TraceEventKind::WrPost => None,
+        TraceEventKind::WrComplete => {
+            if page != 0 {
+                Some(format!("wr-complete is keyed by wr_id, page must be 0, got {page}"))
+            } else if aux & 1 != 0 {
+                Some(format!("wr-complete aux must be wr_id << 1 (bit 0 clear), got {aux}"))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// What a lint or model-check finding violated. Stable names feed
+/// reports, tests, and the CI artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// No rule admits this event in the page's current state.
+    IllegalTransition,
+    /// An eviction of a page that is not resident (double evict, or
+    /// evict of a never-filled page) — the "no use-after-evict /
+    /// no double-evict" invariants.
+    EvictNonResident,
+    /// End of stream with a fault (or speculative join) still pending:
+    /// a demand fault that was never filled.
+    UnfilledFault,
+    /// `wr-complete` for a `wr_id` that was never posted.
+    OrphanWrComplete,
+    /// Duplicate `wr-complete` for the same `wr_id`: the outstanding-WR
+    /// ledger (the reference counter a trace exposes) would go negative.
+    NegativeRefcount,
+    /// Two `wr-post` events claimed the same `wr_id`.
+    DuplicateWrPost,
+    /// End of stream with a posted WR never completed.
+    UnmatchedWrPost,
+    /// Event payload contradicts the per-kind table ([`payload_error`]).
+    BadPayload,
+}
+
+impl ViolationKind {
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::IllegalTransition => "illegal-transition",
+            Self::EvictNonResident => "evict-non-resident",
+            Self::UnfilledFault => "unfilled-fault",
+            Self::OrphanWrComplete => "orphan-wr-complete",
+            Self::NegativeRefcount => "negative-refcount",
+            Self::DuplicateWrPost => "duplicate-wr-post",
+            Self::UnmatchedWrPost => "unmatched-wr-post",
+            Self::BadPayload => "bad-payload",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_rule_reachable_in_some_family() {
+        for r in RULES {
+            assert!(r.families & FAM_BOTH != 0, "{r:?} admits no family");
+            assert!(!r.note.is_empty());
+        }
+    }
+
+    #[test]
+    fn rules_are_deterministic_per_family() {
+        // At most one edge per (family, from, on) triple — `step` relies
+        // on first-match being the only match.
+        for fam in [ProtocolFamily::GpuVm, ProtocolFamily::Uvm] {
+            for a in RULES {
+                let dups = RULES
+                    .iter()
+                    .filter(|b| b.from == a.from && b.on == a.on && b.families & fam.bit() != 0)
+                    .count();
+                if a.families & fam.bit() != 0 {
+                    assert_eq!(dups, 1, "ambiguous edge {a:?} under {}", fam.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_differences() {
+        use TraceEventKind as K;
+        // UVM admits fill-from-unmapped; GPUVM does not.
+        assert!(step(ProtocolFamily::Uvm, PageState::Unmapped, K::Fill).is_some());
+        assert!(step(ProtocolFamily::GpuVm, PageState::Unmapped, K::Fill).is_none());
+        // GPUVM admits promote-from-unmapped (in-flight join); UVM does not.
+        assert!(step(ProtocolFamily::GpuVm, PageState::Unmapped, K::Promote).is_some());
+        assert!(step(ProtocolFamily::Uvm, PageState::Unmapped, K::Promote).is_none());
+        // Forced eviction is UVM-only.
+        assert!(step(ProtocolFamily::Uvm, PageState::Resident, K::EvictForced).is_some());
+        assert!(step(ProtocolFamily::GpuVm, PageState::Resident, K::EvictForced).is_none());
+        // Double evict is illegal everywhere.
+        for fam in [ProtocolFamily::GpuVm, ProtocolFamily::Uvm] {
+            assert!(step(fam, PageState::Unmapped, K::EvictClean).is_none());
+        }
+    }
+
+    #[test]
+    fn payload_table_enforced() {
+        use TraceEventKind as K;
+        assert!(payload_error(K::Fault, 0, 1).is_none());
+        assert!(payload_error(K::Fault, 0, 2).is_some());
+        assert!(payload_error(K::Fill, 0, 0).is_some());
+        assert!(payload_error(K::Fill, 0, 4096).is_none());
+        assert!(payload_error(K::EvictClean, 0, 4096).is_some());
+        assert!(payload_error(K::EvictDirty, 0, 0).is_some());
+        assert!(payload_error(K::EvictForced, 0, 0).is_none());
+        assert!(payload_error(K::EvictForced, 0, 4096).is_none());
+        assert!(payload_error(K::WrComplete, 3, 4).is_some());
+        assert!(payload_error(K::WrComplete, 0, 5).is_some());
+        assert!(payload_error(K::WrComplete, 0, 4).is_none());
+    }
+}

@@ -17,6 +17,7 @@
 //! `Backend`, add a static to [`registry`], and every CLI command,
 //! [`Session`](crate::coordinator::Session) sweep, and bench can name it.
 
+use crate::analyze::ProtocolFamily;
 use crate::apps::{BuildOpts, SpecKind, WorkloadSpec};
 use crate::baselines::{run_gdr, run_rapids, run_subway, SubwayAlgo};
 use crate::config::SystemConfig;
@@ -74,6 +75,13 @@ pub trait Backend: Sync {
         false
     }
 
+    /// The page-lifecycle protocol family this backend's traces obey
+    /// (`gpuvm analyze` lints against it). `None` for bulk backends,
+    /// which take no page faults and capture no lifecycle events.
+    fn protocol(&self) -> Option<ProtocolFamily> {
+        None
+    }
+
     /// Run `spec` end to end and report. The default covers every paged
     /// backend; bulk backends provide their own staging model.
     fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
@@ -102,6 +110,9 @@ impl Backend for GpuVmBackend {
     fn build_memsys(&self, cfg: &SystemConfig) -> Option<Box<dyn MemorySystem>> {
         Some(Box::new(GpuVmSystem::new(cfg)))
     }
+    fn protocol(&self) -> Option<ProtocolFamily> {
+        Some(ProtocolFamily::GpuVm)
+    }
 }
 
 struct UvmBackend {
@@ -129,6 +140,9 @@ impl Backend for UvmBackend {
     fn advise(&self) -> bool {
         self.advise
     }
+    fn protocol(&self) -> Option<ProtocolFamily> {
+        Some(ProtocolFamily::Uvm)
+    }
 }
 
 struct IdealBackend;
@@ -142,6 +156,11 @@ impl Backend for IdealBackend {
     }
     fn build_memsys(&self, cfg: &SystemConfig) -> Option<Box<dyn MemorySystem>> {
         Some(Box::new(IdealSystem::new(cfg.gpu.hbm_hit_ns)))
+    }
+    fn protocol(&self) -> Option<ProtocolFamily> {
+        // Everything is resident up front: the (empty) lifecycle stream
+        // vacuously obeys the GPUVM rules.
+        Some(ProtocolFamily::GpuVm)
     }
 }
 
@@ -349,6 +368,21 @@ mod tests {
             assert!(!b.describe().is_empty());
         }
         assert_eq!(names().len(), registry().len());
+    }
+
+    #[test]
+    fn protocol_families_split_paged_from_bulk() {
+        for (name, fam) in [
+            ("gpuvm", Some(ProtocolFamily::GpuVm)),
+            ("ideal", Some(ProtocolFamily::GpuVm)),
+            ("uvm", Some(ProtocolFamily::Uvm)),
+            ("uvm-memadvise", Some(ProtocolFamily::Uvm)),
+            ("gdr", None),
+            ("subway", None),
+            ("rapids", None),
+        ] {
+            assert_eq!(lookup(name).unwrap().protocol(), fam, "{name}");
+        }
     }
 
     #[test]

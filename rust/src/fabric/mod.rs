@@ -287,7 +287,7 @@ impl QueueSet {
     }
 
     pub(crate) fn depth(&self, queue: usize) -> usize {
-        self.queues.get(queue).map(|q| q.len()).unwrap_or(0)
+        self.queues.get(queue).map_or(0, |q| q.len())
     }
 
     /// Error unless `queue` exists (ring-side validation).

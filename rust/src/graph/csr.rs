@@ -73,7 +73,7 @@ impl Csr {
 
     /// Bytes including weights, Table 2's "Weights" column.
     pub fn weight_bytes(&self) -> u64 {
-        self.weights.as_ref().map(|w| (w.len() * 4) as u64).unwrap_or(0)
+        self.weights.as_ref().map_or(0, |w| (w.len() * 4) as u64)
     }
 
     /// Pick `n` source vertices with degree ≥ `min_degree` (the paper

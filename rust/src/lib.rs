@@ -26,6 +26,7 @@
 //! quickstart and the experiment index (`rust/benches/` reproduces every
 //! figure and table).
 
+pub mod analyze;
 pub mod apps;
 pub mod baselines;
 pub mod config;

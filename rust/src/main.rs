@@ -40,6 +40,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("compare") => cmd_compare(args),
         Some("sweep") => cmd_sweep(args),
         Some("trace") => cmd_trace(args),
+        Some("analyze") => cmd_analyze(args),
         Some("e2e") => cmd_e2e(args),
         Some("list") => cmd_list(),
         Some("info") => cmd_info(args),
@@ -53,7 +54,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|e2e|list|info> [flags]
+const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--residency POLICY] [--eviction fifo|fifo-strict|random (legacy)]
@@ -72,6 +73,12 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|e2e|list|info> [flags
                 [--prefetch-a P --prefetch-b P] [--transport-a T --transport-b T]
                 [--ignore-timing]   replay under two configs, report first divergence
            golden [--dir DIR] [--check]                  verify/bootstrap golden traces
+  analyze  trace FILE [--mem BACKEND]     lint a captured trace against the page-lifecycle protocol
+           golden [--dir DIR]             lint the golden traces (captures fresh if not committed)
+           run --app S [--mem B] ...      capture a run and lint its stream in one step
+           policies [--pages N] [--frames N] [--warps N] [--seed N]
+                [--policy P] [--report FILE]   small-scope model-check the victim protocols
+           exit codes: 0 clean / certified as expected, 1 violation found, 2 usage or IO error
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
   list     apps, backends, prefetch/residency policies, transports, artifacts
   info     resolved system configuration
@@ -410,6 +417,145 @@ fn cmd_trace(args: &Args) -> Result<()> {
             Ok(())
         }
         _ => anyhow::bail!("{TRACE_USAGE}"),
+    }
+}
+
+/// `gpuvm analyze <trace|golden|run|policies>` — the protocol analyzer's
+/// CLI face ([`gpuvm::analyze`]). Lint verbs print the report and exit 1
+/// on a violation (2 stays the usage/IO error code from `main`);
+/// `policies` model-checks every registered victim protocol and exits 1
+/// if any certification diverges from the expected outcome.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use gpuvm::analyze::{self, lint};
+    use gpuvm::trace::{self, Trace};
+
+    const ANALYZE_USAGE: &str =
+        "usage: gpuvm analyze <trace FILE|golden|run|policies> (see `gpuvm` help)";
+
+    // Print a lint report; returns whether the trace was clean.
+    fn report_lint(r: &gpuvm::analyze::LintReport) -> bool {
+        print!("{}", r.render());
+        r.clean()
+    }
+
+    match args.positional().get(1).map(|s| s.as_str()) {
+        Some("trace") => {
+            let path = args
+                .positional()
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("analyze trace needs a FILE"))?;
+            let t = Trace::load(path)?;
+            let report = match args.get("mem") {
+                // Explicit family override (e.g. lint a gpuvm capture
+                // against the stricter profile of another backend).
+                Some(mem) => lint::lint(&t, lint::family_for(mem)?),
+                None => lint::lint_trace(&t)?,
+            };
+            if !report_lint(&report) {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        Some("golden") => {
+            let dir = std::path::PathBuf::from(args.get_or("dir", "rust/tests/golden"));
+            let mut clean = true;
+            for backend in trace::GOLDEN_BACKENDS {
+                let path = dir.join(format!("{backend}_default.trace"));
+                let t = if path.exists() {
+                    println!("linting committed {}", path.display());
+                    Trace::load(&path)?
+                } else {
+                    // Not yet committed: lint a fresh capture of the
+                    // golden scenario so the gate still checks the
+                    // capture path.
+                    println!(
+                        "golden {} not committed; linting a fresh capture",
+                        path.display()
+                    );
+                    trace::golden_capture(backend)?
+                };
+                clean &= report_lint(&lint::lint_trace(&t)?);
+            }
+            if !clean {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        Some("run") => {
+            reject_prefetch_list(args)?;
+            let cfg = config_from(args)?;
+            let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
+            let backend = args.get_or("mem", "gpuvm");
+            let (t, r) = trace::capture(&cfg, &spec, &opts_from(args, &cfg)?, backend)?;
+            println!(
+                "captured {} events ({} demand faults) from {} on {backend}",
+                t.events.len(),
+                t.num_faults(),
+                spec.raw()
+            );
+            for w in lint::metrics_mismatches(&t, &r.metrics) {
+                eprintln!("warning: {w}");
+            }
+            if !report_lint(&lint::lint_trace(&t)?) {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        Some("policies") => {
+            let scope = analyze::Scope {
+                pages: args.get_usize("pages", analyze::Scope::default().pages)?,
+                frames: args.get_usize("frames", analyze::Scope::default().frames)?,
+                warps: args.get_usize("warps", analyze::Scope::default().warps)?,
+            };
+            let seed = args.get_u64("seed", analyze::MODEL_SEED)?;
+            let results = match args.get("policy") {
+                Some(p) => {
+                    let kind = ResidencyPolicyKind::parse(p)?;
+                    vec![analyze::check_policy(kind, scope, seed)?]
+                }
+                None => analyze::certify_all(scope, seed)?,
+            };
+            let mut text = String::new();
+            for r in &results {
+                text.push_str(&r.render());
+            }
+            print!("{text}");
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, &text)?;
+                eprintln!("report: {path}");
+            }
+            // The certification gate applies at the default scope/seed
+            // with the full policy set; exploratory scopes are
+            // report-only.
+            let default_sweep = scope == analyze::Scope::default()
+                && seed == analyze::MODEL_SEED
+                && args.get("policy").is_none();
+            if default_sweep {
+                let bad: Vec<&str> = results
+                    .iter()
+                    .filter(|r| !r.expected())
+                    .map(|r| r.policy.name())
+                    .collect();
+                if !bad.is_empty() {
+                    eprintln!(
+                        "certification failed for: {} (expected: fifo-strict deadlocks, \
+                         all other policies deadlock-free)",
+                        bad.join(", ")
+                    );
+                    std::process::exit(1);
+                }
+                println!(
+                    "certified: fifo-strict deadlock located; {} other policies deadlock-free \
+                     at {}p x {}f x {}w",
+                    results.len() - 1,
+                    scope.pages,
+                    scope.frames,
+                    scope.warps
+                );
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("{ANALYZE_USAGE}"),
     }
 }
 

@@ -207,6 +207,22 @@ impl Metrics {
         ]
     }
 
+    /// Counters that must agree with a captured trace's event counts,
+    /// as `(event-kind name, expected count)` pairs — the bridge the
+    /// protocol analyzer ([`crate::analyze::lint::metrics_mismatches`])
+    /// checks between the metrics ledger and the event stream. Only
+    /// kinds recorded one-to-one with a counter belong here (fills are
+    /// excluded: `bytes_in` counts bytes, not fill events).
+    pub fn trace_expectations(&self) -> [(&'static str, u64); 5] {
+        [
+            ("fault", self.faults),
+            ("evict-clean", self.evictions_clean),
+            ("evict-dirty", self.evictions_dirty),
+            ("evict-forced", self.evictions_forced),
+            ("wr-post", self.work_requests),
+        ]
+    }
+
     /// Compact single-line summary for logs.
     pub fn summary(&self) -> String {
         format!(

@@ -203,7 +203,7 @@ impl Topology {
 
     /// Earliest time the first link of `path` frees up (for backpressure).
     pub fn free_at(&self, path: &[LinkId]) -> SimTime {
-        path.first().map(|&LinkId(i)| self.links[i].busy_until).unwrap_or(0)
+        path.first().map_or(0, |&LinkId(i)| self.links[i].busy_until)
     }
 
     /// Copy per-link busy counters into run metrics.

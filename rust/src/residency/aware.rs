@@ -18,6 +18,7 @@ const MIN_ISSUED: u64 = 32;
 /// first.
 const ACCURACY_GATE: f64 = 0.5;
 
+#[derive(Clone)]
 pub struct PrefetchAwareEngine {
     fifo: FifoEngine,
     fillseq: u64,
@@ -76,13 +77,36 @@ impl ResidencyPolicy for PrefetchAwareEngine {
 
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
         if q.prefetch_issued >= MIN_ISSUED && q.prefetch_accuracy < ACCURACY_GATE {
-            for &(_, s) in self.spec_byfill[q.gpu].iter() {
+            for &(_, s) in &self.spec_byfill[q.gpu] {
                 if (q.usable)(s) {
                     return VictimChoice::Take(s);
                 }
             }
         }
         self.fifo.pick_victim(q)
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        self.fifo.state_sig(out);
+        // Fill sequence numbers reduced to dense ranks; the speculative
+        // flag per slot reconstructs `spec_byfill`.
+        let mut all: Vec<u64> = self.seq.iter().flat_map(|m| m.values().copied()).collect();
+        all.sort_unstable();
+        all.dedup();
+        for (gpu, m) in self.seq.iter().enumerate() {
+            let mut entries: Vec<(Slot, u64)> = m.iter().map(|(&s, &v)| (s, v)).collect();
+            entries.sort_unstable();
+            out.push(entries.len() as u64);
+            for (slot, v) in entries {
+                out.push(slot);
+                out.push(all.binary_search(&v).expect("seq indexed above") as u64);
+                out.push(u64::from(self.spec[gpu].contains(&slot)));
+            }
+        }
     }
 }
 

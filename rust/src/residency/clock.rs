@@ -8,6 +8,7 @@
 use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
 use crate::util::fxhash::FxHashMap;
 
+#[derive(Clone)]
 pub struct ClockEngine {
     dynamic: bool,
     /// Per-GPU sweep ring (frame indices, or live slots in fill order).
@@ -88,6 +89,31 @@ impl ResidencyPolicy for ClockEngine {
             VictimChoice::WaitOn(self.ring[q.gpu][self.hand[q.gpu] % len])
         } else {
             VictimChoice::GiveUp
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        out.push(u64::from(self.dynamic));
+        for (gpu, ring) in self.ring.iter().enumerate() {
+            out.push(ring.len() as u64);
+            out.push(if ring.is_empty() {
+                0
+            } else {
+                (self.hand[gpu] % ring.len()) as u64
+            });
+            for &s in ring {
+                out.push(s);
+                // 0 = bit clear, 1 = bit set, 2 = no entry (never filled).
+                out.push(match self.refbit[gpu].get(&s) {
+                    Some(true) => 1,
+                    Some(false) => 0,
+                    None => 2,
+                });
+            }
         }
     }
 }

@@ -7,10 +7,29 @@
 //! speculative sweeps), the same head-queue fallback. In a
 //! [`Universe::Dynamic`] universe the cursor becomes a fill-order queue
 //! over live slots — true FIFO VABlock seeding for UVM.
+//!
+//! ## Certified deadlock: `fifo-strict`
+//!
+//! Strict FIFO has a *certified* deadlock, located by the small-scope
+//! model checker ([`crate::analyze::explore`], `gpuvm analyze
+//! policies`). Precondition: a warp holds references into the frame at
+//! the FIFO head and then faults on another page while every frame is
+//! either referenced or mid-fill — the head it must wait on is pinned
+//! by the waiter itself (hold-then-wait, a one-edge cycle). At the
+//! default 4-page × 3-frame × 2-warp scope the checker emits the wait
+//! cycle and a 7-step minimal repro schedule. Reference priority
+//! (`fifo-refcount`, paper §5.4) breaks exactly this cycle by skipping
+//! referenced frames, and is certified deadlock-free at that scope —
+//! the certification is scope-bounded, not a universal liveness proof
+//! (with more warps than frames any pin-everything policy can still
+//! wedge; see `gpuvm analyze policies --warps 3`). The
+//! `fig_eviction_ablation` bench reports the same hazard dynamically:
+//! its DEADLOCK rows are this finding reproduced at full scale.
 
 use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
 use std::collections::VecDeque;
 
+#[derive(Clone)]
 pub struct FifoEngine {
     strict: bool,
     /// `Some(n)` in a frames universe: the circular buffer size.
@@ -123,6 +142,28 @@ impl ResidencyPolicy for FifoEngine {
         match self.frames {
             Some(n) => self.pick_fixed(n, q),
             None => self.pick_dynamic(q),
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        out.push(u64::from(self.strict));
+        match self.frames {
+            // Only the cursor's ring position matters to future picks.
+            Some(n) => {
+                for &c in &self.cursor {
+                    out.push((c % n.max(1)) as u64);
+                }
+            }
+            None => {
+                for q in &self.queue {
+                    out.push(q.len() as u64);
+                    out.extend(q.iter().copied());
+                }
+            }
         }
     }
 }

@@ -10,6 +10,7 @@ use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
 use crate::util::fxhash::FxHashMap;
 use std::collections::BTreeSet;
 
+#[derive(Clone)]
 pub struct LruEngine {
     fixed: bool,
     clock: u64,
@@ -72,7 +73,7 @@ impl ResidencyPolicy for LruEngine {
     }
 
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
-        for &(_, s) in self.order[q.gpu].iter() {
+        for &(_, s) in &self.order[q.gpu] {
             if (q.usable)(s) {
                 return VictimChoice::Take(s);
             }
@@ -84,6 +85,30 @@ impl ResidencyPolicy for LruEngine {
             }
         } else {
             VictimChoice::GiveUp
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        // Stamps reduced to dense ranks: only their relative order
+        // drives future picks, so rank-equal states merge.
+        let mut all: Vec<u64> = self
+            .order
+            .iter()
+            .flat_map(|o| o.iter().map(|&(s, _)| s))
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        out.push(u64::from(self.fixed));
+        for o in &self.order {
+            out.push(o.len() as u64);
+            for &(s, slot) in o {
+                out.push(all.binary_search(&s).expect("stamp indexed above") as u64);
+                out.push(slot);
+            }
         }
     }
 }

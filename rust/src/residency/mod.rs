@@ -36,6 +36,14 @@
 //! reuse-distance histogram (fills between a page's eviction and its
 //! refetch), and `thrash_refetches` — refetches of pages evicted within
 //! the last [`THRASH_WINDOW`] fills.
+//!
+//! The victim protocol is also a *checkable transition relation*:
+//! [`ResidencyPolicy::clone_box`] / [`ResidencyPolicy::state_sig`] let
+//! the small-scope model checker ([`crate::analyze::explore`]) fork and
+//! deduplicate policy states while exhaustively exploring fault
+//! interleavings. That checker certifies `fifo-strict`'s deadlock (see
+//! `residency/fifo.rs`) and the other six policies' deadlock-freedom at
+//! small scope — run `gpuvm analyze policies`.
 
 pub mod aware;
 pub mod clock;
@@ -127,7 +135,7 @@ impl ResidencyPolicyKind {
     pub fn describe(self) -> &'static str {
         match self {
             Self::FifoRefcount => "FIFO skipping referenced frames (paper §5.4; GPUVM default)",
-            Self::FifoStrict => "strict FIFO: take the head and wait for its references to drain",
+            Self::FifoStrict => "strict FIFO: take the head and wait for its references to drain (certified deadlock — `gpuvm analyze policies`)",
             Self::Random => "random victim choice (bounded probes)",
             Self::Lru => "exact least-recently-used over demand touches",
             Self::Clock => "second-chance sweep over the circular buffer",
@@ -233,6 +241,20 @@ pub trait ResidencyPolicy {
     /// Answer a victim query. Demand queries return `Take` or `WaitOn`
     /// whenever the universe is non-empty.
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice;
+
+    /// Fork this policy instance, decision state included. The model
+    /// checker ([`crate::analyze::explore`]) clones the policy at every
+    /// explored interleaving to treat `pick_victim` as a transition
+    /// relation over policy states.
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy>;
+
+    /// Append a canonical encoding of the mutable decision state to
+    /// `out`. Contract: two instances with equal signatures answer every
+    /// future event/query sequence identically — monotone clocks are
+    /// reduced to dense ranks and cursors to their ring position, so
+    /// behaviorally equivalent states merge in the model checker's
+    /// visited-set.
+    fn state_sig(&self, out: &mut Vec<u64>);
 }
 
 /// Build a policy instance for one run. `seed` feeds the `random`

@@ -14,6 +14,7 @@ use crate::util::rng::Rng;
 /// pre-subsystem constant).
 const PROBES: usize = 8;
 
+#[derive(Clone)]
 pub struct RandomEngine {
     frames: Option<usize>,
     rng: Rng,
@@ -96,6 +97,21 @@ impl ResidencyPolicy for RandomEngine {
                     VictimChoice::GiveUp
                 }
             }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        // The generator state IS the decision state: equal words replay
+        // the identical probe stream. Live-slot order matters (probes
+        // index into it), so it is emitted as-is.
+        out.extend(self.rng.state_words());
+        for live in &self.live {
+            out.push(live.len() as u64);
+            out.extend(live.iter().copied());
         }
     }
 }

@@ -20,6 +20,7 @@ use std::collections::BTreeSet;
 /// Block hint for never-filled (free) frames in a fixed universe.
 const NO_BLOCK: u64 = u64::MAX;
 
+#[derive(Clone)]
 pub struct TreeLruEngine {
     fixed: bool,
     clock: u64,
@@ -118,6 +119,31 @@ impl ResidencyPolicy for TreeLruEngine {
             VictimChoice::WaitOn(seed)
         } else {
             VictimChoice::GiveUp
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        // Dense stamp ranks (relative order is all that matters) plus
+        // each slot's block hint; `blocks` is derivable from these.
+        let mut all: Vec<u64> = self
+            .order
+            .iter()
+            .flat_map(|o| o.iter().map(|&(s, _)| s))
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        out.push(u64::from(self.fixed));
+        for (gpu, o) in self.order.iter().enumerate() {
+            out.push(o.len() as u64);
+            for &(s, slot) in o {
+                out.push(all.binary_search(&s).expect("stamp indexed above") as u64);
+                out.push(slot);
+                out.push(self.block_of[gpu].get(&slot).copied().unwrap_or(NO_BLOCK));
+            }
         }
     }
 }

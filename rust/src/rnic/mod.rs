@@ -67,7 +67,7 @@ impl Rnic {
     }
 
     pub fn queue_depth(&self, qp: usize) -> usize {
-        self.queues.get(qp).map(|q| q.len()).unwrap_or(0)
+        self.queues.get(qp).map_or(0, |q| q.len())
     }
 
     /// Insert a WR into a send queue (leader's step 5, Fig 4). Does not

@@ -49,6 +49,14 @@
 //! path learns its completion synchronously from the engine); GPUVM
 //! records it when the CQ entry is polled. Both are deterministic, which
 //! is all conformance needs.
+//!
+//! The per-kind payload table above is *enforced*, not just documented:
+//! the protocol analyzer ([`crate::analyze`]) mechanizes it as
+//! [`crate::analyze::protocol::payload_error`] and replays any captured
+//! stream through the page-lifecycle state machine (`gpuvm analyze
+//! <trace|golden|run>`), so a capture-path regression that emits a
+//! malformed or out-of-order event fails the lint, not just the golden
+//! byte-compare.
 
 pub mod diff;
 pub mod format;
@@ -261,10 +269,14 @@ pub struct Trace {
 impl Trace {
     /// Number of leader demand faults (the replayable stream).
     pub fn num_faults(&self) -> usize {
-        self.events
-            .iter()
-            .filter(|e| e.kind == TraceEventKind::Fault)
-            .count()
+        self.count_kind(TraceEventKind::Fault)
+    }
+
+    /// Number of events of one kind (the analyzer's metrics bridge,
+    /// [`crate::analyze::lint::metrics_mismatches`], compares these
+    /// against [`crate::metrics::Metrics::trace_expectations`]).
+    pub fn count_kind(&self, kind: TraceEventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
     }
 }
 
@@ -423,8 +435,8 @@ pub fn golden_check(dir: &Path, backend_name: &str, write_missing: bool) -> Resu
         "{{\"golden\":\"{}\",\"divergence_index\":{},\"committed\":\"{}\",\"fresh\":\"{}\"}}\n",
         path.display(),
         idx,
-        a.map(|e| e.describe()).unwrap_or_else(|| "<end>".into()),
-        b.map(|e| e.describe()).unwrap_or_else(|| "<end>".into()),
+        a.map_or_else(|| "<end>".into(), |e| e.describe()),
+        b.map_or_else(|| "<end>".into(), |e| e.describe()),
     ));
     report.push_str(&fresh.to_jsonl());
     let div_path = dir.join(format!("{backend_name}_default.divergence.jsonl"));
@@ -434,8 +446,8 @@ pub fn golden_check(dir: &Path, backend_name: &str, write_missing: bool) -> Resu
         "golden trace mismatch for '{backend_name}': first divergence at event {idx} \
          (committed: {}, fresh: {}); fresh capture at {}, report at {}. If the \
          change is intended, replace the golden and commit it.",
-        a.map(|e| e.describe()).unwrap_or_else(|| "<stream ended>".into()),
-        b.map(|e| e.describe()).unwrap_or_else(|| "<stream ended>".into()),
+        a.map_or_else(|| "<stream ended>".into(), |e| e.describe()),
+        b.map_or_else(|| "<stream ended>".into(), |e| e.describe()),
         new_path.display(),
         div_path.display()
     )

@@ -49,6 +49,13 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// Raw generator state, for canonical decision-state signatures
+    /// (`ResidencyPolicy::state_sig`): two generators with equal state
+    /// words produce identical streams.
+    pub fn state_words(&self) -> [u64; 4] {
+        self.s
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

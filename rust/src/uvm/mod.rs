@@ -199,7 +199,7 @@ impl UvmSystem {
             .ring_doorbell_into(now, 0, &mut buf)
             .expect("queue 0 exists");
         debug_assert_eq!(buf.len(), 1, "one WR per driver doorbell");
-        let at = buf.last().map(|c| c.at).unwrap_or(now);
+        let at = buf.last().map_or(now, |c| c.at);
         self.cq_buf = buf;
         // The driver path learns its completion synchronously from the
         // engine, so both WR records are written at doorbell time.
@@ -285,7 +285,7 @@ impl UvmSystem {
                 continue; // defensive: policies are bounds-tested
             }
             let ck: GroupKey = (gpu, key.1, idx);
-            let resident = self.groups.get(&ck).map(|g| g.resident).unwrap_or(false);
+            let resident = self.groups.get(&ck).is_some_and(|g| g.resident);
             if resident || self.pending.contains_key(&ck) {
                 continue;
             }
@@ -485,7 +485,7 @@ impl MemorySystem for UvmSystem {
 
         let mut misses = 0u32;
         for (key, write, bits) in groups {
-            let resident = self.groups.get(&key).map(|g| g.resident).unwrap_or(false);
+            let resident = self.groups.get(&key).is_some_and(|g| g.resident);
             let gp = self.group_page(hm, key);
             if resident {
                 ctx.m.hits += 1;

@@ -1,0 +1,378 @@
+//! Protocol-analyzer integration tests (`gpuvm::analyze`):
+//!
+//! - **Mutation tests**: seed corrupted traces (dropped fill, double
+//!   evict, orphan completion, duplicate completion) and assert the
+//!   linter reports the *correct* [`ViolationKind`], not just "dirty";
+//! - **CLI contract**: `gpuvm analyze trace` exits 0 on a clean stream,
+//!   1 on a violation, 2 on usage/IO errors;
+//! - **Property**: every paged backend × residency policy × prefetch
+//!   policy combination produces a lint-clean trace on the golden
+//!   scenario (fifo-strict may instead deadlock at runtime — the very
+//!   hazard the model checker certifies — which the simulator reports
+//!   as an error naming the deadlock);
+//! - **Model-checker certification**: the default small scope locates
+//!   fifo-strict's deadlock (cycle + minimal schedule) and certifies
+//!   the other six policies deadlock-free.
+
+use gpuvm::analyze::{self, certify_all, lint, Scope, Verdict, ViolationKind, MODEL_SEED};
+use gpuvm::analyze::{lint_trace, ProtocolFamily};
+use gpuvm::prefetch::PrefetchPolicy;
+use gpuvm::residency::ResidencyPolicyKind;
+use gpuvm::trace::{self, golden_config, Trace, TraceEvent, TraceEventKind, TraceMeta};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn ev(kind: TraceEventKind, page: u64, aux: u64) -> TraceEvent {
+    TraceEvent {
+        at: 0,
+        page,
+        aux,
+        kind,
+        gpu: 0,
+    }
+}
+
+fn synthetic(backend: &str, events: Vec<TraceEvent>) -> Trace {
+    Trace {
+        meta: TraceMeta {
+            backend: backend.into(),
+            workload: "synthetic".into(),
+            page_size: 4096,
+            seed: 0,
+            truncated: false,
+            regions: Vec::new(),
+        },
+        events,
+    }
+}
+
+fn violation_kind(t: &Trace) -> ViolationKind {
+    let r = lint_trace(t).expect("backend resolves to a family");
+    match r.violation {
+        Some(v) => v.kind,
+        None => panic!("expected a violation, got CLEAN:\n{}", r.render()),
+    }
+}
+
+/// Unique temp path per test (tests run in parallel in one process).
+fn tmp(name: &str) -> PathBuf {
+    let file = format!("gpuvm-analyze-{}-{name}", std::process::id());
+    std::env::temp_dir().join(file)
+}
+
+// ---- mutation tests: seeded corruption → exact violation kind --------
+
+#[test]
+fn mutation_dropped_fill_is_unfilled_fault() {
+    use TraceEventKind as K;
+    // The fault parks the page in 'faulted'; the fill that should
+    // resolve it never arrives.
+    let t = synthetic("gpuvm", vec![ev(K::Fault, 7, 0)]);
+    assert_eq!(violation_kind(&t), ViolationKind::UnfilledFault);
+}
+
+#[test]
+fn mutation_double_evict_is_evict_non_resident() {
+    use TraceEventKind as K;
+    let t = synthetic(
+        "gpuvm",
+        vec![
+            ev(K::Fault, 3, 0),
+            ev(K::Fill, 3, 4096),
+            ev(K::EvictClean, 3, 0),
+            ev(K::EvictClean, 3, 0),
+        ],
+    );
+    assert_eq!(violation_kind(&t), ViolationKind::EvictNonResident);
+}
+
+#[test]
+fn mutation_orphan_wr_complete() {
+    use TraceEventKind as K;
+    let t = synthetic("gpuvm", vec![ev(K::WrComplete, 0, 5 << 1)]);
+    assert_eq!(violation_kind(&t), ViolationKind::OrphanWrComplete);
+}
+
+#[test]
+fn mutation_duplicate_wr_complete_is_negative_refcount() {
+    use TraceEventKind as K;
+    let t = synthetic(
+        "gpuvm",
+        vec![
+            ev(K::WrPost, 2, (5 << 1) | 1),
+            ev(K::WrComplete, 0, 5 << 1),
+            ev(K::WrComplete, 0, 5 << 1),
+        ],
+    );
+    assert_eq!(violation_kind(&t), ViolationKind::NegativeRefcount);
+}
+
+#[test]
+fn mutation_dropped_fill_in_real_capture_is_caught() {
+    // Mutate an actual golden-scenario capture: drop the first demand
+    // fill. The page either gets evicted while still 'faulted'
+    // (evict-non-resident / illegal-transition) or — if it survives to
+    // the end — trips the end-of-stream completeness check.
+    use ViolationKind as V;
+    let t = trace::golden_capture("gpuvm").expect("golden capture");
+    let pos = t.events.iter().position(|e| e.kind == TraceEventKind::Fill);
+    let mut bad = t.clone();
+    bad.events.remove(pos.expect("golden scenario demand-fills"));
+    let kind = violation_kind(&bad);
+    assert!(
+        matches!(
+            kind,
+            V::EvictNonResident | V::IllegalTransition | V::UnfilledFault
+        ),
+        "dropped fill surfaced as {}",
+        kind.name()
+    );
+}
+
+#[test]
+fn lint_reports_carry_lifecycle_history() {
+    use TraceEventKind as K;
+    let mut events = vec![
+        ev(K::Fault, 9, 0),
+        ev(K::Fill, 9, 4096),
+        ev(K::EvictClean, 9, 0),
+    ];
+    events.push(ev(K::EvictClean, 9, 0)); // mutation: double evict
+    let t = synthetic("gpuvm", events);
+    let r = lint_trace(&t).unwrap();
+    let v = r.violation.as_ref().unwrap();
+    assert!(!v.history.is_empty(), "violation must carry page history");
+    let rendered = r.render();
+    assert!(rendered.contains("evict-non-resident"), "{rendered}");
+    assert!(rendered.contains("lifecycle history"), "{rendered}");
+}
+
+// ---- golden traces lint clean ----------------------------------------
+
+#[test]
+fn golden_scenario_traces_lint_clean_for_both_families() {
+    for backend in trace::GOLDEN_BACKENDS {
+        let t = trace::golden_capture(backend).expect("capture");
+        let r = lint_trace(&t).unwrap();
+        assert!(r.clean(), "{backend} golden not clean:\n{}", r.render());
+        assert!(r.events_checked > 0);
+    }
+}
+
+#[test]
+fn capture_counts_match_metrics_expectations() {
+    let cfg = golden_config();
+    let spec = gpuvm::apps::WorkloadSpec::parse(trace::GOLDEN_WORKLOAD).unwrap();
+    let opts = gpuvm::apps::BuildOpts::for_cfg(&cfg);
+    for backend in trace::GOLDEN_BACKENDS {
+        let (t, r) = trace::capture(&cfg, &spec, &opts, backend).expect("capture");
+        let mismatches = lint::metrics_mismatches(&t, &r.metrics);
+        assert!(
+            mismatches.is_empty(),
+            "{backend}: stream disagrees with metrics: {mismatches:?}"
+        );
+    }
+}
+
+// ---- property: backend × residency × prefetch lints clean ------------
+
+#[test]
+fn every_backend_residency_prefetch_combo_lints_clean() {
+    // The full cross product on the golden scenario. fifo-strict is the
+    // certified deadlock: a run may legitimately die with the
+    // simulator's deadlock diagnostic instead of finishing — anything
+    // else (other policy failing, or a finished run linting dirty) is a
+    // real protocol violation.
+    let paged = ["gpuvm", "uvm", "uvm-memadvise", "ideal"];
+    let spec = gpuvm::apps::WorkloadSpec::parse(trace::GOLDEN_WORKLOAD).unwrap();
+    for backend in paged {
+        for residency in ResidencyPolicyKind::all() {
+            for prefetch in PrefetchPolicy::all() {
+                let mut cfg = golden_config();
+                cfg.gpuvm.residency_policy = residency;
+                cfg.uvm.residency_policy = residency;
+                cfg.gpuvm.prefetch_policy = prefetch;
+                cfg.uvm.prefetch_policy = prefetch;
+                let opts = gpuvm::apps::BuildOpts::for_cfg(&cfg);
+                let label = format!("{backend}/{}/{}", residency.name(), prefetch.name());
+                match trace::capture(&cfg, &spec, &opts, backend) {
+                    Ok((t, _)) => {
+                        let r = lint_trace(&t).unwrap();
+                        assert!(r.clean(), "{label} lints dirty:\n{}", r.render());
+                    }
+                    Err(e) if residency == ResidencyPolicyKind::FifoStrict => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("deadlock"),
+                            "{label}: fifo-strict may only fail by deadlocking, got: {msg}"
+                        );
+                    }
+                    Err(e) => panic!("{label} failed: {e:#}"),
+                }
+            }
+        }
+    }
+}
+
+// ---- model-checker certification -------------------------------------
+
+#[test]
+fn model_checker_certifies_all_policies_at_default_scope() {
+    let results = certify_all(Scope::default(), MODEL_SEED).expect("certification sweep");
+    assert_eq!(results.len(), ResidencyPolicyKind::all().len());
+    for r in &results {
+        assert!(
+            r.expected(),
+            "{} diverged from its certified outcome:\n{}",
+            r.policy.name(),
+            r.render()
+        );
+        match (&r.verdict, r.policy) {
+            (Verdict::Deadlock(d), ResidencyPolicyKind::FifoStrict) => {
+                // The finding must be *located*: a wait cycle naming a
+                // warp and frame, plus a concrete repro schedule.
+                assert!(!d.cycle.is_empty(), "deadlock without a cycle");
+                assert!(!d.schedule.is_empty(), "deadlock without a schedule");
+            }
+            (Verdict::DeadlockFree { .. }, p) => {
+                assert_ne!(p, ResidencyPolicyKind::FifoStrict);
+            }
+            (v, p) => panic!("{}: unexpected verdict {v:?}", p.name()),
+        }
+    }
+}
+
+#[test]
+fn model_checker_rejects_degenerate_scopes() {
+    let bad = Scope {
+        pages: 2,
+        frames: 3,
+        warps: 2,
+    };
+    assert!(
+        analyze::check_policy(ResidencyPolicyKind::FifoRefcount, bad, MODEL_SEED).is_err(),
+        "pages <= frames cannot oversubscribe: must be rejected"
+    );
+}
+
+// ---- CLI exit-code contract ------------------------------------------
+
+fn gpuvm_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gpuvm"))
+}
+
+#[test]
+fn cli_analyze_exit_codes() {
+    // Exit 1: violation. Write a corrupted trace and lint it.
+    use TraceEventKind as K;
+    let bad = synthetic("gpuvm", vec![ev(K::WrComplete, 0, 5 << 1)]);
+    let bad_path = tmp("bad.trace");
+    bad.save(&bad_path).unwrap();
+    let out = gpuvm_bin()
+        .args(["analyze", "trace", bad_path.to_str().unwrap()])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(1), "violation must exit 1");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("orphan-wr-complete"), "{text}");
+    std::fs::remove_file(&bad_path).ok();
+
+    // Exit 0: clean trace.
+    let good = trace::golden_capture("gpuvm").unwrap();
+    let good_path = tmp("good.trace");
+    good.save(&good_path).unwrap();
+    let out = gpuvm_bin()
+        .args(["analyze", "trace", good_path.to_str().unwrap()])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(0), "clean trace must exit 0");
+    std::fs::remove_file(&good_path).ok();
+
+    // Exit 2: usage / IO errors.
+    let out = gpuvm_bin()
+        .args(["analyze", "trace", "/nonexistent/zz.trace"])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(2), "IO error must exit 2");
+    let out = gpuvm_bin().args(["analyze"]).output().expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(2), "missing sub-verb must exit 2");
+}
+
+#[test]
+fn cli_analyze_policies_certifies_and_reports() {
+    let report_path = tmp("certify.txt");
+    let out = gpuvm_bin()
+        .args(["analyze", "policies", "--report", report_path.to_str().unwrap()])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "default-scope certification must pass: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fifo-strict"), "{text}");
+    assert!(text.contains("certified"), "{text}");
+    let report = std::fs::read_to_string(&report_path).expect("--report file written");
+    assert!(report.contains("deadlock"), "{report}");
+    std::fs::remove_file(&report_path).ok();
+}
+
+#[test]
+fn cli_analyze_family_override() {
+    use TraceEventKind as K;
+    // A bare fill is legal under UVM's silent-join rule but illegal
+    // under GPUVM — the --mem override must flip the verdict.
+    let t = synthetic("uvm", vec![ev(K::Fill, 4, 4096)]);
+    let path = tmp("family.trace");
+    t.save(&path).unwrap();
+    let ok = gpuvm_bin()
+        .args(["analyze", "trace", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert_eq!(ok.status.code(), Some(0));
+    let strict = gpuvm_bin()
+        .args(["analyze", "trace", path.to_str().unwrap(), "--mem", "gpuvm"])
+        .output()
+        .unwrap();
+    assert_eq!(strict.status.code(), Some(1));
+    std::fs::remove_file(&path).ok();
+}
+
+// ---- protocol table stays in lockstep with the trace format ----------
+
+#[test]
+fn payload_rules_match_trace_format_table() {
+    use TraceEventKind as K;
+    // Spot checks tying analyze::protocol::payload_error to the payload
+    // table documented in gpuvm::trace — if the format evolves, this
+    // test and the analyzer must move together.
+    let p = gpuvm::analyze::protocol::payload_error;
+    assert!(p(K::Fill, 1, 0).is_some(), "fill with zero bytes is bad");
+    assert!(p(K::Fill, 1, 4096).is_none());
+    assert!(p(K::Fault, 1, 2).is_some(), "fault aux is a write bit");
+    assert!(p(K::Promote, 1, 1).is_some(), "promote carries no payload");
+    assert!(p(K::EvictClean, 1, 4096).is_some(), "clean moves no bytes");
+    assert!(p(K::EvictDirty, 1, 0).is_some(), "dirty must move bytes");
+    assert!(p(K::WrComplete, 3, 6).is_some(), "page must be 0");
+    assert!(p(K::WrComplete, 0, 7).is_some(), "dir bit must be clear");
+    assert!(p(K::WrComplete, 0, 6).is_none());
+}
+
+#[test]
+fn family_resolution_covers_all_backends() {
+    assert_eq!(lint::family_for("gpuvm").unwrap(), ProtocolFamily::GpuVm);
+    assert_eq!(lint::family_for("uvm").unwrap(), ProtocolFamily::Uvm);
+    assert_eq!(
+        lint::family_for("uvm-memadvise").unwrap(),
+        ProtocolFamily::Uvm
+    );
+    assert_eq!(lint::family_for("ideal").unwrap(), ProtocolFamily::GpuVm);
+    for bulk in ["gdr", "subway", "rapids"] {
+        assert!(
+            lint::family_for(bulk).is_err(),
+            "{bulk} records no paged stream"
+        );
+    }
+}
