@@ -1,0 +1,219 @@
+//! Self-performance: simulator throughput (DES events per wallclock
+//! second) across the four core backends × policy axes, plus the
+//! observability layer's overhead budget.
+//!
+//! This is the ROADMAP's raw-speed benchmark: its JSON output starts
+//! the committed perf trajectory (`BENCH_7.json` at the repo root).
+//! Two sections:
+//!
+//! 1. **Throughput** — events/sec for gpuvm / uvm / uvm-memadvise /
+//!    ideal under the default policies and under a density-prefetch +
+//!    LRU-residency variant (the hot paths the obs hooks sit on).
+//! 2. **Obs overhead** (gpuvm + uvm) — three modes through the same
+//!    `Backend::run` path:
+//!    - `off`: obs disabled (the default) — the baseline;
+//!    - `idle`: sampler attached with a near-infinite interval, so the
+//!      run pays exactly the per-tick `due()` check. This is the
+//!      measurable proxy for the disabled-path budget (<5%);
+//!    - `on`: sampling at the default 100 µs interval — overhead must
+//!      stay bounded (reported, not gated: wallclock in CI is noisy).
+//!
+//! `GPUVM_BENCH_SMOKE=1` shrinks the workload and iteration counts to
+//! CI size. Refresh the committed baseline with:
+//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_7.json`
+
+use gpuvm::apps::{BuildOpts, WorkloadSpec};
+use gpuvm::config::SystemConfig;
+use gpuvm::coordinator::backend;
+use gpuvm::prefetch::PrefetchPolicy;
+use gpuvm::residency::ResidencyPolicyKind;
+use gpuvm::util::bench::{banner, time};
+use gpuvm::util::csv::CsvWriter;
+
+const BACKENDS: [&str; 4] = ["gpuvm", "uvm", "uvm-memadvise", "ideal"];
+
+/// One measured case.
+struct Row {
+    backend: &'static str,
+    policy: &'static str,
+    obs: &'static str,
+    events: u64,
+    sim_ns: u64,
+    wall_mean_s: f64,
+    wall_min_s: f64,
+}
+
+impl Row {
+    /// Events/sec from the fastest iteration (least scheduler noise).
+    fn events_per_sec(&self) -> f64 {
+        if self.wall_min_s <= 0.0 {
+            return 0.0;
+        }
+        self.events as f64 / self.wall_min_s
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"backend\":\"{}\",\"policy\":\"{}\",\"obs\":\"{}\",\"events\":{},\
+             \"sim_ns\":{},\"wall_mean_s\":{:.6},\"wall_min_s\":{:.6},\
+             \"events_per_sec\":{:.0}}}",
+            self.backend,
+            self.policy,
+            self.obs,
+            self.events,
+            self.sim_ns,
+            self.wall_mean_s,
+            self.wall_min_s,
+            self.events_per_sec()
+        )
+    }
+}
+
+fn base_cfg(smoke: bool) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = if smoke { 8 } else { 28 };
+    cfg.gpu.warps_per_sm = if smoke { 4 } else { 8 };
+    cfg.gpuvm.page_size = 4096;
+    // Oversubscribed so eviction/refetch paths run, not just fills.
+    cfg.gpu.mem_bytes = if smoke { 2 << 20 } else { 8 << 20 };
+    cfg
+}
+
+/// Time one configuration; returns the measured row.
+fn measure(
+    backend_name: &'static str,
+    policy: &'static str,
+    obs: &'static str,
+    cfg: &SystemConfig,
+    app: &str,
+    warmup: u32,
+    iters: u32,
+) -> Row {
+    let spec = WorkloadSpec::parse(app).expect("bench spec");
+    let opts = BuildOpts::for_cfg(cfg);
+    let b = backend::lookup(backend_name).expect("core backend");
+    // One untimed run pins the deterministic outputs (events, sim time).
+    let probe = b.run(cfg, &spec, &opts).expect("bench run");
+    let t = time(
+        &format!("{backend_name}/{policy}/obs={obs}"),
+        warmup,
+        iters,
+        || {
+            b.run(cfg, &spec, &opts).expect("bench run");
+        },
+    );
+    println!("{}", t.report());
+    Row {
+        backend: backend_name,
+        policy,
+        obs,
+        events: probe.events,
+        sim_ns: probe.finish_ns,
+        wall_mean_s: t.mean_s,
+        wall_min_s: t.min_s,
+    }
+}
+
+fn main() {
+    banner("Self-perf: DES events/sec × backend × policy × observability");
+    let smoke = std::env::var("GPUVM_BENCH_SMOKE").is_ok();
+    let app = if smoke { "va@64k" } else { "va@1m" };
+    let (warmup, iters) = if smoke { (0, 2) } else { (1, 5) };
+    println!("workload {app}, {iters} timed iterations (smoke={smoke})\n");
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // -- 1. throughput across backends × policy axes (obs off) --------
+    for backend_name in BACKENDS {
+        for policy in ["default", "density-lru"] {
+            let mut cfg = base_cfg(smoke);
+            if policy == "density-lru" {
+                cfg.gpuvm.prefetch_policy = PrefetchPolicy::Density;
+                cfg.uvm.prefetch_policy = PrefetchPolicy::Density;
+                cfg.gpuvm.residency_policy = ResidencyPolicyKind::Lru;
+                cfg.uvm.residency_policy = ResidencyPolicyKind::Lru;
+            }
+            rows.push(measure(backend_name, policy, "off", &cfg, app, warmup, iters));
+        }
+    }
+
+    // -- 2. obs overhead on the paged systems --------------------------
+    for backend_name in ["gpuvm", "uvm"] {
+        let cfg = base_cfg(smoke);
+        let off = measure(backend_name, "default", "off", &cfg, app, warmup, iters);
+
+        // Sampler attached, interval pushed past any run's finish time:
+        // every tick pays the `due()` check, (almost) nothing samples.
+        let mut cfg_idle = base_cfg(smoke);
+        cfg_idle.obs.enabled = true;
+        cfg_idle.obs.interval_ns = u64::MAX / 2;
+        let idle = measure(backend_name, "default", "idle", &cfg_idle, app, warmup, iters);
+
+        let mut cfg_on = base_cfg(smoke);
+        cfg_on.obs.enabled = true;
+        let on = measure(backend_name, "default", "on", &cfg_on, app, warmup, iters);
+
+        let pct = |base: &Row, x: &Row| {
+            if base.wall_min_s <= 0.0 {
+                0.0
+            } else {
+                (x.wall_min_s / base.wall_min_s - 1.0) * 100.0
+            }
+        };
+        let idle_pct = pct(&off, &idle);
+        let on_pct = pct(&off, &on);
+        println!(
+            "{backend_name}: obs overhead idle {idle_pct:+.1}% (budget <5%), \
+             sampling {on_pct:+.1}%{}",
+            if !smoke && idle_pct >= 5.0 {
+                "  ** idle overhead above budget **"
+            } else {
+                ""
+            }
+        );
+        rows.push(off);
+        rows.push(idle);
+        rows.push(on);
+    }
+
+    // -- outputs -------------------------------------------------------
+    let mut csv = CsvWriter::bench_result(
+        "bench_selfperf",
+        &[
+            "backend",
+            "policy",
+            "obs",
+            "events",
+            "sim_ns",
+            "wall_mean_s",
+            "wall_min_s",
+            "events_per_sec",
+        ],
+    );
+    for r in &rows {
+        csv.row([
+            r.backend.to_string(),
+            r.policy.to_string(),
+            r.obs.to_string(),
+            r.events.to_string(),
+            r.sim_ns.to_string(),
+            format!("{:.6}", r.wall_mean_s),
+            format!("{:.6}", r.wall_min_s),
+            format!("{:.0}", r.events_per_sec()),
+        ]);
+    }
+    csv.flush().unwrap();
+
+    let items: Vec<String> = rows.iter().map(Row::json).collect();
+    let json = format!(
+        "{{\"bench\":\"bench_selfperf\",\"smoke\":{smoke},\"app\":\"{app}\",\
+         \"iters\":{iters},\"results\":[{}]}}\n",
+        items.join(",")
+    );
+    std::fs::create_dir_all("target/bench_results").unwrap();
+    std::fs::write("target/bench_results/bench_selfperf.json", &json).unwrap();
+
+    println!("\ncsv:  target/bench_results/bench_selfperf.csv");
+    println!("json: target/bench_results/bench_selfperf.json");
+    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_7.json");
+}

@@ -3,5 +3,5 @@
 pub mod system;
 pub mod toml;
 
-pub use system::{EvictionPolicy, GdrConfig, GpuConfig, GpuVmConfig, NvLinkConfig, PcieConfig,
-    PcieDmaConfig, RnicConfig, SystemConfig, UvmConfig};
+pub use system::{EvictionPolicy, GdrConfig, GpuConfig, GpuVmConfig, NvLinkConfig, ObsConfig,
+    PcieConfig, PcieDmaConfig, RnicConfig, SystemConfig, UvmConfig};

@@ -276,6 +276,25 @@ pub struct TraceConfig {
     pub max_events: u64,
 }
 
+/// Observability knobs ([`crate::obs`]): the interval time-series
+/// sampler attached to the paged memory systems. Default **off** — the
+/// disabled path is one `Option` check per tick site, so default-config
+/// event streams and timings are untouched (the golden traces hold
+/// this).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Attach the interval sampler (set-path `("obs", "enabled")`,
+    /// CLI `--obs`).
+    pub enabled: bool,
+    /// Sim-time sampling interval, ns (set-path `("obs",
+    /// "interval_ns")`). One sample at most per interval; default
+    /// 100 µs.
+    pub interval_ns: u64,
+    /// Cap on samples per run (set-path `("obs", "max_samples")`);
+    /// past it the sampler marks itself truncated. 0 = unlimited.
+    pub max_samples: u64,
+}
+
 /// CPU-driven copy-engine model (the `pcie-dma` transport).
 #[derive(Debug, Clone)]
 pub struct PcieDmaConfig {
@@ -298,6 +317,7 @@ pub struct SystemConfig {
     pub nvlink: NvLinkConfig,
     pub pcie_dma: PcieDmaConfig,
     pub trace: TraceConfig,
+    pub obs: ObsConfig,
     /// Base RNG seed for the run.
     pub seed: u64,
 }
@@ -380,6 +400,11 @@ impl Default for SystemConfig {
             },
             pcie_dma: PcieDmaConfig { setup_us: 0.0 },
             trace: TraceConfig { max_events: 0 },
+            obs: ObsConfig {
+                enabled: false,
+                interval_ns: 100_000,
+                max_samples: 100_000,
+            },
             seed: 0x5EED,
         }
     }
@@ -514,6 +539,9 @@ impl SystemConfig {
             ("nvlink", "wr_process_ns") => self.nvlink.wr_process_ns = u64v(v)?,
             ("pcie_dma", "setup_us") => self.pcie_dma.setup_us = f64v(v)?,
             ("trace", "max_events") => self.trace.max_events = u64v(v)?,
+            ("obs", "enabled") => self.obs.enabled = boolv(v)?,
+            ("obs", "interval_ns") => self.obs.interval_ns = u64v(v)?,
+            ("obs", "max_samples") => self.obs.max_samples = u64v(v)?,
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
@@ -579,6 +607,15 @@ impl SystemConfig {
         if let Some(s) = args.get("striping") {
             self.rnic.striping = Striping::parse(s)?;
         }
+        // `--obs` attaches the interval sampler; `--obs-interval NS`
+        // implies it and sets the sampling period.
+        if args.has("obs") {
+            self.obs.enabled = true;
+        }
+        if args.has("obs-interval") {
+            self.obs.interval_ns = args.get_u64("obs-interval", self.obs.interval_ns)?;
+            self.obs.enabled = true;
+        }
         Ok(())
     }
 
@@ -616,6 +653,10 @@ impl SystemConfig {
             "nvlink channel needs ≥1 link with positive bandwidth"
         );
         anyhow::ensure!(self.pcie_dma.setup_us >= 0.0, "pcie_dma.setup_us < 0");
+        anyhow::ensure!(
+            !self.obs.enabled || self.obs.interval_ns > 0,
+            "obs.interval_ns must be > 0 when obs is enabled"
+        );
         Ok(())
     }
 }
@@ -832,6 +873,40 @@ mod tests {
         assert_eq!(cfg.trace.max_events, 1 << 20);
         cfg.validate().unwrap();
         assert_eq!(SystemConfig::default().trace.max_events, 0, "unlimited by default");
+    }
+
+    #[test]
+    fn obs_keys_parse() {
+        // Default off with sane sampling geometry.
+        let d = SystemConfig::default();
+        assert!(!d.obs.enabled, "obs must default off");
+        assert_eq!(d.obs.interval_ns, 100_000);
+        assert_eq!(d.obs.max_samples, 100_000);
+
+        let doc = parse("[obs]\nenabled = true\ninterval_ns = 50000\nmax_samples = 0\n").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.apply_doc(&doc).unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.interval_ns, 50_000);
+        assert_eq!(cfg.obs.max_samples, 0);
+        cfg.validate().unwrap();
+
+        // Zero interval is rejected only when enabled.
+        let mut cfg = SystemConfig::default();
+        cfg.obs.interval_ns = 0;
+        cfg.validate().unwrap();
+        cfg.obs.enabled = true;
+        assert!(cfg.validate().is_err());
+
+        // `--obs` flips the switch; `--obs-interval` implies it.
+        let args = Args::parse(
+            "t".into(),
+            ["--obs-interval", "10000"].iter().map(|s| s.to_string()).collect(),
+        );
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.interval_ns, 10_000);
     }
 
     #[test]

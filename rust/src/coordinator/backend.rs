@@ -88,6 +88,13 @@ pub trait Backend: Sync {
         let mut mem = self
             .build_memsys(cfg)
             .ok_or_else(|| anyhow::anyhow!("backend '{}' must override run()", self.name()))?;
+        // Honor `[obs]` outside the capture path too: the samples are
+        // not retrievable from a RunReport (use `gpuvm profile run` for
+        // that), but `--obs` must cost the same here as under capture,
+        // and `obs_samples` still lands in the metrics fingerprint.
+        if cfg.obs.enabled {
+            mem.set_obs(crate::obs::Sampler::shared(&cfg.obs));
+        }
         let mut o = opts.clone();
         o.advise = o.advise || self.advise();
         let mut w = spec.build(&o)?;

@@ -10,6 +10,15 @@ use crate::util::json::json_string;
 use std::io::Write as _;
 use std::path::Path;
 
+/// Histogram percentile, 0 when empty (matches `reuse_p50`/`reuse_p99`).
+fn pctl(h: &crate::util::stats::LatencyHist, p: f64) -> u64 {
+    if h.count() > 0 {
+        h.percentile(p)
+    } else {
+        0
+    }
+}
+
 /// One run's outcome, flattened for sweeps: identity (backend, workload),
 /// the swept configuration axes, and the headline metrics. This is what
 /// [`crate::coordinator::Session::run_all`] returns one of per point.
@@ -72,6 +81,18 @@ pub struct RunReport {
     pub transport_wrs: u64,
     /// Bytes the transport carried (both directions).
     pub transport_bytes: u64,
+    /// Fault-stage latency breakdown ([`crate::obs`]): p50/p99 of the
+    /// queue (fault → WR post), transfer (post → completion), fill
+    /// (completion → page usable) and wake (fill → warp resume) stages,
+    /// in ns. Zero for backends that record no fault latency.
+    pub stage_queue_p50_ns: u64,
+    pub stage_queue_p99_ns: u64,
+    pub stage_transfer_p50_ns: u64,
+    pub stage_transfer_p99_ns: u64,
+    pub stage_fill_p50_ns: u64,
+    pub stage_fill_p99_ns: u64,
+    pub stage_wake_p50_ns: u64,
+    pub stage_wake_p99_ns: u64,
     /// Per-engine (per-NIC / copy-engine / link) breakdown; JSON only.
     pub transport_engines: Vec<EngineStats>,
 }
@@ -79,7 +100,7 @@ pub struct RunReport {
 impl RunReport {
     /// Column names matching [`RunReport::csv_row`] (the README's
     /// "CSV column reference" table documents each one).
-    pub const CSV_HEADER: [&'static str; 34] = [
+    pub const CSV_HEADER: [&'static str; 42] = [
         "backend",
         "workload",
         "nics",
@@ -114,6 +135,14 @@ impl RunReport {
         "transport_wrs",
         "transport_bytes",
         "io_amplification",
+        "stage_queue_p50_ns",
+        "stage_queue_p99_ns",
+        "stage_transfer_p50_ns",
+        "stage_transfer_p99_ns",
+        "stage_fill_p50_ns",
+        "stage_fill_p99_ns",
+        "stage_wake_p50_ns",
+        "stage_wake_p99_ns",
     ];
 
     /// A report with zeroed metrics, tagged with the run's identity and
@@ -177,6 +206,14 @@ impl RunReport {
             transport_doorbells: 0,
             transport_wrs: 0,
             transport_bytes: 0,
+            stage_queue_p50_ns: 0,
+            stage_queue_p99_ns: 0,
+            stage_transfer_p50_ns: 0,
+            stage_transfer_p99_ns: 0,
+            stage_fill_p50_ns: 0,
+            stage_fill_p99_ns: 0,
+            stage_wake_p50_ns: 0,
+            stage_wake_p99_ns: 0,
             transport_engines: Vec::new(),
         }
     }
@@ -218,6 +255,14 @@ impl RunReport {
             transport_wrs: m.transport.wrs_serviced,
             transport_bytes: m.transport.bytes_moved,
             transport_engines: m.transport.per_engine.clone(),
+            stage_queue_p50_ns: pctl(&m.stage_queue, 50.0),
+            stage_queue_p99_ns: pctl(&m.stage_queue, 99.0),
+            stage_transfer_p50_ns: pctl(&m.stage_transfer, 50.0),
+            stage_transfer_p99_ns: pctl(&m.stage_transfer, 99.0),
+            stage_fill_p50_ns: pctl(&m.stage_fill, 50.0),
+            stage_fill_p99_ns: pctl(&m.stage_fill, 99.0),
+            stage_wake_p50_ns: pctl(&m.stage_wake, 50.0),
+            stage_wake_p99_ns: pctl(&m.stage_wake, 99.0),
             ..Self::empty(backend, workload, cfg)
         }
     }
@@ -293,6 +338,14 @@ impl RunReport {
             self.transport_wrs.to_string(),
             self.transport_bytes.to_string(),
             format!("{:.4}", self.io_amplification()),
+            self.stage_queue_p50_ns.to_string(),
+            self.stage_queue_p99_ns.to_string(),
+            self.stage_transfer_p50_ns.to_string(),
+            self.stage_transfer_p99_ns.to_string(),
+            self.stage_fill_p50_ns.to_string(),
+            self.stage_fill_p99_ns.to_string(),
+            self.stage_wake_p50_ns.to_string(),
+            self.stage_wake_p99_ns.to_string(),
         ]
     }
 
@@ -326,6 +379,10 @@ impl RunReport {
                 "\"transport_doorbells\":{},\"transport_wrs\":{},",
                 "\"transport_bytes\":{},\"transport_engines\":[{}],",
                 "\"io_amplification\":{:.4},",
+                "\"stage_queue_p50_ns\":{},\"stage_queue_p99_ns\":{},",
+                "\"stage_transfer_p50_ns\":{},\"stage_transfer_p99_ns\":{},",
+                "\"stage_fill_p50_ns\":{},\"stage_fill_p99_ns\":{},",
+                "\"stage_wake_p50_ns\":{},\"stage_wake_p99_ns\":{},",
                 "\"bandwidth_in_bytes_per_sec\":{:.1}}}"
             ),
             json_string(&self.backend),
@@ -363,6 +420,14 @@ impl RunReport {
             self.transport_bytes,
             engines.join(","),
             self.io_amplification(),
+            self.stage_queue_p50_ns,
+            self.stage_queue_p99_ns,
+            self.stage_transfer_p50_ns,
+            self.stage_transfer_p99_ns,
+            self.stage_fill_p50_ns,
+            self.stage_fill_p99_ns,
+            self.stage_wake_p50_ns,
+            self.stage_wake_p99_ns,
             self.bandwidth_in(),
         )
     }
@@ -433,6 +498,15 @@ impl RunReport {
                 self.transport_doorbells,
                 fmt_bytes(self.transport_bytes),
                 breakdown
+            ));
+        }
+        if self.stage_queue_p50_ns + self.stage_transfer_p50_ns + self.stage_fill_p50_ns > 0 {
+            s.push_str(&format!(
+                "  fault stages (p50) {:>14} queue / {} transfer / {} fill / {} wake\n",
+                fmt_ns(self.stage_queue_p50_ns),
+                fmt_ns(self.stage_transfer_p50_ns),
+                fmt_ns(self.stage_fill_p50_ns),
+                fmt_ns(self.stage_wake_p50_ns)
             ));
         }
         if self.prefetch != "none" || self.prefetched_pages > 0 {
@@ -629,6 +703,60 @@ mod tests {
         let t = r.text();
         assert!(t.contains("residency (clock)"), "{t}");
         assert!(t.contains("thrash refetches: 2"), "{t}");
+    }
+
+    #[test]
+    fn stage_breakdown_columns_round_trip() {
+        let mut r = sample();
+        r.stage_queue_p50_ns = 100;
+        r.stage_queue_p99_ns = 900;
+        r.stage_transfer_p50_ns = 2000;
+        r.stage_transfer_p99_ns = 4000;
+        r.stage_wake_p50_ns = 500;
+        r.stage_wake_p99_ns = 500;
+        let row = r.csv_row();
+        assert_eq!(row.len(), RunReport::CSV_HEADER.len());
+        let hdr_idx = |name: &str| {
+            RunReport::CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap()
+        };
+        assert_eq!(row[hdr_idx("stage_queue_p50_ns")], "100");
+        assert_eq!(row[hdr_idx("stage_queue_p99_ns")], "900");
+        assert_eq!(row[hdr_idx("stage_transfer_p50_ns")], "2000");
+        assert_eq!(row[hdr_idx("stage_fill_p50_ns")], "0");
+        assert_eq!(row[hdr_idx("stage_wake_p99_ns")], "500");
+        let j = r.to_json();
+        assert!(j.contains("\"stage_queue_p50_ns\":100"));
+        assert!(j.contains("\"stage_transfer_p99_ns\":4000"));
+        assert!(j.contains("\"stage_wake_p50_ns\":500"));
+        let t = r.text();
+        assert!(t.contains("fault stages (p50)"), "{t}");
+    }
+
+    #[test]
+    fn from_sim_fills_stage_percentiles() {
+        let cfg = SystemConfig::default();
+        let mut m = Metrics::new();
+        m.fault_latency.record(900);
+        m.record_stages([100, 800, 0], 50);
+        let r = RunResult {
+            metrics: m,
+            hm: crate::mem::HostMemory::new(4096),
+            kernels: 1,
+            events: 10,
+        };
+        let rep = RunReport::from_sim("gpuvm", "va", &cfg, &r);
+        // Log2 buckets report upper bounds, so ≥ the recorded value.
+        assert!(rep.stage_queue_p50_ns >= 100);
+        assert!(rep.stage_transfer_p50_ns >= 800);
+        assert!(rep.stage_wake_p50_ns >= 50);
+        // Empty sample() reports all-zero stages (pctl guards count==0).
+        let zero = sample();
+        assert_eq!(zero.stage_queue_p99_ns, 0);
+        assert_eq!(zero.stage_transfer_p99_ns, 0);
+        assert!(!zero.text().contains("fault stages"));
     }
 
     #[test]

@@ -59,6 +59,10 @@ struct Inflight {
     write: bool,
     /// When the first miss occurred (fault-latency histogram).
     started: SimTime,
+    /// When the fetch WR was posted ([`crate::obs::stage_split`]'s
+    /// queue/transfer boundary). None until `post_now` runs; stays the
+    /// prefetch-time post on a demand join (the split clamps it).
+    posted: Option<SimTime>,
     /// Issued by the prefetcher, no demand waiter yet; such fetches
     /// don't enter the fault-latency histogram.
     speculative: bool,
@@ -156,6 +160,9 @@ pub struct GpuVmSystem {
     /// Optional event-trace sink ([`crate::trace`]): records the
     /// canonical fault/fill/evict/WR stream when attached.
     sink: Option<trace::SharedSink>,
+    /// Optional interval sampler ([`crate::obs`]), ticked from the
+    /// access/event hot paths when attached (default None: one branch).
+    obs: Option<crate::obs::SharedObs>,
     backed: bool,
 }
 
@@ -213,6 +220,7 @@ impl GpuVmSystem {
             prefetched: FxHashSet::default(),
             pf_buf: Vec::new(),
             sink: None,
+            obs: None,
             backed,
             cfg: cfg.clone(),
         }
@@ -492,6 +500,7 @@ impl GpuVmSystem {
                     waiters: Vec::new(),
                     write: false,
                     started: now,
+                    posted: None,
                     speculative: true,
                 },
             );
@@ -564,6 +573,11 @@ impl GpuVmSystem {
             gpu: pw.gpu,
         };
         let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
+        if pw.purpose == WrPurpose::Fetch {
+            if let Some(fl) = self.inflight.get_mut(&(pw.gpu, pw.page)) {
+                fl.posted = Some(t_posted);
+            }
+        }
         self.fabric.post(queue, wr).expect("free queue accepts a post");
         m.work_requests += 1;
         trace::emit(
@@ -654,6 +668,14 @@ impl GpuVmSystem {
         );
         if !fl.speculative {
             m.fault_latency.record(now.saturating_sub(fl.started));
+            // Stage decomposition of that same latency: the WrComplete
+            // is observed at `now` and the page maps at `now`, so the
+            // trace-derived span builder sees identical inputs and the
+            // two breakdowns reconcile bit for bit.
+            m.record_stages(
+                crate::obs::stage_split(fl.started, fl.posted, Some(now), now),
+                self.cfg.gpuvm.cq_poll_interval_ns,
+            );
         }
         if fl.write {
             self.pools[gpu].mark_dirty(frame);
@@ -674,6 +696,20 @@ impl GpuVmSystem {
             }
         }
         (gpu, frame)
+    }
+
+    /// Tick the interval sampler (no-op when detached). Gauges: frames
+    /// currently holding data (fills started minus evictions; frames
+    /// mid-fill count, matching the queue-depth gauge they drive) and
+    /// in-flight WRs per transport queue.
+    fn obs_tick(&self, now: SimTime, m: &mut Metrics) {
+        if let Some(obs) = &self.obs {
+            let mut s = obs.borrow_mut();
+            if s.due(now) {
+                let occupied = self.fills.iter().sum::<u64>().saturating_sub(m.evictions);
+                s.tick(now, m, occupied, &self.queue_busy);
+            }
+        }
     }
 
     /// A frame's refcount hit zero: if pages queue on it, start the next.
@@ -719,6 +755,7 @@ impl MemorySystem for GpuVmSystem {
     ) -> AccessResult {
         debug_assert!(gpu < self.pools.len());
         let now = ctx.now;
+        self.obs_tick(now, ctx.m);
         let t = now + self.cfg.gpuvm.page_table_lookup_ns;
         let mut misses = 0u32;
         for pa in pages {
@@ -803,6 +840,7 @@ impl MemorySystem for GpuVmSystem {
                             waiters: vec![slot],
                             write: pa.write,
                             started: now,
+                            posted: None,
                             speculative: false,
                         },
                     );
@@ -871,6 +909,7 @@ impl MemorySystem for GpuVmSystem {
 
     fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent) {
         let now = ctx.now;
+        self.obs_tick(now, ctx.m);
         match ev {
             MemEvent::CqCompletion { queue, wr_id } => {
                 debug_assert!(self.queue_busy[queue] > 0);
@@ -962,6 +1001,10 @@ impl MemorySystem for GpuVmSystem {
 
     fn set_trace_sink(&mut self, sink: trace::SharedSink) {
         self.sink = Some(sink);
+    }
+
+    fn set_obs(&mut self, obs: crate::obs::SharedObs) {
+        self.obs = Some(obs);
     }
 
     fn finalize(&mut self, m: &mut Metrics) {

@@ -38,6 +38,7 @@ pub mod gpuvm;
 pub mod mem;
 pub mod memsys;
 pub mod metrics;
+pub mod obs;
 pub mod pcie;
 pub mod prefetch;
 pub mod residency;

@@ -41,6 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("trace") => cmd_trace(args),
         Some("analyze") => cmd_analyze(args),
+        Some("profile") => cmd_profile(args),
         Some("e2e") => cmd_e2e(args),
         Some("list") => cmd_list(),
         Some("info") => cmd_info(args),
@@ -54,7 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|e2e|list|info> [flags]
+const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|profile|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--residency POLICY] [--eviction fifo|fifo-strict|random (legacy)]
@@ -79,6 +80,10 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|e2e|list|info
            policies [--pages N] [--frames N] [--warps N] [--seed N]
                 [--policy P] [--report FILE]   small-scope model-check the victim protocols
            exit codes: 0 clean / certified as expected, 1 violation found, 2 usage or IO error
+  profile  run --app S [--mem B] [--obs] [--obs-interval NS] ...   capture + profile a run
+           trace FILE [--mem BACKEND]                              profile a captured trace
+           both verbs: [--out FILE.json]  Perfetto-loadable Chrome trace-event JSON
+                       [--csv FILE]       per-stage latency-breakdown CSV
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
   list     apps, backends, prefetch/residency policies, transports, artifacts
   info     resolved system configuration
@@ -128,6 +133,33 @@ fn reject_prefetch_list(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// An observed capture plus the identity flags that produced it —
+/// what `gpuvm analyze run` and `gpuvm profile run` both need.
+struct CapturedRun {
+    trace: gpuvm::trace::Trace,
+    result: gpuvm::gpu::exec::RunResult,
+    sampler: gpuvm::obs::Sampler,
+    backend: String,
+}
+
+/// Shared capture plumbing for the `run` verbs of `analyze` and
+/// `profile`: single-value flag validation, config resolution,
+/// workload parse, then one observed capture.
+fn capture_run_from_args(args: &Args) -> Result<CapturedRun> {
+    reject_prefetch_list(args)?;
+    let cfg = config_from(args)?;
+    let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
+    let backend = args.get_or("mem", "gpuvm").to_string();
+    let (trace, result, sampler) =
+        gpuvm::trace::capture_observed(&cfg, &spec, &opts_from(args, &cfg)?, &backend)?;
+    Ok(CapturedRun {
+        trace,
+        result,
+        sampler,
+        backend,
+    })
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -482,21 +514,19 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("run") => {
-            reject_prefetch_list(args)?;
-            let cfg = config_from(args)?;
-            let spec = WorkloadSpec::parse(args.get_or("app", "va"))?;
-            let backend = args.get_or("mem", "gpuvm");
-            let (t, r) = trace::capture(&cfg, &spec, &opts_from(args, &cfg)?, backend)?;
+            let cap = capture_run_from_args(args)?;
+            let (t, r) = (&cap.trace, &cap.result);
             println!(
-                "captured {} events ({} demand faults) from {} on {backend}",
+                "captured {} events ({} demand faults) from {} on {}",
                 t.events.len(),
                 t.num_faults(),
-                spec.raw()
+                t.meta.workload,
+                cap.backend
             );
-            for w in lint::metrics_mismatches(&t, &r.metrics) {
+            for w in lint::metrics_mismatches(t, &r.metrics) {
                 eprintln!("warning: {w}");
             }
-            if !report_lint(&lint::lint_trace(&t)?) {
+            if !report_lint(&lint::lint_trace(t)?) {
                 std::process::exit(1);
             }
             Ok(())
@@ -556,6 +586,114 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             Ok(())
         }
         _ => anyhow::bail!("{ANALYZE_USAGE}"),
+    }
+}
+
+/// `gpuvm profile <run|trace FILE>` — the observability subsystem's CLI
+/// face ([`gpuvm::obs`]): derive per-fault lifecycle spans from the
+/// canonical event stream, print the per-stage latency breakdown, and
+/// optionally emit Perfetto-loadable Chrome trace-event JSON (`--out`)
+/// and a breakdown CSV (`--csv`). `run` captures fresh (add `--obs` to
+/// also record the interval time series); `trace` profiles a committed
+/// capture (no sampler — the time series is not part of the trace
+/// format).
+fn cmd_profile(args: &Args) -> Result<()> {
+    use gpuvm::analyze::lint;
+    use gpuvm::obs::{self, Breakdown};
+    use gpuvm::trace::Trace;
+
+    const PROFILE_USAGE: &str =
+        "usage: gpuvm profile <run|trace FILE> [--out FILE.json] [--csv FILE] (see `gpuvm` help)";
+
+    // Shared tail: breakdown + optional JSON/CSV artifacts.
+    fn emit(
+        args: &Args,
+        t: &Trace,
+        spans: &gpuvm::obs::SpanSet,
+        samples: &[gpuvm::obs::Sample],
+        backend: &str,
+    ) -> Result<()> {
+        for issue in spans.issues.iter().take(5) {
+            eprintln!("warning: span issue [{}] {}", issue.kind.name(), issue.detail);
+        }
+        if spans.issues.len() > 5 {
+            eprintln!("warning: {} more span issues suppressed", spans.issues.len() - 5);
+        }
+        let label = format!("{backend}/{}", t.meta.workload);
+        let b = Breakdown::from_spans(spans);
+        print!("{}", b.text(&label));
+        if !samples.is_empty() {
+            println!("sampler: {} interval samples", samples.len());
+        }
+        if let Some(out) = args.get("out") {
+            let j = obs::chrome_trace_json(spans, samples, &label);
+            obs::validate_chrome_json(&j)?;
+            std::fs::write(out, &j)?;
+            eprintln!("perfetto: {out} (load at https://ui.perfetto.dev)");
+        }
+        if let Some(path) = args.get("csv") {
+            std::fs::write(path, b.csv(backend, &t.meta.workload))?;
+            eprintln!("csv: {path}");
+        }
+        Ok(())
+    }
+
+    match args.positional().get(1).map(|s| s.as_str()) {
+        Some("run") => {
+            let cap = capture_run_from_args(args)?;
+            let family = lint::family_for(&cap.backend)?;
+            let spans = obs::build_spans(&cap.trace.events, family, cap.trace.meta.truncated);
+            println!(
+                "captured {} events ({} demand faults) from {} on {}",
+                cap.trace.events.len(),
+                cap.trace.num_faults(),
+                cap.trace.meta.workload,
+                cap.backend
+            );
+            emit(args, &cap.trace, &spans, &cap.sampler.samples, &cap.backend)?;
+            // Reconcile the trace-derived stages against the runtime's
+            // own accounting (the property the tests pin bit-for-bit).
+            let m = &cap.result.metrics;
+            if spans.fully_attributed() && !cap.trace.meta.truncated {
+                let st = spans.stage_totals();
+                let rt = [m.stage_queue_ns, m.stage_transfer_ns, m.stage_fill_ns];
+                anyhow::ensure!(
+                    st == rt && spans.total_ns() == m.fault_service_ns,
+                    "trace-derived stage sums {st:?} (total {}) diverge from runtime \
+                     metrics {rt:?} (total {})",
+                    spans.total_ns(),
+                    m.fault_service_ns
+                );
+                println!(
+                    "reconciled: {} spans; stage sums match runtime metrics exactly",
+                    spans.spans.len()
+                );
+            } else {
+                println!(
+                    "reconciliation skipped ({} unattributed fills, truncated={})",
+                    spans.unattributed_fills, cap.trace.meta.truncated
+                );
+            }
+            Ok(())
+        }
+        Some("trace") => {
+            let path = args
+                .positional()
+                .get(2)
+                .ok_or_else(|| anyhow::anyhow!("profile trace needs a FILE"))?;
+            let t = Trace::load(path)?;
+            let backend = args.get_or("mem", &t.meta.backend).to_string();
+            let family = lint::family_for(&backend)?;
+            let spans = obs::build_spans(&t.events, family, t.meta.truncated);
+            println!(
+                "profiling {} ({} events, {} demand faults, backend {backend})",
+                path,
+                t.events.len(),
+                t.num_faults()
+            );
+            emit(args, &t, &spans, &[], &backend)
+        }
+        _ => anyhow::bail!("{PROFILE_USAGE}"),
     }
 }
 

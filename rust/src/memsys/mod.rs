@@ -114,4 +114,10 @@ pub trait MemorySystem {
     /// (GPUVM, UVM) record the canonical fault/fill/evict/WR stream into
     /// it. Default: no-op — `ideal` moves no pages and emits no events.
     fn set_trace_sink(&mut self, _sink: crate::trace::SharedSink) {}
+
+    /// Attach an interval sampler ([`crate::obs`]): the paged systems
+    /// tick it from their hot paths so occupancy/queue-depth time
+    /// series land on the simulated clock. Default: no-op — `ideal`
+    /// has no occupancy to observe.
+    fn set_obs(&mut self, _obs: crate::obs::SharedObs) {}
 }

@@ -63,6 +63,30 @@ pub struct Metrics {
     pub work_requests: u64,
     /// Fault service latency (post→data-resident), ns.
     pub fault_latency: LatencyHist,
+    /// Lifecycle-stage decomposition of `fault_latency`
+    /// ([`crate::obs::stage_split`]): fault→WR-post (doorbell batching /
+    /// driver queueing), WR-post→completion (transfer), and
+    /// completion→mapped (fill). Same population as `fault_latency`.
+    pub stage_queue: LatencyHist,
+    pub stage_transfer: LatencyHist,
+    pub stage_fill: LatencyHist,
+    /// Fill→waiter-release hop (GPUVM: CQ poll; UVM: µTLB re-hit).
+    /// Measured per serviced fault but *excluded* from the latency sum —
+    /// `fault_latency` ends at fill, and so must the stage total.
+    pub stage_wake: LatencyHist,
+    /// Exact integer stage totals, ns (histogram means are floats; the
+    /// span-reconciliation property needs bit-for-bit sums). Invariant:
+    /// `stage_queue_ns + stage_transfer_ns + stage_fill_ns ==
+    /// fault_service_ns ==` the exact sum of every latency recorded
+    /// into `fault_latency`.
+    pub stage_queue_ns: u64,
+    pub stage_transfer_ns: u64,
+    pub stage_fill_ns: u64,
+    pub fault_service_ns: u64,
+    /// Interval samples taken by the attached [`crate::obs::Sampler`]
+    /// (0 when obs is off). In the fingerprint so identical runs must
+    /// sample identically.
+    pub obs_samples: u64,
     /// Per-warp stall time waiting on faults, ns (summed).
     pub stall_ns: u64,
     /// Compute time summed over warps, ns.
@@ -157,6 +181,15 @@ impl Metrics {
         self.refetches += other.refetches;
         self.thrash_refetches += other.thrash_refetches;
         self.fault_latency.merge(&other.fault_latency);
+        self.stage_queue.merge(&other.stage_queue);
+        self.stage_transfer.merge(&other.stage_transfer);
+        self.stage_fill.merge(&other.stage_fill);
+        self.stage_wake.merge(&other.stage_wake);
+        self.stage_queue_ns += other.stage_queue_ns;
+        self.stage_transfer_ns += other.stage_transfer_ns;
+        self.stage_fill_ns += other.stage_fill_ns;
+        self.fault_service_ns += other.fault_service_ns;
+        self.obs_samples += other.obs_samples;
         self.reuse_distance.merge(&other.reuse_distance);
         self.prefetched_pages += other.prefetched_pages;
         self.prefetch_hits += other.prefetch_hits;
@@ -204,7 +237,29 @@ impl Metrics {
             ("work_requests", self.work_requests),
             ("fault_latency_count", self.fault_latency.count()),
             ("reuse_distance_count", self.reuse_distance.count()),
+            ("stage_queue_ns", self.stage_queue_ns),
+            ("stage_transfer_ns", self.stage_transfer_ns),
+            ("stage_fill_ns", self.stage_fill_ns),
+            ("fault_service_ns", self.fault_service_ns),
+            ("obs_samples", self.obs_samples),
         ]
+    }
+
+    /// Record one serviced demand fault's stage decomposition
+    /// (`stages` from [`crate::obs::stage_split`], `wake` the
+    /// fill→release hop). Keeps the histograms and the exact integer
+    /// totals in lockstep; callers record into `fault_latency`
+    /// separately (it predates this breakdown and some systems record
+    /// it on paths with no stage attribution).
+    pub fn record_stages(&mut self, stages: [u64; 3], wake: u64) {
+        self.stage_queue.record(stages[0]);
+        self.stage_transfer.record(stages[1]);
+        self.stage_fill.record(stages[2]);
+        self.stage_wake.record(wake);
+        self.stage_queue_ns += stages[0];
+        self.stage_transfer_ns += stages[1];
+        self.stage_fill_ns += stages[2];
+        self.fault_service_ns += stages[0] + stages[1] + stages[2];
     }
 
     /// Counters that must agree with a captured trace's event counts,
@@ -277,6 +332,7 @@ mod tests {
         b.bump("x", 2);
         b.reuse_distance.record(16);
         b.fault_latency.record(1000);
+        b.record_stages([100, 800, 0], 50);
         a.merge(&b);
         assert_eq!(a.faults, 12);
         assert_eq!(a.finish_ns, 20);
@@ -285,6 +341,26 @@ mod tests {
         assert_eq!(a.reuse_distance.count(), 2);
         assert_eq!(a.fault_latency.count(), 1);
         assert!((a.reuse_distance.mean_ns() - 10.0).abs() < 1e-9);
+        // Stage breakdowns merge without dilution: histograms and exact
+        // totals both carry over.
+        assert_eq!(a.stage_queue.count(), 1);
+        assert_eq!(a.stage_wake.count(), 1);
+        assert_eq!(a.stage_queue_ns, 100);
+        assert_eq!(a.stage_transfer_ns, 800);
+        assert_eq!(a.fault_service_ns, 900);
+    }
+
+    #[test]
+    fn record_stages_keeps_exact_totals_in_lockstep() {
+        let mut m = Metrics::new();
+        m.record_stages([10, 20, 0], 5);
+        m.record_stages([0, 70, 30], 5);
+        assert_eq!(m.stage_queue_ns + m.stage_transfer_ns + m.stage_fill_ns, m.fault_service_ns);
+        assert_eq!(m.fault_service_ns, 130);
+        assert_eq!(m.stage_queue.count(), 2);
+        assert_eq!(m.stage_transfer.count(), 2);
+        assert_eq!(m.stage_fill.count(), 2);
+        assert_eq!(m.stage_wake.count(), 2);
     }
 
     #[test]
@@ -303,6 +379,13 @@ mod tests {
         assert_eq!(m.fingerprint(), m2.fingerprint());
         m2.evictions += 1;
         assert_ne!(m.fingerprint(), m2.fingerprint());
+        // Stage totals and sampling activity are fingerprinted too.
+        let mut m3 = m.clone();
+        m3.record_stages([1, 2, 3], 0);
+        assert_ne!(m.fingerprint(), m3.fingerprint());
+        let mut m4 = m.clone();
+        m4.obs_samples += 1;
+        assert_ne!(m.fingerprint(), m4.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,641 @@
+//! Export: Chrome trace-event JSON (Perfetto-loadable) and the
+//! latency-breakdown report.
+//!
+//! The JSON follows the Trace Event Format's JSON-object form:
+//! `{"displayTimeUnit":"ns","traceEvents":[...]}` with
+//!
+//! - fault spans as `"ph":"X"` complete events on per-GPU processes
+//!   (`pid = 1 + gpu`), greedily packed into lanes (`tid`) so
+//!   overlapping faults render side by side instead of corrupting one
+//!   nesting stack;
+//! - work requests as complete events on per-GPU transport processes
+//!   (`pid = 101 + gpu`), one lane set per direction;
+//! - evictions as instant events on the GPU process;
+//! - sampler output as `"ph":"C"` counter events (`pid = 900`):
+//!   occupancy and queue-depth gauges plus per-interval deltas of the
+//!   cumulative counters.
+//!
+//! Timestamps are microseconds (the format's unit), emitted with ns
+//! precision (`.3`). Everything is hand-rolled through
+//! [`crate::util::json::json_string`] — the offline build has no
+//! serde — and [`validate_chrome_json`] is a real (small) JSON parser
+//! used by unit tests and CI to keep the emitter honest.
+
+use super::sampler::Sample;
+use super::span::{FaultSpan, SpanSet, WrSpan};
+use crate::sim::SimTime;
+use crate::util::bench::fmt_ns;
+use crate::util::json::json_string;
+use crate::util::stats::LatencyHist;
+use anyhow::{bail, ensure, Result};
+
+/// µs timestamp with ns precision, as the JSON text.
+fn ts(ns: SimTime) -> String {
+    format!("{:.3}", ns as f64 / 1000.0)
+}
+
+/// Greedy lane packing: spans sorted by start go to the lowest lane
+/// whose previous span has ended. Returns one lane index per span.
+fn lanes<T>(spans: &[T], start: impl Fn(&T) -> SimTime, end: impl Fn(&T) -> SimTime) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..spans.len()).collect();
+    order.sort_by_key(|&i| (start(&spans[i]), end(&spans[i])));
+    let mut lane_free: Vec<SimTime> = Vec::new();
+    let mut lane_of = vec![0usize; spans.len()];
+    for i in order {
+        let (s, e) = (start(&spans[i]), end(&spans[i]));
+        match lane_free.iter().position(|&f| f <= s) {
+            Some(l) => {
+                lane_free[l] = e;
+                lane_of[i] = l;
+            }
+            None => {
+                lane_of[i] = lane_free.len();
+                lane_free.push(e);
+            }
+        }
+    }
+    lane_of
+}
+
+fn meta_process(out: &mut Vec<String>, pid: u64, name: &str) {
+    out.push(format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"args\":{{\"name\":{}}}}}",
+        json_string(name)
+    ));
+}
+
+fn fault_event(sp: &FaultSpan, lane: usize) -> String {
+    let st = sp.stages();
+    format!(
+        "{{\"name\":{},\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{},\
+         \"args\":{{\"page\":{},\"write\":{},\"queue_ns\":{},\"transfer_ns\":{},\"fill_ns\":{}}}}}",
+        json_string(&format!(
+            "{} p{}",
+            if sp.joined { "join" } else { "fault" },
+            sp.page
+        )),
+        ts(sp.start),
+        ts(sp.total_ns()),
+        1 + sp.gpu as u64,
+        lane,
+        sp.page,
+        sp.write,
+        st[0],
+        st[1],
+        st[2],
+    )
+}
+
+fn wr_event(w: &WrSpan, lane: usize) -> String {
+    let end = w.completed.unwrap_or(w.posted);
+    format!(
+        "{{\"name\":{},\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{},\
+         \"args\":{{\"wr_id\":{},\"page\":{}}}}}",
+        json_string(&format!("wr-{} p{}", if w.out { "out" } else { "in" }, w.page)),
+        ts(w.posted),
+        ts(end.saturating_sub(w.posted)),
+        101 + w.gpu as u64,
+        lane,
+        w.wr_id,
+        w.page,
+    )
+}
+
+fn counter(out: &mut Vec<String>, name: &str, at: SimTime, value: u64) {
+    out.push(format!(
+        "{{\"name\":{},\"ph\":\"C\",\"ts\":{},\"pid\":900,\"args\":{{\"value\":{value}}}}}",
+        json_string(name),
+        ts(at),
+    ));
+}
+
+/// Render spans + samples as Chrome trace-event JSON. `label` becomes
+/// the sampler process name suffix (backend/workload identification
+/// inside Perfetto).
+pub fn chrome_trace_json(spans: &SpanSet, samples: &[Sample], label: &str) -> String {
+    let mut out: Vec<String> = Vec::new();
+
+    let mut gpus: Vec<u8> = spans
+        .spans
+        .iter()
+        .map(|s| s.gpu)
+        .chain(spans.evictions.iter().map(|e| e.gpu))
+        .chain(spans.wrs.iter().map(|w| w.gpu))
+        .collect();
+    gpus.sort_unstable();
+    gpus.dedup();
+    for &g in &gpus {
+        meta_process(&mut out, 1 + g as u64, &format!("GPU {g} faults"));
+        meta_process(&mut out, 101 + g as u64, &format!("GPU {g} transport"));
+    }
+    if !samples.is_empty() {
+        meta_process(&mut out, 900, &format!("sampler [{label}]"));
+    }
+
+    for &g in &gpus {
+        let fs: Vec<&FaultSpan> = spans.spans.iter().filter(|s| s.gpu == g).collect();
+        let lane_of = lanes(&fs, |s| s.start, |s| s.end.max(s.start));
+        for (s, &l) in fs.iter().zip(&lane_of) {
+            out.push(fault_event(s, l));
+        }
+        let ws: Vec<&WrSpan> = spans.wrs.iter().filter(|w| w.gpu == g).collect();
+        let lane_of = lanes(&ws, |w| w.posted, |w| w.completed.unwrap_or(w.posted));
+        for (w, &l) in ws.iter().zip(&lane_of) {
+            out.push(wr_event(w, l));
+        }
+    }
+    for e in &spans.evictions {
+        out.push(format!(
+            "{{\"name\":{},\"ph\":\"i\",\"ts\":{},\"pid\":{},\"tid\":0,\"s\":\"t\",\
+             \"args\":{{\"page\":{},\"bytes\":{}}}}}",
+            json_string(e.kind.name()),
+            ts(e.at),
+            1 + e.gpu as u64,
+            e.page,
+            e.bytes,
+        ));
+    }
+
+    for (i, s) in samples.iter().enumerate() {
+        counter(&mut out, "occupied", s.at, s.occupied);
+        counter(&mut out, "qdepth_sum", s.at, s.qdepth_sum);
+        counter(&mut out, "qdepth_max", s.at, s.qdepth_max as u64);
+        // Per-interval deltas of the cumulative counters (first sample
+        // differences against zero, i.e. the run start).
+        let prev = if i == 0 { None } else { Some(&samples[i - 1]) };
+        let d = |cur: u64, pre: fn(&Sample) -> u64| cur - prev.map_or(0, pre);
+        counter(&mut out, "faults/interval", s.at, d(s.faults, |p| p.faults));
+        counter(&mut out, "hits/interval", s.at, d(s.hits, |p| p.hits));
+        counter(&mut out, "bytes_in/interval", s.at, d(s.bytes_in, |p| p.bytes_in));
+        counter(&mut out, "bytes_out/interval", s.at, d(s.bytes_out, |p| p.bytes_out));
+        counter(&mut out, "evictions/interval", s.at, d(s.evictions, |p| p.evictions));
+        counter(
+            &mut out,
+            "thrash_refetches/interval",
+            s.at,
+            d(s.thrash_refetches, |p| p.thrash_refetches),
+        );
+        // Cumulative prefetch accuracy, in tenths of a percent so the
+        // counter track stays integral.
+        let acc = if s.prefetched_pages == 0 {
+            0
+        } else {
+            s.prefetch_hits * 1000 / s.prefetched_pages
+        };
+        counter(&mut out, "prefetch_accuracy_permille", s.at, acc);
+    }
+
+    format!(
+        "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[{}]}}\n",
+        out.join(",")
+    )
+}
+
+// ---- latency breakdown ----------------------------------------------
+
+/// Per-stage latency distributions over a span set.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    /// `[queue, transfer, fill]` stage histograms.
+    pub stages: [LatencyHist; 3],
+    /// Total fault latency (fault → fill).
+    pub total: LatencyHist,
+    /// Exact per-stage sums (integer ns; reconcile against
+    /// `Metrics::stage_*_ns`).
+    pub stage_ns: [u64; 3],
+    pub total_ns: u64,
+    pub spans: u64,
+    pub spec_fills: u64,
+    pub unattributed: u64,
+}
+
+impl Breakdown {
+    pub fn from_spans(set: &SpanSet) -> Self {
+        let mut b = Breakdown {
+            spans: set.spans.len() as u64,
+            spec_fills: set.spec_fills,
+            unattributed: set.unattributed_fills,
+            ..Breakdown::default()
+        };
+        for sp in &set.spans {
+            let st = sp.stages();
+            for (i, &v) in st.iter().enumerate() {
+                b.stages[i].record(v);
+                b.stage_ns[i] += v;
+            }
+            b.total.record(sp.total_ns());
+            b.total_ns += sp.total_ns();
+        }
+        b
+    }
+
+    fn rows(&self) -> [(&'static str, &LatencyHist, u64); 4] {
+        [
+            ("queue", &self.stages[0], self.stage_ns[0]),
+            ("transfer", &self.stages[1], self.stage_ns[1]),
+            ("fill", &self.stages[2], self.stage_ns[2]),
+            ("total", &self.total, self.total_ns),
+        ]
+    }
+
+    /// Aligned human-readable table.
+    pub fn text(&self, label: &str) -> String {
+        let mut s = format!(
+            "stage breakdown [{label}]: {} spans, {} spec fills, {} unattributed\n{:<10} {:>8} {:>10} {:>10} {:>10} {:>10} {:>12}\n",
+            self.spans, self.spec_fills, self.unattributed,
+            "stage", "count", "p50", "p99", "mean", "max", "total"
+        );
+        for (name, h, sum) in self.rows() {
+            s.push_str(&format!(
+                "{:<10} {:>8} {:>10} {:>10} {:>10} {:>10} {:>12}\n",
+                name,
+                h.count(),
+                fmt_ns(h.percentile(50.0)),
+                fmt_ns(h.percentile(99.0)),
+                fmt_ns(h.mean_ns() as u64),
+                fmt_ns(h.max_ns() as u64),
+                fmt_ns(sum),
+            ));
+        }
+        s
+    }
+
+    /// CSV form: one row per stage.
+    pub fn csv(&self, backend: &str, workload: &str) -> String {
+        let mut s =
+            String::from("backend,workload,stage,count,p50_ns,p99_ns,mean_ns,max_ns,total_ns\n");
+        for (name, h, sum) in self.rows() {
+            s.push_str(&format!(
+                "{backend},{workload},{name},{},{},{},{:.1},{:.0},{sum}\n",
+                h.count(),
+                h.percentile(50.0),
+                h.percentile(99.0),
+                h.mean_ns(),
+                h.max_ns(),
+            ));
+        }
+        s
+    }
+}
+
+// ---- trace-event JSON validation ------------------------------------
+
+/// A minimal JSON value, just enough to validate the emitter.
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a Value> {
+        match self {
+            Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON at byte {}", self.i))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        ensure!(
+            self.peek()? == c,
+            "expected '{}' at byte {}, found '{}'",
+            c as char,
+            self.i,
+            self.b[self.i] as char
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected '{}' at byte {}", c as char, self.i),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
+        ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.b[self.i] == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .map(Value::Num)
+            .ok_or_else(|| anyhow::anyhow!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = *self
+                .b
+                .get(self.i)
+                .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| anyhow::anyhow!("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' | b'\\' | b'/' => s.push(e as char),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' | b'f' => {}
+                        b'u' => {
+                            ensure!(self.i + 4 <= self.b.len(), "short \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape '\\{}'", e as char),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8 passes through unvalidated; the
+                    // emitter only writes ASCII names anyway.
+                    s.push(c as char);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(v));
+                }
+                c => bail!("expected ',' or ']' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.eat(b'{')?;
+        let mut kv = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.eat(b':')?;
+            kv.push((k, self.value()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(kv));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+}
+
+/// Parse `s` as trace-event JSON and check the schema the export
+/// promises: a top-level object with a `traceEvents` array whose
+/// elements are objects carrying a string `ph` and numeric `pid`, with
+/// duration events (`X`) additionally carrying numeric `ts`/`dur` and
+/// a `name`. Returns the number of events. Used by unit tests and the
+/// CI schema check; strict enough to catch emitter drift (a missing
+/// comma, an unescaped quote, a dropped field).
+pub fn validate_chrome_json(s: &str) -> Result<usize> {
+    let mut p = Parser {
+        b: s.as_bytes(),
+        i: 0,
+    };
+    let top = p.value()?;
+    p.ws();
+    ensure!(p.i == s.trim_end().len(), "trailing garbage after JSON");
+    let events = match top.get("traceEvents") {
+        Some(Value::Arr(evs)) => evs,
+        _ => bail!("missing traceEvents array"),
+    };
+    for (i, e) in events.iter().enumerate() {
+        let ph = match e.get("ph") {
+            Some(Value::Str(p)) => p.as_str(),
+            _ => bail!("event {i}: missing ph"),
+        };
+        ensure!(
+            matches!(e.get("pid"), Some(Value::Num(_))),
+            "event {i}: missing numeric pid"
+        );
+        match ph {
+            "X" => {
+                for k in ["ts", "dur"] {
+                    ensure!(
+                        matches!(e.get(k), Some(Value::Num(n)) if n.is_finite() && *n >= 0.0),
+                        "event {i}: X event needs non-negative {k}"
+                    );
+                }
+                ensure!(
+                    matches!(e.get("name"), Some(Value::Str(_))),
+                    "event {i}: X event needs a name"
+                );
+            }
+            "C" => ensure!(
+                matches!(e.get("args"), Some(Value::Obj(_))),
+                "event {i}: counter needs args"
+            ),
+            "i" | "M" | "b" | "e" => {}
+            other => bail!("event {i}: unexpected phase '{other}'"),
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceEventKind;
+
+    fn sample_set() -> SpanSet {
+        SpanSet {
+            spans: vec![
+                FaultSpan {
+                    gpu: 0,
+                    page: 7,
+                    start: 100,
+                    posted: Some(130),
+                    completed: Some(180),
+                    end: 180,
+                    write: true,
+                    joined: false,
+                },
+                FaultSpan {
+                    gpu: 0,
+                    page: 9,
+                    start: 120,
+                    posted: None,
+                    completed: None,
+                    end: 220,
+                    write: false,
+                    joined: true,
+                },
+            ],
+            evictions: vec![super::super::span::EvictSpan {
+                gpu: 0,
+                page: 7,
+                at: 400,
+                kind: TraceEventKind::EvictDirty,
+                bytes: 4096,
+            }],
+            wrs: vec![WrSpan {
+                gpu: 0,
+                page: 7,
+                wr_id: 5,
+                out: false,
+                posted: 130,
+                completed: Some(180),
+            }],
+            ..SpanSet::default()
+        }
+    }
+
+    #[test]
+    fn export_is_valid_trace_event_json() {
+        let samples = [
+            Sample {
+                at: 0,
+                occupied: 1,
+                qdepth_sum: 2,
+                qdepth_max: 2,
+                faults: 1,
+                hits: 0,
+                bytes_in: 4096,
+                bytes_out: 0,
+                evictions: 0,
+                thrash_refetches: 0,
+                prefetched_pages: 0,
+                prefetch_hits: 0,
+            },
+            Sample {
+                at: 1000,
+                occupied: 2,
+                qdepth_sum: 0,
+                qdepth_max: 0,
+                faults: 2,
+                hits: 5,
+                bytes_in: 8192,
+                bytes_out: 0,
+                evictions: 1,
+                thrash_refetches: 0,
+                prefetched_pages: 4,
+                prefetch_hits: 2,
+            },
+        ];
+        let j = chrome_trace_json(&sample_set(), &samples, "gpuvm/va\"quoted\"");
+        let n = validate_chrome_json(&j).expect("emitted JSON validates");
+        // 3 metadata + 2 fault spans + 1 wr span + 1 instant + 2×10 counters.
+        assert_eq!(n, 3 + 2 + 1 + 1 + 20);
+    }
+
+    #[test]
+    fn overlapping_spans_get_distinct_lanes() {
+        let set = sample_set();
+        let j = chrome_trace_json(&set, &[], "x");
+        // The two fault spans overlap in time: they must not share a tid.
+        assert!(j.contains("\"tid\":0"));
+        assert!(j.contains("\"tid\":1"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_json() {
+        assert!(validate_chrome_json("{").is_err());
+        assert!(validate_chrome_json("{}").is_err(), "no traceEvents");
+        assert!(validate_chrome_json("{\"traceEvents\":{}}").is_err());
+        assert!(
+            validate_chrome_json("{\"traceEvents\":[{\"ph\":\"X\",\"pid\":1}]}").is_err(),
+            "X without ts/dur/name"
+        );
+        assert!(validate_chrome_json("{\"traceEvents\":[]}").unwrap() == 0);
+        let ok = "{\"traceEvents\":[{\"ph\":\"X\",\"pid\":1,\"ts\":0.5,\"dur\":2,\"name\":\"a\"}]}";
+        assert_eq!(validate_chrome_json(ok).unwrap(), 1);
+    }
+
+    #[test]
+    fn breakdown_reconciles_with_span_set() {
+        let set = sample_set();
+        let b = Breakdown::from_spans(&set);
+        assert_eq!(b.spans, 2);
+        assert_eq!(b.stage_ns, set.stage_totals());
+        assert_eq!(b.total_ns, set.total_ns());
+        assert_eq!(
+            b.stage_ns.iter().sum::<u64>(),
+            b.total_ns,
+            "stages sum to total latency"
+        );
+        let text = b.text("test");
+        assert!(text.contains("queue"));
+        assert!(text.contains("transfer"));
+        let csv = b.csv("gpuvm", "va");
+        assert_eq!(csv.lines().count(), 5, "header + 4 stage rows");
+        assert!(csv.starts_with("backend,workload,stage"));
+    }
+}

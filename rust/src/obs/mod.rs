@@ -1,0 +1,136 @@
+//! Time-resolved observability: fault-lifecycle spans, an interval
+//! sampler, and Perfetto-loadable export.
+//!
+//! End-of-run [`crate::metrics::Metrics`] say a run was slow; this
+//! module says *where the time went* and *when*. Three pillars:
+//!
+//! - **Span tracing** ([`span`]) — derives per-fault lifecycle spans
+//!   (fault → wr-post → wr-complete → fill, plus the waiter-release
+//!   hop) from the canonical [`crate::trace`] event stream. The stage
+//!   arithmetic is one shared pure function, [`stage_split`], used by
+//!   *both* the runtimes (which record stage histograms into `Metrics`
+//!   at fill time) and the trace-derived span builder — so the two
+//!   decompositions reconcile bit for bit by construction, and a
+//!   property test holds them to it.
+//! - **Interval sampler** ([`sampler`]) — a sim-time sampler (config
+//!   section `[obs]`, default off) recording time-series of frame
+//!   occupancy, per-queue depth, and the cumulative Metrics counters
+//!   (faults, bytes, thrash refetches, prefetch accuracy) from which
+//!   the exporter derives per-interval rates.
+//! - **Export** ([`export`]) — Chrome trace-event JSON (open in
+//!   [Perfetto](https://ui.perfetto.dev): spans as duration events on
+//!   per-GPU tracks, WRs on per-GPU transport tracks, samples as
+//!   counter tracks) and a text/CSV latency-breakdown report (p50/p99
+//!   per stage). The `gpuvm profile` CLI verb drives both.
+//!
+//! ## Stage model
+//!
+//! ```text
+//!  fault                wr-post          wr-complete        fill   waiter
+//!    |---- queue ---------|---- transfer ----|---- fill -----|-(wake)-|
+//!    |<------------- fault latency (Metrics) ------------->|
+//! ```
+//!
+//! - **queue** — fault observed → WR posted to the transport (GPUVM:
+//!   doorbell batching + WR insertion; UVM: driver batch wait + host
+//!   OS work, the paper's dominant term).
+//! - **transfer** — WR posted → completion observed (link time plus
+//!   any queueing inside the engine).
+//! - **fill** — completion observed → page mapped. Both runtimes map
+//!   at completion-processing time, so this stage is 0 today; it is
+//!   kept so a future deferred-map design shows up as a stage, not as
+//!   an accounting leak.
+//! - **wake** — fill → waiter release (GPUVM: CQ poll latency; UVM:
+//!   µTLB re-hit). Recorded separately in `Metrics::stage_wake`;
+//!   *excluded* from the latency sum, which matches the runtimes'
+//!   `fault_latency` (fault → fill) definition exactly.
+//!
+//! Speculative fills have no demand latency and produce no span; a
+//! demand join of an in-flight speculative fetch opens its span at the
+//! join (GPUVM emits `promote`; [`stage_split`] clamps the pre-join
+//! `wr-post` so stage sums stay exact). UVM's *silent* join (legal
+//! only under page-granular prefetch geometry) is counted as an
+//! unattributed fill — the span builder reports it rather than guess.
+
+pub mod export;
+pub mod sampler;
+pub mod span;
+
+pub use export::{chrome_trace_json, validate_chrome_json, Breakdown};
+pub use sampler::{Sample, Sampler, SharedObs};
+pub use span::{build_spans, EvictSpan, FaultSpan, SpanIssue, SpanSet, WrSpan};
+
+use crate::sim::SimTime;
+
+/// Named lifecycle stages, in order. `Wake` is measured but excluded
+/// from the fault-latency sum (see the module docs).
+pub const STAGE_NAMES: [&str; 4] = ["queue", "transfer", "fill", "wake"];
+
+/// Split one fault's lifecycle `[start, end]` into the three summed
+/// stages `[queue, transfer, fill]` given the optional WR post /
+/// completion instants.
+///
+/// This is the *single* source of stage arithmetic: the runtimes call
+/// it when recording `Metrics::stage_*` at fill time, and the span
+/// builder calls it on trace-derived spans — identical inputs, so the
+/// two sides agree bit for bit. Invariants, enforced by clamping:
+///
+/// - the three stages always sum to `end.max(start) - start`, i.e. to
+///   the recorded fault latency, even when `post` predates `start`
+///   (demand join of an in-flight speculative fetch) or is missing
+///   (no WR observed: everything becomes queue + fill).
+pub fn stage_split(
+    start: SimTime,
+    post: Option<SimTime>,
+    complete: Option<SimTime>,
+    end: SimTime,
+) -> [u64; 3] {
+    let end = end.max(start);
+    let p = post.unwrap_or(start).clamp(start, end);
+    let c = complete.unwrap_or(end).clamp(p, end);
+    [p - start, c - p, end - c]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_split_sums_to_latency() {
+        // Ordinary fault: post and complete inside [start, end].
+        assert_eq!(stage_split(100, Some(130), Some(180), 200), [30, 50, 20]);
+        // No WR observed at all: all queue... no — post defaults to
+        // start, complete defaults to end: all transfer.
+        assert_eq!(stage_split(100, None, None, 200), [0, 100, 0]);
+        // Post before start (spec-join): clamped, queue = 0.
+        assert_eq!(stage_split(100, Some(40), Some(150), 200), [0, 50, 50]);
+        // Complete before post (cannot happen, but must not panic or
+        // break the sum): clamped to post.
+        assert_eq!(stage_split(100, Some(150), Some(120), 200), [50, 0, 50]);
+        // Degenerate zero-length span.
+        assert_eq!(stage_split(100, Some(100), Some(100), 100), [0, 0, 0]);
+        // end < start (never emitted, but total must clamp, not wrap).
+        assert_eq!(stage_split(100, None, None, 50), [0, 0, 0]);
+    }
+
+    #[test]
+    fn stage_split_exhaustive_small() {
+        // Brute-force the clamp algebra: for every combination in a
+        // small grid the stages are non-negative (u64 guarantees it by
+        // not panicking) and sum exactly to the span length.
+        for start in 0..6u64 {
+            for end in 0..6u64 {
+                for post in [None, Some(0), Some(2), Some(5), Some(9)] {
+                    for complete in [None, Some(0), Some(3), Some(9)] {
+                        let st = stage_split(start, post, complete, end);
+                        assert_eq!(
+                            st.iter().sum::<u64>(),
+                            end.max(start) - start,
+                            "split {st:?} for {start}..{end} post={post:?} complete={complete:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Interval time-series sampling on the simulated clock.
+//!
+//! A [`Sampler`] records at most one [`Sample`] per configured sim-time
+//! interval (`obs.interval_ns`), ticked from the paged memory systems'
+//! hot paths (`access` / `on_event` entry). Samples carry *cumulative*
+//! Metrics counters plus instantaneous gauges (frame occupancy, queue
+//! depth); the exporter differences consecutive samples to produce
+//! per-interval rates, so mid-run sampling never needs end-of-run-only
+//! state (link busy time, for instance, is exported by `finalize` and
+//! is deliberately not sampled here).
+//!
+//! Ownership mirrors the trace sink: systems hold an
+//! `Option<SharedObs>` attached via
+//! [`crate::memsys::MemorySystem::set_obs`], default `None` — the
+//! disabled path costs one `Option` check per tick site, which the
+//! self-benchmark (`bench_selfperf`) holds under its overhead budget.
+
+use crate::config::ObsConfig;
+use crate::metrics::Metrics;
+use crate::sim::SimTime;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// The handle a memory system holds (single-threaded, like
+/// [`crate::trace::SharedSink`]).
+pub type SharedObs = Rc<RefCell<Sampler>>;
+
+/// One interval sample: gauges are instantaneous, counters cumulative.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sample {
+    /// Simulated time the sample was taken, ns.
+    pub at: SimTime,
+    /// Occupied frames (GPUVM) / resident + in-flight groups (UVM).
+    pub occupied: u64,
+    /// Sum of in-flight WRs across transport queues.
+    pub qdepth_sum: u64,
+    /// Deepest single queue.
+    pub qdepth_max: u32,
+    /// Cumulative counters, copied from [`Metrics`] at sample time.
+    pub faults: u64,
+    pub hits: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub evictions: u64,
+    pub thrash_refetches: u64,
+    pub prefetched_pages: u64,
+    pub prefetch_hits: u64,
+}
+
+/// Interval sampler; see the module docs.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    interval_ns: u64,
+    /// 0 = unlimited.
+    max_samples: u64,
+    next_at: SimTime,
+    pub samples: Vec<Sample>,
+    /// Hit `max_samples` and dropped the tail.
+    pub truncated: bool,
+}
+
+impl Sampler {
+    pub fn new(interval_ns: u64, max_samples: u64) -> Self {
+        Self {
+            interval_ns: interval_ns.max(1),
+            max_samples,
+            next_at: 0,
+            samples: Vec::new(),
+            truncated: false,
+        }
+    }
+
+    pub fn from_cfg(cfg: &ObsConfig) -> Self {
+        Self::new(cfg.interval_ns, cfg.max_samples)
+    }
+
+    /// Build the shared handle the memory systems hold.
+    pub fn shared(cfg: &ObsConfig) -> SharedObs {
+        Rc::new(RefCell::new(Self::from_cfg(cfg)))
+    }
+
+    pub fn interval_ns(&self) -> u64 {
+        self.interval_ns
+    }
+
+    /// Cheap pre-check so tick sites can skip gauge computation.
+    #[inline]
+    pub fn due(&self, now: SimTime) -> bool {
+        now >= self.next_at
+    }
+
+    /// Record a sample if `now` entered a new interval. `occupied` and
+    /// `queues` are the caller's instantaneous gauges; counters come
+    /// from `m`. Bumps `m.obs_samples` so sampling activity lands in
+    /// the metrics fingerprint (identical runs sample identically).
+    pub fn tick(&mut self, now: SimTime, m: &mut Metrics, occupied: u64, queues: &[u32]) {
+        if now < self.next_at {
+            return;
+        }
+        // Advance past the current interval even when at capacity, so
+        // `due` stays cheap and truncation is stable.
+        self.next_at = (now / self.interval_ns + 1) * self.interval_ns;
+        if self.max_samples != 0 && self.samples.len() as u64 >= self.max_samples {
+            self.truncated = true;
+            return;
+        }
+        m.obs_samples += 1;
+        self.samples.push(Sample {
+            at: now,
+            occupied,
+            qdepth_sum: queues.iter().map(|&q| q as u64).sum(),
+            qdepth_max: queues.iter().copied().max().unwrap_or(0),
+            faults: m.faults,
+            hits: m.hits,
+            bytes_in: m.bytes_in,
+            bytes_out: m.bytes_out,
+            evictions: m.evictions,
+            thrash_refetches: m.thrash_refetches,
+            prefetched_pages: m.prefetched_pages,
+            prefetch_hits: m.prefetch_hits,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_sample_per_interval() {
+        let mut s = Sampler::new(100, 0);
+        let mut m = Metrics::new();
+        for now in [0, 10, 99, 100, 150, 250, 1000] {
+            m.faults += 1;
+            s.tick(now, &mut m, 5, &[1, 3, 0]);
+        }
+        // Intervals entered: [0,100) at 0, [100,200) at 100, [200,300)
+        // at 250, [1000,1100) at 1000.
+        let ats: Vec<_> = s.samples.iter().map(|x| x.at).collect();
+        assert_eq!(ats, vec![0, 100, 250, 1000]);
+        assert_eq!(m.obs_samples, 4);
+        assert_eq!(s.samples[0].qdepth_sum, 4);
+        assert_eq!(s.samples[0].qdepth_max, 3);
+        assert_eq!(s.samples[0].occupied, 5);
+        // Counters are cumulative snapshots.
+        assert_eq!(s.samples[0].faults, 1);
+        assert_eq!(s.samples[3].faults, 7);
+        assert!(!s.truncated);
+    }
+
+    #[test]
+    fn cap_truncates_but_keeps_advancing() {
+        let mut s = Sampler::new(10, 2);
+        let mut m = Metrics::new();
+        for now in [0, 10, 20, 30] {
+            s.tick(now, &mut m, 0, &[]);
+        }
+        assert_eq!(s.samples.len(), 2);
+        assert!(s.truncated);
+        assert_eq!(m.obs_samples, 2);
+        assert!(!s.due(35), "cap hit must not re-arm the current interval");
+    }
+
+    #[test]
+    fn zero_interval_is_clamped() {
+        let s = Sampler::new(0, 0);
+        assert_eq!(s.interval_ns(), 1);
+    }
+}

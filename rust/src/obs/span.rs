@@ -1,0 +1,522 @@
+//! Fault-lifecycle span derivation from the canonical trace stream.
+//!
+//! [`build_spans`] replays a captured [`crate::trace`] event stream and
+//! reconstructs, per demand fault, the `fault → wr-post → wr-complete
+//! → fill` lifecycle as a [`FaultSpan`], plus eviction instants and
+//! work-request spans for the Perfetto export. The builder is family-
+//! aware ([`ProtocolFamily`]) because the two paged systems do not
+//! share every edge: GPUVM announces a demand join of an in-flight
+//! speculative fetch with `promote`, while UVM's join is silent (legal
+//! only under page-granular prefetch geometry) — silent joins surface
+//! as [`SpanSet::unattributed_fills`] rather than fabricated spans.
+//!
+//! Malformed streams are reported, not panicked over: issues reuse the
+//! protocol analyzer's violation taxonomy
+//! ([`crate::analyze::protocol::ViolationKind`]) so a span-level
+//! finding names the same invariant the trace linter would. End-of-
+//! stream orphans (unfilled faults, unmatched WRs) are suppressed for
+//! truncated captures — a dropped tail is not a protocol violation.
+
+use super::stage_split;
+use crate::analyze::protocol::{ProtocolFamily, ViolationKind};
+use crate::sim::SimTime;
+use crate::trace::{TraceEvent, TraceEventKind};
+use crate::util::fxhash::FxHashMap;
+
+/// One demand fault's reconstructed lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpan {
+    pub gpu: u8,
+    /// Global page id (UVM: group-head page).
+    pub page: u64,
+    /// Fault observed (or demand join of an in-flight speculative
+    /// fetch — see `joined`).
+    pub start: SimTime,
+    /// Fetch WR posted to the transport, if one was observed. May
+    /// predate `start` for joined spans; [`stage_split`] clamps.
+    pub posted: Option<SimTime>,
+    /// Fetch WR completion observed, if any.
+    pub completed: Option<SimTime>,
+    /// Fill: the page became resident. This bounds the fault latency.
+    pub end: SimTime,
+    /// Write intent on the faulting access.
+    pub write: bool,
+    /// Opened by a `promote` (demand join of an in-flight speculative
+    /// fetch) rather than a `fault`.
+    pub joined: bool,
+}
+
+impl FaultSpan {
+    /// `[queue, transfer, fill]` durations; sums to [`Self::total_ns`].
+    pub fn stages(&self) -> [u64; 3] {
+        stage_split(self.start, self.posted, self.completed, self.end)
+    }
+
+    /// Total fault latency (fault → fill), as the runtimes record it.
+    pub fn total_ns(&self) -> u64 {
+        self.end.max(self.start) - self.start
+    }
+}
+
+/// An eviction instant (clean / dirty / forced), for the export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictSpan {
+    pub gpu: u8,
+    pub page: u64,
+    pub at: SimTime,
+    pub kind: TraceEventKind,
+    /// Write-back bytes (0 for clean evictions).
+    pub bytes: u64,
+}
+
+/// One work request's post → completion window, for the export's
+/// per-GPU transport tracks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WrSpan {
+    pub gpu: u8,
+    pub page: u64,
+    pub wr_id: u64,
+    /// Direction: `true` = GPU → host (write-back).
+    pub out: bool,
+    pub posted: SimTime,
+    pub completed: Option<SimTime>,
+}
+
+/// A span-level protocol finding, named with the analyzer's taxonomy.
+#[derive(Debug, Clone)]
+pub struct SpanIssue {
+    /// Index of the offending event in the stream.
+    pub index: usize,
+    pub kind: ViolationKind,
+    pub detail: String,
+}
+
+/// Everything [`build_spans`] derives from one stream.
+#[derive(Debug, Clone, Default)]
+pub struct SpanSet {
+    /// Closed demand-fault spans, in fill order (the order the
+    /// runtimes record `fault_latency`, which reconciliation relies
+    /// on).
+    pub spans: Vec<FaultSpan>,
+    pub evictions: Vec<EvictSpan>,
+    /// Every WR observed, in post order.
+    pub wrs: Vec<WrSpan>,
+    pub issues: Vec<SpanIssue>,
+    /// Demand fills with no observable opening event — UVM's silent
+    /// join of a speculative pending group. The runtimes *did* record
+    /// a fault latency for these, so exact trace↔metrics
+    /// reconciliation is only claimed when this is 0.
+    pub unattributed_fills: u64,
+    /// Speculative fills (no demand waiter; no span).
+    pub spec_fills: u64,
+    /// The capture dropped its tail; end-of-stream orphans are
+    /// expected and not reported as issues.
+    pub truncated: bool,
+}
+
+impl SpanSet {
+    /// Sum of each stage over all closed spans:
+    /// `[queue, transfer, fill]` — the trace-derived counterpart of
+    /// `Metrics::{stage_queue_ns, stage_transfer_ns, stage_fill_ns}`.
+    pub fn stage_totals(&self) -> [u64; 3] {
+        let mut t = [0u64; 3];
+        for s in &self.spans {
+            let st = s.stages();
+            t[0] += st[0];
+            t[1] += st[1];
+            t[2] += st[2];
+        }
+        t
+    }
+
+    /// Sum of total fault latency over all closed spans — the
+    /// trace-derived counterpart of `Metrics::fault_service_ns`.
+    pub fn total_ns(&self) -> u64 {
+        self.spans.iter().map(FaultSpan::total_ns).sum()
+    }
+
+    /// Every demand fill is attributable to an observed fault/join:
+    /// the precondition for bit-for-bit metrics reconciliation.
+    pub fn fully_attributed(&self) -> bool {
+        self.unattributed_fills == 0
+    }
+}
+
+/// Per-page open-span state while scanning the stream.
+struct Open {
+    start: SimTime,
+    write: bool,
+    joined: bool,
+}
+
+/// Residency as the span builder needs it (a skeleton of the linter's
+/// full state machine — just enough to tell a promote-touch from a
+/// promote-join).
+#[derive(PartialEq, Eq, Clone, Copy)]
+enum Res {
+    Unmapped,
+    Resident,
+    ResidentSpec,
+}
+
+/// Derive spans from a captured stream. `family` selects the emission
+/// profile (see [`crate::analyze::protocol`]); `truncated` suppresses
+/// end-of-stream orphan reports.
+pub fn build_spans(
+    events: &[TraceEvent],
+    family: ProtocolFamily,
+    truncated: bool,
+) -> SpanSet {
+    let mut out = SpanSet {
+        truncated,
+        ..SpanSet::default()
+    };
+    let mut open: FxHashMap<(u8, u64), Open> = FxHashMap::default();
+    // Last inbound (fetch) WR post per page: (posted, wr_id).
+    let mut inflight: FxHashMap<(u8, u64), (SimTime, u64)> = FxHashMap::default();
+    // wr_id → index into out.wrs (posted), and completion times.
+    let mut wr_idx: FxHashMap<u64, usize> = FxHashMap::default();
+    let mut completions: FxHashMap<u64, SimTime> = FxHashMap::default();
+    let mut res: FxHashMap<(u8, u64), Res> = FxHashMap::default();
+
+    let state = |res: &FxHashMap<(u8, u64), Res>, key: &(u8, u64)| {
+        res.get(key).copied().unwrap_or(Res::Unmapped)
+    };
+
+    for (i, ev) in events.iter().enumerate() {
+        let key = (ev.gpu, ev.page);
+        match ev.kind {
+            TraceEventKind::Fault => {
+                if open.insert(
+                    key,
+                    Open {
+                        start: ev.at,
+                        write: ev.aux & 1 == 1,
+                        joined: false,
+                    },
+                )
+                .is_some()
+                {
+                    out.issues.push(SpanIssue {
+                        index: i,
+                        kind: ViolationKind::IllegalTransition,
+                        detail: format!(
+                            "gpu {} page {}: fault while a fault is already pending",
+                            ev.gpu, ev.page
+                        ),
+                    });
+                }
+            }
+            TraceEventKind::Promote => {
+                match state(&res, &key) {
+                    // First demand touch of a resident speculative
+                    // page: a touch, not a span.
+                    Res::ResidentSpec => {
+                        res.insert(key, Res::Resident);
+                    }
+                    // GPUVM: demand join of an in-flight speculative
+                    // fetch — the span starts *here* (the runtimes
+                    // reset `started` at the join).
+                    Res::Unmapped if family == ProtocolFamily::GpuVm => {
+                        open.insert(
+                            key,
+                            Open {
+                                start: ev.at,
+                                write: false,
+                                joined: true,
+                            },
+                        );
+                    }
+                    _ => out.issues.push(SpanIssue {
+                        index: i,
+                        kind: ViolationKind::IllegalTransition,
+                        detail: format!(
+                            "gpu {} page {}: promote in an inadmissible state",
+                            ev.gpu, ev.page
+                        ),
+                    }),
+                }
+            }
+            TraceEventKind::Fill => {
+                if let Some(o) = open.remove(&key) {
+                    let (posted, wr) = match inflight.remove(&key) {
+                        Some((t, id)) => (Some(t), Some(id)),
+                        None => (None, None),
+                    };
+                    out.spans.push(FaultSpan {
+                        gpu: ev.gpu,
+                        page: ev.page,
+                        start: o.start,
+                        posted,
+                        completed: wr.and_then(|id| completions.get(&id).copied()),
+                        end: ev.at,
+                        write: o.write,
+                        joined: o.joined,
+                    });
+                } else {
+                    inflight.remove(&key);
+                    if family == ProtocolFamily::Uvm {
+                        // Silent join of a speculative pending group.
+                        out.unattributed_fills += 1;
+                    } else {
+                        out.issues.push(SpanIssue {
+                            index: i,
+                            kind: ViolationKind::IllegalTransition,
+                            detail: format!(
+                                "gpu {} page {}: demand fill with no pending fault",
+                                ev.gpu, ev.page
+                            ),
+                        });
+                    }
+                }
+                res.insert(key, Res::Resident);
+            }
+            TraceEventKind::SpecFill => {
+                out.spec_fills += 1;
+                inflight.remove(&key);
+                res.insert(key, Res::ResidentSpec);
+            }
+            TraceEventKind::EvictClean
+            | TraceEventKind::EvictDirty
+            | TraceEventKind::EvictForced => {
+                if state(&res, &key) == Res::Unmapped {
+                    out.issues.push(SpanIssue {
+                        index: i,
+                        kind: ViolationKind::EvictNonResident,
+                        detail: format!(
+                            "gpu {} page {}: {} of a non-resident page",
+                            ev.gpu,
+                            ev.page,
+                            ev.kind.name()
+                        ),
+                    });
+                }
+                res.insert(key, Res::Unmapped);
+                out.evictions.push(EvictSpan {
+                    gpu: ev.gpu,
+                    page: ev.page,
+                    at: ev.at,
+                    kind: ev.kind,
+                    bytes: ev.aux,
+                });
+            }
+            TraceEventKind::WrPost => {
+                let wr_id = ev.aux >> 1;
+                let out_dir = ev.aux & 1 == 1;
+                if wr_idx.contains_key(&wr_id) {
+                    out.issues.push(SpanIssue {
+                        index: i,
+                        kind: ViolationKind::DuplicateWrPost,
+                        detail: format!("wr {wr_id} posted twice"),
+                    });
+                }
+                wr_idx.insert(wr_id, out.wrs.len());
+                out.wrs.push(WrSpan {
+                    gpu: ev.gpu,
+                    page: ev.page,
+                    wr_id,
+                    out: out_dir,
+                    posted: ev.at,
+                    completed: None,
+                });
+                if !out_dir {
+                    inflight.insert(key, (ev.at, wr_id));
+                }
+            }
+            TraceEventKind::WrComplete => {
+                let wr_id = ev.aux >> 1;
+                match wr_idx.get(&wr_id) {
+                    Some(&idx) => {
+                        if completions.insert(wr_id, ev.at).is_some() {
+                            out.issues.push(SpanIssue {
+                                index: i,
+                                kind: ViolationKind::NegativeRefcount,
+                                detail: format!("wr {wr_id} completed twice"),
+                            });
+                        }
+                        out.wrs[idx].completed = Some(ev.at);
+                    }
+                    None => out.issues.push(SpanIssue {
+                        index: i,
+                        kind: ViolationKind::OrphanWrComplete,
+                        detail: format!("wr {wr_id} completed but never posted"),
+                    }),
+                }
+            }
+        }
+    }
+
+    if !truncated {
+        let mut orphans: Vec<_> = open.iter().collect();
+        orphans.sort_by_key(|(k, _)| **k);
+        for (k, o) in orphans {
+            out.issues.push(SpanIssue {
+                index: events.len(),
+                kind: ViolationKind::UnfilledFault,
+                detail: format!(
+                    "gpu {} page {}: {} at {} ns never filled",
+                    k.0,
+                    k.1,
+                    if o.joined { "join" } else { "fault" },
+                    o.start
+                ),
+            });
+        }
+        for w in &out.wrs {
+            if w.completed.is_none() {
+                out.issues.push(SpanIssue {
+                    index: events.len(),
+                    kind: ViolationKind::UnmatchedWrPost,
+                    detail: format!("wr {} posted at {} ns never completed", w.wr_id, w.posted),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: SimTime, gpu: u8, kind: TraceEventKind, page: u64, aux: u64) -> TraceEvent {
+        TraceEvent {
+            at,
+            page,
+            aux,
+            kind,
+            gpu,
+        }
+    }
+
+    #[test]
+    fn plain_fault_lifecycle_becomes_one_span() {
+        use TraceEventKind as K;
+        let events = [
+            ev(100, 0, K::Fault, 7, 1),
+            ev(130, 0, K::WrPost, 7, 5 << 1),
+            ev(180, 0, K::WrComplete, 0, 5 << 1),
+            ev(180, 0, K::Fill, 7, 4096),
+        ];
+        let s = build_spans(&events, ProtocolFamily::GpuVm, false);
+        assert!(s.issues.is_empty(), "{:?}", s.issues);
+        assert_eq!(s.spans.len(), 1);
+        let sp = &s.spans[0];
+        assert_eq!((sp.start, sp.posted, sp.completed, sp.end), (100, Some(130), Some(180), 180));
+        assert!(sp.write);
+        assert!(!sp.joined);
+        assert_eq!(sp.stages(), [30, 50, 0]);
+        assert_eq!(sp.total_ns(), 80);
+        assert_eq!(s.stage_totals(), [30, 50, 0]);
+        assert_eq!(s.total_ns(), 80);
+        assert_eq!(s.wrs.len(), 1);
+        assert_eq!(s.wrs[0].completed, Some(180));
+        assert!(s.fully_attributed());
+    }
+
+    #[test]
+    fn promote_join_opens_span_and_clamps_prepost() {
+        use TraceEventKind as K;
+        // Speculative fetch posted at 50, demand join at 100, fill 150.
+        let events = [
+            ev(50, 0, K::WrPost, 9, 3 << 1),
+            ev(100, 0, K::Promote, 9, 0),
+            ev(150, 0, K::WrComplete, 0, 3 << 1),
+            ev(150, 0, K::Fill, 9, 4096),
+        ];
+        let s = build_spans(&events, ProtocolFamily::GpuVm, false);
+        assert!(s.issues.is_empty(), "{:?}", s.issues);
+        assert_eq!(s.spans.len(), 1);
+        assert!(s.spans[0].joined);
+        // Post predates the join: clamp makes queue 0, sum stays exact.
+        assert_eq!(s.spans[0].stages(), [0, 50, 0]);
+        assert_eq!(s.spans[0].total_ns(), 50);
+    }
+
+    #[test]
+    fn promote_of_resident_spec_page_is_a_touch_not_a_span() {
+        use TraceEventKind as K;
+        let events = [
+            ev(10, 0, K::WrPost, 4, 1 << 1),
+            ev(20, 0, K::WrComplete, 0, 1 << 1),
+            ev(20, 0, K::SpecFill, 4, 4096),
+            ev(90, 0, K::Promote, 4, 0),
+        ];
+        let s = build_spans(&events, ProtocolFamily::GpuVm, false);
+        assert!(s.issues.is_empty(), "{:?}", s.issues);
+        assert!(s.spans.is_empty());
+        assert_eq!(s.spec_fills, 1);
+    }
+
+    #[test]
+    fn uvm_silent_join_counts_unattributed() {
+        use TraceEventKind as K;
+        let events = [
+            ev(10, 0, K::WrPost, 4, 1 << 1),
+            ev(60, 0, K::WrComplete, 0, 1 << 1),
+            ev(60, 0, K::Fill, 4, 65536),
+        ];
+        // UVM: a demand fill from unmapped is legal (silent join).
+        let s = build_spans(&events, ProtocolFamily::Uvm, false);
+        assert!(s.issues.is_empty(), "{:?}", s.issues);
+        assert_eq!(s.unattributed_fills, 1);
+        assert!(!s.fully_attributed());
+        // GPUVM: the same stream is a protocol violation.
+        let s = build_spans(&events, ProtocolFamily::GpuVm, false);
+        assert_eq!(s.issues.len(), 1);
+        assert_eq!(s.issues[0].kind, ViolationKind::IllegalTransition);
+    }
+
+    #[test]
+    fn orphans_reported_only_when_not_truncated() {
+        use TraceEventKind as K;
+        let events = [
+            ev(100, 0, K::Fault, 7, 0),
+            ev(130, 0, K::WrPost, 7, 5 << 1),
+        ];
+        let s = build_spans(&events, ProtocolFamily::GpuVm, false);
+        let kinds: Vec<_> = s.issues.iter().map(|i| i.kind).collect();
+        assert!(kinds.contains(&ViolationKind::UnfilledFault), "{kinds:?}");
+        assert!(kinds.contains(&ViolationKind::UnmatchedWrPost), "{kinds:?}");
+        let s = build_spans(&events, ProtocolFamily::GpuVm, true);
+        assert!(s.issues.is_empty(), "truncated tail is not a violation");
+        assert!(s.truncated);
+    }
+
+    #[test]
+    fn wr_ledger_violations_are_named() {
+        use TraceEventKind as K;
+        let events = [
+            ev(10, 0, K::WrComplete, 0, 9 << 1),
+            ev(20, 0, K::WrPost, 3, 2 << 1),
+            ev(25, 0, K::WrPost, 3, 2 << 1),
+            ev(30, 0, K::WrComplete, 0, 2 << 1),
+            ev(35, 0, K::WrComplete, 0, 2 << 1),
+        ];
+        let s = build_spans(&events, ProtocolFamily::GpuVm, true);
+        let kinds: Vec<_> = s.issues.iter().map(|i| i.kind).collect();
+        assert!(kinds.contains(&ViolationKind::OrphanWrComplete));
+        assert!(kinds.contains(&ViolationKind::DuplicateWrPost));
+        assert!(kinds.contains(&ViolationKind::NegativeRefcount));
+    }
+
+    #[test]
+    fn evictions_collected_and_double_evict_flagged() {
+        use TraceEventKind as K;
+        let events = [
+            ev(10, 1, K::Fault, 7, 0),
+            ev(20, 1, K::WrPost, 7, 1 << 1),
+            ev(30, 1, K::WrComplete, 0, 1 << 1),
+            ev(30, 1, K::Fill, 7, 4096),
+            ev(50, 1, K::EvictDirty, 7, 4096),
+            ev(60, 1, K::EvictClean, 7, 0),
+        ];
+        let s = build_spans(&events, ProtocolFamily::GpuVm, true);
+        assert_eq!(s.evictions.len(), 2);
+        assert_eq!(s.evictions[0].bytes, 4096);
+        assert_eq!(
+            s.issues.iter().filter(|i| i.kind == ViolationKind::EvictNonResident).count(),
+            1
+        );
+    }
+}

@@ -289,6 +289,20 @@ pub fn capture_run(
     backend_name: &str,
     workload: &mut dyn Workload,
 ) -> Result<(Vec<TraceEvent>, bool, RunResult)> {
+    let (events, truncated, r, _) = capture_run_observed(cfg, backend_name, workload)?;
+    Ok((events, truncated, r))
+}
+
+/// [`capture_run`] plus the interval sampler: when `cfg.obs.enabled`, a
+/// [`crate::obs::Sampler`] is attached alongside the recorder and
+/// returned with its samples (empty, never ticked, when obs is off).
+/// The `gpuvm profile` verb and the obs tests use this; plain capture
+/// callers keep the narrower [`capture_run`] signature.
+pub fn capture_run_observed(
+    cfg: &SystemConfig,
+    backend_name: &str,
+    workload: &mut dyn Workload,
+) -> Result<(Vec<TraceEvent>, bool, RunResult, crate::obs::Sampler)> {
     let b = backend::lookup(backend_name)?;
     let mut mem = b.build_memsys(cfg).ok_or_else(|| {
         anyhow::anyhow!(
@@ -298,13 +312,21 @@ pub fn capture_run(
     })?;
     let rec = Rc::new(RefCell::new(Recorder::with_cap(cfg.trace.max_events)));
     mem.set_trace_sink(rec.clone());
+    let obs = crate::obs::Sampler::shared(&cfg.obs);
+    if cfg.obs.enabled {
+        mem.set_obs(obs.clone());
+    }
     let r = exec::run(cfg, workload, mem.as_mut())?;
     drop(mem);
     let rec = match Rc::try_unwrap(rec) {
         Ok(cell) => cell.into_inner(),
         Err(rc) => rc.borrow().clone(),
     };
-    Ok((rec.events, rec.truncated, r))
+    let obs = match Rc::try_unwrap(obs) {
+        Ok(cell) => cell.into_inner(),
+        Err(rc) => rc.borrow().clone(),
+    };
+    Ok((rec.events, rec.truncated, r, obs))
 }
 
 /// Capture an already-constructed workload (`label` becomes the trace's
@@ -315,7 +337,19 @@ pub fn capture_workload(
     workload: &mut dyn Workload,
     label: &str,
 ) -> Result<(Trace, RunResult)> {
-    let (events, truncated, r) = capture_run(cfg, backend_name, workload)?;
+    let (t, r, _) = capture_workload_observed(cfg, backend_name, workload, label)?;
+    Ok((t, r))
+}
+
+/// [`capture_workload`] plus the interval sampler (see
+/// [`capture_run_observed`]).
+pub fn capture_workload_observed(
+    cfg: &SystemConfig,
+    backend_name: &str,
+    workload: &mut dyn Workload,
+    label: &str,
+) -> Result<(Trace, RunResult, crate::obs::Sampler)> {
+    let (events, truncated, r, obs) = capture_run_observed(cfg, backend_name, workload)?;
     let meta = TraceMeta {
         backend: backend_name.to_string(),
         workload: label.to_string(),
@@ -332,7 +366,7 @@ pub fn capture_workload(
             })
             .collect(),
     };
-    Ok((Trace { meta, events }, r))
+    Ok((Trace { meta, events }, r, obs))
 }
 
 /// Capture `spec` under `backend_name` on `cfg`'s testbed. Advising
@@ -345,11 +379,23 @@ pub fn capture(
     opts: &BuildOpts,
     backend_name: &str,
 ) -> Result<(Trace, RunResult)> {
+    let (t, r, _) = capture_observed(cfg, spec, opts, backend_name)?;
+    Ok((t, r))
+}
+
+/// [`capture`] plus the interval sampler (see [`capture_run_observed`]);
+/// the `gpuvm profile run` verb's capture path.
+pub fn capture_observed(
+    cfg: &SystemConfig,
+    spec: &WorkloadSpec,
+    opts: &BuildOpts,
+    backend_name: &str,
+) -> Result<(Trace, RunResult, crate::obs::Sampler)> {
     let b = backend::lookup(backend_name)?;
     let mut o = opts.clone();
     o.advise = o.advise || b.advise();
     let mut w = spec.build(&o)?;
-    capture_workload(cfg, backend_name, w.as_mut(), spec.raw())
+    capture_workload_observed(cfg, backend_name, w.as_mut(), spec.raw())
 }
 
 // ---- golden traces ---------------------------------------------------

@@ -67,6 +67,14 @@ struct PendingFault {
     waiters: Vec<SlotId>,
     write: bool,
     started: SimTime,
+    /// When the driver posted the group's DMA WR
+    /// ([`crate::obs::stage_split`]'s queue/transfer boundary: driver
+    /// batching + host OS work land before it). None until the driver
+    /// retires the fault.
+    posted: Option<SimTime>,
+    /// The WR's completion time, known at doorbell time on the driver
+    /// path (equals the group's arrival).
+    completed: Option<SimTime>,
     /// Policy-issued speculative transfer (no demand waiter yet): no
     /// fault-latency sample, and a pre-arrival demand join counts as a
     /// prefetch hit.
@@ -128,6 +136,9 @@ pub struct UvmSystem {
     /// Optional event-trace sink ([`crate::trace`]): records the
     /// canonical fault/fill/evict/WR stream when attached.
     sink: Option<trace::SharedSink>,
+    /// Optional interval sampler ([`crate::obs`]), ticked from the
+    /// access/event hot paths when attached (default None: one branch).
+    obs: Option<crate::obs::SharedObs>,
 }
 
 impl UvmSystem {
@@ -173,6 +184,7 @@ impl UvmSystem {
             next_wr: 1,
             cq_buf: Vec::with_capacity(4),
             sink: None,
+            obs: None,
             cfg: cfg.clone(),
         }
     }
@@ -296,6 +308,8 @@ impl UvmSystem {
                     waiters: Vec::new(),
                     write: false,
                     started: now,
+                    posted: None,
+                    completed: None,
                     speculative: true,
                     touched: 0,
                 },
@@ -303,6 +317,19 @@ impl UvmSystem {
             self.fault_buffer.push_back(ck);
         }
         self.pf_buf = buf;
+    }
+
+    /// Tick the interval sampler (no-op when detached). Gauges:
+    /// resident groups plus in-flight transfers as occupancy, and the
+    /// in-flight transfer count as the single driver-path queue depth.
+    fn obs_tick(&self, now: SimTime, m: &mut Metrics) {
+        if let Some(obs) = &self.obs {
+            let mut s = obs.borrow_mut();
+            if s.due(now) {
+                let occupied = (self.fifo.len() + self.transfers.len()) as u64;
+                s.tick(now, m, occupied, &[self.transfers.len() as u32]);
+            }
+        }
     }
 
     fn schedule_driver(&mut self, now: SimTime, eng: &mut Engine<Ev>) {
@@ -461,6 +488,7 @@ impl MemorySystem for UvmSystem {
         pages: &[PageAccess],
     ) -> AccessResult {
         let now = ctx.now;
+        self.obs_tick(now, ctx.m);
         let t = now + self.cfg.uvm.tlb_hit_ns;
         // Pages → fault groups (dedup), carrying each group's
         // touched-page bits for prefetch-accuracy accounting.
@@ -555,6 +583,8 @@ impl MemorySystem for UvmSystem {
                     waiters: vec![slot],
                     write,
                     started: now,
+                    posted: None,
+                    completed: None,
                     speculative: false,
                     touched: bits,
                 },
@@ -590,6 +620,7 @@ impl MemorySystem for UvmSystem {
 
     fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent) {
         let now = ctx.now;
+        self.obs_tick(now, ctx.m);
         match ev {
             MemEvent::UvmDriverService => {
                 self.driver_scheduled = false;
@@ -644,6 +675,14 @@ impl MemorySystem for UvmSystem {
                     self.free_frames[gpu] -= 1;
                     // DMA the fault group through the engine's doorbell.
                     let arrive = self.group_dma(t_done, key, &*ctx.hm, Dir::In);
+                    if let Some(p) = self.pending.get_mut(&key) {
+                        // Stage boundaries for the lifecycle breakdown:
+                        // the WR posts at driver-retire time and its
+                        // completion is the arrival (both are the
+                        // instants the trace records).
+                        p.posted = Some(t_done);
+                        p.completed = Some(arrive);
+                    }
                     ctx.m.bytes_in += self.group_bytes;
                     let token = self.next_token;
                     self.next_token += 1;
@@ -691,6 +730,16 @@ impl MemorySystem for UvmSystem {
                     .on_fill(key.0, rslot, block_hint, p.speculative);
                 if !p.speculative {
                     ctx.m.fault_latency.record(now.saturating_sub(p.started));
+                    // Stage decomposition of that same latency (queue =
+                    // driver batching + host OS work, the paper's
+                    // dominant term). A demand join after the driver
+                    // retired the fault leaves `posted` before
+                    // `started`; the split clamps it, exactly as the
+                    // trace-derived span builder does.
+                    ctx.m.record_stages(
+                        crate::obs::stage_split(p.started, p.posted, p.completed, now),
+                        self.cfg.uvm.tlb_hit_ns,
+                    );
                 }
                 for slot in p.waiters {
                     let g = self.groups.get_mut(&key).unwrap();
@@ -721,6 +770,10 @@ impl MemorySystem for UvmSystem {
 
     fn set_trace_sink(&mut self, sink: trace::SharedSink) {
         self.sink = Some(sink);
+    }
+
+    fn set_obs(&mut self, obs: crate::obs::SharedObs) {
+        self.obs = Some(obs);
     }
 
     fn finalize(&mut self, m: &mut Metrics) {

@@ -1,0 +1,358 @@
+//! Observability subsystem integration + property tests ([`gpuvm::obs`]):
+//!
+//! 1. **Span reconciliation** — per-fault stage durations derived from
+//!    the trace stream sum *bit-for-bit* to the fault latencies the
+//!    runtimes recorded (`Metrics::{stage_*_ns, fault_service_ns}`),
+//!    with no orphan spans on untruncated captures, on both paged
+//!    protocol families and across policy axes.
+//! 2. **Sampler determinism** — identical configs sample identically,
+//!    and enabling obs does not perturb the simulation (the event
+//!    stream and every non-obs fingerprint entry stay bit-for-bit
+//!    identical — the property that keeps the golden traces valid).
+//! 3. **Metrics merge** — associative/commutative over fingerprints
+//!    with the new stage/interval stats folded in.
+//! 4. **Perfetto export** — the emitted Chrome trace-event JSON
+//!    validates against the schema on a real capture (the CI check).
+
+use gpuvm::analyze::protocol::ProtocolFamily;
+use gpuvm::config::SystemConfig;
+use gpuvm::gpu::kernel::{Access, Launch, WarpOp, Workload};
+use gpuvm::mem::{HostMemory, RegionId};
+use gpuvm::metrics::Metrics;
+use gpuvm::obs::{build_spans, chrome_trace_json, validate_chrome_json, Breakdown};
+use gpuvm::prefetch::PrefetchPolicy;
+use gpuvm::residency::ResidencyPolicyKind;
+use gpuvm::trace;
+use gpuvm::util::proptest::check;
+use gpuvm::util::rng::Rng;
+
+/// Compact multi-warp random workload over one region (a local copy of
+/// the shape `properties.rs` uses; integration tests cannot share
+/// items).
+struct RandomWorkload {
+    pages: u64,
+    region: Option<RegionId>,
+    scripts: Vec<Vec<Option<(u64, u64, bool)>>>,
+    cursor: Vec<usize>,
+    launched: bool,
+}
+
+impl RandomWorkload {
+    fn generate(rng: &mut Rng) -> Self {
+        let pages = 4 + rng.gen_range(60);
+        let warps = 1 + rng.gen_range(12) as usize;
+        let scripts = (0..warps)
+            .map(|_| {
+                let ops = 1 + rng.gen_range(20) as usize;
+                (0..ops)
+                    .map(|_| {
+                        if rng.bool(0.2) {
+                            None
+                        } else {
+                            let p = rng.gen_range(pages);
+                            let len = 1 + rng.gen_range(3).min(pages - p - 1);
+                            Some((p, len.max(1), rng.bool(0.3)))
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self {
+            pages,
+            region: None,
+            scripts,
+            cursor: vec![0; warps],
+            launched: false,
+        }
+    }
+}
+
+impl Workload for RandomWorkload {
+    fn name(&self) -> &str {
+        "random"
+    }
+    fn setup(&mut self, hm: &mut HostMemory) {
+        self.region = Some(hm.register("rand", self.pages * 4096));
+    }
+    fn next_kernel(&mut self) -> Option<Launch> {
+        if self.launched {
+            return None;
+        }
+        self.launched = true;
+        Some(Launch {
+            warps: self.scripts.len(),
+            tag: 0,
+        })
+    }
+    fn next_op(&mut self, warp: usize) -> WarpOp {
+        let c = self.cursor[warp];
+        self.cursor[warp] += 1;
+        match self.scripts[warp].get(c) {
+            None => WarpOp::Done,
+            Some(None) => WarpOp::Compute { ops: 50 },
+            Some(Some((page, len, write))) => WarpOp::Access(vec![Access::Seq {
+                region: self.region.unwrap(),
+                start: page * 4096,
+                len: len * 4096,
+                write: *write,
+            }]),
+        }
+    }
+}
+
+fn random_cfg(rng: &mut Rng) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = 1 + rng.gen_range(8) as usize;
+    cfg.gpu.warps_per_sm = 1 + rng.gen_range(4) as usize;
+    let min_frames = (cfg.gpu.sms * cfg.gpu.warps_per_sm * 4 + 4) as u64;
+    cfg.gpu.mem_bytes = (min_frames + rng.gen_range(64)) * 4096;
+    cfg.gpuvm.page_size = 4096;
+    cfg.gpuvm.num_qps = 1 + rng.gen_range(48) as usize;
+    cfg.gpuvm.fault_batch = 1 + rng.gen_range(4) as u32;
+    cfg.seed = rng.next_u64();
+    cfg
+}
+
+/// The reconciliation core: capture `backend` under `cfg`, derive
+/// spans, and assert the trace-side stage sums equal the runtime-side
+/// Metrics totals exactly.
+fn reconcile(cfg: &SystemConfig, backend: &str, family: ProtocolFamily, rng: &mut Rng) {
+    let mut w = RandomWorkload::generate(rng);
+    let (t, r, _obs) =
+        trace::capture_workload_observed(cfg, backend, &mut w, "random").expect("capture");
+    assert!(!t.meta.truncated, "no cap configured for these sizes");
+    let spans = build_spans(&t.events, family, t.meta.truncated);
+    assert!(
+        spans.issues.is_empty(),
+        "{backend}: span issues on a clean capture: {:?}",
+        spans.issues
+    );
+    let m = &r.metrics;
+    // Every runtime-recorded fault latency is either a derived span or
+    // (UVM only) a silent speculative demand-join.
+    assert_eq!(
+        spans.spans.len() as u64 + spans.unattributed_fills,
+        m.fault_latency.count(),
+        "{backend}: span count vs recorded fault latencies"
+    );
+    if spans.fully_attributed() {
+        assert_eq!(
+            spans.stage_totals(),
+            [m.stage_queue_ns, m.stage_transfer_ns, m.stage_fill_ns],
+            "{backend}: trace-derived stage sums diverge from runtime metrics"
+        );
+        assert_eq!(
+            spans.total_ns(),
+            m.fault_service_ns,
+            "{backend}: trace-derived total fault latency diverges"
+        );
+        // The stage decomposition partitions the measured latency.
+        assert_eq!(
+            m.stage_queue_ns + m.stage_transfer_ns + m.stage_fill_ns,
+            m.fault_service_ns,
+            "{backend}: stages must sum to the recorded latency"
+        );
+    }
+    // Per-span: stages always partition that span's latency exactly.
+    for sp in &spans.spans {
+        assert_eq!(
+            sp.stages().iter().sum::<u64>(),
+            sp.total_ns(),
+            "{backend}: span stages must sum to span latency"
+        );
+    }
+}
+
+#[test]
+fn prop_gpuvm_spans_reconcile_bit_for_bit() {
+    check("gpuvm span reconciliation", 30, |rng| {
+        let mut cfg = random_cfg(rng);
+        // Sweep the prefetch axis: speculative fetches + promote-joins
+        // are the hard cases for span derivation.
+        let policies = PrefetchPolicy::all();
+        cfg.gpuvm.prefetch_policy = policies[rng.gen_range(policies.len() as u64) as usize];
+        reconcile(&cfg, "gpuvm", ProtocolFamily::GpuVm, rng);
+    });
+}
+
+#[test]
+fn prop_gpuvm_spans_reconcile_across_residency_policies() {
+    check("gpuvm span reconciliation × residency", 15, |rng| {
+        let mut cfg = random_cfg(rng);
+        // Deadlock-free policies only (fifo-strict can wedge by design).
+        let policies = [
+            ResidencyPolicyKind::FifoRefcount,
+            ResidencyPolicyKind::Lru,
+            ResidencyPolicyKind::Clock,
+            ResidencyPolicyKind::TreeLru,
+        ];
+        cfg.gpuvm.residency_policy = policies[rng.gen_range(policies.len() as u64) as usize];
+        reconcile(&cfg, "gpuvm", ProtocolFamily::GpuVm, rng);
+    });
+}
+
+#[test]
+fn prop_uvm_spans_reconcile() {
+    check("uvm span reconciliation", 30, |rng| {
+        let mut cfg = random_cfg(rng);
+        // UVM frame pool counts 64 KB groups; keep it generous.
+        cfg.gpu.mem_bytes = cfg.gpu.mem_bytes.max(8 << 20);
+        reconcile(&cfg, "uvm", ProtocolFamily::Uvm, rng);
+    });
+}
+
+#[test]
+fn uvm_default_geometry_is_fully_attributed() {
+    // Under the default fixed prefetch geometry UVM never silently
+    // joins a speculative group, so the exact reconciliation applies.
+    let mut rng = Rng::new(7);
+    let cfg = SystemConfig::default();
+    let mut w = RandomWorkload::generate(&mut rng);
+    let (t, r, _) =
+        trace::capture_workload_observed(&cfg, "uvm", &mut w, "random").expect("capture");
+    let spans = build_spans(&t.events, ProtocolFamily::Uvm, t.meta.truncated);
+    assert!(spans.fully_attributed(), "default geometry must attribute all fills");
+    let m = &r.metrics;
+    assert_eq!(
+        spans.stage_totals(),
+        [m.stage_queue_ns, m.stage_transfer_ns, m.stage_fill_ns]
+    );
+    assert_eq!(spans.total_ns(), m.fault_service_ns);
+}
+
+#[test]
+fn prop_sampler_is_deterministic_and_non_perturbing() {
+    check("sampler determinism", 10, |rng| {
+        let mut base = random_cfg(rng);
+        base.obs.enabled = true;
+        base.obs.interval_ns = 1 + rng.gen_range(200_000);
+        let seed = rng.next_u64();
+        let capture = |cfg: &SystemConfig| {
+            let mut local = Rng::new(seed);
+            let mut w = RandomWorkload::generate(&mut local);
+            trace::capture_workload_observed(cfg, "gpuvm", &mut w, "random").expect("capture")
+        };
+        // Identical configs → identical samples and fingerprints.
+        let (ta, ra, oa) = capture(&base);
+        let (tb, rb, ob) = capture(&base);
+        assert_eq!(oa.samples, ob.samples, "samples must be deterministic");
+        assert_eq!(ra.metrics.fingerprint(), rb.metrics.fingerprint());
+        assert!(!oa.samples.is_empty(), "obs on must sample at least once");
+        // Obs off: same simulation, bit-for-bit — only the obs_samples
+        // fingerprint entry may differ. This is the invariant that
+        // keeps the committed golden traces valid with obs defaulted
+        // off.
+        let mut off = base.clone();
+        off.obs.enabled = false;
+        let (tc, rc, oc) = capture(&off);
+        assert!(oc.samples.is_empty(), "obs off must not sample");
+        assert_eq!(ta.events, tc.events, "obs must not perturb the event stream");
+        assert_eq!(ta, tb);
+        let non_obs = |m: &Metrics| {
+            m.fingerprint()
+                .into_iter()
+                .filter(|(k, _)| *k != "obs_samples")
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(non_obs(&ra.metrics), non_obs(&rc.metrics));
+        assert_eq!(
+            ra.metrics.obs_samples,
+            oa.samples.len() as u64,
+            "fingerprint entry counts the samples taken"
+        );
+        assert_eq!(rc.metrics.obs_samples, 0);
+    });
+}
+
+/// Random Metrics with every merged stage/obs field exercised.
+fn random_metrics(rng: &mut Rng) -> Metrics {
+    let mut m = Metrics::new();
+    for _ in 0..rng.gen_range(20) {
+        m.fault_latency.record(rng.gen_range(1 << 20));
+        let q = rng.gen_range(10_000);
+        let x = rng.gen_range(100_000);
+        let f = rng.gen_range(1_000);
+        m.record_stages([q, x, f], rng.gen_range(5_000));
+    }
+    m.faults = rng.gen_range(1 << 30);
+    m.hits = rng.gen_range(1 << 30);
+    m.bytes_in = rng.gen_range(1 << 40);
+    m.bytes_out = rng.gen_range(1 << 40);
+    m.evictions = rng.gen_range(1 << 20);
+    m.obs_samples = rng.gen_range(1 << 16);
+    m.finish_ns = rng.gen_range(1 << 40);
+    m
+}
+
+#[test]
+fn prop_metrics_merge_associative_commutative_over_fingerprints() {
+    check("metrics merge assoc/commut", 60, |rng| {
+        let (a, b, c) = (
+            random_metrics(rng),
+            random_metrics(rng),
+            random_metrics(rng),
+        );
+        let merged = |x: &Metrics, y: &Metrics| {
+            let mut m = x.clone();
+            m.merge(y);
+            m
+        };
+        // Commutative.
+        assert_eq!(
+            merged(&a, &b).fingerprint(),
+            merged(&b, &a).fingerprint(),
+            "merge must be commutative over fingerprints"
+        );
+        // Associative.
+        assert_eq!(
+            merged(&merged(&a, &b), &c).fingerprint(),
+            merged(&a, &merged(&b, &c)).fingerprint(),
+            "merge must be associative over fingerprints"
+        );
+        // Exact stage totals accumulate (not averaged away).
+        let ab = merged(&a, &b);
+        assert_eq!(ab.stage_queue_ns, a.stage_queue_ns + b.stage_queue_ns);
+        assert_eq!(ab.fault_service_ns, a.fault_service_ns + b.fault_service_ns);
+        assert_eq!(ab.obs_samples, a.obs_samples + b.obs_samples);
+        assert_eq!(
+            ab.stage_transfer.count(),
+            a.stage_transfer.count() + b.stage_transfer.count()
+        );
+    });
+}
+
+#[test]
+fn perfetto_export_validates_on_a_real_capture() {
+    // The CI schema check: a fresh gpuvm capture with sampling on must
+    // emit Chrome trace-event JSON that parses and carries spans,
+    // counters, and metadata.
+    let mut rng = Rng::new(42);
+    let mut cfg = random_cfg(&mut rng);
+    cfg.obs.enabled = true;
+    cfg.obs.interval_ns = 10_000;
+    let mut w = RandomWorkload::generate(&mut rng);
+    let (t, r, obs) =
+        trace::capture_workload_observed(&cfg, "gpuvm", &mut w, "random").expect("capture");
+    let spans = build_spans(&t.events, ProtocolFamily::GpuVm, t.meta.truncated);
+    assert!(!spans.spans.is_empty(), "workload must fault at least once");
+    let j = chrome_trace_json(&spans, &obs.samples, "gpuvm/random");
+    let n = validate_chrome_json(&j).expect("export must satisfy the trace-event schema");
+    assert!(
+        n >= spans.spans.len() + obs.samples.len(),
+        "export must carry every span and sample"
+    );
+    // The breakdown the CLI prints reconciles with the runtime metrics.
+    let b = Breakdown::from_spans(&spans);
+    assert_eq!(b.total_ns, r.metrics.fault_service_ns);
+    assert_eq!(
+        b.stage_ns,
+        [
+            r.metrics.stage_queue_ns,
+            r.metrics.stage_transfer_ns,
+            r.metrics.stage_fill_ns
+        ]
+    );
+    let csv = b.csv("gpuvm", "random");
+    assert!(csv.starts_with("backend,workload,stage"));
+    assert_eq!(csv.lines().count(), 5);
+}
