@@ -2,9 +2,9 @@
 //! second) across the four core backends × policy axes, plus the
 //! observability layer's overhead budget.
 //!
-//! This is the ROADMAP's raw-speed benchmark: its JSON output starts
-//! the committed perf trajectory (`BENCH_7.json` at the repo root).
-//! Two sections:
+//! This is the ROADMAP's raw-speed benchmark: its JSON output carries
+//! the committed perf trajectory (`BENCH_8.json` at the repo root).
+//! Three sections:
 //!
 //! 1. **Throughput** — events/sec for gpuvm / uvm / uvm-memadvise /
 //!    ideal under the default policies and under a density-prefetch +
@@ -17,16 +17,22 @@
 //!      measurable proxy for the disabled-path budget (<5%);
 //!    - `on`: sampling at the default 100 µs interval — overhead must
 //!      stay bounded (reported, not gated: wallclock in CI is noisy).
+//! 3. **Analyzer throughput** (gpuvm + uvm) — trace events per second
+//!    through one protocol-lint pass plus one happens-before race/
+//!    causality pass over a bench-scale capture. CI runs both passes on
+//!    every golden stream, so their cost is part of the loop.
 //!
 //! `GPUVM_BENCH_SMOKE=1` shrinks the workload and iteration counts to
 //! CI size. Refresh the committed baseline with:
-//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_7.json`
+//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_8.json`
 
+use gpuvm::analyze::{lint_trace, race_check_trace};
 use gpuvm::apps::{BuildOpts, WorkloadSpec};
 use gpuvm::config::SystemConfig;
 use gpuvm::coordinator::backend;
 use gpuvm::prefetch::PrefetchPolicy;
 use gpuvm::residency::ResidencyPolicyKind;
+use gpuvm::trace;
 use gpuvm::util::bench::{banner, time};
 use gpuvm::util::csv::CsvWriter;
 
@@ -176,6 +182,38 @@ fn main() {
         rows.push(on);
     }
 
+    // -- 3. analyzer throughput (events/sec linted + race-checked) -----
+    for backend_name in ["gpuvm", "uvm"] {
+        let cfg = base_cfg(smoke);
+        let spec = WorkloadSpec::parse(app).expect("bench spec");
+        let opts = BuildOpts::for_cfg(&cfg);
+        let (t, _) = trace::capture(&cfg, &spec, &opts, backend_name).expect("bench capture");
+        let timed = time(
+            &format!("{backend_name}/analyze/lint+race"),
+            warmup,
+            iters,
+            || {
+                let l = lint_trace(&t).expect("lint");
+                assert!(l.clean(), "bench capture must lint clean");
+                let r = race_check_trace(&t).expect("race check");
+                assert!(r.clean(), "bench capture must race-check clean");
+            },
+        );
+        println!("{}", timed.report());
+        rows.push(Row {
+            backend: backend_name,
+            policy: "analyze",
+            obs: "lint+race",
+            // "events" here are trace events pushed through both
+            // analyzer passes each iteration, so events_per_sec is
+            // analyzer throughput (sim_ns does not apply).
+            events: t.events.len() as u64,
+            sim_ns: 0,
+            wall_mean_s: timed.mean_s,
+            wall_min_s: timed.min_s,
+        });
+    }
+
     // -- outputs -------------------------------------------------------
     let mut csv = CsvWriter::bench_result(
         "bench_selfperf",
@@ -215,5 +253,5 @@ fn main() {
 
     println!("\ncsv:  target/bench_results/bench_selfperf.csv");
     println!("json: target/bench_results/bench_selfperf.json");
-    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_7.json");
+    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_8.json");
 }

@@ -1,0 +1,500 @@
+//! Happens-before over a captured trace: clock lanes, causal edges,
+//! vector clocks.
+//!
+//! The protocol linter ([`crate::analyze::lint`]) checks each page's
+//! lifecycle as an isolated regular language; nothing there relates
+//! events *across* actors. This module builds that relation: the
+//! happens-before (HB) partial order the runtimes are supposed to
+//! maintain between warps, NIC completion queues, and the per-GPU
+//! evictor, derived purely from the recorded stream.
+//!
+//! ## Actor lanes
+//!
+//! Each sequential actor gets one vector-clock lane:
+//!
+//! - **`queue(gpu, q)`** — one lane per NIC completion queue.
+//!   `wr-complete` events carry the queue id in `page` (see the
+//!   [`crate::trace`] payload table) and are totally ordered within
+//!   their lane (CQ polling is FIFO).
+//! - **`evictor(gpu)`** — the per-GPU victim selector; eviction events
+//!   are totally ordered within it (one circular buffer scan per GPU).
+//!
+//! Faults, fills, and promotes do **not** get lanes of their own: the
+//! capture format does not record which warp observed a fault (leader
+//! election coalesces them), so per-warp program order is not
+//! recoverable from a trace. Those events still participate in HB
+//! through the causal edges below — they join and propagate clocks
+//! without ticking a lane component.
+//!
+//! ## Edge table
+//!
+//! | edge            | from → to                                      |
+//! |-----------------|------------------------------------------------|
+//! | `queue-fifo`    | consecutive `wr-complete`s on one queue        |
+//! | `evictor-order` | consecutive evictions by one GPU's evictor     |
+//! | `wr-match`      | `wr-post` → its `wr-complete` (same `wr_id`)   |
+//! | `service-post`  | `fault` → the fetch WR posted to service it    |
+//! | `data-release`  | fetch `wr-complete` → the fill it releases     |
+//! | `fault-fill`    | `fault` (or in-flight `promote` join) → `fill` |
+//! | `spec-promote`  | `spec-fill` → the first demand `promote`       |
+//! | `fill-evict`    | a page's latest fill → its eviction            |
+//! | `evict-refault` | eviction → the same page's next demand fault   |
+//! | `evict-refill`  | eviction → the same page's next (re)fill       |
+//!
+//! Every edge points forward in *stream* order (execution order). Most
+//! also imply non-decreasing simulated `at` timestamps — the causality
+//! check in [`crate::analyze::race`] enforces exactly that — but the
+//! two `evict-*` edges are exempt: both runtimes future-stamp an
+//! eviction by the unmap/check latency, so a racing refault of the
+//! victim page may legally carry an earlier `at` while still being
+//! causally after the eviction in stream order
+//! ([`HbEdgeKind::timestamped`]).
+//!
+//! Vector clocks are dense (one `u32` per lane — the lane set is small:
+//! queues in use plus one evictor per GPU); [`HbGraph::ordered`] answers
+//! reachability exactly by walking predecessor edges, which the race
+//! checker only does for the handful of candidate findings it reports.
+
+use crate::trace::{TraceEvent, TraceEventKind};
+use crate::util::fxhash::FxHashMap;
+
+/// One sequential actor — a vector-clock lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Actor {
+    /// A NIC completion queue (GPUVM: one of the RNIC QPs; UVM: the
+    /// driver's single copy queue 0).
+    Queue { gpu: u8, queue: u64 },
+    /// The per-GPU victim selector.
+    Evictor { gpu: u8 },
+}
+
+impl Actor {
+    /// Stable display label, e.g. `queue(0,3)` / `evictor(0)`.
+    pub fn label(self) -> String {
+        match self {
+            Self::Queue { gpu, queue } => format!("queue({gpu},{queue})"),
+            Self::Evictor { gpu } => format!("evictor({gpu})"),
+        }
+    }
+}
+
+/// Why one event happens-before another (see the module edge table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HbEdgeKind {
+    QueueFifo,
+    EvictorOrder,
+    WrMatch,
+    ServicePost,
+    DataRelease,
+    FaultFill,
+    SpecPromote,
+    FillEvict,
+    EvictRefault,
+    EvictRefill,
+}
+
+impl HbEdgeKind {
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::QueueFifo => "queue-fifo",
+            Self::EvictorOrder => "evictor-order",
+            Self::WrMatch => "wr-match",
+            Self::ServicePost => "service-post",
+            Self::DataRelease => "data-release",
+            Self::FaultFill => "fault-fill",
+            Self::SpecPromote => "spec-promote",
+            Self::FillEvict => "fill-evict",
+            Self::EvictRefault => "evict-refault",
+            Self::EvictRefill => "evict-refill",
+        }
+    }
+
+    /// Does this edge promise non-decreasing simulated `at` timestamps?
+    /// The `evict-*` edges do not: evictions are future-stamped by the
+    /// unmap/check latency, so the victim's next fault/fill may carry an
+    /// earlier `at` while still being causally later in stream order.
+    pub fn timestamped(self) -> bool {
+        !matches!(self, Self::EvictRefault | Self::EvictRefill)
+    }
+}
+
+/// One happens-before edge between stream indices (`from < to`).
+#[derive(Debug, Clone, Copy)]
+pub struct HbEdge {
+    pub from: usize,
+    pub to: usize,
+    pub kind: HbEdgeKind,
+}
+
+/// How a fill's data dependency resolved at the moment the waiter was
+/// released — the evidence behind the lost-wakeup check.
+#[derive(Debug, Clone, Copy)]
+pub struct FillRelease {
+    /// Stream index of the fetch `wr-post` the fill consumed.
+    pub post: usize,
+    /// Stream index of that WR's completion, if it had been observed by
+    /// the time the fill (waiter release) was recorded. `None` means
+    /// the waiter was released before its data arrived.
+    pub complete: Option<usize>,
+}
+
+/// Per-(gpu, page) scan state used while building the graph.
+#[derive(Default)]
+struct PageCtx {
+    /// Open demand episode: a `fault` or in-flight-join `promote`.
+    pending: Option<usize>,
+    /// Fetch WR currently in flight for this page (`wr_id`).
+    inflight: Option<u64>,
+    /// Latest resident-making fill (demand or speculative).
+    last_fill: Option<usize>,
+    /// Unconsumed speculative fill awaiting its `promote`.
+    spec_fill: Option<usize>,
+    /// Latest eviction not yet followed by a refault/refill.
+    last_evict: Option<usize>,
+}
+
+/// The happens-before relation of one captured stream.
+pub struct HbGraph {
+    /// Actor lanes, indexed by lane id (vector-clock component).
+    pub lanes: Vec<Actor>,
+    /// All causal edges, in discovery (stream) order.
+    pub edges: Vec<HbEdge>,
+    /// Per-event vector clock (`lanes.len()` components each).
+    pub clocks: Vec<Vec<u32>>,
+    /// Data-dependency evidence per fill / spec-fill stream index.
+    pub fill_release: FxHashMap<usize, FillRelease>,
+    /// Incoming-edge sources per event, for exact reachability.
+    preds: Vec<Vec<usize>>,
+}
+
+impl HbGraph {
+    /// Build the HB graph for a stream in one forward scan (plus a lane
+    /// enumeration pass). Tolerates malformed streams — lint findings
+    /// are the linter's job; this just skips edges it cannot match.
+    pub fn build(events: &[TraceEvent]) -> Self {
+        // Pass 1: enumerate lanes so clocks can be dense vectors.
+        let mut lanes: Vec<Actor> = Vec::new();
+        let mut queue_lane: FxHashMap<(u8, u64), usize> = FxHashMap::default();
+        let mut evictor_lane: FxHashMap<u8, usize> = FxHashMap::default();
+        for e in events {
+            match e.kind {
+                TraceEventKind::WrComplete => {
+                    queue_lane.entry((e.gpu, e.page)).or_insert_with(|| {
+                        lanes.push(Actor::Queue {
+                            gpu: e.gpu,
+                            queue: e.page,
+                        });
+                        lanes.len() - 1
+                    });
+                }
+                TraceEventKind::EvictClean
+                | TraceEventKind::EvictDirty
+                | TraceEventKind::EvictForced => {
+                    evictor_lane.entry(e.gpu).or_insert_with(|| {
+                        lanes.push(Actor::Evictor { gpu: e.gpu });
+                        lanes.len() - 1
+                    });
+                }
+                _ => {}
+            }
+        }
+
+        let dim = lanes.len();
+        let mut g = Self {
+            lanes,
+            edges: Vec::new(),
+            clocks: Vec::with_capacity(events.len()),
+            fill_release: FxHashMap::default(),
+            preds: vec![Vec::new(); events.len()],
+        };
+        let mut lane_clock: Vec<Vec<u32>> = vec![vec![0; dim]; dim];
+        let mut last_on_lane: Vec<Option<usize>> = vec![None; dim];
+        let mut post_of: FxHashMap<u64, usize> = FxHashMap::default();
+        let mut complete_of: FxHashMap<u64, usize> = FxHashMap::default();
+        let mut pages: FxHashMap<(u8, u64), PageCtx> = FxHashMap::default();
+
+        // Pass 2: edges, then the event's clock from its predecessors.
+        for (i, e) in events.iter().enumerate() {
+            let mut new_edges: Vec<HbEdge> = Vec::new();
+            let mut edge = |from: usize, kind: HbEdgeKind| {
+                new_edges.push(HbEdge { from, to: i, kind });
+            };
+            let mut lane: Option<usize> = None;
+            match e.kind {
+                TraceEventKind::Fault => {
+                    let ctx = pages.entry((e.gpu, e.page)).or_default();
+                    if let Some(ev) = ctx.last_evict.take() {
+                        edge(ev, HbEdgeKind::EvictRefault);
+                    }
+                    ctx.pending = Some(i);
+                }
+                TraceEventKind::WrPost => {
+                    let wr_id = e.aux >> 1;
+                    post_of.insert(wr_id, i);
+                    if e.aux & 1 == 0 {
+                        // Fetch (host → GPU): ties the page's episode to
+                        // the transport.
+                        let ctx = pages.entry((e.gpu, e.page)).or_default();
+                        if let Some(p) = ctx.pending {
+                            edge(p, HbEdgeKind::ServicePost);
+                        }
+                        ctx.inflight = Some(wr_id);
+                    }
+                }
+                TraceEventKind::WrComplete => {
+                    let wr_id = e.aux >> 1;
+                    if let Some(&p) = post_of.get(&wr_id) {
+                        edge(p, HbEdgeKind::WrMatch);
+                    }
+                    let l = queue_lane[&(e.gpu, e.page)];
+                    if let Some(prev) = last_on_lane[l] {
+                        edge(prev, HbEdgeKind::QueueFifo);
+                    }
+                    complete_of.insert(wr_id, i);
+                    lane = Some(l);
+                }
+                TraceEventKind::Fill | TraceEventKind::SpecFill => {
+                    let ctx = pages.entry((e.gpu, e.page)).or_default();
+                    if e.kind == TraceEventKind::Fill {
+                        if let Some(p) = ctx.pending.take() {
+                            edge(p, HbEdgeKind::FaultFill);
+                        }
+                    } else {
+                        ctx.spec_fill = Some(i);
+                    }
+                    if let Some(wr) = ctx.inflight.take() {
+                        if let Some(&post) = post_of.get(&wr) {
+                            g.fill_release.insert(
+                                i,
+                                FillRelease {
+                                    post,
+                                    complete: complete_of.get(&wr).copied(),
+                                },
+                            );
+                        }
+                        if let Some(&c) = complete_of.get(&wr) {
+                            edge(c, HbEdgeKind::DataRelease);
+                        }
+                    }
+                    if let Some(ev) = ctx.last_evict.take() {
+                        edge(ev, HbEdgeKind::EvictRefill);
+                    }
+                    ctx.last_fill = Some(i);
+                }
+                TraceEventKind::Promote => {
+                    let ctx = pages.entry((e.gpu, e.page)).or_default();
+                    match ctx.spec_fill.take() {
+                        // First demand touch of a resident speculative
+                        // page.
+                        Some(s) => edge(s, HbEdgeKind::SpecPromote),
+                        // GPUVM demand join of an in-flight speculative
+                        // fetch: opens an episode the fill will close.
+                        None => ctx.pending = Some(i),
+                    }
+                }
+                TraceEventKind::EvictClean
+                | TraceEventKind::EvictDirty
+                | TraceEventKind::EvictForced => {
+                    let ctx = pages.entry((e.gpu, e.page)).or_default();
+                    if let Some(f) = ctx.last_fill {
+                        edge(f, HbEdgeKind::FillEvict);
+                    }
+                    let l = evictor_lane[&e.gpu];
+                    if let Some(prev) = last_on_lane[l] {
+                        edge(prev, HbEdgeKind::EvictorOrder);
+                    }
+                    ctx.last_evict = Some(i);
+                    ctx.spec_fill = None;
+                    lane = Some(l);
+                }
+            }
+
+            // Clock: join predecessors (and the lane), tick own lane.
+            let mut clock = vec![0u32; dim];
+            for ne in &new_edges {
+                for (c, p) in clock.iter_mut().zip(&g.clocks[ne.from]) {
+                    *c = (*c).max(*p);
+                }
+                g.preds[i].push(ne.from);
+            }
+            if let Some(l) = lane {
+                for (c, p) in clock.iter_mut().zip(&lane_clock[l]) {
+                    *c = (*c).max(*p);
+                }
+                clock[l] += 1;
+                lane_clock[l].clone_from(&clock);
+                last_on_lane[l] = Some(i);
+            }
+            g.clocks.push(clock);
+            g.edges.append(&mut new_edges);
+        }
+        g
+    }
+
+    /// Exact happens-before reachability: is there a causal path
+    /// `a → … → b`? (Reflexive: `ordered(x, x)` is true.) Walks
+    /// predecessor edges backward from `b`; edges always point forward
+    /// in stream order, so the walk is bounded by `b`'s prefix.
+    pub fn ordered(&self, a: usize, b: usize) -> bool {
+        if a == b {
+            return true;
+        }
+        if a > b {
+            return false;
+        }
+        let mut visited = vec![false; b + 1];
+        let mut stack = vec![b];
+        while let Some(v) = stack.pop() {
+            for &p in &self.preds[v] {
+                if p == a {
+                    return true;
+                }
+                if p > a && !visited[p] {
+                    visited[p] = true;
+                    stack.push(p);
+                }
+            }
+        }
+        false
+    }
+
+    /// Are two events concurrent (neither happens-before the other)?
+    pub fn concurrent(&self, a: usize, b: usize) -> bool {
+        !self.ordered(a, b) && !self.ordered(b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: u64, kind: TraceEventKind, page: u64, aux: u64) -> TraceEvent {
+        TraceEvent {
+            at,
+            page,
+            aux,
+            kind,
+            gpu: 0,
+        }
+    }
+
+    #[test]
+    fn demand_chain_is_fully_ordered() {
+        use TraceEventKind as K;
+        // fault → post → complete → fill on one page.
+        let events = vec![
+            ev(0, K::Fault, 7, 1),
+            ev(10, K::WrPost, 7, 5 << 1),
+            ev(20, K::WrComplete, 2, 5 << 1),
+            ev(20, K::Fill, 7, 4096),
+        ];
+        let g = HbGraph::build(&events);
+        assert_eq!(g.lanes, vec![Actor::Queue { gpu: 0, queue: 2 }]);
+        for a in 0..events.len() {
+            for b in a + 1..events.len() {
+                assert!(g.ordered(a, b), "#{a} should precede #{b}");
+                assert!(!g.ordered(b, a));
+            }
+        }
+        let kinds: Vec<HbEdgeKind> = g.edges.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&HbEdgeKind::ServicePost));
+        assert!(kinds.contains(&HbEdgeKind::WrMatch));
+        assert!(kinds.contains(&HbEdgeKind::DataRelease));
+        assert!(kinds.contains(&HbEdgeKind::FaultFill));
+        let rel = g.fill_release[&3];
+        assert_eq!((rel.post, rel.complete), (1, Some(2)));
+    }
+
+    #[test]
+    fn unrelated_pages_are_concurrent() {
+        use TraceEventKind as K;
+        let events = vec![
+            ev(0, K::Fault, 1, 0),
+            ev(0, K::Fault, 2, 0),
+            ev(5, K::Fill, 1, 4096),
+            ev(5, K::Fill, 2, 4096),
+        ];
+        let g = HbGraph::build(&events);
+        assert!(g.concurrent(0, 1));
+        assert!(g.concurrent(2, 3));
+        assert!(g.ordered(0, 2) && g.ordered(1, 3));
+        assert!(g.concurrent(0, 3) && g.concurrent(1, 2));
+    }
+
+    #[test]
+    fn queue_fifo_orders_unrelated_completions() {
+        use TraceEventKind as K;
+        // Two WRs for different pages completing on the same queue are
+        // lane-ordered; on different queues they are concurrent.
+        let same = vec![
+            ev(0, K::WrPost, 1, 3 << 1),
+            ev(0, K::WrPost, 2, 4 << 1),
+            ev(9, K::WrComplete, 0, 3 << 1),
+            ev(9, K::WrComplete, 0, 4 << 1),
+        ];
+        let g = HbGraph::build(&same);
+        assert!(g.ordered(2, 3));
+        let cross = vec![
+            ev(0, K::WrPost, 1, 3 << 1),
+            ev(0, K::WrPost, 2, 4 << 1),
+            ev(9, K::WrComplete, 0, 3 << 1),
+            ev(9, K::WrComplete, 1, 4 << 1),
+        ];
+        let g = HbGraph::build(&cross);
+        assert_eq!(g.lanes.len(), 2);
+        assert!(g.concurrent(2, 3));
+    }
+
+    #[test]
+    fn eviction_lifecycle_edges() {
+        use TraceEventKind as K;
+        let events = vec![
+            ev(0, K::Fault, 5, 0),
+            ev(1, K::Fill, 5, 4096),
+            ev(2, K::EvictClean, 5, 0),
+            ev(3, K::Fault, 5, 0),
+            ev(4, K::Fill, 5, 4096),
+        ];
+        let g = HbGraph::build(&events);
+        assert_eq!(g.lanes, vec![Actor::Evictor { gpu: 0 }]);
+        // fill → evict → refault → refill: one causal chain.
+        assert!(g.ordered(1, 2) && g.ordered(2, 3) && g.ordered(2, 4));
+        let kinds: Vec<HbEdgeKind> = g.edges.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&HbEdgeKind::FillEvict));
+        assert!(kinds.contains(&HbEdgeKind::EvictRefault));
+    }
+
+    #[test]
+    fn spec_promote_edge_and_inflight_join() {
+        use TraceEventKind as K;
+        // Resident speculative page promoted on first demand touch.
+        let g = HbGraph::build(&[
+            ev(0, K::SpecFill, 9, 4096),
+            ev(5, K::Promote, 9, 0),
+        ]);
+        assert!(matches!(g.edges[..], [HbEdge { from: 0, to: 1, kind: HbEdgeKind::SpecPromote }]));
+        // GPUVM in-flight join: promote opens the episode a fill closes.
+        let g = HbGraph::build(&[ev(0, K::Promote, 9, 0), ev(5, K::Fill, 9, 4096)]);
+        assert!(g
+            .edges
+            .iter()
+            .any(|e| e.kind == HbEdgeKind::FaultFill && (e.from, e.to) == (0, 1)));
+    }
+
+    #[test]
+    fn lost_wakeup_evidence_recorded() {
+        use TraceEventKind as K;
+        // Fill released before its fetch WR completed: fill_release has
+        // no completion index.
+        let events = vec![
+            ev(0, K::Fault, 3, 0),
+            ev(1, K::WrPost, 3, 8 << 1),
+            ev(2, K::Fill, 3, 4096),
+            ev(3, K::WrComplete, 0, 8 << 1),
+        ];
+        let g = HbGraph::build(&events);
+        let rel = g.fill_release[&2];
+        assert_eq!((rel.post, rel.complete), (1, None));
+    }
+}

@@ -1,7 +1,8 @@
-//! Page-lifecycle protocol analysis: declarative state machine,
-//! trace linter, and small-scope model checker.
+//! Page-lifecycle protocol analysis: declarative state machine, trace
+//! linter, small-scope model checker, happens-before race checker, and
+//! schedule-perturbation determinism certifier.
 //!
-//! Three cooperating layers, all driven from `gpuvm analyze`:
+//! Five cooperating layers, all driven from `gpuvm analyze`:
 //!
 //! - [`protocol`] — the page lifecycle as *data*: a declarative
 //!   transition table ([`protocol::RULES`]) over
@@ -25,16 +26,39 @@
 //!   certifying deadlock-freedom (or locating a deadlock cycle with a
 //!   minimal repro schedule — `fifo-strict`'s head-wait deadlock is the
 //!   canonical certified finding, see `residency/fifo.rs`).
+//! - [`hb`] / [`race`] — the cross-actor side the per-page machine
+//!   cannot see: [`hb`] derives the happens-before partial order from
+//!   the stream (vector-clock lanes per NIC completion queue and per
+//!   GPU evictor, causal edges per the module's edge table) and
+//!   [`race`] reports what breaks it — unordered same-page conflict
+//!   pairs, lost wakeups (a waiter released before its data), per-queue
+//!   completion reordering, and causality violations (HB-ordered events
+//!   with decreasing sim timestamps, cross-checked against the span
+//!   builder so [`crate::obs::stage_split`]'s clamps are provably
+//!   no-ops). `gpuvm analyze races <trace|golden|run>`.
+//! - [`perturb`] — bounded schedule-perturbation determinism
+//!   certification (DPOR-lite): re-drives replay under transposed
+//!   schedules of HB-independent fault pairs and asserts
+//!   [`crate::metrics::Metrics::fingerprint`] invariance, promoting
+//!   "deterministic" from test anecdote to certified property. `gpuvm
+//!   analyze certify`.
 //!
-//! The linter checks *recorded* executions (one path, real
-//! configuration); the model checker checks *all* executions (every
-//! path, tiny configuration). Together they bound the protocol from
-//! both sides.
+//! The linter and race checker inspect *recorded* executions (one path,
+//! real configuration); the model checker and certifier quantify over
+//! *many* executions (every path at tiny scope; bounded reorderings of
+//! the recorded path). Together they bound the protocol from both
+//! sides.
 
 pub mod explore;
+pub mod hb;
 pub mod lint;
+pub mod perturb;
 pub mod protocol;
+pub mod race;
 
 pub use explore::{certify_all, check_policy, CheckResult, Scope, Verdict, MODEL_SEED};
+pub use hb::{Actor, HbEdge, HbEdgeKind, HbGraph};
 pub use lint::{lint, lint_trace, LintReport, Violation};
+pub use perturb::{certify, CertOutcome, CertifyReport, DEFAULT_BUDGET};
 pub use protocol::{PageState, ProtocolFamily, ViolationKind};
+pub use race::{check as race_check, check_trace as race_check_trace, RaceKind, RaceReport};

@@ -1,0 +1,413 @@
+//! Bounded schedule-perturbation determinism certifier (DPOR-lite).
+//!
+//! The repo's determinism story so far is anecdotal: golden traces and
+//! `Metrics::fingerprint()` equality are asserted for *the* recorded
+//! schedule. This module certifies the stronger property the paper's
+//! protocol implies: for commuting fault pairs — pairs the
+//! happens-before analysis proves independent — the order of arrival
+//! must not change any deterministic counter. That is the partial-order
+//! reduction insight (DPOR) scaled down to a bounded certifier:
+//! instead of exploring every interleaving, re-drive replay under a
+//! budgeted set of transposed schedules and assert
+//! [`Metrics::fingerprint`] invariance against the baseline replay.
+//!
+//! ## Independence relation (deliberately conservative)
+//!
+//! Two *adjacent* recorded demand faults commute when every condition
+//! holds:
+//!
+//! - the recorded stream contains **no evictions** (under memory
+//!   pressure, fault order picks victims — orders are observable);
+//! - the replay configuration's prefetcher is **stateless** for the
+//!   replayed family (GPUVM: `none`; UVM: `none`/`fixed` — stride,
+//!   density and history learn from fault order);
+//! - the faults touch **different pages**, and under UVM different
+//!   prefetch *groups* (region-relative — a group never spans
+//!   regions);
+//! - the stream is not truncated (a cut tail hides dependencies).
+//!
+//! Anything outside that scope is reported honestly as
+//! [`CertOutcome::OutOfScope`] — never silently "certified". The CLI
+//! (`gpuvm analyze certify`) runs the default policies, which sit
+//! squarely inside the scope.
+//!
+//! [`Metrics::fingerprint`]: crate::metrics::Metrics::fingerprint
+
+use super::lint::family_for;
+use super::protocol::ProtocolFamily;
+use crate::config::SystemConfig;
+use crate::prefetch::PrefetchPolicy;
+use crate::trace::{capture_run, Trace, TraceEventKind, TraceWorkload};
+use anyhow::Result;
+
+/// Default number of transposed schedules replayed per certificate.
+pub const DEFAULT_BUDGET: usize = 24;
+
+/// How a certification attempt ended.
+#[derive(Debug, Clone)]
+pub enum CertOutcome {
+    /// Every replayed perturbation reproduced the baseline fingerprint.
+    Certified,
+    /// The trace/config pair is outside the conservative independence
+    /// scope; nothing was (dis)proved.
+    OutOfScope { reason: String },
+    /// A perturbed schedule changed a deterministic counter.
+    Violated {
+        /// Which schedule diverged (human-readable description).
+        schedule: String,
+        /// Differing fingerprint entries: (name, baseline, perturbed).
+        diffs: Vec<(&'static str, u64, u64)>,
+    },
+}
+
+/// Outcome of certifying one trace under one replay configuration.
+#[derive(Debug, Clone)]
+pub struct CertifyReport {
+    pub backend: String,
+    pub workload: String,
+    /// Recorded demand faults in the replayed stream.
+    pub faults: usize,
+    /// Adjacent fault pairs the independence relation admits.
+    pub candidate_pairs: usize,
+    /// Perturbed schedules actually replayed (≤ budget + 1 compound).
+    pub schedules_run: usize,
+    pub outcome: CertOutcome,
+}
+
+impl CertifyReport {
+    /// Did a perturbation break fingerprint invariance?
+    pub fn violated(&self) -> bool {
+        matches!(self.outcome, CertOutcome::Violated { .. })
+    }
+
+    /// Was invariance positively certified (not merely out of scope)?
+    pub fn certified(&self) -> bool {
+        matches!(self.outcome, CertOutcome::Certified)
+    }
+
+    /// Render the certificate for terminal / CI-artifact output.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "determinism certificate: backend={} workload={}\n  \
+             recorded faults: {}  independent adjacent pairs: {}  schedules replayed: {}\n",
+            self.backend, self.workload, self.faults, self.candidate_pairs, self.schedules_run,
+        );
+        match &self.outcome {
+            CertOutcome::Certified => s.push_str(
+                "  verdict: CERTIFIED (Metrics::fingerprint invariant under every replayed \
+                 perturbation)\n",
+            ),
+            CertOutcome::OutOfScope { reason } => {
+                s.push_str(&format!("  verdict: OUT OF SCOPE ({reason})\n"));
+            }
+            CertOutcome::Violated { schedule, diffs } => {
+                s.push_str(&format!("  verdict: VIOLATED by {schedule}\n"));
+                for (name, base, got) in diffs {
+                    s.push_str(&format!("    {name}: baseline {base} vs perturbed {got}\n"));
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Replay `trace` under `order` (or the recorded order) and return the
+/// deterministic fingerprint plus whether the replay evicted anything.
+fn replay_fingerprint(
+    trace: &Trace,
+    cfg: &SystemConfig,
+    backend: &str,
+    order: Option<&[usize]>,
+) -> Result<(Vec<(&'static str, u64)>, bool)> {
+    let mut w = match order {
+        Some(o) => TraceWorkload::with_schedule(trace, o)?,
+        None => TraceWorkload::new(trace),
+    };
+    let (events, truncated, r) = capture_run(cfg, backend, &mut w)?;
+    anyhow::ensure!(
+        !truncated,
+        "replay capture truncated at {} events; raise trace.max_events",
+        events.len()
+    );
+    let evicted = events.iter().any(|e| {
+        matches!(
+            e.kind,
+            TraceEventKind::EvictClean | TraceEventKind::EvictDirty | TraceEventKind::EvictForced
+        )
+    });
+    Ok((r.metrics.fingerprint(), evicted))
+}
+
+fn out_of_scope(trace: &Trace, backend: &str, faults: usize, reason: String) -> CertifyReport {
+    CertifyReport {
+        backend: backend.to_string(),
+        workload: trace.meta.workload.clone(),
+        faults,
+        candidate_pairs: 0,
+        schedules_run: 0,
+        outcome: CertOutcome::OutOfScope { reason },
+    }
+}
+
+/// Certify `Metrics::fingerprint` invariance of replaying `trace` under
+/// (`cfg`, `backend`) against up to `budget` single adjacent
+/// transpositions of independent fault pairs (plus one compound
+/// schedule applying a non-overlapping subset of them all at once).
+pub fn certify(
+    trace: &Trace,
+    cfg: &SystemConfig,
+    backend: &str,
+    budget: usize,
+) -> Result<CertifyReport> {
+    let family = family_for(backend)?;
+    let w = TraceWorkload::new(trace);
+    let faults: Vec<(u64, bool)> = w.fault_stream().to_vec();
+
+    // Scope gates — each is a real dependence channel, not a shortcut.
+    if trace.meta.truncated {
+        return Ok(out_of_scope(
+            trace,
+            backend,
+            faults.len(),
+            "recorded stream is truncated; a cut tail hides dependencies".into(),
+        ));
+    }
+    if trace.events.iter().any(|e| {
+        matches!(
+            e.kind,
+            TraceEventKind::EvictClean | TraceEventKind::EvictDirty | TraceEventKind::EvictForced
+        )
+    }) {
+        return Ok(out_of_scope(
+            trace,
+            backend,
+            faults.len(),
+            "recorded stream contains evictions; fault order picks victims under pressure".into(),
+        ));
+    }
+    let stateless = match family {
+        ProtocolFamily::GpuVm => cfg.gpuvm.prefetch_policy == PrefetchPolicy::None,
+        ProtocolFamily::Uvm => matches!(
+            cfg.uvm.prefetch_policy,
+            PrefetchPolicy::None | PrefetchPolicy::Fixed
+        ),
+    };
+    if !stateless {
+        return Ok(out_of_scope(
+            trace,
+            backend,
+            faults.len(),
+            format!(
+                "prefetcher '{:?}' learns from fault order; only stateless policies are in scope",
+                match family {
+                    ProtocolFamily::GpuVm => cfg.gpuvm.prefetch_policy,
+                    ProtocolFamily::Uvm => cfg.uvm.prefetch_policy,
+                }
+            ),
+        ));
+    }
+    if faults.len() < 2 {
+        return Ok(out_of_scope(
+            trace,
+            backend,
+            faults.len(),
+            "fewer than two recorded demand faults; nothing to transpose".into(),
+        ));
+    }
+
+    // Region-relative group of a fault: UVM services whole prefetch
+    // groups, so two faults in one group share a DMA and do not
+    // commute. GPUVM (and page-granular UVM) groups are single pages.
+    let group_bytes = match family {
+        ProtocolFamily::Uvm if cfg.uvm.prefetch_policy == PrefetchPolicy::Fixed => {
+            cfg.uvm.prefetch_size.max(trace.meta.page_size)
+        }
+        _ => trace.meta.page_size,
+    };
+    let group_of = |page: u64| -> Option<(usize, u64)> {
+        w.locate_page(page)
+            .map(|(region, offset)| (region, offset / group_bytes.max(1)))
+    };
+
+    let candidates: Vec<usize> = (0..faults.len() - 1)
+        .filter(|&i| {
+            let (pa, pb) = (faults[i].0, faults[i + 1].0);
+            pa != pb
+                && match (group_of(pa), group_of(pb)) {
+                    (Some(ga), Some(gb)) => ga != gb,
+                    // A page outside the recorded layout is skipped by
+                    // replay; do not transpose around it.
+                    _ => false,
+                }
+        })
+        .collect();
+    if candidates.is_empty() {
+        return Ok(out_of_scope(
+            trace,
+            backend,
+            faults.len(),
+            "no adjacent fault pair is independent under the scope relation".into(),
+        ));
+    }
+
+    // Deterministic stride over the candidates — no randomness, same
+    // certificate every run.
+    let budget = budget.max(1);
+    let stride = candidates.len().div_ceil(budget).max(1);
+    let selected: Vec<usize> = candidates.iter().copied().step_by(stride).collect();
+
+    let (baseline, evicted) = replay_fingerprint(trace, cfg, backend, None)?;
+    if evicted {
+        return Ok(out_of_scope(
+            trace,
+            backend,
+            faults.len(),
+            "replay evicts under this configuration; fault order picks victims".into(),
+        ));
+    }
+
+    let identity: Vec<usize> = (0..faults.len()).collect();
+    let diff = |perturbed: &[(&'static str, u64)]| -> Vec<(&'static str, u64, u64)> {
+        baseline
+            .iter()
+            .zip(perturbed)
+            .filter(|((_, a), (_, b))| a != b)
+            .map(|(&(name, a), &(_, b))| (name, a, b))
+            .collect()
+    };
+
+    let mut schedules_run = 0usize;
+    for &i in &selected {
+        let mut order = identity.clone();
+        order.swap(i, i + 1);
+        let (fp, _) = replay_fingerprint(trace, cfg, backend, Some(&order))?;
+        schedules_run += 1;
+        let diffs = diff(&fp);
+        if !diffs.is_empty() {
+            return Ok(CertifyReport {
+                backend: backend.to_string(),
+                workload: trace.meta.workload.clone(),
+                faults: faults.len(),
+                candidate_pairs: candidates.len(),
+                schedules_run,
+                outcome: CertOutcome::Violated {
+                    schedule: format!("transposing faults #{i} and #{}", i + 1),
+                    diffs,
+                },
+            });
+        }
+    }
+
+    // One compound schedule: every selected swap that does not overlap
+    // its predecessor, applied at once — catches order dependencies a
+    // single transposition cannot.
+    let mut order = identity.clone();
+    let mut applied = 0usize;
+    let mut last: Option<usize> = None;
+    for &i in &selected {
+        if last.is_none_or(|l| i > l + 1) {
+            order.swap(i, i + 1);
+            last = Some(i);
+            applied += 1;
+        }
+    }
+    if applied > 1 {
+        let (fp, _) = replay_fingerprint(trace, cfg, backend, Some(&order))?;
+        schedules_run += 1;
+        let diffs = diff(&fp);
+        if !diffs.is_empty() {
+            return Ok(CertifyReport {
+                backend: backend.to_string(),
+                workload: trace.meta.workload.clone(),
+                faults: faults.len(),
+                candidate_pairs: candidates.len(),
+                schedules_run,
+                outcome: CertOutcome::Violated {
+                    schedule: format!("compound schedule of {applied} disjoint transpositions"),
+                    diffs,
+                },
+            });
+        }
+    }
+
+    Ok(CertifyReport {
+        backend: backend.to_string(),
+        workload: trace.meta.workload.clone(),
+        faults: faults.len(),
+        candidate_pairs: candidates.len(),
+        schedules_run,
+        outcome: CertOutcome::Certified,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{BuildOpts, WorkloadSpec};
+    use crate::trace::capture;
+
+    fn small_cfg() -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.gpu.sms = 2;
+        c.gpu.warps_per_sm = 2;
+        // Plenty of GPU memory: the eviction-free scope.
+        c.gpu.mem_bytes = 64 << 20;
+        c
+    }
+
+    fn capture_small(cfg: &SystemConfig, backend: &str) -> Trace {
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let opts = BuildOpts::for_cfg(cfg);
+        capture(cfg, &spec, &opts, backend).unwrap().0
+    }
+
+    #[test]
+    fn default_policies_certify() {
+        let cfg = small_cfg();
+        for backend in ["gpuvm", "uvm"] {
+            let t = capture_small(&cfg, backend);
+            let r = certify(&t, &cfg, backend, 4).unwrap();
+            assert!(r.certified(), "{backend}: {}", r.render());
+            assert!(r.schedules_run >= 1, "{backend} replayed no schedules");
+        }
+    }
+
+    #[test]
+    fn stateful_prefetch_is_out_of_scope() {
+        let mut cfg = small_cfg();
+        cfg.gpuvm.prefetch_policy = PrefetchPolicy::Stride;
+        let t = capture_small(&small_cfg(), "gpuvm");
+        let r = certify(&t, &cfg, "gpuvm", 4).unwrap();
+        assert!(
+            matches!(r.outcome, CertOutcome::OutOfScope { .. }),
+            "{}",
+            r.render()
+        );
+        assert!(!r.violated());
+    }
+
+    #[test]
+    fn eviction_heavy_trace_is_out_of_scope() {
+        // The golden scenario oversubscribes GPU memory → evictions.
+        let t = crate::trace::golden_capture("gpuvm").unwrap();
+        let r = certify(&t, &crate::trace::golden_config(), "gpuvm", 4).unwrap();
+        assert!(
+            matches!(r.outcome, CertOutcome::OutOfScope { .. }),
+            "{}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn uvm_same_group_pairs_are_not_candidates() {
+        // With 64 KB fixed groups, consecutive recorded group-head
+        // faults are distinct groups — but the relation must hold up
+        // under a page-granular check too: certify under `none`
+        // prefetch, where every distinct page is its own group.
+        let mut cfg = small_cfg();
+        cfg.uvm.prefetch_policy = PrefetchPolicy::None;
+        let t = capture_small(&cfg, "uvm");
+        let r = certify(&t, &cfg, "uvm", 4).unwrap();
+        assert!(r.certified(), "{}", r.render());
+    }
+}

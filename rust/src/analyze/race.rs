@@ -1,0 +1,567 @@
+//! Race & causality checker over the happens-before relation.
+//!
+//! Where the linter ([`crate::analyze::lint`]) asks "is each page's
+//! lifecycle a legal word?", this layer asks the cross-actor questions
+//! GPUVM's no-CPU-mediation claim rests on, using the HB graph
+//! ([`crate::analyze::hb`]):
+//!
+//! - **`unordered-conflict`** — two conflicting operations on one
+//!   `(gpu, page)` (fill/refill, touch, evict) with no happens-before
+//!   path between them. Candidate pairs come from a lifecycle phase
+//!   scan (a fill while the page is already resident, an eviction of a
+//!   non-resident page, a demand fault of a resident page); each is
+//!   confirmed genuinely concurrent via [`HbGraph::ordered`] before it
+//!   is reported.
+//! - **`lost-wakeup`** — a waiter released with no HB path from its
+//!   data: a `fill` (or `spec-fill`) whose matched fetch WR had been
+//!   posted but **not** completed at the moment the fill was recorded.
+//! - **`completion-reorder`** — `wr_id`s on one completion queue must
+//!   be observed in strictly increasing order (WRs are numbered at post
+//!   time and each CQ is FIFO); any decrease means the transport or the
+//!   poller reordered completions.
+//! - **`causality-violation`** — every timestamped HB edge must carry
+//!   non-decreasing simulated `at` ([`HbEdgeKind::timestamped`]); and,
+//!   cross-checked against the span builder
+//!   ([`crate::obs::span::build_spans`]), every reconstructed fault
+//!   span must satisfy `start ≤ posted ≤ completed ≤ end` (joined spans
+//!   exempt `posted ≥ start` — a demand join legally adopts an earlier
+//!   post). Together these make [`crate::obs::stage_split`]'s clamps
+//!   provably no-ops: span stages can never go negative by
+//!   construction on a certified trace.
+//!
+//! The verbs `gpuvm analyze races <FILE|golden|run …>` drive this and
+//! exit nonzero on any finding, mirroring the linter's contract.
+
+use super::hb::{HbEdgeKind, HbGraph};
+use super::lint::family_for;
+use super::protocol::ProtocolFamily;
+use crate::obs::span::build_spans;
+use crate::trace::{Trace, TraceEventKind};
+use crate::util::fxhash::FxHashMap;
+use anyhow::Result;
+
+/// Findings kept in full; anything beyond is counted as suppressed so a
+/// garbage stream cannot balloon the report.
+const MAX_FINDINGS: usize = 64;
+
+/// Stable race/causality failure classes (the HB-level counterpart of
+/// [`crate::analyze::protocol::ViolationKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RaceKind {
+    /// Conflicting same-page pair with no HB path either way.
+    UnorderedConflict,
+    /// Waiter released before its fill's data dependency resolved.
+    LostWakeup,
+    /// Completion-queue `wr_id`s observed out of order.
+    CompletionReorder,
+    /// HB-ordered events with decreasing simulated timestamps (or a
+    /// span whose stage boundaries would need clamping).
+    CausalityViolation,
+}
+
+impl RaceKind {
+    /// Stable report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::UnorderedConflict => "unordered-conflict",
+            Self::LostWakeup => "lost-wakeup",
+            Self::CompletionReorder => "completion-reorder",
+            Self::CausalityViolation => "causality-violation",
+        }
+    }
+}
+
+/// One race/causality finding.
+#[derive(Debug, Clone)]
+pub struct RaceFinding {
+    pub kind: RaceKind,
+    /// Stream index of the earlier implicated event, where recoverable.
+    pub a: Option<usize>,
+    /// Stream index of the later implicated event, where recoverable
+    /// (span-level findings carry times in `detail` instead).
+    pub b: Option<usize>,
+    /// Human-readable diagnosis.
+    pub detail: String,
+}
+
+/// Outcome of race-checking one trace.
+#[derive(Debug)]
+pub struct RaceReport {
+    pub family: ProtocolFamily,
+    pub backend: String,
+    pub workload: String,
+    /// Stream length.
+    pub events_checked: usize,
+    /// Vector-clock lanes (queues in use + evictors).
+    pub lanes: usize,
+    /// Happens-before edges derived.
+    pub edges: usize,
+    /// Reconstructed fault spans cross-checked against `stage_split`.
+    pub spans_checked: usize,
+    pub truncated: bool,
+    pub findings: Vec<RaceFinding>,
+    /// Findings beyond [`MAX_FINDINGS`] counted but not kept.
+    pub suppressed: usize,
+}
+
+impl RaceReport {
+    /// Race-free and causality-clean?
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty() && self.suppressed == 0
+    }
+
+    /// Render the report for terminal / CI-artifact output.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "happens-before race check: backend={} (family {}) workload={}\n  \
+             events: {}  lanes: {}  hb edges: {}  spans: {}{}\n",
+            self.backend,
+            self.family.name(),
+            self.workload,
+            self.events_checked,
+            self.lanes,
+            self.edges,
+            self.spans_checked,
+            if self.truncated {
+                "  [truncated stream]"
+            } else {
+                ""
+            }
+        );
+        if self.clean() {
+            s.push_str("  verdict: CLEAN (race-free, causality-certified)\n");
+        } else {
+            let total = self.findings.len() + self.suppressed;
+            s.push_str(&format!(
+                "  verdict: VIOLATION [{total} finding{}]\n",
+                if total == 1 { "" } else { "s" }
+            ));
+            for f in &self.findings {
+                let at = match (f.a, f.b) {
+                    (Some(a), Some(b)) => format!("#{a} ~ #{b}"),
+                    (None, Some(b)) => format!("#{b}"),
+                    _ => "span".to_string(),
+                };
+                s.push_str(&format!("  [{}] {at}: {}\n", f.kind.name(), f.detail));
+            }
+            if self.suppressed > 0 {
+                s.push_str(&format!("  (+{} more suppressed)\n", self.suppressed));
+            }
+        }
+        s
+    }
+}
+
+/// Race-check `trace`, resolving the family from its recorded backend.
+pub fn check_trace(trace: &Trace) -> Result<RaceReport> {
+    Ok(check(trace, family_for(&trace.meta.backend)?))
+}
+
+/// Per-(gpu, page) lifecycle phase, mirrored from the protocol rules so
+/// conflict candidates line up with what the linter would call illegal.
+#[derive(Default)]
+struct Phase {
+    resident: bool,
+    last_fill: Option<usize>,
+    last_evict: Option<usize>,
+    last_event: Option<usize>,
+}
+
+/// Build the HB graph and run all four checks over one stream.
+pub fn check(trace: &Trace, family: ProtocolFamily) -> RaceReport {
+    let events = &trace.events;
+    let g = HbGraph::build(events);
+    let mut findings: Vec<RaceFinding> = Vec::new();
+    let mut suppressed = 0usize;
+    let mut push = |f: RaceFinding, findings: &mut Vec<RaceFinding>, suppressed: &mut usize| {
+        if findings.len() < MAX_FINDINGS {
+            findings.push(f);
+        } else {
+            *suppressed += 1;
+        }
+    };
+
+    // 1. Edge causality: HB-ordered events must not travel back in
+    // simulated time (evict-* edges exempt, see hb module docs).
+    for e in &g.edges {
+        if e.kind.timestamped() && events[e.from].at > events[e.to].at {
+            push(
+                RaceFinding {
+                    kind: RaceKind::CausalityViolation,
+                    a: Some(e.from),
+                    b: Some(e.to),
+                    detail: format!(
+                        "'{}' edge travels back in time: {} at {}ns happens-before {} at {}ns",
+                        e.kind.name(),
+                        events[e.from].describe(),
+                        events[e.from].at,
+                        events[e.to].describe(),
+                        events[e.to].at,
+                    ),
+                },
+                &mut findings,
+                &mut suppressed,
+            );
+        }
+    }
+
+    // 2–4. One forward scan: completion order per queue, lost wakeups,
+    // and unordered same-page conflict candidates.
+    let mut queue_last: FxHashMap<(u8, u64), (usize, u64)> = FxHashMap::default();
+    let mut phases: FxHashMap<(u8, u64), Phase> = FxHashMap::default();
+    for (i, e) in events.iter().enumerate() {
+        match e.kind {
+            TraceEventKind::WrComplete => {
+                let wr_id = e.aux >> 1;
+                let key = (e.gpu, e.page);
+                if let Some(&(prev_i, prev_id)) = queue_last.get(&key) {
+                    if wr_id <= prev_id {
+                        push(
+                            RaceFinding {
+                                kind: RaceKind::CompletionReorder,
+                                a: Some(prev_i),
+                                b: Some(i),
+                                detail: format!(
+                                    "queue({},{}) completed wr_id {wr_id} after wr_id {prev_id}: \
+                                     WRs are numbered at post time and each CQ is FIFO, so \
+                                     per-queue completions must be strictly increasing",
+                                    e.gpu, e.page,
+                                ),
+                            },
+                            &mut findings,
+                            &mut suppressed,
+                        );
+                    }
+                }
+                queue_last.insert(key, (i, wr_id));
+            }
+            TraceEventKind::Fill | TraceEventKind::SpecFill => {
+                if let Some(rel) = g.fill_release.get(&i) {
+                    if rel.complete.is_none() {
+                        push(
+                            RaceFinding {
+                                kind: RaceKind::LostWakeup,
+                                a: Some(rel.post),
+                                b: Some(i),
+                                detail: format!(
+                                    "{} of gpu{} page {} released its waiter before the fetch \
+                                     WR posted at #{} completed: no HB path from the data to \
+                                     the release",
+                                    e.kind.name(),
+                                    e.gpu,
+                                    e.page,
+                                    rel.post,
+                                ),
+                            },
+                            &mut findings,
+                            &mut suppressed,
+                        );
+                    }
+                }
+                let ph = phases.entry((e.gpu, e.page)).or_default();
+                if ph.resident {
+                    if let Some(a) = ph.last_fill {
+                        if g.concurrent(a, i) {
+                            push(
+                                RaceFinding {
+                                    kind: RaceKind::UnorderedConflict,
+                                    a: Some(a),
+                                    b: Some(i),
+                                    detail: format!(
+                                        "gpu{} page {} filled at #{i} while already resident \
+                                         from the fill at #{a}, and no HB path orders the two \
+                                         fills",
+                                        e.gpu, e.page,
+                                    ),
+                                },
+                                &mut findings,
+                                &mut suppressed,
+                            );
+                        }
+                    }
+                }
+                ph.resident = true;
+                ph.last_fill = Some(i);
+                ph.last_event = Some(i);
+            }
+            TraceEventKind::Fault => {
+                let ph = phases.entry((e.gpu, e.page)).or_default();
+                if ph.resident {
+                    if let Some(a) = ph.last_fill {
+                        if g.concurrent(a, i) {
+                            push(
+                                RaceFinding {
+                                    kind: RaceKind::UnorderedConflict,
+                                    a: Some(a),
+                                    b: Some(i),
+                                    detail: format!(
+                                        "gpu{} page {} demand-faulted at #{i} while resident \
+                                         from the fill at #{a}, unordered by HB (touch/fill \
+                                         conflict)",
+                                        e.gpu, e.page,
+                                    ),
+                                },
+                                &mut findings,
+                                &mut suppressed,
+                            );
+                        }
+                    }
+                }
+                ph.last_event = Some(i);
+            }
+            TraceEventKind::EvictClean
+            | TraceEventKind::EvictDirty
+            | TraceEventKind::EvictForced => {
+                let ph = phases.entry((e.gpu, e.page)).or_default();
+                if !ph.resident {
+                    let a = ph.last_event;
+                    if a.is_none() || a.is_some_and(|a| g.concurrent(a, i)) {
+                        push(
+                            RaceFinding {
+                                kind: RaceKind::UnorderedConflict,
+                                a,
+                                b: Some(i),
+                                detail: format!(
+                                    "gpu{} page {} evicted at #{i} while not resident: the \
+                                     eviction has no HB path from a fill of the page",
+                                    e.gpu, e.page,
+                                ),
+                            },
+                            &mut findings,
+                            &mut suppressed,
+                        );
+                    }
+                }
+                ph.resident = false;
+                ph.last_evict = Some(i);
+                ph.last_event = Some(i);
+            }
+            TraceEventKind::Promote | TraceEventKind::WrPost => {
+                if e.kind == TraceEventKind::Promote {
+                    phases.entry((e.gpu, e.page)).or_default().last_event = Some(i);
+                }
+            }
+        }
+    }
+
+    // 5. Span cross-check: the reconstructed fault spans must already
+    // satisfy the ordering stage_split's clamps defend against.
+    let spans = build_spans(events, family, trace.meta.truncated);
+    for s in &spans.spans {
+        let mut bad: Option<String> = None;
+        if s.end < s.start {
+            bad = Some(format!("fill at {}ns precedes fault at {}ns", s.end, s.start));
+        } else if let Some(p) = s.posted {
+            if p < s.start && !s.joined {
+                bad = Some(format!(
+                    "WR posted at {}ns before the fault at {}ns (non-joined span)",
+                    p, s.start
+                ));
+            } else if s.completed.is_some_and(|c| c < p) {
+                bad = Some(format!(
+                    "WR completed at {}ns before its post at {p}ns",
+                    s.completed.unwrap_or(0),
+                ));
+            }
+        }
+        if bad.is_none() && s.completed.is_some_and(|c| c > s.end) {
+            bad = Some(format!(
+                "WR completed at {}ns after the fill at {}ns",
+                s.completed.unwrap_or(0),
+                s.end
+            ));
+        }
+        if let Some(why) = bad {
+            push(
+                RaceFinding {
+                    kind: RaceKind::CausalityViolation,
+                    a: None,
+                    b: None,
+                    detail: format!(
+                        "fault span gpu{} page {}: {why} — stage_split would clamp a \
+                         negative stage",
+                        s.gpu, s.page,
+                    ),
+                },
+                &mut findings,
+                &mut suppressed,
+            );
+        }
+    }
+
+    RaceReport {
+        family,
+        backend: trace.meta.backend.clone(),
+        workload: trace.meta.workload.clone(),
+        events_checked: events.len(),
+        lanes: g.lanes.len(),
+        edges: g.edges.len(),
+        spans_checked: spans.spans.len(),
+        truncated: trace.meta.truncated,
+        findings,
+        suppressed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{RegionMeta, TraceEvent, TraceMeta};
+
+    fn ev(at: u64, kind: TraceEventKind, page: u64, aux: u64) -> TraceEvent {
+        TraceEvent {
+            at,
+            page,
+            aux,
+            kind,
+            gpu: 0,
+        }
+    }
+
+    fn mk(backend: &str, events: Vec<TraceEvent>) -> Trace {
+        Trace {
+            meta: TraceMeta {
+                backend: backend.into(),
+                workload: "synthetic".into(),
+                page_size: 4096,
+                seed: 0,
+                truncated: false,
+                regions: vec![RegionMeta {
+                    len_bytes: 1 << 20,
+                    read_mostly: false,
+                }],
+            },
+            events,
+        }
+    }
+
+    fn kinds(r: &RaceReport) -> Vec<RaceKind> {
+        r.findings.iter().map(|f| f.kind).collect()
+    }
+
+    #[test]
+    fn clean_lifecycle_certifies() {
+        use TraceEventKind as K;
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(0, K::Fault, 3, 1),
+                ev(10, K::WrPost, 3, 7 << 1),
+                ev(20, K::WrComplete, 2, 7 << 1),
+                ev(20, K::Fill, 3, 4096),
+                ev(40, K::EvictDirty, 3, 4096),
+            ],
+        );
+        let r = check(&t, ProtocolFamily::GpuVm);
+        assert!(r.clean(), "{}", r.render());
+        assert_eq!(r.lanes, 2); // queue(0,2) + evictor(0)
+        assert_eq!(r.spans_checked, 1);
+    }
+
+    #[test]
+    fn completion_reorder_detected() {
+        use TraceEventKind as K;
+        // Queue 1 observes wr 9 then wr 8: numbered at post time, FIFO
+        // queues can never do that.
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(0, K::WrPost, 1, 8 << 1),
+                ev(0, K::WrPost, 2, 9 << 1),
+                ev(5, K::WrComplete, 1, 9 << 1),
+                ev(6, K::WrComplete, 1, 8 << 1),
+            ],
+        );
+        let r = check(&t, ProtocolFamily::GpuVm);
+        assert_eq!(kinds(&r), vec![RaceKind::CompletionReorder]);
+        assert_eq!((r.findings[0].a, r.findings[0].b), (Some(2), Some(3)));
+    }
+
+    #[test]
+    fn lost_wakeup_detected() {
+        use TraceEventKind as K;
+        // Fill recorded before the fetch WR's completion.
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(0, K::Fault, 3, 0),
+                ev(1, K::WrPost, 3, 4 << 1),
+                ev(2, K::Fill, 3, 4096),
+                ev(3, K::WrComplete, 0, 4 << 1),
+            ],
+        );
+        let r = check(&t, ProtocolFamily::GpuVm);
+        assert!(kinds(&r).contains(&RaceKind::LostWakeup), "{}", r.render());
+    }
+
+    #[test]
+    fn unordered_double_fill_detected() {
+        use TraceEventKind as K;
+        let t = mk(
+            "uvm",
+            vec![ev(0, K::Fill, 5, 4096), ev(1, K::Fill, 5, 4096)],
+        );
+        let r = check(&t, ProtocolFamily::Uvm);
+        assert_eq!(kinds(&r), vec![RaceKind::UnorderedConflict]);
+    }
+
+    #[test]
+    fn evict_without_fill_detected() {
+        use TraceEventKind as K;
+        let t = mk("gpuvm", vec![ev(0, K::EvictClean, 5, 0)]);
+        let r = check(&t, ProtocolFamily::GpuVm);
+        assert_eq!(kinds(&r), vec![RaceKind::UnorderedConflict]);
+        assert_eq!(r.findings[0].a, None);
+    }
+
+    #[test]
+    fn causality_violation_on_backward_edge() {
+        use TraceEventKind as K;
+        // Completion stamped before its post: wr-match edge goes back
+        // in time.
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(10, K::WrPost, 1, 4 << 1),
+                ev(5, K::WrComplete, 0, 4 << 1),
+            ],
+        );
+        let r = check(&t, ProtocolFamily::GpuVm);
+        assert!(
+            kinds(&r).contains(&RaceKind::CausalityViolation),
+            "{}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn evict_refault_timestamps_are_exempt() {
+        use TraceEventKind as K;
+        // GPUVM future-stamps evictions; the victim's refault may carry
+        // an earlier `at` and must NOT be a causality finding.
+        let t = mk(
+            "gpuvm",
+            vec![
+                ev(0, K::Fault, 5, 0),
+                ev(5, K::Fill, 5, 4096),
+                ev(50, K::EvictClean, 5, 0), // stamped ahead
+                ev(45, K::Fault, 5, 0),      // racing refault, earlier at
+                ev(60, K::Fill, 5, 4096),
+            ],
+        );
+        let r = check(&t, ProtocolFamily::GpuVm);
+        assert!(r.clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn render_mentions_verdict_and_kind() {
+        use TraceEventKind as K;
+        let t = mk("gpuvm", vec![ev(0, K::EvictClean, 5, 0)]);
+        let r = check(&t, ProtocolFamily::GpuVm);
+        let out = r.render();
+        assert!(out.contains("VIOLATION"));
+        assert!(out.contains("unordered-conflict"));
+        let clean = check(&mk("gpuvm", vec![]), ProtocolFamily::GpuVm);
+        assert!(clean.render().contains("CLEAN"));
+    }
+}

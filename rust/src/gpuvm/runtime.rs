@@ -915,8 +915,17 @@ impl MemorySystem for GpuVmSystem {
                 debug_assert!(self.queue_busy[queue] > 0);
                 self.queue_busy[queue] -= 1;
                 // Completion records are keyed by wr_id (see the trace
-                // module table); the matching WrPost carries page/dir.
-                trace::emit(&self.sink, now, 0, TraceEventKind::WrComplete, 0, wr_id << 1);
+                // module table); the matching WrPost carries page/dir,
+                // and `page` here carries the completion-queue id so the
+                // happens-before analyzer can lint per-queue ordering.
+                trace::emit(
+                    &self.sink,
+                    now,
+                    0,
+                    TraceEventKind::WrComplete,
+                    queue as u64,
+                    wr_id << 1,
+                );
                 if let Some(key) = self.wr_fault.remove(&wr_id) {
                     let (gpu, frame) =
                         self.complete_fetch(now, key, &mut *ctx.hm, &mut *ctx.m, &mut *ctx.wakes);

@@ -74,9 +74,16 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|profile|e2e|l
                 [--prefetch-a P --prefetch-b P] [--transport-a T --transport-b T]
                 [--ignore-timing]   replay under two configs, report first divergence
            golden [--dir DIR] [--check]                  verify/bootstrap golden traces
-  analyze  trace FILE [--mem BACKEND]     lint a captured trace against the page-lifecycle protocol
-           golden [--dir DIR]             lint the golden traces (captures fresh if not committed)
+  analyze  trace FILE [--family B]       lint a captured trace against the page-lifecycle protocol
+           golden [--dir DIR] [--family B]  lint the golden traces (captures fresh if not committed)
            run --app S [--mem B] ...      capture a run and lint its stream in one step
+           races <FILE|golden|run ...> [--family B] [--report FILE]
+                happens-before race & causality check: unordered same-page
+                conflicts, lost wakeups, per-queue completion reordering,
+                timestamp causality (incl. stage_split cross-check)
+           certify [--app S] [--mem B1,B2] [--budget N] [--report FILE]
+                determinism certificate: replay under bounded transpositions
+                of HB-independent fault pairs; Metrics::fingerprint must not move
            policies [--pages N] [--frames N] [--warps N] [--seed N]
                 [--policy P] [--report FILE]   small-scope model-check the victim protocols
            exit codes: 0 clean / certified as expected, 1 violation found, 2 usage or IO error
@@ -452,22 +459,49 @@ fn cmd_trace(args: &Args) -> Result<()> {
     }
 }
 
-/// `gpuvm analyze <trace|golden|run|policies>` — the protocol analyzer's
-/// CLI face ([`gpuvm::analyze`]). Lint verbs print the report and exit 1
-/// on a violation (2 stays the usage/IO error code from `main`);
-/// `policies` model-checks every registered victim protocol and exits 1
-/// if any certification diverges from the expected outcome.
+/// `gpuvm analyze <trace|golden|run|races|certify|policies>` — the
+/// protocol analyzer's CLI face ([`gpuvm::analyze`]). Lint and race
+/// verbs print the report and exit 1 on a violation (2 stays the
+/// usage/IO error code from `main`); `policies` model-checks every
+/// registered victim protocol, and `certify` replays bounded schedule
+/// perturbations asserting fingerprint invariance — both exit 1 if the
+/// certification diverges from the expected outcome.
 fn cmd_analyze(args: &Args) -> Result<()> {
     use gpuvm::analyze::{self, lint};
     use gpuvm::trace::{self, Trace};
 
     const ANALYZE_USAGE: &str =
-        "usage: gpuvm analyze <trace FILE|golden|run|policies> (see `gpuvm` help)";
+        "usage: gpuvm analyze <trace FILE|golden|run|races|certify|policies> (see `gpuvm` help)";
 
     // Print a lint report; returns whether the trace was clean.
     fn report_lint(r: &gpuvm::analyze::LintReport) -> bool {
         print!("{}", r.render());
         r.clean()
+    }
+
+    // The one place family resolution happens for every trace-driven
+    // verb (`trace`, `golden` — committed *and* fresh-capture fallback —
+    // and `races`): an explicit `--family` (or legacy `--mem`) override
+    // wins, else the trace's recorded backend decides via
+    // [`lint::family_for`].
+    fn resolve_family(args: &Args, t: &Trace) -> Result<gpuvm::analyze::ProtocolFamily> {
+        match args.get("family").or_else(|| args.get("mem")) {
+            Some(name) => lint::family_for(name),
+            None => lint::family_for(&t.meta.backend),
+        }
+    }
+
+    // Load a golden trace (committed, else a fresh capture of the
+    // golden scenario so the gate still checks the capture path).
+    fn golden_trace(dir: &std::path::Path, backend: &str, what: &str) -> Result<Trace> {
+        let path = dir.join(format!("{backend}_default.trace"));
+        if path.exists() {
+            println!("{what} committed {}", path.display());
+            Trace::load(&path)
+        } else {
+            println!("golden {} not committed; {what} a fresh capture", path.display());
+            trace::golden_capture(backend)
+        }
     }
 
     match args.positional().get(1).map(|s| s.as_str()) {
@@ -477,12 +511,7 @@ fn cmd_analyze(args: &Args) -> Result<()> {
                 .get(2)
                 .ok_or_else(|| anyhow::anyhow!("analyze trace needs a FILE"))?;
             let t = Trace::load(path)?;
-            let report = match args.get("mem") {
-                // Explicit family override (e.g. lint a gpuvm capture
-                // against the stricter profile of another backend).
-                Some(mem) => lint::lint(&t, lint::family_for(mem)?),
-                None => lint::lint_trace(&t)?,
-            };
+            let report = lint::lint(&t, resolve_family(args, &t)?);
             if !report_lint(&report) {
                 std::process::exit(1);
             }
@@ -492,21 +521,8 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             let dir = std::path::PathBuf::from(args.get_or("dir", "rust/tests/golden"));
             let mut clean = true;
             for backend in trace::GOLDEN_BACKENDS {
-                let path = dir.join(format!("{backend}_default.trace"));
-                let t = if path.exists() {
-                    println!("linting committed {}", path.display());
-                    Trace::load(&path)?
-                } else {
-                    // Not yet committed: lint a fresh capture of the
-                    // golden scenario so the gate still checks the
-                    // capture path.
-                    println!(
-                        "golden {} not committed; linting a fresh capture",
-                        path.display()
-                    );
-                    trace::golden_capture(backend)?
-                };
-                clean &= report_lint(&lint::lint_trace(&t)?);
+                let t = golden_trace(&dir, backend, "linting")?;
+                clean &= report_lint(&lint::lint(&t, resolve_family(args, &t)?));
             }
             if !clean {
                 std::process::exit(1);
@@ -527,6 +543,75 @@ fn cmd_analyze(args: &Args) -> Result<()> {
                 eprintln!("warning: {w}");
             }
             if !report_lint(&lint::lint_trace(t)?) {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        Some("races") => {
+            let mut reports = Vec::new();
+            match args.positional().get(2).map(|s| s.as_str()) {
+                Some("golden") => {
+                    let dir = std::path::PathBuf::from(args.get_or("dir", "rust/tests/golden"));
+                    for backend in trace::GOLDEN_BACKENDS {
+                        let t = golden_trace(&dir, backend, "race-checking")?;
+                        reports.push(analyze::race_check(&t, resolve_family(args, &t)?));
+                    }
+                }
+                Some("run") => {
+                    let cap = capture_run_from_args(args)?;
+                    println!(
+                        "captured {} events ({} demand faults) from {} on {}",
+                        cap.trace.events.len(),
+                        cap.trace.num_faults(),
+                        cap.trace.meta.workload,
+                        cap.backend
+                    );
+                    reports.push(analyze::race_check(&cap.trace, resolve_family(args, &cap.trace)?));
+                }
+                Some(path) => {
+                    let t = Trace::load(path)?;
+                    reports.push(analyze::race_check(&t, resolve_family(args, &t)?));
+                }
+                None => anyhow::bail!("analyze races needs <FILE|golden|run>"),
+            }
+            let mut text = String::new();
+            for r in &reports {
+                text.push_str(&r.render());
+            }
+            print!("{text}");
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, &text)?;
+                eprintln!("report: {path}");
+            }
+            if reports.iter().any(|r| !r.clean()) {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        Some("certify") => {
+            reject_prefetch_list(args)?;
+            let cfg = config_from(args)?;
+            let spec = WorkloadSpec::parse(args.get_or("app", "va@256k"))?;
+            let opts = opts_from(args, &cfg)?;
+            let budget = args.get_usize("budget", gpuvm::analyze::DEFAULT_BUDGET)?;
+            let backends: Vec<String> = match args.get("mem") {
+                Some(m) => m.split(',').map(str::to_string).collect(),
+                None => trace::GOLDEN_BACKENDS.iter().map(|b| (*b).to_string()).collect(),
+            };
+            let mut text = String::new();
+            let mut violated = false;
+            for backend in &backends {
+                let (t, _) = trace::capture(&cfg, &spec, &opts, backend)?;
+                let rep = analyze::certify(&t, &cfg, backend, budget)?;
+                violated |= rep.violated();
+                text.push_str(&rep.render());
+            }
+            print!("{text}");
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, &text)?;
+                eprintln!("report: {path}");
+            }
+            if violated {
                 std::process::exit(1);
             }
             Ok(())

@@ -211,9 +211,12 @@ impl Metrics {
 
     /// Canonical deterministic counters, as (name, value) pairs in a
     /// fixed order — the equality the trace-conformance harness
-    /// ([`crate::trace`]) asserts alongside event-stream identity. Only
-    /// integer counters that are bit-reproducible across identical runs
-    /// belong here (histogram means and derived floats are excluded).
+    /// ([`crate::trace`]) asserts alongside event-stream identity, and
+    /// the invariant the determinism certifier
+    /// ([`crate::analyze::perturb`]) proves stable under bounded
+    /// schedule perturbation. Only integer counters that are
+    /// bit-reproducible across identical runs belong here (histogram
+    /// means and derived floats are excluded).
     pub fn fingerprint(&self) -> Vec<(&'static str, u64)> {
         vec![
             ("finish_ns", self.finish_ns),

@@ -79,6 +79,12 @@ pub const STAGE_NAMES: [&str; 4] = ["queue", "transfer", "fill", "wake"];
 ///   the recorded fault latency, even when `post` predates `start`
 ///   (demand join of an in-flight speculative fetch) or is missing
 ///   (no WR observed: everything becomes queue + fill).
+///
+/// On a race-certified trace the clamps are provably no-ops: the
+/// causality check in [`crate::analyze::race`] cross-checks every
+/// reconstructed span for `start ≤ posted ≤ completed ≤ end` (joined
+/// spans exempt the first inequality), so no stage can go negative by
+/// construction.
 pub fn stage_split(
     start: SimTime,
     post: Option<SimTime>,

@@ -43,12 +43,16 @@
 //! | `evict-dirty`   | page/group head evicted        | bytes written back             |
 //! | `evict-forced`  | UVM forced unmap (live refs)   | bytes written back (0 if clean)|
 //! | `wr-post`       | page the WR moves              | `wr_id << 1 \| (dir == out)`   |
-//! | `wr-complete`   | 0 (keyed by `wr_id`)           | `wr_id << 1`                   |
+//! | `wr-complete`   | completion queue id            | `wr_id << 1`                   |
 //!
 //! UVM records a transfer's `wr-complete` at doorbell time (the driver
-//! path learns its completion synchronously from the engine); GPUVM
-//! records it when the CQ entry is polled. Both are deterministic, which
-//! is all conformance needs.
+//! path learns its completion synchronously from the engine, so the
+//! record carries a *future* `at` — the stream is execution-ordered,
+//! not `at`-sorted); GPUVM records it when the CQ entry is polled. Both
+//! are deterministic, which is all conformance needs. The completion's
+//! `page` field names the completion queue (UVM's serialized driver
+//! always uses copy queue 0), giving the happens-before analyzer
+//! ([`crate::analyze::hb`]) one clock lane per queue.
 //!
 //! The per-kind payload table above is *enforced*, not just documented:
 //! the protocol analyzer ([`crate::analyze`]) mechanizes it as

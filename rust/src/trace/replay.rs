@@ -81,9 +81,44 @@ impl TraceWorkload {
         }
     }
 
+    /// Replay scheduling hook for the determinism certifier
+    /// ([`crate::analyze::perturb`]): re-drive the same recorded faults
+    /// in a *permuted* issue order. `order[i]` names the recorded fault
+    /// (index into the demand-fault stream) replayed at step `i`;
+    /// `order` must be a permutation of `0..num_faults`.
+    pub fn with_schedule(trace: &Trace, order: &[usize]) -> anyhow::Result<Self> {
+        let base = Self::new(trace);
+        anyhow::ensure!(
+            order.len() == base.faults.len(),
+            "schedule has {} entries for {} recorded faults",
+            order.len(),
+            base.faults.len()
+        );
+        let mut seen = vec![false; base.faults.len()];
+        for &i in order {
+            anyhow::ensure!(i < base.faults.len(), "schedule entry {i} out of range");
+            anyhow::ensure!(!seen[i], "schedule repeats fault {i} (not a permutation)");
+            seen[i] = true;
+        }
+        let faults = order.iter().map(|&i| base.faults[i]).collect();
+        Ok(Self { faults, ..base })
+    }
+
     /// Recorded demand faults to replay.
     pub fn num_faults(&self) -> usize {
         self.faults.len()
+    }
+
+    /// The demand-fault stream as recorded: (global page, write intent).
+    pub fn fault_stream(&self) -> &[(u64, bool)] {
+        &self.faults
+    }
+
+    /// Public [`Self::locate`]: map a recorded global page to its
+    /// (region index, capture-time byte offset) — the certifier uses
+    /// this for region-relative prefetch-group arithmetic.
+    pub fn locate_page(&self, page: u64) -> Option<(usize, u64)> {
+        self.locate(page)
     }
 
     /// Map a recorded global page to (region index, capture-time byte
@@ -202,6 +237,26 @@ mod tests {
         assert_eq!(w.locate(2), Some((0, 8192)));
         assert_eq!(w.locate(3), Some((1, 0)));
         assert_eq!(w.locate(4), None);
+    }
+
+    #[test]
+    fn with_schedule_permutes_and_validates() {
+        let t = trace_with(
+            vec![RegionMeta {
+                len_bytes: 1 << 20,
+                read_mostly: false,
+            }],
+            vec![(0, false), (1, true), (2, false)],
+        );
+        let w = TraceWorkload::with_schedule(&t, &[2, 0, 1]).unwrap();
+        assert_eq!(w.fault_stream(), &[(2, false), (0, false), (1, true)]);
+        // The identity schedule reproduces the recorded stream.
+        let id = TraceWorkload::with_schedule(&t, &[0, 1, 2]).unwrap();
+        assert_eq!(id.fault_stream(), TraceWorkload::new(&t).fault_stream());
+        // Wrong length, out-of-range, and repeats are rejected.
+        assert!(TraceWorkload::with_schedule(&t, &[0, 1]).is_err());
+        assert!(TraceWorkload::with_schedule(&t, &[0, 1, 3]).is_err());
+        assert!(TraceWorkload::with_schedule(&t, &[0, 1, 1]).is_err());
     }
 
     #[test]

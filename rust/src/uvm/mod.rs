@@ -214,7 +214,9 @@ impl UvmSystem {
         let at = buf.last().map_or(now, |c| c.at);
         self.cq_buf = buf;
         // The driver path learns its completion synchronously from the
-        // engine, so both WR records are written at doorbell time.
+        // engine, so both WR records are written at doorbell time. The
+        // completion's `page` field carries the completion-queue id —
+        // the serialized driver always posts on copy queue 0.
         trace::emit(
             &self.sink,
             now,

@@ -3,19 +3,25 @@
 //! - **Mutation tests**: seed corrupted traces (dropped fill, double
 //!   evict, orphan completion, duplicate completion) and assert the
 //!   linter reports the *correct* [`ViolationKind`], not just "dirty";
+//! - **Race mutation tests**: seed known races into *real* golden
+//!   captures (a wr-complete swapped across queues, a waiter released
+//!   before its fill's data, an evict/refill pair reordered) and assert
+//!   the happens-before checker reports the expected `RaceKind`;
 //! - **CLI contract**: `gpuvm analyze trace` exits 0 on a clean stream,
-//!   1 on a violation, 2 on usage/IO errors;
+//!   1 on a violation, 2 on usage/IO errors; `analyze races` and
+//!   `analyze certify` follow the same contract;
 //! - **Property**: every paged backend × residency policy × prefetch
-//!   policy combination produces a lint-clean trace on the golden
-//!   scenario (fifo-strict may instead deadlock at runtime — the very
-//!   hazard the model checker certifies — which the simulator reports
-//!   as an error naming the deadlock);
+//!   policy combination produces a lint-clean, race-free,
+//!   causality-clean trace on the golden scenario (fifo-strict may
+//!   instead deadlock at runtime — the very hazard the model checker
+//!   certifies — which the simulator reports as an error naming the
+//!   deadlock);
 //! - **Model-checker certification**: the default small scope locates
 //!   fifo-strict's deadlock (cycle + minimal schedule) and certifies
 //!   the other six policies deadlock-free.
 
 use gpuvm::analyze::{self, certify_all, lint, Scope, Verdict, ViolationKind, MODEL_SEED};
-use gpuvm::analyze::{lint_trace, ProtocolFamily};
+use gpuvm::analyze::{lint_trace, race_check_trace, ProtocolFamily, RaceKind};
 use gpuvm::prefetch::PrefetchPolicy;
 use gpuvm::residency::ResidencyPolicyKind;
 use gpuvm::trace::{self, golden_config, Trace, TraceEvent, TraceEventKind, TraceMeta};
@@ -355,9 +361,246 @@ fn payload_rules_match_trace_format_table() {
     assert!(p(K::Promote, 1, 1).is_some(), "promote carries no payload");
     assert!(p(K::EvictClean, 1, 4096).is_some(), "clean moves no bytes");
     assert!(p(K::EvictDirty, 1, 0).is_some(), "dirty must move bytes");
-    assert!(p(K::WrComplete, 3, 6).is_some(), "page must be 0");
+    assert!(p(K::WrComplete, 3, 6).is_none(), "page is the queue id");
     assert!(p(K::WrComplete, 0, 7).is_some(), "dir bit must be clear");
     assert!(p(K::WrComplete, 0, 6).is_none());
+}
+
+// ---- race mutation tests: seeded races in real captures --------------
+
+/// Race-check a mutated capture, asserting it is dirty, and return the
+/// finding kinds for the caller's exact-kind assertion.
+fn race_kinds(t: &Trace) -> Vec<RaceKind> {
+    let r = race_check_trace(t).expect("backend resolves to a family");
+    assert!(!r.clean(), "expected race findings, got CLEAN:\n{}", r.render());
+    r.findings.iter().map(|f| f.kind).collect()
+}
+
+/// Seed a completion reorder into a real capture: swap the `wr_id`s of
+/// one queue's first and last completions. Per-queue ids are strictly
+/// increasing on a clean stream, so afterwards the queue's FIFO delivers
+/// its largest id first — a guaranteed decrease at its next completion.
+fn seed_completion_swap(t: &mut Trace) {
+    let q = t
+        .events
+        .iter()
+        .find(|e| e.kind == TraceEventKind::WrComplete)
+        .expect("capture has completions")
+        .page;
+    let on_q: Vec<usize> = t
+        .events
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.kind == TraceEventKind::WrComplete && e.page == q)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(on_q.len() >= 2, "queue {q} completes only one WR");
+    let (first, last) = (on_q[0], *on_q.last().unwrap());
+    let (a, b) = (t.events[first].aux, t.events[last].aux);
+    t.events[first].aux = b;
+    t.events[last].aux = a;
+}
+
+#[test]
+fn golden_captures_are_race_and_causality_clean() {
+    for backend in trace::GOLDEN_BACKENDS {
+        let t = trace::golden_capture(backend).expect("capture");
+        let r = race_check_trace(&t).unwrap();
+        assert!(r.clean(), "{backend} golden races:\n{}", r.render());
+        assert!(r.edges > 0, "{backend}: HB graph derived no edges");
+        assert!(r.lanes > 0, "{backend}: no actor lanes");
+    }
+}
+
+#[test]
+fn race_mutation_completion_swap_is_completion_reorder() {
+    let mut t = trace::golden_capture("gpuvm").unwrap();
+    seed_completion_swap(&mut t);
+    let kinds = race_kinds(&t);
+    assert!(
+        kinds.contains(&RaceKind::CompletionReorder),
+        "swapped completions surfaced as {kinds:?}"
+    );
+}
+
+#[test]
+fn race_mutation_early_release_is_lost_wakeup() {
+    // Release the waiter before its data: swap a demand fill with the
+    // fetch completion recorded immediately before it, so the stream
+    // claims the page was handed to warps before the WR completed.
+    let mut t = trace::golden_capture("gpuvm").unwrap();
+    let mut target = None;
+    for (i, pair) in t.events.windows(2).enumerate() {
+        let (c, f) = (&pair[0], &pair[1]);
+        if c.kind != TraceEventKind::WrComplete || f.kind != TraceEventKind::Fill {
+            continue;
+        }
+        // The completion must be the fill's own fetch WR (the page's
+        // latest fetch post), not some unrelated page's writeback.
+        let wr = t.events[..i]
+            .iter()
+            .rev()
+            .find(|p| {
+                p.kind == TraceEventKind::WrPost
+                    && p.aux & 1 == 0
+                    && p.page == f.page
+                    && p.gpu == f.gpu
+            })
+            .map(|p| p.aux >> 1);
+        if wr == Some(c.aux >> 1) {
+            target = Some(i);
+            break;
+        }
+    }
+    let i = target.expect("gpuvm completes the fetch WR right before its demand fill");
+    t.events.swap(i, i + 1);
+    let kinds = race_kinds(&t);
+    assert!(
+        kinds.contains(&RaceKind::LostWakeup),
+        "early release surfaced as {kinds:?}"
+    );
+}
+
+#[test]
+fn race_mutation_evict_fill_reorder_is_unordered_conflict() {
+    // Reorder an evict/fill pair on one page: move the stream's first
+    // eviction before its victim's fill. The eviction then has no HB
+    // path from any fill of the page — an unordered evict/touch
+    // conflict the per-page linter alone would also flag, but here the
+    // checker must prove the pair genuinely concurrent.
+    use TraceEventKind as K;
+    let mut t = trace::golden_capture("gpuvm").unwrap();
+    let evict = t
+        .events
+        .iter()
+        .position(|e| matches!(e.kind, K::EvictClean | K::EvictDirty | K::EvictForced))
+        .expect("golden scenario oversubscribes and must evict");
+    let (page, gpu) = (t.events[evict].page, t.events[evict].gpu);
+    let fill = t
+        .events
+        .iter()
+        .position(|e| e.kind == K::Fill && e.page == page && e.gpu == gpu)
+        .expect("victim was filled before eviction");
+    assert!(fill < evict, "clean stream fills before evicting");
+    t.events.swap(fill, evict);
+    let kinds = race_kinds(&t);
+    assert!(
+        kinds.contains(&RaceKind::UnorderedConflict),
+        "reordered evict/fill surfaced as {kinds:?}"
+    );
+}
+
+// ---- property: backend × residency × prefetch race-checks clean ------
+
+#[test]
+fn every_backend_residency_prefetch_combo_race_checks_clean() {
+    // Race/causality companion to the lint cross product above: every
+    // combination's capture must be race-free and causality-clean, with
+    // the same fifo-strict runtime-deadlock exemption.
+    let paged = ["gpuvm", "uvm", "uvm-memadvise", "ideal"];
+    let spec = gpuvm::apps::WorkloadSpec::parse(trace::GOLDEN_WORKLOAD).unwrap();
+    for backend in paged {
+        for residency in ResidencyPolicyKind::all() {
+            for prefetch in PrefetchPolicy::all() {
+                let mut cfg = golden_config();
+                cfg.gpuvm.residency_policy = residency;
+                cfg.uvm.residency_policy = residency;
+                cfg.gpuvm.prefetch_policy = prefetch;
+                cfg.uvm.prefetch_policy = prefetch;
+                let opts = gpuvm::apps::BuildOpts::for_cfg(&cfg);
+                let label = format!("{backend}/{}/{}", residency.name(), prefetch.name());
+                match trace::capture(&cfg, &spec, &opts, backend) {
+                    Ok((t, _)) => {
+                        let r = race_check_trace(&t).unwrap();
+                        assert!(r.clean(), "{label} races:\n{}", r.render());
+                    }
+                    Err(e) if residency == ResidencyPolicyKind::FifoStrict => {
+                        let msg = format!("{e:#}");
+                        assert!(
+                            msg.contains("deadlock"),
+                            "{label}: fifo-strict may only fail by deadlocking, got: {msg}"
+                        );
+                    }
+                    Err(e) => panic!("{label} failed: {e:#}"),
+                }
+            }
+        }
+    }
+}
+
+// ---- CLI: analyze races / analyze certify ----------------------------
+
+#[test]
+fn cli_analyze_races_exit_codes() {
+    // Exit 1: a seeded race in a real capture.
+    let mut bad = trace::golden_capture("gpuvm").unwrap();
+    seed_completion_swap(&mut bad);
+    let bad_path = tmp("race.trace");
+    bad.save(&bad_path).unwrap();
+    let out = gpuvm_bin()
+        .args(["analyze", "races", bad_path.to_str().unwrap()])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(1), "race must exit 1");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("completion-reorder"), "{text}");
+    assert!(text.contains("VIOLATION"), "{text}");
+    std::fs::remove_file(&bad_path).ok();
+
+    // Exit 0: clean capture.
+    let good = trace::golden_capture("uvm").unwrap();
+    let good_path = tmp("race-clean.trace");
+    good.save(&good_path).unwrap();
+    let out = gpuvm_bin()
+        .args(["analyze", "races", good_path.to_str().unwrap()])
+        .output()
+        .expect("spawn gpuvm");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "clean capture must exit 0: {text}");
+    assert!(text.contains("CLEAN"), "{text}");
+    std::fs::remove_file(&good_path).ok();
+
+    // Exit 2: usage / IO errors.
+    let out = gpuvm_bin()
+        .args(["analyze", "races", "/nonexistent/zz.trace"])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(2), "IO error must exit 2");
+    let out = gpuvm_bin()
+        .args(["analyze", "races"])
+        .output()
+        .expect("spawn gpuvm");
+    assert_eq!(out.status.code(), Some(2), "missing source must exit 2");
+}
+
+#[test]
+fn cli_analyze_certify_default_policies() {
+    // A small in-scope scenario: default config (eviction-free for
+    // va@64k), default policies for both golden backends.
+    let report_path = tmp("determinism.txt");
+    let out = gpuvm_bin()
+        .args([
+            "analyze",
+            "certify",
+            "--app",
+            "va@64k",
+            "--budget",
+            "2",
+            "--report",
+            report_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn gpuvm");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "default policies must certify: {text}");
+    assert_eq!(
+        text.matches("verdict: CERTIFIED").count(),
+        2,
+        "both golden backends must certify, not fall out of scope: {text}"
+    );
+    let report = std::fs::read_to_string(&report_path).expect("--report file written");
+    assert!(report.contains("CERTIFIED"), "{report}");
+    std::fs::remove_file(&report_path).ok();
 }
 
 #[test]
