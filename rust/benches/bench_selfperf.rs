@@ -22,14 +22,22 @@
 //!    causality pass over a bench-scale capture. CI runs both passes on
 //!    every golden stream, so their cost is part of the loop.
 //!
+//! Output is self-perf schema v2 (`gpuvm-selfperf/2`, see
+//! `gpuvm::obs::perfcmp`): every row carries `"provenance": "measured"`
+//! and its top host-profile hotspots from one extra profiled (untimed)
+//! run, so the committed trajectory records *where* host time went, not
+//! just how much.
+//!
 //! `GPUVM_BENCH_SMOKE=1` shrinks the workload and iteration counts to
 //! CI size. Refresh the committed baseline with:
-//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_8.json`
+//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_9.json`
 
 use gpuvm::analyze::{lint_trace, race_check_trace};
 use gpuvm::apps::{BuildOpts, WorkloadSpec};
 use gpuvm::config::SystemConfig;
 use gpuvm::coordinator::backend;
+use gpuvm::obs::hostprof;
+use gpuvm::obs::SCHEMA_V2;
 use gpuvm::prefetch::PrefetchPolicy;
 use gpuvm::residency::ResidencyPolicyKind;
 use gpuvm::trace;
@@ -37,6 +45,21 @@ use gpuvm::util::bench::{banner, time};
 use gpuvm::util::csv::CsvWriter;
 
 const BACKENDS: [&str; 4] = ["gpuvm", "uvm", "uvm-memadvise", "ideal"];
+
+/// Run `f` once with the host profiler on and return the top-3
+/// hotspots as `"path pct%"` strings. Profiling is scoped to this call
+/// so the timed iterations never pay for it.
+fn profile_hotspots(f: impl FnOnce()) -> Vec<String> {
+    hostprof::set_enabled(true);
+    let _ = hostprof::take_thread(); // drain any stale state
+    f();
+    let hp = hostprof::take_thread();
+    hostprof::set_enabled(false);
+    hp.top_hotspots(3)
+        .into_iter()
+        .map(|(path, _, pct)| format!("{path} {pct:.0}%"))
+        .collect()
+}
 
 /// One measured case.
 struct Row {
@@ -47,6 +70,7 @@ struct Row {
     sim_ns: u64,
     wall_mean_s: f64,
     wall_min_s: f64,
+    hotspots: Vec<String>,
 }
 
 impl Row {
@@ -59,10 +83,12 @@ impl Row {
     }
 
     fn json(&self) -> String {
+        let hotspots: Vec<String> = self.hotspots.iter().map(|h| format!("\"{h}\"")).collect();
         format!(
             "{{\"backend\":\"{}\",\"policy\":\"{}\",\"obs\":\"{}\",\"events\":{},\
              \"sim_ns\":{},\"wall_mean_s\":{:.6},\"wall_min_s\":{:.6},\
-             \"events_per_sec\":{:.0}}}",
+             \"events_per_sec\":{:.0},\"provenance\":\"measured\",\
+             \"host_hotspots\":[{}]}}",
             self.backend,
             self.policy,
             self.obs,
@@ -70,7 +96,8 @@ impl Row {
             self.sim_ns,
             self.wall_mean_s,
             self.wall_min_s,
-            self.events_per_sec()
+            self.events_per_sec(),
+            hotspots.join(",")
         )
     }
 }
@@ -109,6 +136,11 @@ fn measure(
         },
     );
     println!("{}", t.report());
+    // One extra untimed run with the host profiler on: records where
+    // the wallclock went without perturbing the timed iterations.
+    let hotspots = profile_hotspots(|| {
+        b.run(cfg, &spec, &opts).expect("bench run");
+    });
     Row {
         backend: backend_name,
         policy,
@@ -117,6 +149,7 @@ fn measure(
         sim_ns: probe.finish_ns,
         wall_mean_s: t.mean_s,
         wall_min_s: t.min_s,
+        hotspots,
     }
 }
 
@@ -200,6 +233,10 @@ fn main() {
             },
         );
         println!("{}", timed.report());
+        let hotspots = profile_hotspots(|| {
+            let _ = lint_trace(&t).expect("lint");
+            let _ = race_check_trace(&t).expect("race check");
+        });
         rows.push(Row {
             backend: backend_name,
             policy: "analyze",
@@ -211,6 +248,7 @@ fn main() {
             sim_ns: 0,
             wall_mean_s: timed.mean_s,
             wall_min_s: timed.min_s,
+            hotspots,
         });
     }
 
@@ -244,7 +282,9 @@ fn main() {
 
     let items: Vec<String> = rows.iter().map(Row::json).collect();
     let json = format!(
-        "{{\"bench\":\"bench_selfperf\",\"smoke\":{smoke},\"app\":\"{app}\",\
+        "{{\"schema\":\"{SCHEMA_V2}\",\"bench\":\"bench_selfperf\",\
+         \"provenance\":\"measured by cargo bench --bench bench_selfperf\",\
+         \"smoke\":{smoke},\"app\":\"{app}\",\
          \"iters\":{iters},\"results\":[{}]}}\n",
         items.join(",")
     );
@@ -253,5 +293,5 @@ fn main() {
 
     println!("\ncsv:  target/bench_results/bench_selfperf.csv");
     println!("json: target/bench_results/bench_selfperf.json");
-    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_8.json");
+    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_9.json");
 }

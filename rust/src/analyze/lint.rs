@@ -129,6 +129,7 @@ struct WrTrack {
 
 /// Drive the state machine over the stream; stop at the first violation.
 pub fn lint(trace: &Trace, family: ProtocolFamily) -> LintReport {
+    let _hp = crate::obs::hostprof::scope("analyze/lint");
     let mut pages: FxHashMap<(u8, u64), PageTrack> = FxHashMap::default();
     let mut wrs: FxHashMap<u64, WrTrack> = FxHashMap::default();
     let mut violation = None;

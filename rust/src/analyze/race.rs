@@ -169,6 +169,7 @@ struct Phase {
 
 /// Build the HB graph and run all four checks over one stream.
 pub fn check(trace: &Trace, family: ProtocolFamily) -> RaceReport {
+    let _hp = crate::obs::hostprof::scope("analyze/race");
     let events = &trace.events;
     let g = HbGraph::build(events);
     let mut findings: Vec<RaceFinding> = Vec::new();

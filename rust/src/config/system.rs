@@ -293,6 +293,13 @@ pub struct ObsConfig {
     /// Cap on samples per run (set-path `("obs", "max_samples")`);
     /// past it the sampler marks itself truncated. 0 = unlimited.
     pub max_samples: u64,
+    /// Enable the host-side self-profiling registry
+    /// ([`crate::obs::hostprof`]) for this run: `Backend::run` records
+    /// `RunReport::host_wall_ms` plus top-3 host hotspots (set-path
+    /// `("obs", "host_profile")`, CLI `--host-prof`). Default off;
+    /// never affects simulated results — only host wall-clock
+    /// attribution.
+    pub host_profile: bool,
 }
 
 /// CPU-driven copy-engine model (the `pcie-dma` transport).
@@ -404,6 +411,7 @@ impl Default for SystemConfig {
                 enabled: false,
                 interval_ns: 100_000,
                 max_samples: 100_000,
+                host_profile: false,
             },
             seed: 0x5EED,
         }
@@ -542,6 +550,7 @@ impl SystemConfig {
             ("obs", "enabled") => self.obs.enabled = boolv(v)?,
             ("obs", "interval_ns") => self.obs.interval_ns = u64v(v)?,
             ("obs", "max_samples") => self.obs.max_samples = u64v(v)?,
+            ("obs", "host_profile") => self.obs.host_profile = boolv(v)?,
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
@@ -615,6 +624,11 @@ impl SystemConfig {
         if args.has("obs-interval") {
             self.obs.interval_ns = args.get_u64("obs-interval", self.obs.interval_ns)?;
             self.obs.enabled = true;
+        }
+        // `--host-prof` turns on host-side self-profiling (wall-clock
+        // attribution only; simulated results are unaffected).
+        if args.has("host-prof") {
+            self.obs.host_profile = true;
         }
         Ok(())
     }
@@ -882,13 +896,18 @@ mod tests {
         assert!(!d.obs.enabled, "obs must default off");
         assert_eq!(d.obs.interval_ns, 100_000);
         assert_eq!(d.obs.max_samples, 100_000);
+        assert!(!d.obs.host_profile, "host profiling must default off");
 
-        let doc = parse("[obs]\nenabled = true\ninterval_ns = 50000\nmax_samples = 0\n").unwrap();
+        let doc = parse(
+            "[obs]\nenabled = true\ninterval_ns = 50000\nmax_samples = 0\nhost_profile = true\n",
+        )
+        .unwrap();
         let mut cfg = SystemConfig::default();
         cfg.apply_doc(&doc).unwrap();
         assert!(cfg.obs.enabled);
         assert_eq!(cfg.obs.interval_ns, 50_000);
         assert_eq!(cfg.obs.max_samples, 0);
+        assert!(cfg.obs.host_profile);
         cfg.validate().unwrap();
 
         // Zero interval is rejected only when enabled.
@@ -907,6 +926,14 @@ mod tests {
         cfg.apply_args(&args).unwrap();
         assert!(cfg.obs.enabled);
         assert_eq!(cfg.obs.interval_ns, 10_000);
+
+        // `--host-prof` flips host profiling without touching the
+        // interval sampler.
+        let args = Args::parse("t".into(), vec!["--host-prof".to_string()]);
+        let mut cfg = SystemConfig::default();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.obs.host_profile);
+        assert!(!cfg.obs.enabled);
     }
 
     #[test]

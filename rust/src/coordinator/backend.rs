@@ -66,7 +66,7 @@ pub trait Backend: Sync {
     fn describe(&self) -> &'static str;
 
     /// Paged backends return the memory system the executor drives;
-    /// bulk backends return `None` and override [`Backend::run`].
+    /// bulk backends return `None` and override [`Backend::run_impl`].
     fn build_memsys(&self, cfg: &SystemConfig) -> Option<Box<dyn MemorySystem>>;
 
     /// Whether workloads are built with the read-mostly advice applied
@@ -82,12 +82,55 @@ pub trait Backend: Sync {
         None
     }
 
-    /// Run `spec` end to end and report. The default covers every paged
-    /// backend; bulk backends provide their own staging model.
+    /// Run `spec` end to end and report. Never overridden: this shared
+    /// shell wraps [`Backend::run_impl`] with host-side self-perf —
+    /// wall-clock timing into `RunReport::host_wall_ms` always, plus
+    /// the [`crate::obs::hostprof`] scope tree and top-3 hotspot
+    /// columns when `cfg.obs.host_profile` is on. Hostprof never reads
+    /// or writes simulation state, so results are identical either way
+    /// (the non-perturbation property test in `rust/tests/obs.rs`
+    /// enforces it).
     fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
+        use crate::obs::hostprof;
+        let profiling = cfg.obs.host_profile;
+        if profiling {
+            // Sticky on: repeated runs in one process keep profiling.
+            hostprof::set_enabled(true);
+            // Drop anything an earlier non-profiled caller left behind
+            // so the per-run delta below is exactly this run.
+            let _ = hostprof::take_thread();
+        }
+        let t0 = std::time::Instant::now();
+        let guard = profiling.then(|| hostprof::scope(self.name()));
+        let result = self.run_impl(cfg, spec, opts);
+        drop(guard);
+        let mut rep = result?;
+        rep.host_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if profiling {
+            let hp = hostprof::take_thread();
+            let hot = hp.top_hotspots(3);
+            let mut cells = hot
+                .iter()
+                .map(|(path, _, pct)| format!("{path} {pct:.0}%"));
+            rep.host_hot1 = cells.next().unwrap_or_else(|| "-".to_string());
+            rep.host_hot2 = cells.next().unwrap_or_else(|| "-".to_string());
+            rep.host_hot3 = cells.next().unwrap_or_else(|| "-".to_string());
+        }
+        Ok(rep)
+    }
+
+    /// The backend-specific body of [`Backend::run`]. The default
+    /// covers every paged backend; bulk backends provide their own
+    /// staging model.
+    fn run_impl(
+        &self,
+        cfg: &SystemConfig,
+        spec: &WorkloadSpec,
+        opts: &BuildOpts,
+    ) -> Result<RunReport> {
         let mut mem = self
             .build_memsys(cfg)
-            .ok_or_else(|| anyhow::anyhow!("backend '{}' must override run()", self.name()))?;
+            .ok_or_else(|| anyhow::anyhow!("backend '{}' must override run_impl()", self.name()))?;
         // Honor `[obs]` outside the capture path too: the samples are
         // not retrievable from a RunReport (use `gpuvm profile run` for
         // that), but `--obs` must cost the same here as under capture,
@@ -219,7 +262,12 @@ impl Backend for GdrBackend {
     fn build_memsys(&self, _cfg: &SystemConfig) -> Option<Box<dyn MemorySystem>> {
         None
     }
-    fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
+    fn run_impl(
+        &self,
+        cfg: &SystemConfig,
+        spec: &WorkloadSpec,
+        opts: &BuildOpts,
+    ) -> Result<RunReport> {
         let (r, total) = ideal_execute(cfg, spec, opts)?;
         let gdr = run_gdr(cfg, total, cfg.gdr.request_bytes.max(1));
         let mut rep = bulk_report(self.name(), spec, cfg, &r, gdr.finish_ns, total);
@@ -244,7 +292,12 @@ impl Backend for SubwayBackend {
     fn build_memsys(&self, _cfg: &SystemConfig) -> Option<Box<dyn MemorySystem>> {
         None
     }
-    fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
+    fn run_impl(
+        &self,
+        cfg: &SystemConfig,
+        spec: &WorkloadSpec,
+        opts: &BuildOpts,
+    ) -> Result<RunReport> {
         if let SpecKind::Graph { algo, dataset, .. } = &spec.kind {
             // The faithful Table 3 model: per-iteration active-subgraph
             // compaction, bulk copy, GPU traversal.
@@ -297,7 +350,12 @@ impl Backend for RapidsBackend {
     fn build_memsys(&self, _cfg: &SystemConfig) -> Option<Box<dyn MemorySystem>> {
         None
     }
-    fn run(&self, cfg: &SystemConfig, spec: &WorkloadSpec, opts: &BuildOpts) -> Result<RunReport> {
+    fn run_impl(
+        &self,
+        cfg: &SystemConfig,
+        spec: &WorkloadSpec,
+        opts: &BuildOpts,
+    ) -> Result<RunReport> {
         if let SpecKind::Query { q, rows } = &spec.kind {
             // The faithful Fig 15 model.
             let table = crate::apps::TaxiTable::generate(*rows, opts.seed);
@@ -496,6 +554,41 @@ mod tests {
         // Whole predicate + value columns cross PCIe.
         assert_eq!(rep.bytes_in, 2 * 65536 * 4);
         assert!(rep.io_amplification() > 1.5);
+    }
+
+    #[test]
+    fn every_run_records_host_wall_clock() {
+        let cfg = small_cfg();
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let opts = BuildOpts::for_cfg(&cfg);
+        for name in ["gpuvm", "gdr"] {
+            let rep = lookup(name).unwrap().run(&cfg, &spec, &opts).unwrap();
+            assert!(
+                rep.host_wall_ms > 0.0,
+                "{name}: host wall clock must be recorded"
+            );
+            // Host profiling defaults off: hotspot cells stay `-`.
+            assert_eq!(rep.host_hot1, "-", "{name}");
+        }
+    }
+
+    #[test]
+    fn host_profile_fills_hotspot_columns() {
+        let _serial = crate::obs::hostprof::test_lock();
+        let mut cfg = small_cfg();
+        cfg.obs.host_profile = true;
+        let spec = WorkloadSpec::parse("va@64k").unwrap();
+        let opts = BuildOpts::for_cfg(&cfg);
+        let rep = lookup("gpuvm").unwrap().run(&cfg, &spec, &opts).unwrap();
+        crate::obs::hostprof::set_enabled(false);
+        assert!(rep.host_wall_ms > 0.0);
+        assert_ne!(rep.host_hot1, "-", "top hotspot must be recorded");
+        assert!(
+            rep.host_hot1.starts_with("gpuvm"),
+            "hotspots root at the backend scope: {}",
+            rep.host_hot1
+        );
+        assert!(rep.host_hot1.ends_with('%'), "{}", rep.host_hot1);
     }
 
     #[test]

@@ -93,6 +93,17 @@ pub struct RunReport {
     pub stage_fill_p99_ns: u64,
     pub stage_wake_p50_ns: u64,
     pub stage_wake_p99_ns: u64,
+    /// Host wall-clock the run consumed end to end (simulator
+    /// self-perf, not simulated time). Recorded by `Backend::run` for
+    /// every run; 0.0 only for reports that never went through a
+    /// backend.
+    pub host_wall_ms: f64,
+    /// Top-3 host-profile hotspots (`"scope/path NN%"` by exclusive
+    /// wall time, from [`crate::obs::hostprof`]); `-` when host
+    /// profiling was off (`obs.host_profile`, the default).
+    pub host_hot1: String,
+    pub host_hot2: String,
+    pub host_hot3: String,
     /// Per-engine (per-NIC / copy-engine / link) breakdown; JSON only.
     pub transport_engines: Vec<EngineStats>,
 }
@@ -100,7 +111,7 @@ pub struct RunReport {
 impl RunReport {
     /// Column names matching [`RunReport::csv_row`] (the README's
     /// "CSV column reference" table documents each one).
-    pub const CSV_HEADER: [&'static str; 42] = [
+    pub const CSV_HEADER: [&'static str; 46] = [
         "backend",
         "workload",
         "nics",
@@ -143,6 +154,10 @@ impl RunReport {
         "stage_fill_p99_ns",
         "stage_wake_p50_ns",
         "stage_wake_p99_ns",
+        "host_wall_ms",
+        "host_hot1",
+        "host_hot2",
+        "host_hot3",
     ];
 
     /// A report with zeroed metrics, tagged with the run's identity and
@@ -214,6 +229,10 @@ impl RunReport {
             stage_fill_p99_ns: 0,
             stage_wake_p50_ns: 0,
             stage_wake_p99_ns: 0,
+            host_wall_ms: 0.0,
+            host_hot1: "-".to_string(),
+            host_hot2: "-".to_string(),
+            host_hot3: "-".to_string(),
             transport_engines: Vec::new(),
         }
     }
@@ -346,6 +365,10 @@ impl RunReport {
             self.stage_fill_p99_ns.to_string(),
             self.stage_wake_p50_ns.to_string(),
             self.stage_wake_p99_ns.to_string(),
+            format!("{:.3}", self.host_wall_ms),
+            self.host_hot1.clone(),
+            self.host_hot2.clone(),
+            self.host_hot3.clone(),
         ]
     }
 
@@ -383,6 +406,8 @@ impl RunReport {
                 "\"stage_transfer_p50_ns\":{},\"stage_transfer_p99_ns\":{},",
                 "\"stage_fill_p50_ns\":{},\"stage_fill_p99_ns\":{},",
                 "\"stage_wake_p50_ns\":{},\"stage_wake_p99_ns\":{},",
+                "\"host_wall_ms\":{:.3},\"host_hot1\":{},\"host_hot2\":{},",
+                "\"host_hot3\":{},",
                 "\"bandwidth_in_bytes_per_sec\":{:.1}}}"
             ),
             json_string(&self.backend),
@@ -428,6 +453,10 @@ impl RunReport {
             self.stage_fill_p99_ns,
             self.stage_wake_p50_ns,
             self.stage_wake_p99_ns,
+            self.host_wall_ms,
+            json_string(&self.host_hot1),
+            json_string(&self.host_hot2),
+            json_string(&self.host_hot3),
             self.bandwidth_in(),
         )
     }
@@ -523,6 +552,20 @@ impl RunReport {
             s.push_str(&format!(
                 "  one-time setup     {:>14}   (reported separately, per paper)\n",
                 fmt_ns(self.setup_ns)
+            ));
+        }
+        if self.host_wall_ms > 0.0 {
+            let hotspots = if self.host_hot1 != "-" {
+                format!(
+                    "   (hot: {}, {}, {})",
+                    self.host_hot1, self.host_hot2, self.host_hot3
+                )
+            } else {
+                String::new()
+            };
+            s.push_str(&format!(
+                "  host wall clock    {:>11.3} ms{}\n",
+                self.host_wall_ms, hotspots
             ));
         }
         s
@@ -824,6 +867,39 @@ mod tests {
         // Ideal moves nothing over any engine — no phantom fabric rows.
         let i = RunReport::empty("ideal", "va", &cfg);
         assert_eq!(i.transport, "none");
+    }
+
+    #[test]
+    fn host_profile_columns_round_trip() {
+        let mut r = sample();
+        // Defaults: no wall clock recorded, hotspot cells are `-`, and
+        // the text report stays silent.
+        let hdr_idx = |name: &str| {
+            RunReport::CSV_HEADER
+                .iter()
+                .position(|h| *h == name)
+                .unwrap()
+        };
+        let row = r.csv_row();
+        assert_eq!(row.len(), RunReport::CSV_HEADER.len());
+        assert_eq!(row[hdr_idx("host_wall_ms")], "0.000");
+        assert_eq!(row[hdr_idx("host_hot1")], "-");
+        assert!(!r.text().contains("host wall clock"));
+
+        r.host_wall_ms = 12.5;
+        r.host_hot1 = "gpuvm/gpuvm/access 41%".into();
+        r.host_hot2 = "gpuvm/gpuvm/on_event 22%".into();
+        r.host_hot3 = "gpuvm 15%".into();
+        let row = r.csv_row();
+        assert_eq!(row[hdr_idx("host_wall_ms")], "12.500");
+        assert_eq!(row[hdr_idx("host_hot1")], "gpuvm/gpuvm/access 41%");
+        assert_eq!(row[hdr_idx("host_hot3")], "gpuvm 15%");
+        let j = r.to_json();
+        assert!(j.contains("\"host_wall_ms\":12.500"));
+        assert!(j.contains("\"host_hot1\":\"gpuvm/gpuvm/access 41%\""));
+        let t = r.text();
+        assert!(t.contains("host wall clock"), "{t}");
+        assert!(t.contains("gpuvm/gpuvm/access 41%"), "{t}");
     }
 
     #[test]

@@ -310,12 +310,17 @@ impl QueueSet {
             });
         }
         q.push_back(wr);
+        crate::obs::hostprof::count("fabric/wr_posted", 1);
         Ok(())
     }
 
     /// Next queued WR on `queue` (caller `check`ed the index).
     pub(crate) fn pop(&mut self, queue: usize) -> Option<WorkRequest> {
-        self.queues[queue].pop_front()
+        let wr = self.queues[queue].pop_front();
+        if wr.is_some() {
+            crate::obs::hostprof::count("fabric/wr_drained", 1);
+        }
+        wr
     }
 }
 

@@ -250,6 +250,7 @@ impl GpuVmSystem {
     /// definition, so the oracle and the defensive re-checks can't
     /// drift).
     fn choose_victim(&mut self, gpu: usize, demand: bool, m: &Metrics) -> VictimChoice {
+        let _hp = crate::obs::hostprof::scope("gpuvm/victim");
         let pool = &self.pools[gpu];
         let waiters = &self.frame_waiters[gpu];
         let usable = move |s: u64| usable_frame(pool, waiters, FrameId(s as u32));
@@ -580,6 +581,7 @@ impl GpuVmSystem {
         }
         self.fabric.post(queue, wr).expect("free queue accepts a post");
         m.work_requests += 1;
+        crate::obs::hostprof::count("gpuvm/wr_posted", 1);
         trace::emit(
             &self.sink,
             t_posted,
@@ -612,6 +614,7 @@ impl GpuVmSystem {
         b.pending = 0;
         b.epoch += 1;
         m.doorbells += 1;
+        crate::obs::hostprof::count("gpuvm/doorbells", 1);
         self.completion_buf.clear();
         let mut buf = std::mem::take(&mut self.completion_buf);
         self.fabric
@@ -643,6 +646,7 @@ impl GpuVmSystem {
         wakes: &mut Wakes,
     ) -> (usize, FrameId) {
         let (gpu, page) = key;
+        crate::obs::hostprof::count("gpuvm/fills", 1);
         let fl = self.inflight.remove(&key).expect("inflight fetch");
         let frame = fl.frame.expect("fetch had a frame");
         let bytes = if self.backed {
@@ -754,6 +758,7 @@ impl MemorySystem for GpuVmSystem {
         pages: &[PageAccess],
     ) -> AccessResult {
         debug_assert!(gpu < self.pools.len());
+        let _hp = crate::obs::hostprof::scope("gpuvm/access");
         let now = ctx.now;
         self.obs_tick(now, ctx.m);
         let t = now + self.cfg.gpuvm.page_table_lookup_ns;
@@ -814,6 +819,7 @@ impl MemorySystem for GpuVmSystem {
                     }
                     // New fault: this warp's leader takes it (Fig 4).
                     ctx.m.faults += 1;
+                    crate::obs::hostprof::count("gpuvm/faults", 1);
                     trace::emit(
                         &self.sink,
                         now,
@@ -908,6 +914,7 @@ impl MemorySystem for GpuVmSystem {
     }
 
     fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent) {
+        let _hp = crate::obs::hostprof::scope("gpuvm/on_event");
         let now = ctx.now;
         self.obs_tick(now, ctx.m);
         match ev {

@@ -42,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("trace") => cmd_trace(args),
         Some("analyze") => cmd_analyze(args),
         Some("profile") => cmd_profile(args),
+        Some("perf") => cmd_perf(args),
         Some("e2e") => cmd_e2e(args),
         Some("list") => cmd_list(),
         Some("info") => cmd_info(args),
@@ -55,13 +56,13 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|profile|e2e|list|info> [flags]
+const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|profile|perf|e2e|list|info> [flags]
   run      --app <spec> [--mem BACKEND] [--nics N] [--qps N]
            [--page-size 4k|8k] [--gpu-mem BYTES] [--seed N] [--config FILE]
            [--residency POLICY] [--eviction fifo|fifo-strict|random (legacy)]
            [--fault-batch N] [--prefetch POLICY] [--prefetch-degree N]
            [--transport ENGINE] [--striping round-robin|block]
-           [--scale F] [--src V]
+           [--scale F] [--src V] [--host-prof  host hotspot columns in the report]
   compare  same flags; runs gpuvm vs uvm and prints the speedup
   sweep    --app S [--app S2 ...] [--mem B1,B2,..] [--nics 1,2]
            [--page-sizes 4k,8k] [--gpu-mems 16m,32m] [--qp-counts 16,48,84]
@@ -91,6 +92,14 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|profile|e2e|l
            trace FILE [--mem BACKEND]                              profile a captured trace
            both verbs: [--out FILE.json]  Perfetto-loadable Chrome trace-event JSON
                        [--csv FILE]       per-stage latency-breakdown CSV
+           run only:   [--host] [--host-csv FILE]  host-side wall-clock scope tree
+                       (where the *simulator's* time goes, vs the simulated stages)
+  perf     report FILE... [--out FILE]   self-perf trajectory table from BENCH_*.json
+           diff BASE NEW                 per-row events_per_sec deltas between two points
+           gate BASE NEW [--tolerance PCT] [--report FILE]
+                fail (exit 1) if any measured row regressed > tolerance (default 10);
+                estimated-provenance rows are exempt
+           validate FILE...              strict gpuvm-selfperf/2 schema check (exit 1 on issues)
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
   list     apps, backends, prefetch/residency policies, transports, artifacts
   info     resolved system configuration
@@ -725,7 +734,16 @@ fn cmd_profile(args: &Args) -> Result<()> {
 
     match args.positional().get(1).map(|s| s.as_str()) {
         Some("run") => {
+            // `--host`: also profile the *simulator's* wall clock over
+            // this capture ([`gpuvm::obs::hostprof`]); never perturbs
+            // the captured events or metrics.
+            let host = args.has("host") || args.has("host-csv");
+            if host {
+                obs::hostprof::set_enabled(true);
+                let _ = obs::hostprof::take_thread();
+            }
             let cap = capture_run_from_args(args)?;
+            let hp = host.then(obs::hostprof::take_thread);
             let family = lint::family_for(&cap.backend)?;
             let spans = obs::build_spans(&cap.trace.events, family, cap.trace.meta.truncated);
             println!(
@@ -736,6 +754,13 @@ fn cmd_profile(args: &Args) -> Result<()> {
                 cap.backend
             );
             emit(args, &cap.trace, &spans, &cap.sampler.samples, &cap.backend)?;
+            if let Some(hp) = &hp {
+                print!("{}", hp.text());
+                if let Some(path) = args.get("host-csv") {
+                    std::fs::write(path, hp.csv())?;
+                    eprintln!("host csv: {path}");
+                }
+            }
             // Reconcile the trace-derived stages against the runtime's
             // own accounting (the property the tests pin bit-for-bit).
             let m = &cap.result.metrics;
@@ -779,6 +804,93 @@ fn cmd_profile(args: &Args) -> Result<()> {
             emit(args, &t, &spans, &[], &backend)
         }
         _ => anyhow::bail!("{PROFILE_USAGE}"),
+    }
+}
+
+/// `gpuvm perf <report|diff|gate|validate>` — the self-perf trajectory
+/// tooling's CLI face ([`gpuvm::obs::perfcmp`]): render the committed
+/// `BENCH_*.json` points as a table, diff two points, gate CI on
+/// measured-row regressions (estimated-provenance rows exempt), or
+/// strictly validate files against the `gpuvm-selfperf/2` schema.
+/// `gate` and `validate` exit 1 on failure (2 stays the usage/IO error
+/// code from `main`).
+fn cmd_perf(args: &Args) -> Result<()> {
+    use gpuvm::obs::perfcmp;
+
+    const PERF_USAGE: &str = "usage: gpuvm perf <report FILE...|diff BASE NEW|\
+         gate BASE NEW [--tolerance PCT] [--report FILE]|validate FILE...> (see `gpuvm` help)";
+
+    fn load(path: &str) -> Result<perfcmp::PerfFile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        let label = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(path);
+        perfcmp::parse_str(label, &text)
+    }
+
+    let positional = args.positional();
+    let files = &positional[positional.len().min(2)..];
+    match positional.get(1).map(|s| s.as_str()) {
+        Some("report") => {
+            anyhow::ensure!(!files.is_empty(), "perf report needs at least one FILE");
+            let points: Vec<_> = files.iter().map(|f| load(f)).collect::<Result<_>>()?;
+            let text = perfcmp::report(&points);
+            print!("{text}");
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, &text)?;
+                eprintln!("report: {path}");
+            }
+            Ok(())
+        }
+        Some("diff") => {
+            anyhow::ensure!(files.len() == 2, "perf diff needs exactly BASE and NEW files");
+            print!("{}", perfcmp::diff(&load(&files[0])?, &load(&files[1])?));
+            Ok(())
+        }
+        Some("gate") => {
+            anyhow::ensure!(files.len() == 2, "perf gate needs exactly BASE and NEW files");
+            let tolerance = args.get_f64("tolerance", 10.0)?;
+            anyhow::ensure!(tolerance >= 0.0, "--tolerance must be ≥ 0");
+            let g = perfcmp::gate(&load(&files[0])?, &load(&files[1])?, tolerance);
+            print!("{}", g.text);
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, &g.text)?;
+                eprintln!("report: {path}");
+            }
+            if !g.passed() {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        Some("validate") => {
+            anyhow::ensure!(!files.is_empty(), "perf validate needs at least one FILE");
+            let mut bad = false;
+            for f in files {
+                let p = load(f)?;
+                let issues = perfcmp::validate_v2(&p);
+                if issues.is_empty() {
+                    println!(
+                        "{}: ok ({}, {} rows{})",
+                        p.label,
+                        perfcmp::SCHEMA_V2,
+                        p.rows.len(),
+                        if p.all_estimated() { ", all estimated" } else { "" }
+                    );
+                } else {
+                    bad = true;
+                    for i in &issues {
+                        println!("{i}");
+                    }
+                }
+            }
+            if bad {
+                std::process::exit(1);
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("{PERF_USAGE}"),
     }
 }
 

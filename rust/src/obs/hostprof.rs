@@ -1,0 +1,689 @@
+//! Host-side self-profiling: where the *simulator's own* wall-clock
+//! time goes.
+//!
+//! The rest of [`crate::obs`] profiles **simulated** time — fault
+//! lifecycles, interval samples, Perfetto tracks. This module profiles
+//! the **host**: a zero-dependency registry of scoped hierarchical
+//! wall-clock timers (RAII guards on a thread-local stack, parent/child
+//! attribution) plus monotonic op counters (faults handled, victims
+//! picked, WRs posted/drained, trace events recorded), so the ROADMAP's
+//! raw-speed work lands against measured hot paths instead of guesses.
+//!
+//! ## Design constraints
+//!
+//! - **Near-zero cost when disabled** (the default). Every entry point
+//!   ([`scope`], [`count`]) early-outs on one relaxed atomic load; a
+//!   disabled [`ScopeGuard`] is inert (no clock read, no thread-local
+//!   touch). Golden traces and [`crate::metrics::Metrics::fingerprint`]
+//!   are bit-identical either way *by construction* — the registry
+//!   never reads or writes any simulation state — and a property test
+//!   in `rust/tests/obs.rs` enforces it.
+//! - **Thread-safe without being on the hot path's lock.** Each thread
+//!   accumulates into a `thread_local!` interned scope tree; trees fold
+//!   into a global `Mutex` store on thread exit or on explicit
+//!   [`take_thread`] / [`flush`]. Sweep workers therefore never contend
+//!   while profiling, and [`take_thread`] gives exact per-run
+//!   (per-sweep-cell, per-bench-cell) attribution because each cell
+//!   runs on one thread.
+//! - **No serde, no external clocks.** `std::time::Instant` only;
+//!   reports render to text/CSV by hand like every other emitter here.
+//!
+//! ## Usage
+//!
+//! ```
+//! use gpuvm::obs::hostprof;
+//! hostprof::set_enabled(true);
+//! {
+//!     let _run = hostprof::scope("run");
+//!     {
+//!         let _inner = hostprof::scope("fill");
+//!         hostprof::count("fills", 1);
+//!     }
+//! }
+//! let report = hostprof::take_thread();
+//! assert_eq!(report.counters, vec![("fills".to_string(), 1)]);
+//! hostprof::set_enabled(false);
+//! ```
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Global switch. Default off; flipped by `Backend::run` when
+/// `cfg.obs.host_profile` is set, by `gpuvm profile run --host`, and by
+/// tests. Enabling is sticky for the process unless something disables
+/// it again — harmless, because the registry touches no simulation
+/// state either way.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Folded per-scope stats from threads that exited or flushed, keyed by
+/// full scope path. Counters ride alongside under their flat name.
+static GLOBAL: Mutex<GlobalStore> = Mutex::new(GlobalStore {
+    scopes: BTreeMap::new(),
+    counters: BTreeMap::new(),
+});
+
+struct GlobalStore {
+    scopes: BTreeMap<Vec<&'static str>, ScopeStat>,
+    counters: BTreeMap<&'static str, u64>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct ScopeStat {
+    calls: u64,
+    total_ns: u64,
+}
+
+/// One interned node of a thread's scope tree.
+struct Node {
+    name: &'static str,
+    /// Parent node index, or `usize::MAX` for top-level scopes.
+    parent: usize,
+    calls: u64,
+    total_ns: u64,
+}
+
+const NO_PARENT: usize = usize::MAX;
+
+/// Per-thread profile state. Dropped (end of thread) it folds itself
+/// into [`GLOBAL`] so nothing is lost when sweep workers finish.
+struct LocalProf {
+    nodes: Vec<Node>,
+    /// (parent index, name) → node index; interning keeps the per-exit
+    /// cost at one hash probe instead of a path allocation.
+    index: HashMap<(usize, &'static str), usize>,
+    /// Indices of currently open scopes, innermost last.
+    stack: Vec<usize>,
+    counters: HashMap<&'static str, u64>,
+}
+
+impl LocalProf {
+    fn new() -> Self {
+        Self {
+            nodes: Vec::new(),
+            index: HashMap::new(),
+            stack: Vec::new(),
+            counters: HashMap::new(),
+        }
+    }
+
+    fn enter(&mut self, name: &'static str) -> usize {
+        let parent = self.stack.last().copied().unwrap_or(NO_PARENT);
+        let idx = match self.index.get(&(parent, name)) {
+            Some(&i) => i,
+            None => {
+                let i = self.nodes.len();
+                self.nodes.push(Node {
+                    name,
+                    parent,
+                    calls: 0,
+                    total_ns: 0,
+                });
+                self.index.insert((parent, name), i);
+                i
+            }
+        };
+        self.stack.push(idx);
+        idx
+    }
+
+    fn exit(&mut self, idx: usize, elapsed_ns: u64) {
+        // Pop back to (and including) idx: robust even if an inner
+        // guard leaked — attribution stays on the recorded node.
+        while let Some(top) = self.stack.pop() {
+            if top == idx {
+                break;
+            }
+        }
+        let n = &mut self.nodes[idx];
+        n.calls += 1;
+        n.total_ns += elapsed_ns;
+    }
+
+    /// Full path of node `i`, outermost first.
+    fn path(&self, i: usize) -> Vec<&'static str> {
+        let mut p = Vec::new();
+        let mut cur = i;
+        while cur != NO_PARENT {
+            p.push(self.nodes[cur].name);
+            cur = self.nodes[cur].parent;
+        }
+        p.reverse();
+        p
+    }
+
+    /// Snapshot non-zero stats and reset counts, keeping the interned
+    /// tree (open guards keep valid indices across a take).
+    fn drain(&mut self) -> (BTreeMap<Vec<&'static str>, ScopeStat>, BTreeMap<&'static str, u64>) {
+        let mut scopes = BTreeMap::new();
+        for i in 0..self.nodes.len() {
+            if self.nodes[i].calls > 0 || self.nodes[i].total_ns > 0 {
+                let path = self.path(i);
+                let e: &mut ScopeStat = scopes.entry(path).or_default();
+                e.calls += self.nodes[i].calls;
+                e.total_ns += self.nodes[i].total_ns;
+                self.nodes[i].calls = 0;
+                self.nodes[i].total_ns = 0;
+            }
+        }
+        let mut counters = BTreeMap::new();
+        for (k, v) in self.counters.drain() {
+            if v > 0 {
+                counters.insert(k, v);
+            }
+        }
+        (scopes, counters)
+    }
+}
+
+impl Drop for LocalProf {
+    fn drop(&mut self) {
+        let (scopes, counters) = self.drain();
+        if scopes.is_empty() && counters.is_empty() {
+            return;
+        }
+        if let Ok(mut g) = GLOBAL.lock() {
+            merge_into(&mut g, scopes, counters);
+        }
+    }
+}
+
+fn merge_into(
+    g: &mut GlobalStore,
+    scopes: BTreeMap<Vec<&'static str>, ScopeStat>,
+    counters: BTreeMap<&'static str, u64>,
+) {
+    for (path, s) in scopes {
+        let e = g.scopes.entry(path).or_default();
+        e.calls += s.calls;
+        e.total_ns += s.total_ns;
+    }
+    for (k, v) in counters {
+        *g.counters.entry(k).or_insert(0) += v;
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalProf> = RefCell::new(LocalProf::new());
+}
+
+/// Turn the registry on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the registry is currently recording.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII wall-clock timer for one named scope. Created by [`scope`];
+/// records `calls += 1, total_ns += elapsed` on its node at drop.
+/// Inert (no clock read, no bookkeeping) when profiling is disabled at
+/// construction time.
+pub struct ScopeGuard {
+    /// Node index this guard will close, or `None` when inert.
+    active: Option<(usize, Instant)>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        if let Some((idx, start)) = self.active.take() {
+            let elapsed = start.elapsed().as_nanos() as u64;
+            LOCAL.with(|l| l.borrow_mut().exit(idx, elapsed));
+        }
+    }
+}
+
+/// Open a named scope under the innermost open scope of this thread.
+/// `let _g = hostprof::scope("gpuvm/access");` — attribution follows
+/// lexical nesting via the guard's drop.
+#[inline]
+pub fn scope(name: &'static str) -> ScopeGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return ScopeGuard { active: None };
+    }
+    let idx = LOCAL.with(|l| l.borrow_mut().enter(name));
+    ScopeGuard {
+        active: Some((idx, Instant::now())),
+    }
+}
+
+/// Bump a named monotonic counter by `n`. One relaxed atomic load when
+/// disabled.
+#[inline]
+pub fn count(name: &'static str, n: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    LOCAL.with(|l| *l.borrow_mut().counters.entry(name).or_insert(0) += n);
+}
+
+/// Drain this thread's accumulation since the last take: fold a copy
+/// into the global store and return it as a report. The per-run /
+/// per-sweep-cell attribution primitive — each run executes on one
+/// thread, so the delta is exactly that run's profile.
+pub fn take_thread() -> HostReport {
+    let (scopes, counters) = LOCAL.with(|l| l.borrow_mut().drain());
+    if let Ok(mut g) = GLOBAL.lock() {
+        merge_into(&mut g, scopes.clone(), counters.clone());
+    }
+    HostReport::from_parts(scopes, counters)
+}
+
+/// Fold this thread's accumulation into the global store without
+/// returning it.
+pub fn flush() {
+    let _ = take_thread();
+}
+
+/// Snapshot everything folded into the global store so far (call
+/// [`flush`] first to include the current thread).
+pub fn report() -> HostReport {
+    let g = GLOBAL.lock().expect("hostprof store poisoned");
+    let scopes = g.scopes.clone();
+    let counters = g.counters.clone();
+    drop(g);
+    HostReport::from_parts(scopes, counters)
+}
+
+/// Serialize tests that flip the process-global enable switch or read
+/// the global store — `cargo test` runs threads in parallel, and racing
+/// on [`set_enabled`] makes such tests flaky. Used by this module's
+/// unit tests, the backend hotspot tests, and the non-perturbation
+/// property test. Not part of the public API.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Clear the global store and this thread's accumulation (tests).
+pub fn reset() {
+    LOCAL.with(|l| {
+        let mut p = l.borrow_mut();
+        let _ = p.drain();
+    });
+    if let Ok(mut g) = GLOBAL.lock() {
+        g.scopes.clear();
+        g.counters.clear();
+    }
+}
+
+/// One scope row of a rendered report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScopeRow {
+    /// Full path, outermost first (`["gpuvm", "gpuvm/access"]`).
+    pub path: Vec<&'static str>,
+    pub calls: u64,
+    /// Inclusive wall time, ns.
+    pub total_ns: u64,
+    /// Exclusive wall time: `total_ns` minus the children's totals
+    /// (clamped at 0 — clock jitter can make children sum past the
+    /// parent by nanoseconds).
+    pub self_ns: u64,
+}
+
+/// A folded host-profile: hierarchical scope rows plus flat counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HostReport {
+    /// Rows sorted by path (parents precede their children).
+    pub scopes: Vec<ScopeRow>,
+    /// `(name, value)` sorted by name.
+    pub counters: Vec<(String, u64)>,
+}
+
+impl HostReport {
+    fn from_parts(
+        scopes: BTreeMap<Vec<&'static str>, ScopeStat>,
+        counters: BTreeMap<&'static str, u64>,
+    ) -> Self {
+        let mut rows: Vec<ScopeRow> = scopes
+            .iter()
+            .map(|(path, s)| {
+                let child_total: u64 = scopes
+                    .iter()
+                    .filter(|(p, _)| p.len() == path.len() + 1 && p.starts_with(path))
+                    .map(|(_, c)| c.total_ns)
+                    .sum();
+                ScopeRow {
+                    path: path.clone(),
+                    calls: s.calls,
+                    total_ns: s.total_ns,
+                    self_ns: s.total_ns.saturating_sub(child_total),
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| a.path.cmp(&b.path));
+        Self {
+            scopes: rows,
+            counters: counters
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        }
+    }
+
+    /// Nothing recorded at all.
+    pub fn is_empty(&self) -> bool {
+        self.scopes.is_empty() && self.counters.is_empty()
+    }
+
+    /// Total wall time across top-level scopes, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.scopes
+            .iter()
+            .filter(|r| r.path.len() == 1)
+            .map(|r| r.total_ns)
+            .sum()
+    }
+
+    /// Look up one scope row by its joined path (`"a/b"` matches
+    /// `["a", "b"]`).
+    pub fn get(&self, joined: &str) -> Option<&ScopeRow> {
+        self.scopes.iter().find(|r| r.path.join("/") == joined)
+    }
+
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    /// The `n` scopes with the largest *exclusive* time, as
+    /// `(path, self_ns, pct_of_total)` — what the RunReport hotspot
+    /// columns and `bench_selfperf` surface.
+    pub fn top_hotspots(&self, n: usize) -> Vec<(String, u64, f64)> {
+        let total = self.total_ns().max(1) as f64;
+        let mut rows: Vec<&ScopeRow> = self.scopes.iter().collect();
+        rows.sort_by(|a, b| b.self_ns.cmp(&a.self_ns).then(a.path.cmp(&b.path)));
+        rows.iter()
+            .take(n)
+            .filter(|r| r.self_ns > 0)
+            .map(|r| {
+                (
+                    r.path.join("/"),
+                    r.self_ns,
+                    r.self_ns as f64 / total * 100.0,
+                )
+            })
+            .collect()
+    }
+
+    /// Fold another report into this one (scope rows by path, counters
+    /// by name). `self_ns` is recomputed from the merged totals.
+    pub fn merge(&mut self, other: &HostReport) {
+        let mut scopes: BTreeMap<Vec<&'static str>, ScopeStat> = BTreeMap::new();
+        for r in self.scopes.iter().chain(other.scopes.iter()) {
+            let e = scopes.entry(r.path.clone()).or_default();
+            e.calls += r.calls;
+            e.total_ns += r.total_ns;
+        }
+        let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+        for (k, v) in self.counters.iter().chain(other.counters.iter()) {
+            *counters.entry(k.clone()).or_insert(0) += v;
+        }
+        let merged = HostReport {
+            scopes: scopes
+                .iter()
+                .map(|(path, s)| {
+                    let child_total: u64 = scopes
+                        .iter()
+                        .filter(|(p, _)| p.len() == path.len() + 1 && p.starts_with(path))
+                        .map(|(_, c)| c.total_ns)
+                        .sum();
+                    ScopeRow {
+                        path: path.clone(),
+                        calls: s.calls,
+                        total_ns: s.total_ns,
+                        self_ns: s.total_ns.saturating_sub(child_total),
+                    }
+                })
+                .collect(),
+            counters: counters.into_iter().collect(),
+        };
+        *self = merged;
+    }
+
+    /// Multi-line tree render (`gpuvm profile run --host`).
+    pub fn text(&self) -> String {
+        let mut s = String::new();
+        if self.scopes.is_empty() {
+            s.push_str("host profile: no scopes recorded\n");
+        } else {
+            let total = self.total_ns().max(1) as f64;
+            s.push_str(&format!(
+                "host profile ({:.3} ms wall across top-level scopes)\n",
+                self.total_ns() as f64 / 1e6
+            ));
+            s.push_str(&format!(
+                "  {:<40} {:>10} {:>12} {:>12} {:>6}\n",
+                "scope", "calls", "total", "self", "self%"
+            ));
+            for r in &self.scopes {
+                let indent = "  ".repeat(r.path.len() - 1);
+                let label = format!("{indent}{}", r.path.last().unwrap_or(&"?"));
+                s.push_str(&format!(
+                    "  {:<40} {:>10} {:>9.3}ms {:>9.3}ms {:>5.1}%\n",
+                    label,
+                    r.calls,
+                    r.total_ns as f64 / 1e6,
+                    r.self_ns as f64 / 1e6,
+                    r.self_ns as f64 / total * 100.0
+                ));
+            }
+        }
+        if !self.counters.is_empty() {
+            s.push_str("  counters:\n");
+            for (k, v) in &self.counters {
+                s.push_str(&format!("    {k:<38} {v:>12}\n"));
+            }
+        }
+        s
+    }
+
+    /// CSV form: `kind,name,calls,total_ns,self_ns,value` — scope rows
+    /// then counter rows, one header.
+    pub fn csv(&self) -> String {
+        let mut s = String::from("kind,name,calls,total_ns,self_ns,value\n");
+        for r in &self.scopes {
+            s.push_str(&format!(
+                "scope,{},{},{},{},\n",
+                r.path.join("/"),
+                r.calls,
+                r.total_ns,
+                r.self_ns
+            ));
+        }
+        for (k, v) in &self.counters {
+            s.push_str(&format!("counter,{k},,,,{v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        let g = test_lock();
+        reset();
+        set_enabled(true);
+        g
+    }
+
+    fn spin(iters: u64) -> u64 {
+        // Burn a little real time so elapsed_ns > 0 on coarse clocks.
+        let mut x = 1u64;
+        for i in 0..iters.max(1) * 1000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(x)
+    }
+
+    #[test]
+    fn disabled_guards_record_nothing() {
+        let _l = locked();
+        set_enabled(false);
+        {
+            let _g = scope("off");
+            count("off_counter", 3);
+        }
+        let r = take_thread();
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn nesting_attributes_parent_and_child() {
+        let _l = locked();
+        {
+            let _outer = scope("outer");
+            spin(5);
+            {
+                let _inner = scope("inner");
+                spin(5);
+            }
+            {
+                let _inner = scope("inner");
+                spin(5);
+            }
+        }
+        set_enabled(false);
+        let r = take_thread();
+        let outer = r.get("outer").expect("outer row");
+        let inner = r.get("outer/inner").expect("nested inner row");
+        assert_eq!(outer.calls, 1);
+        assert_eq!(inner.calls, 2, "same (parent, name) interns one node");
+        assert!(
+            outer.total_ns >= inner.total_ns,
+            "parent total {} must cover child total {}",
+            outer.total_ns,
+            inner.total_ns
+        );
+        assert_eq!(
+            outer.self_ns,
+            outer.total_ns - inner.total_ns,
+            "self = total minus children"
+        );
+        assert_eq!(r.total_ns(), outer.total_ns, "one top-level scope");
+        // Siblings at top level are distinct from the nested node.
+        assert!(r.get("inner").is_none());
+    }
+
+    #[test]
+    fn counters_accumulate_and_report_sorted() {
+        let _l = locked();
+        count("b_counter", 2);
+        count("a_counter", 1);
+        count("b_counter", 3);
+        set_enabled(false);
+        let r = take_thread();
+        assert_eq!(
+            r.counters,
+            vec![("a_counter".to_string(), 1), ("b_counter".to_string(), 5)]
+        );
+        assert_eq!(r.counter("b_counter"), 5);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn take_thread_drains_and_folds_into_global() {
+        let _l = locked();
+        {
+            let _g = scope("one");
+            spin(1);
+        }
+        count("n", 7);
+        let first = take_thread();
+        assert_eq!(first.get("one").unwrap().calls, 1);
+        assert_eq!(first.counter("n"), 7);
+        // Drained: a second take sees nothing new.
+        let second = take_thread();
+        assert!(second.is_empty(), "{second:?}");
+        // But the global store kept the fold.
+        let g = report();
+        assert_eq!(g.get("one").unwrap().calls, 1);
+        assert_eq!(g.counter("n"), 7);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn worker_threads_fold_on_exit() {
+        let _l = locked();
+        let h = std::thread::spawn(|| {
+            {
+                let _g = scope("worker");
+                spin(2);
+            }
+            count("worker_ops", 4);
+        });
+        h.join().unwrap();
+        set_enabled(false);
+        let g = report();
+        assert_eq!(g.get("worker").unwrap().calls, 1);
+        assert_eq!(g.counter("worker_ops"), 4);
+    }
+
+    #[test]
+    fn hotspots_rank_by_exclusive_time() {
+        let _l = locked();
+        {
+            let _a = scope("cheap");
+            spin(1);
+        }
+        {
+            let _b = scope("hot");
+            spin(200);
+        }
+        set_enabled(false);
+        let r = take_thread();
+        let hot = r.top_hotspots(2);
+        assert!(!hot.is_empty());
+        assert_eq!(hot[0].0, "hot", "{hot:?}");
+        let pct_sum: f64 = hot.iter().map(|(_, _, p)| *p).sum();
+        assert!(pct_sum <= 100.0 + 1e-9, "{hot:?}");
+        // Render paths don't panic and carry the rows.
+        let text = r.text();
+        assert!(text.contains("hot") && text.contains("cheap"), "{text}");
+        let csv = r.csv();
+        assert!(csv.starts_with("kind,name,calls,total_ns,self_ns,value\n"));
+        assert!(csv.contains("scope,hot,1,"), "{csv}");
+    }
+
+    #[test]
+    fn merge_adds_rows_and_recomputes_self() {
+        let _l = locked();
+        {
+            let _o = scope("m");
+            {
+                let _i = scope("c");
+                spin(2);
+            }
+        }
+        let a = take_thread();
+        {
+            let _o = scope("m");
+            spin(2);
+        }
+        set_enabled(false);
+        let b = take_thread();
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let m = merged.get("m").unwrap();
+        assert_eq!(m.calls, 2);
+        assert_eq!(
+            m.total_ns,
+            a.get("m").unwrap().total_ns + b.get("m").unwrap().total_ns
+        );
+        assert_eq!(
+            m.self_ns,
+            m.total_ns - merged.get("m/c").unwrap().total_ns
+        );
+    }
+}

@@ -23,6 +23,22 @@
 //!   counter tracks) and a text/CSV latency-breakdown report (p50/p99
 //!   per stage). The `gpuvm profile` CLI verb drives both.
 //!
+//! Two further pillars profile the *simulator itself* rather than the
+//! simulated machine:
+//!
+//! - **Host profiling** ([`hostprof`]) — a zero-dependency registry of
+//!   scoped hierarchical wall-clock timers and monotonic op counters
+//!   instrumented into both paged runtimes, the residency and fabric
+//!   engines, trace recording, and the analyze passes. Default off and
+//!   near-zero cost when disabled; it never touches simulation state,
+//!   so golden traces and metrics fingerprints are bit-identical either
+//!   way (a property test in `rust/tests/obs.rs` enforces this).
+//!   Surfaced via `RunReport::host_wall_ms` + hotspot columns and
+//!   `gpuvm profile run --host`.
+//! - **Perf trajectory** ([`perfcmp`]) — parse/report/diff/gate for the
+//!   committed `BENCH_*.json` self-perf points, behind the
+//!   `gpuvm perf` CLI verb and the CI regression gate.
+//!
 //! ## Stage model
 //!
 //! ```text
@@ -53,10 +69,14 @@
 //! unattributed fill — the span builder reports it rather than guess.
 
 pub mod export;
+pub mod hostprof;
+pub mod perfcmp;
 pub mod sampler;
 pub mod span;
 
 pub use export::{chrome_trace_json, validate_chrome_json, Breakdown};
+pub use hostprof::HostReport;
+pub use perfcmp::{GateResult, PerfFile, PerfRow, SCHEMA_V2};
 pub use sampler::{Sample, Sampler, SharedObs};
 pub use span::{build_spans, EvictSpan, FaultSpan, SpanIssue, SpanSet, WrSpan};
 

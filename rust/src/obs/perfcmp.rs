@@ -1,0 +1,542 @@
+//! Self-perf trajectory tooling: parse, compare, and gate the
+//! `BENCH_*.json` points emitted by `bench_selfperf`.
+//!
+//! The repo commits one self-perf snapshot per PR (`BENCH_7.json`,
+//! `BENCH_8.json`, ...) so simulator-throughput regressions are visible
+//! in review instead of discovered at fleet-sweep time. This module is
+//! the machine-readable side of that trajectory:
+//!
+//! - **Schema** — [`SCHEMA_V2`] (`"gpuvm-selfperf/2"`) is the versioned
+//!   wire format shared by `bench_selfperf` and every committed
+//!   `BENCH_*.json`. v2 adds a top-level `"schema"` tag, per-row
+//!   `"provenance": "measured" | "estimated"`, and optional per-row
+//!   `"host_hotspots"` from [`super::hostprof`]. The legacy v1 files
+//!   (no `"schema"` tag, boolean `"estimated"` row flag) still parse so
+//!   the trajectory reaches back to PR 7.
+//! - **Report** — [`report`] renders a per-PR trajectory table, one
+//!   column per point, `~` marking estimated cells.
+//! - **Diff** — [`diff`] compares two points row by row with signed
+//!   percentage deltas.
+//! - **Gate** — [`gate`] enforces a tolerance band: a *measured* row in
+//!   both points that regresses `events_per_sec` by more than the
+//!   tolerance is a hard failure (CI exits nonzero); rows that are
+//!   estimated on either side are exempt (an estimate is an
+//!   order-of-magnitude placeholder, not a baseline you can regress
+//!   against), and rows present on only one side are noted, not failed.
+//!
+//! Driven by the `gpuvm perf <report|diff|gate|validate>` CLI verb.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse_json, JsonValue};
+
+/// Current self-perf schema tag, written by `bench_selfperf` and
+/// required by `gpuvm perf validate`.
+pub const SCHEMA_V2: &str = "gpuvm-selfperf/2";
+
+/// One `backend/policy/obs` cell of a trajectory point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfRow {
+    pub backend: String,
+    pub policy: String,
+    pub obs: String,
+    pub events: u64,
+    pub sim_ns: u64,
+    pub wall_mean_s: f64,
+    pub wall_min_s: f64,
+    pub events_per_sec: f64,
+    /// `true` when the value is a hand-authored placeholder rather
+    /// than a measurement (v1: row flag `"estimated": true`; v2:
+    /// `"provenance": "estimated"`). Estimated rows are exempt from
+    /// [`gate`].
+    pub estimated: bool,
+    /// v2 only: top host-profile hotspots for this cell
+    /// (`"path self_ns pct"` strings), empty when absent.
+    pub host_hotspots: Vec<String>,
+}
+
+impl PerfRow {
+    /// Stable row identity across trajectory points.
+    pub fn key(&self) -> String {
+        format!("{}/{}/{}", self.backend, self.policy, self.obs)
+    }
+}
+
+/// One parsed trajectory point (`BENCH_N.json` or a fresh
+/// `bench_selfperf.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfFile {
+    /// Display label — the file stem (`BENCH_8`) by default.
+    pub label: String,
+    /// 1 for legacy untagged files, 2 for `gpuvm-selfperf/2`.
+    pub schema_version: u32,
+    pub bench: String,
+    pub app: String,
+    pub smoke: bool,
+    pub iters: u64,
+    /// The top-level provenance note.
+    pub note: String,
+    pub rows: Vec<PerfRow>,
+}
+
+impl PerfFile {
+    /// All rows estimated (pure placeholder point)?
+    pub fn all_estimated(&self) -> bool {
+        !self.rows.is_empty() && self.rows.iter().all(|r| r.estimated)
+    }
+
+    /// Find a row by `backend/policy/obs` key.
+    pub fn row(&self, key: &str) -> Option<&PerfRow> {
+        self.rows.iter().find(|r| r.key() == key)
+    }
+}
+
+/// Parse one trajectory point from JSON text. Accepts schema v2
+/// (`"schema": "gpuvm-selfperf/2"`) and legacy v1 (no tag). `label` is
+/// carried into reports — pass the file stem.
+pub fn parse_str(label: &str, text: &str) -> Result<PerfFile> {
+    let doc = parse_json(text).with_context(|| format!("{label}: invalid JSON"))?;
+    let schema_version = match doc.get("schema").and_then(JsonValue::as_str) {
+        None => 1,
+        Some(s) if s == SCHEMA_V2 => 2,
+        Some(other) => anyhow::bail!(
+            "{label}: unknown self-perf schema '{other}' (this tool understands \
+             legacy v1 files and '{SCHEMA_V2}')"
+        ),
+    };
+    let str_field = |key: &str| {
+        doc.get(key)
+            .and_then(JsonValue::as_str)
+            .map(str::to_string)
+            .unwrap_or_default()
+    };
+    let results = doc
+        .get("results")
+        .and_then(JsonValue::as_array)
+        .with_context(|| format!("{label}: missing 'results' array"))?;
+    let mut rows = Vec::with_capacity(results.len());
+    for (i, r) in results.iter().enumerate() {
+        let row_str = |key: &str| -> Result<String> {
+            r.get(key)
+                .and_then(JsonValue::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("{label}: results[{i}] missing string '{key}'"))
+        };
+        let estimated = match schema_version {
+            2 => match r.get("provenance").and_then(JsonValue::as_str) {
+                Some("measured") => false,
+                Some("estimated") => true,
+                other => anyhow::bail!(
+                    "{label}: results[{i}] provenance must be \"measured\" or \
+                     \"estimated\", got {other:?}"
+                ),
+            },
+            _ => r.get("estimated").and_then(JsonValue::as_bool).unwrap_or(false),
+        };
+        rows.push(PerfRow {
+            backend: row_str("backend")?,
+            policy: row_str("policy")?,
+            obs: row_str("obs")?,
+            events: r.get("events").and_then(JsonValue::as_u64).unwrap_or(0),
+            sim_ns: r.get("sim_ns").and_then(JsonValue::as_u64).unwrap_or(0),
+            wall_mean_s: r.get("wall_mean_s").and_then(JsonValue::as_f64).unwrap_or(0.0),
+            wall_min_s: r.get("wall_min_s").and_then(JsonValue::as_f64).unwrap_or(0.0),
+            events_per_sec: r
+                .get("events_per_sec")
+                .and_then(JsonValue::as_f64)
+                .with_context(|| format!("{label}: results[{i}] missing events_per_sec"))?,
+            estimated,
+            host_hotspots: r
+                .get("host_hotspots")
+                .and_then(JsonValue::as_array)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(JsonValue::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default(),
+        });
+    }
+    Ok(PerfFile {
+        label: label.to_string(),
+        schema_version,
+        bench: str_field("bench"),
+        app: str_field("app"),
+        smoke: doc.get("smoke").and_then(JsonValue::as_bool).unwrap_or(false),
+        iters: doc.get("iters").and_then(JsonValue::as_u64).unwrap_or(0),
+        note: str_field("provenance"),
+        rows,
+    })
+}
+
+/// Strict v2 conformance issues for `gpuvm perf validate` (the CI
+/// BENCH presence gate). Empty means conforming. Legacy v1 files fail
+/// with a single schema-tag issue.
+pub fn validate_v2(f: &PerfFile) -> Vec<String> {
+    let mut issues = Vec::new();
+    if f.schema_version != 2 {
+        issues.push(format!(
+            "{}: missing schema tag '{SCHEMA_V2}' (legacy v1 file)",
+            f.label
+        ));
+        return issues;
+    }
+    if f.bench != "bench_selfperf" {
+        issues.push(format!("{}: bench must be 'bench_selfperf', got '{}'", f.label, f.bench));
+    }
+    if f.note.is_empty() {
+        issues.push(format!("{}: empty provenance note", f.label));
+    }
+    if f.rows.is_empty() {
+        issues.push(format!("{}: no result rows", f.label));
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &f.rows {
+        if !seen.insert(r.key()) {
+            issues.push(format!("{}: duplicate row key {}", f.label, r.key()));
+        }
+        if !(r.events_per_sec > 0.0) {
+            issues.push(format!(
+                "{}: row {} has non-positive events_per_sec {}",
+                f.label,
+                r.key(),
+                r.events_per_sec
+            ));
+        }
+        if !r.estimated && r.events == 0 {
+            issues.push(format!(
+                "{}: row {} claims measured provenance but has events=0",
+                f.label,
+                r.key()
+            ));
+        }
+    }
+    issues
+}
+
+fn fmt_eps(eps: f64, estimated: bool) -> String {
+    let v = if eps >= 1e6 {
+        format!("{:.2}M", eps / 1e6)
+    } else if eps >= 1e3 {
+        format!("{:.1}k", eps / 1e3)
+    } else {
+        format!("{eps:.0}")
+    };
+    if estimated {
+        format!("~{v}")
+    } else {
+        v
+    }
+}
+
+/// Render the trajectory table: one row per `backend/policy/obs` key,
+/// one `events_per_sec` column per point (in the order given), `~`
+/// marking estimated cells, `-` marking rows absent from a point.
+pub fn report(points: &[PerfFile]) -> String {
+    let mut keys: Vec<String> = Vec::new();
+    for p in points {
+        for r in &p.rows {
+            if !keys.contains(&r.key()) {
+                keys.push(r.key());
+            }
+        }
+    }
+    let mut s = String::from("self-perf trajectory (events_per_sec; ~ = estimated)\n");
+    s.push_str(&format!("{:<36}", "backend/policy/obs"));
+    for p in points {
+        s.push_str(&format!(" {:>12}", p.label));
+    }
+    s.push('\n');
+    for key in &keys {
+        s.push_str(&format!("{key:<36}"));
+        for p in points {
+            match p.row(key) {
+                Some(r) => s.push_str(&format!(" {:>12}", fmt_eps(r.events_per_sec, r.estimated))),
+                None => s.push_str(&format!(" {:>12}", "-")),
+            }
+        }
+        s.push('\n');
+    }
+    for p in points {
+        s.push_str(&format!(
+            "\n{}: schema v{}, app {}, iters {}{}\n  {}\n",
+            p.label,
+            p.schema_version,
+            if p.app.is_empty() { "?" } else { &p.app },
+            p.iters,
+            if p.all_estimated() { ", all rows estimated" } else { "" },
+            p.note
+        ));
+    }
+    s
+}
+
+/// Per-row comparison of two points with signed percentage deltas.
+pub fn diff(base: &PerfFile, new: &PerfFile) -> String {
+    let mut s = format!(
+        "self-perf diff: {} -> {} (events_per_sec; ~ = estimated)\n{:<36} {:>12} {:>12} {:>9}\n",
+        base.label, new.label, "backend/policy/obs", base.label, new.label, "delta"
+    );
+    let mut keys: Vec<String> = base.rows.iter().map(PerfRow::key).collect();
+    for r in &new.rows {
+        if !keys.contains(&r.key()) {
+            keys.push(r.key());
+        }
+    }
+    for key in &keys {
+        let (b, n) = (base.row(key), new.row(key));
+        let delta = match (b, n) {
+            (Some(b), Some(n)) if b.events_per_sec > 0.0 => format!(
+                "{:+.1}%",
+                (n.events_per_sec - b.events_per_sec) / b.events_per_sec * 100.0
+            ),
+            (None, Some(_)) => "new".to_string(),
+            (Some(_), None) => "gone".to_string(),
+            _ => "?".to_string(),
+        };
+        s.push_str(&format!(
+            "{key:<36} {:>12} {:>12} {:>9}\n",
+            b.map_or("-".to_string(), |r| fmt_eps(r.events_per_sec, r.estimated)),
+            n.map_or("-".to_string(), |r| fmt_eps(r.events_per_sec, r.estimated)),
+            delta
+        ));
+    }
+    s
+}
+
+/// Outcome of a [`gate`] run: the rendered report plus the hard
+/// failures (empty = pass).
+#[derive(Debug, Clone)]
+pub struct GateResult {
+    pub text: String,
+    pub failures: Vec<String>,
+}
+
+impl GateResult {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Enforce the tolerance band between two trajectory points.
+///
+/// A row measured in *both* points whose `events_per_sec` drops below
+/// `base * (1 - tolerance_pct/100)` is a hard failure. Rows estimated
+/// on either side are exempt (noted as `exempt`); rows present on only
+/// one side are noted (`new`/`gone`) but never fail — coverage changes
+/// are reviewed, not gated.
+pub fn gate(base: &PerfFile, new: &PerfFile, tolerance_pct: f64) -> GateResult {
+    let mut text = format!(
+        "self-perf gate: {} -> {} (tolerance {:.1}%)\n",
+        base.label, new.label, tolerance_pct
+    );
+    let mut failures = Vec::new();
+    let mut keys: Vec<String> = base.rows.iter().map(PerfRow::key).collect();
+    for r in &new.rows {
+        if !keys.contains(&r.key()) {
+            keys.push(r.key());
+        }
+    }
+    for key in &keys {
+        let line = match (base.row(key), new.row(key)) {
+            (Some(b), Some(n)) => {
+                let delta_pct = if b.events_per_sec > 0.0 {
+                    (n.events_per_sec - b.events_per_sec) / b.events_per_sec * 100.0
+                } else {
+                    0.0
+                };
+                if b.estimated || n.estimated {
+                    format!(
+                        "  exempt  {key}: {} -> {} ({:+.1}%) [estimated provenance]",
+                        fmt_eps(b.events_per_sec, b.estimated),
+                        fmt_eps(n.events_per_sec, n.estimated),
+                        delta_pct
+                    )
+                } else if delta_pct < -tolerance_pct {
+                    failures.push(format!(
+                        "{key}: regressed {delta_pct:.1}% ({} -> {}), tolerance {tolerance_pct:.1}%",
+                        fmt_eps(b.events_per_sec, false),
+                        fmt_eps(n.events_per_sec, false)
+                    ));
+                    format!(
+                        "  FAIL    {key}: {} -> {} ({:+.1}%, tolerance {:.1}%)",
+                        fmt_eps(b.events_per_sec, false),
+                        fmt_eps(n.events_per_sec, false),
+                        delta_pct,
+                        tolerance_pct
+                    )
+                } else {
+                    format!(
+                        "  ok      {key}: {} -> {} ({:+.1}%)",
+                        fmt_eps(b.events_per_sec, false),
+                        fmt_eps(n.events_per_sec, false),
+                        delta_pct
+                    )
+                }
+            }
+            (None, Some(n)) => format!(
+                "  new     {key}: {} (no baseline)",
+                fmt_eps(n.events_per_sec, n.estimated)
+            ),
+            (Some(b), None) => format!(
+                "  gone    {key}: {} (dropped from new point)",
+                fmt_eps(b.events_per_sec, b.estimated)
+            ),
+            (None, None) => continue,
+        };
+        text.push_str(&line);
+        text.push('\n');
+    }
+    text.push_str(&if failures.is_empty() {
+        format!("PASS: no measured row regressed more than {tolerance_pct:.1}%\n")
+    } else {
+        format!("FAIL: {} measured row(s) regressed beyond tolerance\n", failures.len())
+    });
+    GateResult { text, failures }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v2_fixture(label: &str, gpuvm_eps: f64, measured: bool) -> PerfFile {
+        let provenance = if measured { "measured" } else { "estimated" };
+        let text = format!(
+            r#"{{
+  "schema": "gpuvm-selfperf/2",
+  "bench": "bench_selfperf",
+  "provenance": "fixture point",
+  "smoke": false,
+  "app": "va@1m",
+  "iters": 5,
+  "results": [
+    {{"backend": "gpuvm", "policy": "default", "obs": "off", "events": 120000,
+      "sim_ns": 9000000, "wall_mean_s": 0.06, "wall_min_s": 0.058,
+      "events_per_sec": {gpuvm_eps}, "provenance": "{provenance}",
+      "host_hotspots": ["gpuvm/gpuvm/access 41%"]}},
+    {{"backend": "uvm", "policy": "default", "obs": "off", "events": 150000,
+      "sim_ns": 9000000, "wall_mean_s": 0.06, "wall_min_s": 0.059,
+      "events_per_sec": 2500000.0, "provenance": "{provenance}"}}
+  ]
+}}"#
+        );
+        parse_str(label, &text).unwrap()
+    }
+
+    #[test]
+    fn parses_v2_and_legacy_v1() {
+        let v2 = v2_fixture("NEW", 2000000.0, true);
+        assert_eq!(v2.schema_version, 2);
+        assert_eq!(v2.rows.len(), 2);
+        assert!(!v2.rows[0].estimated);
+        assert_eq!(v2.rows[0].key(), "gpuvm/default/off");
+        assert_eq!(v2.rows[0].host_hotspots, vec!["gpuvm/gpuvm/access 41%"]);
+        assert!(validate_v2(&v2).is_empty(), "{:?}", validate_v2(&v2));
+
+        let v1 = parse_str(
+            "OLD",
+            r#"{"bench": "bench_selfperf", "provenance": "n", "smoke": false,
+               "app": "va@1m", "iters": 5, "results": [
+                 {"backend": "gpuvm", "policy": "default", "obs": "off",
+                  "events": 0, "sim_ns": 0, "wall_mean_s": 0.0,
+                  "wall_min_s": 0.0, "events_per_sec": 2000000,
+                  "estimated": true}]}"#,
+        )
+        .unwrap();
+        assert_eq!(v1.schema_version, 1);
+        assert!(v1.rows[0].estimated);
+        assert!(v1.all_estimated());
+        // v1 fails strict validation with exactly the schema-tag issue.
+        let issues = validate_v2(&v1);
+        assert_eq!(issues.len(), 1, "{issues:?}");
+        assert!(issues[0].contains("schema tag"), "{issues:?}");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_schema_and_bad_provenance() {
+        assert!(parse_str("X", r#"{"schema": "gpuvm-selfperf/99", "results": []}"#).is_err());
+        assert!(parse_str(
+            "X",
+            r#"{"schema": "gpuvm-selfperf/2", "results": [
+                 {"backend": "a", "policy": "b", "obs": "c",
+                  "events_per_sec": 1.0, "provenance": "guessed"}]}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_flags_measured_rows_without_events() {
+        let f = parse_str(
+            "BAD",
+            r#"{"schema": "gpuvm-selfperf/2", "bench": "bench_selfperf",
+               "provenance": "n", "results": [
+                 {"backend": "gpuvm", "policy": "default", "obs": "off",
+                  "events": 0, "events_per_sec": 100.0,
+                  "provenance": "measured"}]}"#,
+        )
+        .unwrap();
+        let issues = validate_v2(&f);
+        assert!(issues.iter().any(|i| i.contains("events=0")), "{issues:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_injected_regression_beyond_tolerance() {
+        let base = v2_fixture("BASE", 2_000_000.0, true);
+        // 25% regression on gpuvm/default/off against a 10% band.
+        let new = v2_fixture("NEW", 1_500_000.0, true);
+        let g = gate(&base, &new, 10.0);
+        assert!(!g.passed());
+        assert_eq!(g.failures.len(), 1, "{:?}", g.failures);
+        assert!(g.failures[0].contains("gpuvm/default/off"), "{:?}", g.failures);
+        assert!(g.text.contains("FAIL"), "{}", g.text);
+
+        // Within tolerance passes.
+        let mild = v2_fixture("NEW", 1_900_000.0, true);
+        assert!(gate(&base, &mild, 10.0).passed());
+        // Improvement passes.
+        let better = v2_fixture("NEW", 2_600_000.0, true);
+        assert!(gate(&base, &better, 10.0).passed());
+    }
+
+    #[test]
+    fn gate_exempts_estimated_rows_and_notes_coverage_changes() {
+        // Same 25% drop, but the baseline is estimated: exempt.
+        let base = v2_fixture("BASE", 2_000_000.0, false);
+        let new = v2_fixture("NEW", 1_500_000.0, true);
+        let g = gate(&base, &new, 10.0);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.text.contains("exempt"), "{}", g.text);
+
+        // A row only in the new point is noted, not failed.
+        let mut extra = v2_fixture("NEW", 2_000_000.0, true);
+        extra.rows.push(PerfRow {
+            backend: "ideal".into(),
+            policy: "default".into(),
+            obs: "off".into(),
+            events: 1,
+            sim_ns: 1,
+            wall_mean_s: 0.0,
+            wall_min_s: 0.0,
+            events_per_sec: 9e6,
+            estimated: false,
+            host_hotspots: Vec::new(),
+        });
+        let g = gate(&v2_fixture("BASE", 2_000_000.0, true), &extra, 10.0);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.text.contains("new     ideal/default/off"), "{}", g.text);
+    }
+
+    #[test]
+    fn report_and_diff_render_all_keys() {
+        let base = v2_fixture("BENCH_8", 2_000_000.0, false);
+        let new = v2_fixture("BENCH_9", 2_100_000.0, true);
+        let rep = report(&[base.clone(), new.clone()]);
+        assert!(rep.contains("BENCH_8") && rep.contains("BENCH_9"), "{rep}");
+        assert!(rep.contains("gpuvm/default/off"), "{rep}");
+        assert!(rep.contains("~2.00M"), "estimated marker missing:\n{rep}");
+        let d = diff(&base, &new);
+        assert!(d.contains("+5.0%"), "{d}");
+        assert!(d.contains("uvm/default/off"), "{d}");
+    }
+}

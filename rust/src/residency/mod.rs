@@ -257,6 +257,54 @@ pub trait ResidencyPolicy {
     fn state_sig(&self, out: &mut Vec<u64>);
 }
 
+/// Delegating wrapper that feeds the host-profiling op counters
+/// ([`crate::obs::hostprof`]) on the three decision-path events. Pure
+/// pass-through otherwise: `state_sig` and `clone_box` preserve the
+/// model checker's visited-set semantics, and counters are inert while
+/// profiling is disabled, so wrapping every engine is free by default.
+struct Counted(Box<dyn ResidencyPolicy>);
+
+impl ResidencyPolicy for Counted {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, block: u64, speculative: bool) {
+        crate::obs::hostprof::count("residency/fills", 1);
+        self.0.on_fill(gpu, slot, block, speculative);
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.0.on_touch(gpu, slot);
+    }
+
+    fn on_promote(&mut self, gpu: usize, slot: Slot) {
+        self.0.on_promote(gpu, slot);
+    }
+
+    fn on_drain(&mut self, gpu: usize, slot: Slot) {
+        self.0.on_drain(gpu, slot);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        crate::obs::hostprof::count("residency/evictions", 1);
+        self.0.on_evict(gpu, slot);
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        crate::obs::hostprof::count("residency/victims_picked", 1);
+        self.0.pick_victim(q)
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(Counted(self.0.clone_box()))
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        self.0.state_sig(out);
+    }
+}
+
 /// Build a policy instance for one run. `seed` feeds the `random`
 /// engine (GPUVM passes its historical `cfg.seed ^ 0x6b75_766d`
 /// derivation so the extracted engine replays the pre-subsystem RNG
@@ -267,7 +315,7 @@ pub fn build(
     num_gpus: usize,
     seed: u64,
 ) -> Box<dyn ResidencyPolicy> {
-    match kind {
+    let engine: Box<dyn ResidencyPolicy> = match kind {
         ResidencyPolicyKind::FifoRefcount => {
             Box::new(fifo::FifoEngine::new(false, universe, num_gpus))
         }
@@ -281,7 +329,8 @@ pub fn build(
         ResidencyPolicyKind::PrefetchAware => {
             Box::new(aware::PrefetchAwareEngine::new(universe, num_gpus))
         }
-    }
+    };
+    Box::new(Counted(engine))
 }
 
 #[cfg(test)]

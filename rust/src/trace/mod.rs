@@ -234,6 +234,7 @@ impl TraceSink for Recorder {
             return;
         }
         self.events.push(ev);
+        crate::obs::hostprof::count("trace/events_recorded", 1);
     }
 }
 

@@ -1,7 +1,11 @@
-//! Minimal JSON string escaping (the offline build has no `serde`).
-//! The single escaper behind every hand-rolled JSON emitter
-//! ([`crate::coordinator::report`], [`crate::trace::format`]), so an
-//! escaping fix lands everywhere at once.
+//! Minimal JSON support (the offline build has no `serde`): the single
+//! string escaper behind every hand-rolled JSON emitter
+//! ([`crate::coordinator::report`], [`crate::trace::format`]) — so an
+//! escaping fix lands everywhere at once — plus a small
+//! recursive-descent *parser* ([`parse_json`] → [`JsonValue`]) for the
+//! few places that must read JSON back: the self-perf trajectory
+//! tooling ([`crate::obs::perfcmp`]) parsing `BENCH_*.json` and
+//! `bench_selfperf` output.
 
 /// Quote and escape `s` as a JSON string literal.
 pub fn json_string(s: &str) -> String {
@@ -20,6 +24,249 @@ pub fn json_string(s: &str) -> String {
     out
 }
 
+/// A parsed JSON document. Objects keep insertion order (`Vec` of
+/// pairs, not a map) so round-trip diagnostics read like the file.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    /// All JSON numbers as f64 — the self-perf schema's integers stay
+    /// exact well within f64's 2^53 integer range.
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object member by key (first match), or `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document. Strict: rejects trailing garbage,
+/// trailing commas, unquoted keys. Errors carry a byte offset.
+pub fn parse_json(input: &str) -> anyhow::Result<JsonValue> {
+    let bytes = input.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        anyhow::bail!("trailing data at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            anyhow::bail!("expected '{}' at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> anyhow::Result<JsonValue> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<JsonValue> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => anyhow::bail!("unexpected input at byte {}", self.pos),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            members.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(members));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => anyhow::bail!("unterminated string at byte {}", self.pos),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("short \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            // No surrogate-pair support: the emitters
+                            // here only \u-escape control chars.
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?,
+                            );
+                            self.pos += 4;
+                        }
+                        _ => anyhow::bail!("bad escape at byte {}", self.pos),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one full UTF-8 scalar (input is &str, so
+                    // boundaries are valid).
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(rest)?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<JsonValue> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad number '{text}' at byte {start}"))?;
+        Ok(JsonValue::Num(n))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -32,5 +279,56 @@ mod tests {
         assert_eq!(json_string("a\nb"), "\"a\\nb\"");
         assert_eq!(json_string("a\tb"), "\"a\\u0009b\"");
         assert_eq!(json_string("π"), "\"π\"");
+    }
+
+    #[test]
+    fn parses_nested_documents() {
+        let v = parse_json(
+            r#"{"a": 1, "b": [true, null, -2.5e1], "s": "x\"y", "o": {"k": "v"}}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("a").and_then(JsonValue::as_u64), Some(1));
+        let b = v.get("b").and_then(JsonValue::as_array).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].as_bool(), Some(true));
+        assert_eq!(b[1], JsonValue::Null);
+        assert_eq!(b[2].as_f64(), Some(-25.0));
+        assert_eq!(v.get("s").and_then(JsonValue::as_str), Some("x\"y"));
+        assert_eq!(
+            v.get("o").and_then(|o| o.get("k")).and_then(JsonValue::as_str),
+            Some("v")
+        );
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn parser_round_trips_the_escaper() {
+        for s in ["plain", "a\"b", "a\\b", "a\nb", "a\tb", "π"] {
+            let doc = format!("{{\"k\": {}}}", json_string(s));
+            let v = parse_json(&doc).unwrap();
+            assert_eq!(v.get("k").and_then(JsonValue::as_str), Some(s), "{doc}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "{]",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "[1 2]",
+            "{\"a\":1} x",
+            "\"unterminated",
+            "{'a': 1}",
+            "nul",
+        ] {
+            assert!(parse_json(bad).is_err(), "accepted {bad:?}");
+        }
+        // Non-integer where a count is expected.
+        let v = parse_json("1.5").unwrap();
+        assert_eq!(v.as_u64(), None);
+        assert_eq!(v.as_f64(), Some(1.5));
     }
 }

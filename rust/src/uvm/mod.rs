@@ -195,6 +195,7 @@ impl UvmSystem {
     /// queueing always lands in the returned completion — never
     /// silently dropped.
     fn group_dma(&mut self, now: SimTime, key: GroupKey, hm: &HostMemory, dir: Dir) -> SimTime {
+        crate::obs::hostprof::count("uvm/dma_groups", 1);
         let base = hm.region(RegionId(key.1)).base_page;
         let wr = WorkRequest {
             wr_id: self.next_wr,
@@ -363,6 +364,7 @@ impl UvmSystem {
         hm: &HostMemory,
         m: &mut Metrics,
     ) -> usize {
+        let _hp = crate::obs::hostprof::scope("uvm/evict");
         let choice = {
             let groups = &self.groups;
             let slots = &self.slot_groups;
@@ -489,6 +491,7 @@ impl MemorySystem for UvmSystem {
         gpu: usize,
         pages: &[PageAccess],
     ) -> AccessResult {
+        let _hp = crate::obs::hostprof::scope("uvm/access");
         let now = ctx.now;
         self.obs_tick(now, ctx.m);
         let t = now + self.cfg.uvm.tlb_hit_ns;
@@ -560,6 +563,7 @@ impl MemorySystem for UvmSystem {
             }
             // New fault: GMMU writes the fault buffer, driver is poked.
             ctx.m.faults += 1;
+            crate::obs::hostprof::count("uvm/faults", 1);
             trace::emit(&self.sink, now, gpu, TraceEventKind::Fault, gp, write as u64);
             if let Some(&at) = self.evicted_at.get(&key) {
                 ctx.m.refetches += 1;
@@ -621,10 +625,12 @@ impl MemorySystem for UvmSystem {
     }
 
     fn on_event(&mut self, ctx: &mut MemCtx<'_>, ev: MemEvent) {
+        let _hp = crate::obs::hostprof::scope("uvm/on_event");
         let now = ctx.now;
         self.obs_tick(now, ctx.m);
         match ev {
             MemEvent::UvmDriverService => {
+                let _hp = crate::obs::hostprof::scope("uvm/driver");
                 self.driver_scheduled = false;
                 if self.fault_buffer.is_empty() {
                     return;

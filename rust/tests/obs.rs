@@ -13,6 +13,12 @@
 //!    with the new stage/interval stats folded in.
 //! 4. **Perfetto export** — the emitted Chrome trace-event JSON
 //!    validates against the schema on a real capture (the CI check).
+//! 5. **Host-profiler non-perturbation** — running the same workload
+//!    with the host profiler ([`gpuvm::obs::hostprof`]) globally on vs
+//!    off leaves the event stream and the *full* metrics fingerprint
+//!    bit-for-bit identical (hostprof reads the wall clock and its own
+//!    counters, never the simulation), while the enabled run's report
+//!    proves the runtime scopes and counters actually fired.
 
 use gpuvm::analyze::protocol::ProtocolFamily;
 use gpuvm::config::SystemConfig;
@@ -261,6 +267,61 @@ fn prop_sampler_is_deterministic_and_non_perturbing() {
             "fingerprint entry counts the samples taken"
         );
         assert_eq!(rc.metrics.obs_samples, 0);
+    });
+}
+
+#[test]
+fn prop_host_profiler_never_perturbs_the_simulation() {
+    // Serialize against every other test that flips the process-global
+    // hostprof switch.
+    let _serial = gpuvm::obs::hostprof::test_lock();
+    check("hostprof non-perturbation", 10, |rng| {
+        let cfg = random_cfg(rng);
+        let seed = rng.next_u64();
+        let capture = |cfg: &SystemConfig| {
+            let mut local = Rng::new(seed);
+            let mut w = RandomWorkload::generate(&mut local);
+            trace::capture_workload_observed(cfg, "gpuvm", &mut w, "random").expect("capture")
+        };
+
+        gpuvm::obs::hostprof::set_enabled(false);
+        let _ = gpuvm::obs::hostprof::take_thread();
+        let (t_off, r_off, _) = capture(&cfg);
+        let silent = gpuvm::obs::hostprof::take_thread();
+        assert!(
+            silent.scopes.is_empty() && silent.counters.is_empty(),
+            "disabled profiler must record nothing"
+        );
+
+        gpuvm::obs::hostprof::set_enabled(true);
+        let (t_on, r_on, _) = capture(&cfg);
+        let hp = gpuvm::obs::hostprof::take_thread();
+        gpuvm::obs::hostprof::set_enabled(false);
+
+        // The profiler saw the run: the runtime fault counter matches
+        // the simulation's own metrics, and the access scope fired.
+        assert_eq!(
+            hp.counter("gpuvm/faults"),
+            r_on.metrics.faults,
+            "hostprof fault counter must mirror Metrics::faults"
+        );
+        assert!(
+            hp.get("gpuvm/access").is_some(),
+            "access scope must appear in the profile: {:?}",
+            hp.scopes.iter().map(|s| s.path.join("/")).collect::<Vec<_>>()
+        );
+
+        // ...and the simulation never saw the profiler.
+        assert_eq!(
+            t_off.events, t_on.events,
+            "host profiling must not perturb the event stream"
+        );
+        assert_eq!(t_off, t_on, "captures must be identical in full");
+        assert_eq!(
+            r_off.metrics.fingerprint(),
+            r_on.metrics.fingerprint(),
+            "host profiling must not perturb any fingerprint entry"
+        );
     });
 }
 
