@@ -3,15 +3,17 @@
 //! observability layer's overhead budget.
 //!
 //! This is the ROADMAP's raw-speed benchmark: its JSON output carries
-//! the committed perf trajectory (`BENCH_8.json` at the repo root).
-//! Three sections:
+//! the committed perf trajectory (`BENCH_*.json` at the repo root).
+//! The measurement core — the row set, timing loops, and schema-v2
+//! emitter — lives in `gpuvm::obs::selfbench` so that the test-suite
+//! self-bootstrap (`rust/tests/perf.rs`) measures *exactly* the same
+//! cells this binary does. Three sections:
 //!
 //! 1. **Throughput** — events/sec for gpuvm / uvm / uvm-memadvise /
 //!    ideal under the default policies and under a density-prefetch +
 //!    LRU-residency variant (the hot paths the obs hooks sit on).
-//! 2. **Obs overhead** (gpuvm + uvm) — three modes through the same
-//!    `Backend::run` path:
-//!    - `off`: obs disabled (the default) — the baseline;
+//! 2. **Obs overhead** (gpuvm + uvm) — measured against the section-1
+//!    `off` baseline through the same `Backend::run` path:
 //!    - `idle`: sampler attached with a near-infinite interval, so the
 //!      run pays exactly the per-tick `due()` check. This is the
 //!      measurable proxy for the disabled-path budget (<5%);
@@ -30,128 +32,11 @@
 //!
 //! `GPUVM_BENCH_SMOKE=1` shrinks the workload and iteration counts to
 //! CI size. Refresh the committed baseline with:
-//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_9.json`
+//! `cargo bench --bench bench_selfperf && cp target/bench_results/bench_selfperf.json BENCH_10.json`
 
-use gpuvm::analyze::{lint_trace, race_check_trace};
-use gpuvm::apps::{BuildOpts, WorkloadSpec};
-use gpuvm::config::SystemConfig;
-use gpuvm::coordinator::backend;
-use gpuvm::obs::hostprof;
-use gpuvm::obs::SCHEMA_V2;
-use gpuvm::prefetch::PrefetchPolicy;
-use gpuvm::residency::ResidencyPolicyKind;
-use gpuvm::trace;
-use gpuvm::util::bench::{banner, time};
+use gpuvm::obs::selfbench::{standard_rows, trajectory_json, Row};
+use gpuvm::util::bench::banner;
 use gpuvm::util::csv::CsvWriter;
-
-const BACKENDS: [&str; 4] = ["gpuvm", "uvm", "uvm-memadvise", "ideal"];
-
-/// Run `f` once with the host profiler on and return the top-3
-/// hotspots as `"path pct%"` strings. Profiling is scoped to this call
-/// so the timed iterations never pay for it.
-fn profile_hotspots(f: impl FnOnce()) -> Vec<String> {
-    hostprof::set_enabled(true);
-    let _ = hostprof::take_thread(); // drain any stale state
-    f();
-    let hp = hostprof::take_thread();
-    hostprof::set_enabled(false);
-    hp.top_hotspots(3)
-        .into_iter()
-        .map(|(path, _, pct)| format!("{path} {pct:.0}%"))
-        .collect()
-}
-
-/// One measured case.
-struct Row {
-    backend: &'static str,
-    policy: &'static str,
-    obs: &'static str,
-    events: u64,
-    sim_ns: u64,
-    wall_mean_s: f64,
-    wall_min_s: f64,
-    hotspots: Vec<String>,
-}
-
-impl Row {
-    /// Events/sec from the fastest iteration (least scheduler noise).
-    fn events_per_sec(&self) -> f64 {
-        if self.wall_min_s <= 0.0 {
-            return 0.0;
-        }
-        self.events as f64 / self.wall_min_s
-    }
-
-    fn json(&self) -> String {
-        let hotspots: Vec<String> = self.hotspots.iter().map(|h| format!("\"{h}\"")).collect();
-        format!(
-            "{{\"backend\":\"{}\",\"policy\":\"{}\",\"obs\":\"{}\",\"events\":{},\
-             \"sim_ns\":{},\"wall_mean_s\":{:.6},\"wall_min_s\":{:.6},\
-             \"events_per_sec\":{:.0},\"provenance\":\"measured\",\
-             \"host_hotspots\":[{}]}}",
-            self.backend,
-            self.policy,
-            self.obs,
-            self.events,
-            self.sim_ns,
-            self.wall_mean_s,
-            self.wall_min_s,
-            self.events_per_sec(),
-            hotspots.join(",")
-        )
-    }
-}
-
-fn base_cfg(smoke: bool) -> SystemConfig {
-    let mut cfg = SystemConfig::default();
-    cfg.gpu.sms = if smoke { 8 } else { 28 };
-    cfg.gpu.warps_per_sm = if smoke { 4 } else { 8 };
-    cfg.gpuvm.page_size = 4096;
-    // Oversubscribed so eviction/refetch paths run, not just fills.
-    cfg.gpu.mem_bytes = if smoke { 2 << 20 } else { 8 << 20 };
-    cfg
-}
-
-/// Time one configuration; returns the measured row.
-fn measure(
-    backend_name: &'static str,
-    policy: &'static str,
-    obs: &'static str,
-    cfg: &SystemConfig,
-    app: &str,
-    warmup: u32,
-    iters: u32,
-) -> Row {
-    let spec = WorkloadSpec::parse(app).expect("bench spec");
-    let opts = BuildOpts::for_cfg(cfg);
-    let b = backend::lookup(backend_name).expect("core backend");
-    // One untimed run pins the deterministic outputs (events, sim time).
-    let probe = b.run(cfg, &spec, &opts).expect("bench run");
-    let t = time(
-        &format!("{backend_name}/{policy}/obs={obs}"),
-        warmup,
-        iters,
-        || {
-            b.run(cfg, &spec, &opts).expect("bench run");
-        },
-    );
-    println!("{}", t.report());
-    // One extra untimed run with the host profiler on: records where
-    // the wallclock went without perturbing the timed iterations.
-    let hotspots = profile_hotspots(|| {
-        b.run(cfg, &spec, &opts).expect("bench run");
-    });
-    Row {
-        backend: backend_name,
-        policy,
-        obs,
-        events: probe.events,
-        sim_ns: probe.finish_ns,
-        wall_mean_s: t.mean_s,
-        wall_min_s: t.min_s,
-        hotspots,
-    }
-}
 
 fn main() {
     banner("Self-perf: DES events/sec × backend × policy × observability");
@@ -160,47 +45,39 @@ fn main() {
     let (warmup, iters) = if smoke { (0, 2) } else { (1, 5) };
     println!("workload {app}, {iters} timed iterations (smoke={smoke})\n");
 
-    let mut rows: Vec<Row> = Vec::new();
+    let rows = standard_rows(smoke, app, warmup, iters);
 
-    // -- 1. throughput across backends × policy axes (obs off) --------
-    for backend_name in BACKENDS {
-        for policy in ["default", "density-lru"] {
-            let mut cfg = base_cfg(smoke);
-            if policy == "density-lru" {
-                cfg.gpuvm.prefetch_policy = PrefetchPolicy::Density;
-                cfg.uvm.prefetch_policy = PrefetchPolicy::Density;
-                cfg.gpuvm.residency_policy = ResidencyPolicyKind::Lru;
-                cfg.uvm.residency_policy = ResidencyPolicyKind::Lru;
-            }
-            rows.push(measure(backend_name, policy, "off", &cfg, app, warmup, iters));
-        }
+    for r in &rows {
+        println!(
+            "{}/{}/obs={}: {:.0} events/s (mean {:.4}s, min {:.4}s over {iters} iters)",
+            r.backend,
+            r.policy,
+            r.obs,
+            r.events_per_sec(),
+            r.wall_mean_s,
+            r.wall_min_s,
+        );
     }
 
-    // -- 2. obs overhead on the paged systems --------------------------
+    // Obs overhead report: compare each paged system's idle/on rows
+    // against its own section-1 `off` baseline.
+    let find = |backend: &str, obs: &str| -> &Row {
+        rows.iter()
+            .find(|r| r.backend == backend && r.policy == "default" && r.obs == obs)
+            .expect("standard row set carries the cell")
+    };
+    let pct = |base: &Row, x: &Row| {
+        if base.wall_min_s <= 0.0 {
+            0.0
+        } else {
+            (x.wall_min_s / base.wall_min_s - 1.0) * 100.0
+        }
+    };
+    println!();
     for backend_name in ["gpuvm", "uvm"] {
-        let cfg = base_cfg(smoke);
-        let off = measure(backend_name, "default", "off", &cfg, app, warmup, iters);
-
-        // Sampler attached, interval pushed past any run's finish time:
-        // every tick pays the `due()` check, (almost) nothing samples.
-        let mut cfg_idle = base_cfg(smoke);
-        cfg_idle.obs.enabled = true;
-        cfg_idle.obs.interval_ns = u64::MAX / 2;
-        let idle = measure(backend_name, "default", "idle", &cfg_idle, app, warmup, iters);
-
-        let mut cfg_on = base_cfg(smoke);
-        cfg_on.obs.enabled = true;
-        let on = measure(backend_name, "default", "on", &cfg_on, app, warmup, iters);
-
-        let pct = |base: &Row, x: &Row| {
-            if base.wall_min_s <= 0.0 {
-                0.0
-            } else {
-                (x.wall_min_s / base.wall_min_s - 1.0) * 100.0
-            }
-        };
-        let idle_pct = pct(&off, &idle);
-        let on_pct = pct(&off, &on);
+        let off = find(backend_name, "off");
+        let idle_pct = pct(off, find(backend_name, "idle"));
+        let on_pct = pct(off, find(backend_name, "on"));
         println!(
             "{backend_name}: obs overhead idle {idle_pct:+.1}% (budget <5%), \
              sampling {on_pct:+.1}%{}",
@@ -210,46 +87,6 @@ fn main() {
                 ""
             }
         );
-        rows.push(off);
-        rows.push(idle);
-        rows.push(on);
-    }
-
-    // -- 3. analyzer throughput (events/sec linted + race-checked) -----
-    for backend_name in ["gpuvm", "uvm"] {
-        let cfg = base_cfg(smoke);
-        let spec = WorkloadSpec::parse(app).expect("bench spec");
-        let opts = BuildOpts::for_cfg(&cfg);
-        let (t, _) = trace::capture(&cfg, &spec, &opts, backend_name).expect("bench capture");
-        let timed = time(
-            &format!("{backend_name}/analyze/lint+race"),
-            warmup,
-            iters,
-            || {
-                let l = lint_trace(&t).expect("lint");
-                assert!(l.clean(), "bench capture must lint clean");
-                let r = race_check_trace(&t).expect("race check");
-                assert!(r.clean(), "bench capture must race-check clean");
-            },
-        );
-        println!("{}", timed.report());
-        let hotspots = profile_hotspots(|| {
-            let _ = lint_trace(&t).expect("lint");
-            let _ = race_check_trace(&t).expect("race check");
-        });
-        rows.push(Row {
-            backend: backend_name,
-            policy: "analyze",
-            obs: "lint+race",
-            // "events" here are trace events pushed through both
-            // analyzer passes each iteration, so events_per_sec is
-            // analyzer throughput (sim_ns does not apply).
-            events: t.events.len() as u64,
-            sim_ns: 0,
-            wall_mean_s: timed.mean_s,
-            wall_min_s: timed.min_s,
-            hotspots,
-        });
     }
 
     // -- outputs -------------------------------------------------------
@@ -280,18 +117,17 @@ fn main() {
     }
     csv.flush().unwrap();
 
-    let items: Vec<String> = rows.iter().map(Row::json).collect();
-    let json = format!(
-        "{{\"schema\":\"{SCHEMA_V2}\",\"bench\":\"bench_selfperf\",\
-         \"provenance\":\"measured by cargo bench --bench bench_selfperf\",\
-         \"smoke\":{smoke},\"app\":\"{app}\",\
-         \"iters\":{iters},\"results\":[{}]}}\n",
-        items.join(",")
+    let json = trajectory_json(
+        &rows,
+        "measured by cargo bench --bench bench_selfperf",
+        smoke,
+        app,
+        iters,
     );
     std::fs::create_dir_all("target/bench_results").unwrap();
     std::fs::write("target/bench_results/bench_selfperf.json", &json).unwrap();
 
     println!("\ncsv:  target/bench_results/bench_selfperf.csv");
     println!("json: target/bench_results/bench_selfperf.json");
-    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_9.json");
+    println!("refresh the committed trajectory: cp target/bench_results/bench_selfperf.json BENCH_10.json");
 }

@@ -17,6 +17,7 @@ pub mod backend;
 pub mod compute;
 pub mod report;
 pub mod session;
+pub(crate) mod steal;
 
 pub use backend::Backend;
 pub use report::RunReport;

@@ -1,7 +1,8 @@
 //! The fluent run-construction API: a [`Session`] owns a base
 //! [`SystemConfig`] and accumulates workloads, backends, and sweep axes;
 //! [`Session::run_all`] expands the cross product and executes every
-//! point — across `std::thread` workers — returning one structured
+//! point — across work-stealing `std::thread` workers (the
+//! `coordinator::steal` sweep-cell queue) — returning one structured
 //! [`RunReport`] per point.
 //!
 //! ```no_run
@@ -29,10 +30,10 @@ use crate::apps::{BuildOpts, WorkloadSpec};
 use crate::config::SystemConfig;
 use crate::coordinator::backend::{self, Backend};
 use crate::coordinator::report::RunReport;
+use crate::coordinator::steal;
 use crate::prefetch::PrefetchPolicy;
 use crate::residency::ResidencyPolicyKind;
 use anyhow::{Context, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// One sweep dimension; axes multiply.
 #[derive(Debug, Clone)]
@@ -345,39 +346,17 @@ impl Session {
                 .collect();
         }
 
-        // Work-stealing over an atomic cursor; each worker records
-        // (index, result) pairs so the merged output preserves point order.
-        let points_ref = &points;
-        let cursor = AtomicUsize::new(0);
-        let cursor_ref = &cursor;
-        let mut slots: Vec<Option<Result<RunReport>>> =
-            (0..points.len()).map(|_| None).collect();
-        let collected: Vec<Vec<(usize, Result<RunReport>)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    s.spawn(move || {
-                        let mut out = Vec::new();
-                        loop {
-                            let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                            let Some(p) = points_ref.get(i) else { break };
-                            out.push((i, p.backend.run(&p.cfg, &p.spec, &p.opts)));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("sweep worker panicked"))
-                .collect()
-        });
-        for (i, r) in collected.into_iter().flatten() {
-            slots[i] = Some(r);
-        }
-        slots
-            .into_iter()
-            .map(|s| s.expect("every sweep point executed"))
-            .collect()
+        // Work-stealing sweep cells ([`crate::coordinator::steal`]):
+        // each worker starts on its own contiguous slice of the point
+        // list and steals the back half of the fullest cell when it
+        // runs dry; results land in slots indexed by point order, so
+        // the output matches a serial run exactly.
+        steal::run_indexed(points.len(), workers, |i| {
+            let p = &points[i];
+            p.backend.run(&p.cfg, &p.spec, &p.opts)
+        })
+        .into_iter()
+        .collect()
     }
 }
 

@@ -1,0 +1,206 @@
+//! Work-stealing sweep execution for
+//! [`Session::run_all`](crate::coordinator::Session::run_all).
+//!
+//! The point list of a sweep is embarrassingly parallel but badly
+//! skewed: an oversubscribed `gpuvm` point can run orders of magnitude
+//! longer than an `ideal` point of the same sweep. A shared cursor
+//! (the previous scheme) keeps workers busy but serializes every claim
+//! through one contended cache line; static partitioning has no
+//! contention but leaves workers idle behind the slowest slice. The
+//! sweep-cell queue here takes the third corner: each worker starts on
+//! its own contiguous slice of the point list (good config/workload
+//! locality — adjacent points share sweep values) and, when its cell
+//! runs dry, steals the *back half* of the fullest remaining cell, so
+//! claims stay worker-local except when the load actually skews.
+//!
+//! Determinism: which worker runs a point never affects the result —
+//! every point is an independent deterministic simulation — and results
+//! land in slots indexed by point order, so the merged output is
+//! byte-identical to a serial run (pinned by `parallel_matches_serial`
+//! in `session.rs`).
+//!
+//! Safety: only cell `w`'s owner pushes into cell `w` (parking stolen
+//! surplus); thieves only pop from the back. A worker exits once its
+//! own cell is empty and a full scan finds every other cell empty —
+//! after which its cell can only shrink — so every index is claimed
+//! exactly once and none is stranded. Locks are never nested: a thief
+//! drains the victim under one lock, releases it, then parks under its
+//! own.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Per-worker sweep cells over the indices `0..num_items`.
+pub(crate) struct StealExecutor {
+    cells: Vec<Mutex<VecDeque<usize>>>,
+    steals: AtomicU64,
+}
+
+impl StealExecutor {
+    /// Partition `0..num_items` into one contiguous cell per worker.
+    pub(crate) fn new(num_items: usize, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let per = num_items.div_ceil(workers).max(1);
+        let mut cells: Vec<VecDeque<usize>> = (0..workers).map(|_| VecDeque::new()).collect();
+        for i in 0..num_items {
+            cells[(i / per).min(workers - 1)].push_back(i);
+        }
+        Self {
+            cells: cells.into_iter().map(Mutex::new).collect(),
+            steals: AtomicU64::new(0),
+        }
+    }
+
+    /// Successful steals so far (telemetry; tests pin that skewed loads
+    /// actually migrate).
+    pub(crate) fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Claim the next index for worker `w`: own cell first, else steal.
+    /// `None` means global exhaustion — `w` may exit.
+    pub(crate) fn next(&self, w: usize) -> Option<usize> {
+        if let Some(i) = self.cells[w].lock().expect("cell lock").pop_front() {
+            return Some(i);
+        }
+        self.steal(w)
+    }
+
+    /// Steal the back half of the fullest other cell: run the first
+    /// stolen index now, park the rest in `w`'s cell. Retries while
+    /// scans race with other thieves; returns `None` only after a full
+    /// scan finds no remaining work.
+    fn steal(&self, w: usize) -> Option<usize> {
+        loop {
+            let mut best = (0usize, w);
+            for (v, c) in self.cells.iter().enumerate() {
+                if v == w {
+                    continue;
+                }
+                let len = c.lock().expect("cell lock").len();
+                if len > best.0 {
+                    best = (len, v);
+                }
+            }
+            if best.0 == 0 {
+                return None;
+            }
+            let mut grabbed: Vec<usize> = Vec::new();
+            {
+                let mut vc = self.cells[best.1].lock().expect("cell lock");
+                let n = vc.len();
+                let take = n - n / 2; // back half, rounded up
+                for _ in 0..take {
+                    if let Some(i) = vc.pop_back() {
+                        grabbed.push(i);
+                    }
+                }
+            }
+            if grabbed.is_empty() {
+                continue; // raced with another thief; rescan
+            }
+            grabbed.reverse(); // back-half pops arrive reversed
+            self.steals.fetch_add(1, Ordering::Relaxed);
+            let first = grabbed[0];
+            if grabbed.len() > 1 {
+                let mut own = self.cells[w].lock().expect("cell lock");
+                own.extend(grabbed[1..].iter().copied());
+            }
+            return Some(first);
+        }
+    }
+}
+
+/// Run `f(i)` for every `i in 0..num_items` across `workers` scoped
+/// threads with work stealing, returning results in index order.
+pub(crate) fn run_indexed<T, F>(num_items: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, num_items.max(1));
+    let exec = StealExecutor::new(num_items, workers);
+    let exec_ref = &exec;
+    let f_ref = &f;
+    let collected: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    while let Some(i) = exec_ref.next(w) {
+                        out.push((i, f_ref(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("steal worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..num_items).map(|_| None).collect();
+    for (i, r) in collected.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "index {i} claimed twice");
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every index executed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_index_runs_exactly_once_in_order() {
+        let n = 257; // deliberately not a multiple of the worker count
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let out = run_indexed(n, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            i * 3
+        });
+        assert_eq!(out, (0..n).map(|i| i * 3).collect::<Vec<_>>());
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_single_item_edge_cases() {
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn skewed_cells_actually_steal() {
+        // 4 workers × 10 items; every item of cell 0 is slow. Workers
+        // 1-3 drain their cells immediately and must steal the rest of
+        // cell 0 out from under the busy worker.
+        let exec = StealExecutor::new(40, 4);
+        let exec_ref = &exec;
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                s.spawn(move || {
+                    while let Some(i) = exec_ref.next(w) {
+                        if i < 10 {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                    }
+                });
+            }
+        });
+        assert!(exec.steals() > 0, "no steals despite a 20:1 skew");
+    }
+
+    #[test]
+    fn contiguous_cells_preserve_slice_locality() {
+        // With a single worker there is nobody to steal from: the one
+        // cell replays the indices in exact submission order.
+        let order = Mutex::new(Vec::new());
+        run_indexed(16, 1, |i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+    }
+}

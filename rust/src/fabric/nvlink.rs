@@ -27,6 +27,8 @@ pub struct NvLinkTransport {
     wr_process_ns: SimTime,
     /// Copy-descriptor-processor serialization horizon.
     busy_until: SimTime,
+    /// Doorbell-drain scratch, reused across rings (allocation-free).
+    drain_buf: Vec<WorkRequest>,
     doorbells: u64,
     wrs_serviced: u64,
     bytes_moved: u64,
@@ -40,6 +42,7 @@ impl NvLinkTransport {
             latency_ns: us(cfg.nvlink.latency_us),
             wr_process_ns: cfg.nvlink.wr_process_ns,
             busy_until: 0,
+            drain_buf: Vec::new(),
             doorbells: 0,
             wrs_serviced: 0,
             bytes_moved: 0,
@@ -64,6 +67,10 @@ impl Transport for NvLinkTransport {
         self.queues.post(queue, wr)
     }
 
+    fn post_batch(&mut self, queue: usize, wrs: &[WorkRequest]) -> Result<usize, TransportError> {
+        self.queues.post_batch(queue, wrs)
+    }
+
     fn ring_doorbell_into(
         &mut self,
         now: SimTime,
@@ -72,8 +79,11 @@ impl Transport for NvLinkTransport {
     ) -> Result<(), TransportError> {
         self.queues.check(queue)?;
         self.doorbells += 1;
-        out.reserve(self.queues.depth(queue));
-        while let Some(wr) = self.queues.pop(queue) {
+        let mut batch = std::mem::take(&mut self.drain_buf);
+        batch.clear();
+        self.queues.drain_into(queue, &mut batch);
+        out.reserve(batch.len());
+        for wr in batch.drain(..) {
             // Descriptor launch serializes on the copy processor.
             let t0 = now.max(self.busy_until) + self.wr_process_ns;
             self.busy_until = t0;
@@ -90,6 +100,7 @@ impl Transport for NvLinkTransport {
                 wr,
             });
         }
+        self.drain_buf = batch;
         Ok(())
     }
 

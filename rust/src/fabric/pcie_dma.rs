@@ -26,6 +26,8 @@ pub struct PcieDmaTransport {
     /// callers that model the host path themselves (the UVM driver)
     /// must not pay it twice.
     setup_ns: SimTime,
+    /// Doorbell-drain scratch, reused across rings (allocation-free).
+    drain_buf: Vec<WorkRequest>,
     doorbells: u64,
     wrs_serviced: u64,
     bytes_moved: u64,
@@ -37,6 +39,7 @@ impl PcieDmaTransport {
             topo: Topology::new(cfg),
             queues: QueueSet::new(cfg.gpuvm.num_qps, cfg.gpuvm.qp_entries),
             setup_ns: us(cfg.pcie_dma.setup_us),
+            drain_buf: Vec::new(),
             doorbells: 0,
             wrs_serviced: 0,
             bytes_moved: 0,
@@ -61,6 +64,10 @@ impl Transport for PcieDmaTransport {
         self.queues.post(queue, wr)
     }
 
+    fn post_batch(&mut self, queue: usize, wrs: &[WorkRequest]) -> Result<usize, TransportError> {
+        self.queues.post_batch(queue, wrs)
+    }
+
     fn ring_doorbell_into(
         &mut self,
         now: SimTime,
@@ -69,8 +76,11 @@ impl Transport for PcieDmaTransport {
     ) -> Result<(), TransportError> {
         self.queues.check(queue)?;
         self.doorbells += 1;
-        out.reserve(self.queues.depth(queue));
-        while let Some(wr) = self.queues.pop(queue) {
+        let mut batch = std::mem::take(&mut self.drain_buf);
+        batch.clear();
+        self.queues.drain_into(queue, &mut batch);
+        out.reserve(batch.len());
+        for wr in batch.drain(..) {
             // DMA over the direct path (no NIC in the loop); link
             // queueing — the completion time — is never dropped.
             let path = self.topo.path_direct(wr.gpu, wr.dir);
@@ -83,6 +93,7 @@ impl Transport for PcieDmaTransport {
                 wr,
             });
         }
+        self.drain_buf = batch;
         Ok(())
     }
 

@@ -47,6 +47,10 @@ impl Transport for RdmaTransport {
         self.bank.post(queue, wr)
     }
 
+    fn post_batch(&mut self, queue: usize, wrs: &[WorkRequest]) -> Result<usize, TransportError> {
+        self.bank.post_batch(queue, wrs)
+    }
+
     fn ring_doorbell_into(
         &mut self,
         now: SimTime,

@@ -131,6 +131,8 @@ pub struct GpuVmSystem {
     backlog: VecDeque<PendingWr>,
     /// Reused completion buffer (hot path, §Perf).
     completion_buf: Vec<Completion>,
+    /// Reused WR buffer for batched backlog posting (hot path, §Perf).
+    wr_batch: Vec<WorkRequest>,
     /// Frames each slot currently references.
     holds: FxHashMap<SlotId, Vec<(usize, FrameId)>>,
     /// Outstanding pages per blocked slot; wake at 0.
@@ -195,6 +197,7 @@ impl GpuVmSystem {
             queue_busy: vec![0; cfg.gpuvm.num_qps],
             backlog: VecDeque::new(),
             completion_buf: Vec::with_capacity(64),
+            wr_batch: Vec::new(),
             holds: FxHashMap::default(),
             slot_pending: FxHashMap::default(),
             evicted_at: FxHashMap::default(),
@@ -541,14 +544,12 @@ impl GpuVmSystem {
         None
     }
 
-    fn post_now(
-        &mut self,
-        now: SimTime,
-        queue: usize,
-        pw: PendingWr,
-        eng: &mut Engine<Ev>,
-        m: &mut Metrics,
-    ) {
+    /// Per-WR host-side bookkeeping shared by the single-post and the
+    /// batched backlog-drain paths: assign the wr_id, wire the purpose
+    /// maps, stamp the in-flight record, count the WR, and emit the
+    /// trace event. Returns the wire-ready work request — the caller
+    /// owns posting it into the fabric.
+    fn prepare_wr(&mut self, t_posted: SimTime, pw: PendingWr, m: &mut Metrics) -> WorkRequest {
         let wr_id = self.next_wr;
         self.next_wr += 1;
         match pw.purpose {
@@ -566,22 +567,12 @@ impl GpuVmSystem {
             }
             WrPurpose::WritebackAsync => {}
         }
-        let wr = WorkRequest {
-            wr_id,
-            page: pw.page,
-            bytes: self.cfg.gpuvm.page_size,
-            dir: pw.dir,
-            gpu: pw.gpu,
-        };
-        let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
         if pw.purpose == WrPurpose::Fetch {
             if let Some(fl) = self.inflight.get_mut(&(pw.gpu, pw.page)) {
                 fl.posted = Some(t_posted);
             }
         }
-        self.fabric.post(queue, wr).expect("free queue accepts a post");
         m.work_requests += 1;
-        crate::obs::hostprof::count("gpuvm/wr_posted", 1);
         trace::emit(
             &self.sink,
             t_posted,
@@ -590,12 +581,34 @@ impl GpuVmSystem {
             pw.page.0,
             (wr_id << 1) | matches!(pw.dir, Dir::Out) as u64,
         );
+        WorkRequest {
+            wr_id,
+            page: pw.page,
+            bytes: self.cfg.gpuvm.page_size,
+            dir: pw.dir,
+            gpu: pw.gpu,
+        }
+    }
+
+    /// Batch bookkeeping after `n` WRs landed on `queue` at `t_posted`:
+    /// arm the flush timer when the first WR opened a fresh batch, ring
+    /// when the batch filled. Replays exactly what `n` successive
+    /// single posts did — the timer is armed even when a later WR of
+    /// the same burst fills the batch (the epoch guard retires the
+    /// stale flush, as it always has), and only the last WR can fill
+    /// the batch because callers never post past the remaining room.
+    fn note_posted(
+        &mut self,
+        t_posted: SimTime,
+        queue: usize,
+        n: u32,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) {
         let b = &mut self.batches[queue];
-        b.pending += 1;
-        if b.pending >= self.cfg.gpuvm.fault_batch {
-            self.next_queue = (queue + 1) % self.fabric.num_queues();
-            self.ring(t_posted + self.cfg.gpuvm.doorbell_ns, queue, eng, m);
-        } else if b.pending == 1 {
+        let fresh_batch = b.pending == 0;
+        b.pending += n;
+        if fresh_batch && self.cfg.gpuvm.fault_batch > 1 {
             // First of a batch: arm the flush timer.
             let epoch = b.epoch;
             eng.schedule(
@@ -603,6 +616,25 @@ impl GpuVmSystem {
                 Ev::Mem(MemEvent::BatchFlush { queue, epoch }),
             );
         }
+        if self.batches[queue].pending >= self.cfg.gpuvm.fault_batch {
+            self.next_queue = (queue + 1) % self.fabric.num_queues();
+            self.ring(t_posted + self.cfg.gpuvm.doorbell_ns, queue, eng, m);
+        }
+    }
+
+    fn post_now(
+        &mut self,
+        now: SimTime,
+        queue: usize,
+        pw: PendingWr,
+        eng: &mut Engine<Ev>,
+        m: &mut Metrics,
+    ) {
+        let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
+        let wr = self.prepare_wr(t_posted, pw, m);
+        self.fabric.post(queue, wr).expect("free queue accepts a post");
+        crate::obs::hostprof::count("gpuvm/wr_posted", 1);
+        self.note_posted(t_posted, queue, 1, eng, m);
     }
 
     fn ring(&mut self, now: SimTime, queue: usize, eng: &mut Engine<Ev>, m: &mut Metrics) {
@@ -968,10 +1000,32 @@ impl MemorySystem for GpuVmSystem {
                 }
                 // Async write-backs complete silently.
                 // The freed queue slot drains waiting leaders (§3.2).
+                // Consecutive leaders land on the same queue until its
+                // batch fills (find_free_queue scans from next_queue),
+                // so post them as one fabric batch: per-WR bookkeeping
+                // stays, the queue insert and profiling count amortize.
                 while !self.backlog.is_empty() {
                     let Some(q) = self.find_free_queue() else { break };
-                    let pw = self.backlog.pop_front().unwrap();
-                    self.post_now(now, q, pw, &mut *ctx.eng, &mut *ctx.m);
+                    let room = self.cfg.gpuvm.fault_batch - self.batches[q].pending;
+                    let take = (room as usize).min(self.backlog.len());
+                    if take <= 1 {
+                        let pw = self.backlog.pop_front().unwrap();
+                        self.post_now(now, q, pw, &mut *ctx.eng, &mut *ctx.m);
+                        continue;
+                    }
+                    let t_posted = now + self.cfg.gpuvm.wr_insert_ns;
+                    let mut wrs = std::mem::take(&mut self.wr_batch);
+                    wrs.clear();
+                    for _ in 0..take {
+                        let pw = self.backlog.pop_front().unwrap();
+                        let wr = self.prepare_wr(t_posted, pw, &mut *ctx.m);
+                        wrs.push(wr);
+                    }
+                    let posted = self.fabric.post_batch(q, &wrs).expect("valid queue");
+                    assert_eq!(posted, take, "free queue accepts its remaining room");
+                    crate::obs::hostprof::count("gpuvm/wr_posted", take as u64);
+                    self.wr_batch = wrs;
+                    self.note_posted(t_posted, q, take as u32, &mut *ctx.eng, &mut *ctx.m);
                 }
             }
             MemEvent::FrameFree { gpu, frame } => {

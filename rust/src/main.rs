@@ -99,7 +99,8 @@ const USAGE: &str = "usage: gpuvm <run|compare|sweep|trace|analyze|profile|perf|
            gate BASE NEW [--tolerance PCT] [--report FILE]
                 fail (exit 1) if any measured row regressed > tolerance (default 10);
                 estimated-provenance rows are exempt
-           validate FILE...              strict gpuvm-selfperf/2 schema check (exit 1 on issues)
+           validate FILE... [--require-measured]  strict gpuvm-selfperf/2 schema check
+                                         (exit 1 on issues; flag rejects estimated rows)
   e2e      [--n ELEMS] [--rows ROWS] [--artifacts DIR]  full 3-layer driver
   list     apps, backends, prefetch/residency policies, transports, artifacts
   info     resolved system configuration
@@ -818,7 +819,8 @@ fn cmd_perf(args: &Args) -> Result<()> {
     use gpuvm::obs::perfcmp;
 
     const PERF_USAGE: &str = "usage: gpuvm perf <report FILE...|diff BASE NEW|\
-         gate BASE NEW [--tolerance PCT] [--report FILE]|validate FILE...> (see `gpuvm` help)";
+         gate BASE NEW [--tolerance PCT] [--report FILE]|\
+         validate FILE... [--require-measured]> (see `gpuvm` help)";
 
     fn load(path: &str) -> Result<perfcmp::PerfFile> {
         let text = std::fs::read_to_string(path)
@@ -866,10 +868,21 @@ fn cmd_perf(args: &Args) -> Result<()> {
         }
         Some("validate") => {
             anyhow::ensure!(!files.is_empty(), "perf validate needs at least one FILE");
+            let require_measured = args.has("require-measured");
             let mut bad = false;
             for f in files {
                 let p = load(f)?;
-                let issues = perfcmp::validate_v2(&p);
+                let mut issues = perfcmp::validate_v2(&p);
+                if require_measured {
+                    for r in p.rows.iter().filter(|r| r.estimated) {
+                        issues.push(format!(
+                            "{}: row {} is estimated, but --require-measured demands \
+                             measured provenance",
+                            p.label,
+                            r.key()
+                        ));
+                    }
+                }
                 if issues.is_empty() {
                     println!(
                         "{}: ok ({}, {} rows{})",

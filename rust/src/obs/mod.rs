@@ -37,7 +37,10 @@
 //!   `gpuvm profile run --host`.
 //! - **Perf trajectory** ([`perfcmp`]) — parse/report/diff/gate for the
 //!   committed `BENCH_*.json` self-perf points, behind the
-//!   `gpuvm perf` CLI verb and the CI regression gate.
+//!   `gpuvm perf` CLI verb and the CI regression gate. The measurement
+//!   core that *produces* those points lives in [`selfbench`], shared
+//!   by the `bench_selfperf` binary and the test-suite bootstrap that
+//!   converts a placeholder `BENCH_10.json` into measured rows.
 //!
 //! ## Stage model
 //!
@@ -72,6 +75,7 @@ pub mod export;
 pub mod hostprof;
 pub mod perfcmp;
 pub mod sampler;
+pub mod selfbench;
 pub mod span;
 
 pub use export::{chrome_trace_json, validate_chrome_json, Breakdown};

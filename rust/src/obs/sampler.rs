@@ -98,8 +98,16 @@ impl Sampler {
             return;
         }
         // Advance past the current interval even when at capacity, so
-        // `due` stays cheap and truncation is stable.
-        self.next_at = (now / self.interval_ns + 1) * self.interval_ns;
+        // `due` stays cheap and truncation is stable. Saturate instead
+        // of overflowing: bench_selfperf's idle mode runs with
+        // `interval_ns = u64::MAX / 2`, where `(now / i + 1) * i`
+        // exceeds u64 on the second tick (debug panic, release wrap —
+        // a wrapped `next_at` would re-arm every tick and sample the
+        // whole run). `u64::MAX` means "never again".
+        self.next_at = (now / self.interval_ns)
+            .checked_add(1)
+            .and_then(|n| n.checked_mul(self.interval_ns))
+            .unwrap_or(u64::MAX);
         if self.max_samples != 0 && self.samples.len() as u64 >= self.max_samples {
             self.truncated = true;
             return;
@@ -165,5 +173,28 @@ mod tests {
     fn zero_interval_is_clamped() {
         let s = Sampler::new(0, 0);
         assert_eq!(s.interval_ns(), 1);
+    }
+
+    #[test]
+    fn huge_idle_interval_saturates_instead_of_overflowing() {
+        // bench_selfperf's idle mode: one sample at t=0, then never
+        // again. The second tick lands in interval 1, whose *end*
+        // (2 * interval) overflows u64 — next_at must saturate to
+        // u64::MAX rather than panic (debug) or wrap (release).
+        let idle = u64::MAX / 2;
+        let mut s = Sampler::new(idle, 0);
+        let mut m = Metrics::new();
+        s.tick(0, &mut m, 0, &[]);
+        assert_eq!(s.samples.len(), 1);
+        // Second tick: now / interval == 1, (1 + 1) * interval > u64::MAX.
+        s.tick(u64::MAX - 1, &mut m, 0, &[]);
+        assert_eq!(s.samples.len(), 2);
+        assert_eq!(m.obs_samples, 2);
+        assert!(!s.due(u64::MAX - 1), "saturated next_at must disarm the sampler");
+        // And the degenerate extreme: interval == u64::MAX.
+        let mut s = Sampler::new(u64::MAX, 0);
+        s.tick(5, &mut m, 0, &[]);
+        s.tick(u64::MAX, &mut m, 0, &[]);
+        assert_eq!(s.samples.len(), 2);
     }
 }

@@ -1,0 +1,253 @@
+//! The self-performance measurement core: the row set, timing loops,
+//! and schema-v2 emitter behind `cargo bench --bench bench_selfperf`.
+//!
+//! Extracted into the library so the measurement is callable from two
+//! places with bit-identical semantics:
+//!
+//! - the `bench_selfperf` binary — the full-size run that refreshes the
+//!   committed trajectory (`BENCH_*.json` at the repo root);
+//! - `rust/tests/perf.rs` — the *self-bootstrap*: when the committed
+//!   `BENCH_10.json` is missing or still carries estimated rows, the
+//!   test suite replaces it with a real smoke-scale measurement, so
+//!   the trajectory gains measured provenance on the first machine
+//!   that can actually run the code (the same pattern the golden
+//!   traces use).
+//!
+//! The row set ([`standard_rows`]) has three sections — backend ×
+//! policy throughput, observability overhead, analyzer throughput —
+//! documented in detail on the bench binary. Every row records
+//! `events_per_sec` from the fastest iteration, plus the top
+//! host-profile hotspots from one extra untimed run.
+
+use crate::analyze::{lint_trace, race_check_trace};
+use crate::apps::{BuildOpts, WorkloadSpec};
+use crate::config::SystemConfig;
+use crate::coordinator::backend;
+use crate::obs::hostprof;
+use crate::obs::SCHEMA_V2;
+use crate::prefetch::PrefetchPolicy;
+use crate::residency::ResidencyPolicyKind;
+use crate::trace;
+use crate::util::bench::time;
+
+/// The four core backends every self-perf point covers.
+pub const BACKENDS: [&str; 4] = ["gpuvm", "uvm", "uvm-memadvise", "ideal"];
+
+/// Run `f` once with the host profiler on and return the top-3
+/// hotspots as `"path pct%"` strings. Profiling is scoped to this call
+/// so timed iterations never pay for it.
+pub fn profile_hotspots(f: impl FnOnce()) -> Vec<String> {
+    hostprof::set_enabled(true);
+    let _ = hostprof::take_thread(); // drain any stale state
+    f();
+    let hp = hostprof::take_thread();
+    hostprof::set_enabled(false);
+    hp.top_hotspots(3)
+        .into_iter()
+        .map(|(path, _, pct)| format!("{path} {pct:.0}%"))
+        .collect()
+}
+
+/// One measured `backend/policy/obs` cell.
+pub struct Row {
+    pub backend: &'static str,
+    pub policy: &'static str,
+    pub obs: &'static str,
+    pub events: u64,
+    pub sim_ns: u64,
+    pub wall_mean_s: f64,
+    pub wall_min_s: f64,
+    pub hotspots: Vec<String>,
+}
+
+impl Row {
+    /// Events/sec from the fastest iteration (least scheduler noise).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_min_s <= 0.0 {
+            return 0.0;
+        }
+        self.events as f64 / self.wall_min_s
+    }
+
+    /// One schema-v2 result row, `"provenance": "measured"`.
+    pub fn json(&self) -> String {
+        let hotspots: Vec<String> = self.hotspots.iter().map(|h| format!("\"{h}\"")).collect();
+        format!(
+            "{{\"backend\":\"{}\",\"policy\":\"{}\",\"obs\":\"{}\",\"events\":{},\
+             \"sim_ns\":{},\"wall_mean_s\":{:.6},\"wall_min_s\":{:.6},\
+             \"events_per_sec\":{:.0},\"provenance\":\"measured\",\
+             \"host_hotspots\":[{}]}}",
+            self.backend,
+            self.policy,
+            self.obs,
+            self.events,
+            self.sim_ns,
+            self.wall_mean_s,
+            self.wall_min_s,
+            self.events_per_sec(),
+            hotspots.join(",")
+        )
+    }
+}
+
+/// The bench's base testbed: oversubscribed so eviction/refetch paths
+/// run, not just fills; smoke shrinks it to CI size.
+pub fn base_cfg(smoke: bool) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.gpu.sms = if smoke { 8 } else { 28 };
+    cfg.gpu.warps_per_sm = if smoke { 4 } else { 8 };
+    cfg.gpuvm.page_size = 4096;
+    cfg.gpu.mem_bytes = if smoke { 2 << 20 } else { 8 << 20 };
+    cfg
+}
+
+/// Time one configuration through the full `Backend::run` path and
+/// return the measured row. One untimed probe pins the deterministic
+/// outputs (events, sim time); one extra profiled run records where
+/// the host wallclock went.
+pub fn measure(
+    backend_name: &'static str,
+    policy: &'static str,
+    obs: &'static str,
+    cfg: &SystemConfig,
+    app: &str,
+    warmup: u32,
+    iters: u32,
+) -> Row {
+    let spec = WorkloadSpec::parse(app).expect("bench spec");
+    let opts = BuildOpts::for_cfg(cfg);
+    let b = backend::lookup(backend_name).expect("core backend");
+    let probe = b.run(cfg, &spec, &opts).expect("bench run");
+    let t = time(
+        &format!("{backend_name}/{policy}/obs={obs}"),
+        warmup,
+        iters,
+        || {
+            b.run(cfg, &spec, &opts).expect("bench run");
+        },
+    );
+    let hotspots = profile_hotspots(|| {
+        b.run(cfg, &spec, &opts).expect("bench run");
+    });
+    Row {
+        backend: backend_name,
+        policy,
+        obs,
+        events: probe.events,
+        sim_ns: probe.finish_ns,
+        wall_mean_s: t.mean_s,
+        wall_min_s: t.min_s,
+        hotspots,
+    }
+}
+
+/// Measure the complete standard row set: backend × policy throughput,
+/// obs overhead on the paged systems, and analyzer throughput. This is
+/// the canonical cell list every trajectory point carries — the bench
+/// binary and the test-suite bootstrap both call it, so committed
+/// points always share row keys with fresh measurements.
+pub fn standard_rows(smoke: bool, app: &str, warmup: u32, iters: u32) -> Vec<Row> {
+    let mut rows: Vec<Row> = Vec::new();
+
+    // -- 1. throughput across backends × policy axes (obs off) --------
+    for backend_name in BACKENDS {
+        for policy in ["default", "density-lru"] {
+            let mut cfg = base_cfg(smoke);
+            if policy == "density-lru" {
+                cfg.gpuvm.prefetch_policy = PrefetchPolicy::Density;
+                cfg.uvm.prefetch_policy = PrefetchPolicy::Density;
+                cfg.gpuvm.residency_policy = ResidencyPolicyKind::Lru;
+                cfg.uvm.residency_policy = ResidencyPolicyKind::Lru;
+            }
+            rows.push(measure(backend_name, policy, "off", &cfg, app, warmup, iters));
+        }
+    }
+
+    // -- 2. obs overhead on the paged systems --------------------------
+    for backend_name in ["gpuvm", "uvm"] {
+        // Sampler attached, interval pushed past any run's finish time:
+        // every tick pays the `due()` check, (almost) nothing samples.
+        let mut cfg_idle = base_cfg(smoke);
+        cfg_idle.obs.enabled = true;
+        cfg_idle.obs.interval_ns = u64::MAX / 2;
+        rows.push(measure(backend_name, "default", "idle", &cfg_idle, app, warmup, iters));
+
+        let mut cfg_on = base_cfg(smoke);
+        cfg_on.obs.enabled = true;
+        rows.push(measure(backend_name, "default", "on", &cfg_on, app, warmup, iters));
+    }
+
+    // -- 3. analyzer throughput (events/sec linted + race-checked) -----
+    for backend_name in ["gpuvm", "uvm"] {
+        let cfg = base_cfg(smoke);
+        let spec = WorkloadSpec::parse(app).expect("bench spec");
+        let opts = BuildOpts::for_cfg(&cfg);
+        let (t, _) = trace::capture(&cfg, &spec, &opts, backend_name).expect("bench capture");
+        let timed = time(
+            &format!("{backend_name}/analyze/lint+race"),
+            warmup,
+            iters,
+            || {
+                let l = lint_trace(&t).expect("lint");
+                assert!(l.clean(), "bench capture must lint clean");
+                let r = race_check_trace(&t).expect("race check");
+                assert!(r.clean(), "bench capture must race-check clean");
+            },
+        );
+        let hotspots = profile_hotspots(|| {
+            let _ = lint_trace(&t).expect("lint");
+            let _ = race_check_trace(&t).expect("race check");
+        });
+        rows.push(Row {
+            backend: backend_name,
+            policy: "analyze",
+            obs: "lint+race",
+            // "events" here are trace events pushed through both
+            // analyzer passes each iteration, so events_per_sec is
+            // analyzer throughput (sim_ns does not apply).
+            events: t.events.len() as u64,
+            sim_ns: 0,
+            wall_mean_s: timed.mean_s,
+            wall_min_s: timed.min_s,
+            hotspots,
+        });
+    }
+
+    rows
+}
+
+/// Serialize a full trajectory point (schema v2, every row measured).
+pub fn trajectory_json(rows: &[Row], note: &str, smoke: bool, app: &str, iters: u32) -> String {
+    let items: Vec<String> = rows.iter().map(Row::json).collect();
+    format!(
+        "{{\"schema\":\"{SCHEMA_V2}\",\"bench\":\"bench_selfperf\",\
+         \"provenance\":\"{note}\",\
+         \"smoke\":{smoke},\"app\":\"{app}\",\
+         \"iters\":{iters},\"results\":[{}]}}\n",
+        items.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::perfcmp;
+
+    #[test]
+    fn measured_row_round_trips_through_perfcmp() {
+        let cfg = base_cfg(true);
+        let row = measure("ideal", "default", "off", &cfg, "va@64k", 0, 1);
+        assert!(row.events > 0, "probe must report events");
+        assert!(row.events_per_sec() > 0.0);
+        let json = trajectory_json(&[row], "unit-test point", true, "va@64k", 1);
+        let p = perfcmp::parse_str("T", &json).expect("emitted JSON parses");
+        assert_eq!(p.schema_version, 2);
+        assert_eq!(p.rows.len(), 1);
+        assert!(!p.rows[0].estimated, "emitter writes measured provenance");
+        assert!(
+            perfcmp::validate_v2(&p).is_empty(),
+            "{:?}",
+            perfcmp::validate_v2(&p)
+        );
+    }
+}

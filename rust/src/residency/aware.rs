@@ -6,10 +6,15 @@
 //! reclaiming frames from speculation that is not paying off before
 //! touching demand-fetched pages. A speculative fill stops being a
 //! preferred victim the moment a demand access promotes it.
+//!
+//! Fill-sequence numbers and speculative flags live in packed tables
+//! over dense slot indices ([`super::table`]); the "oldest unconsumed
+//! speculative fill first" order is an intrusive doubly-linked list —
+//! the fill sequence is monotone, so insertion order *is* age order,
+//! exactly the order the old `BTreeSet<(fillseq, slot)>` iterated.
 
+use super::table::{ensure, Links, ListHead, SlotIndex, NIL};
 use super::{fifo::FifoEngine, ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
-use crate::util::fxhash::{FxHashMap, FxHashSet};
-use std::collections::BTreeSet;
 
 /// Minimum speculative units issued before the accuracy gate can open
 /// (below this the sample is noise).
@@ -18,33 +23,62 @@ const MIN_ISSUED: u64 = 32;
 /// first.
 const ACCURACY_GATE: f64 = 0.5;
 
+/// One GPU's packed fill table.
+#[derive(Clone)]
+struct Gpu {
+    idx: SlotIndex,
+    present: Vec<bool>,
+    /// Fill sequence number per dense index (valid while present).
+    seq: Vec<u64>,
+    /// Unconsumed-speculative flag per dense index.
+    spec: Vec<bool>,
+    /// Unconsumed speculative fills, oldest first.
+    spec_order: ListHead,
+    spec_links: Links,
+    /// Number of present entries.
+    len: usize,
+}
+
+impl Gpu {
+    fn new(fixed_frames: Option<usize>) -> Self {
+        Self {
+            idx: SlotIndex::new(fixed_frames),
+            present: Vec::new(),
+            seq: Vec::new(),
+            spec: Vec::new(),
+            spec_order: ListHead::default(),
+            spec_links: Links::default(),
+            len: 0,
+        }
+    }
+
+    fn clear_spec(&mut self, i: u32) {
+        if self.spec.get(i as usize) == Some(&true) {
+            self.spec[i as usize] = false;
+            self.spec_links.unlink(&mut self.spec_order, i);
+        }
+    }
+}
+
 #[derive(Clone)]
 pub struct PrefetchAwareEngine {
     fifo: FifoEngine,
+    fixed: bool,
     fillseq: u64,
-    /// Per-GPU slot → fill sequence number.
-    seq: Vec<FxHashMap<Slot, u64>>,
-    /// Per-GPU unconsumed speculative fills, oldest first.
-    spec_byfill: Vec<BTreeSet<(u64, Slot)>>,
-    spec: Vec<FxHashSet<Slot>>,
+    gpus: Vec<Gpu>,
 }
 
 impl PrefetchAwareEngine {
     pub fn new(universe: Universe, num_gpus: usize) -> Self {
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
+        };
         Self {
             fifo: FifoEngine::new(false, universe, num_gpus),
+            fixed: frames.is_some(),
             fillseq: 0,
-            seq: vec![FxHashMap::default(); num_gpus],
-            spec_byfill: vec![BTreeSet::new(); num_gpus],
-            spec: vec![FxHashSet::default(); num_gpus],
-        }
-    }
-
-    fn clear_spec(&mut self, gpu: usize, slot: Slot) {
-        if self.spec[gpu].remove(&slot) {
-            if let Some(&sq) = self.seq[gpu].get(&slot) {
-                self.spec_byfill[gpu].remove(&(sq, slot));
-            }
+            gpus: (0..num_gpus).map(|_| Gpu::new(frames)).collect(),
         }
     }
 }
@@ -56,31 +90,56 @@ impl ResidencyPolicy for PrefetchAwareEngine {
 
     fn on_fill(&mut self, gpu: usize, slot: Slot, block: u64, speculative: bool) {
         self.fifo.on_fill(gpu, slot, block, speculative);
-        self.clear_spec(gpu, slot);
         self.fillseq += 1;
-        self.seq[gpu].insert(slot, self.fillseq);
+        let g = &mut self.gpus[gpu];
+        let i = g.idx.intern(slot);
+        ensure(&mut g.present, i, false);
+        ensure(&mut g.seq, i, 0);
+        ensure(&mut g.spec, i, false);
+        g.clear_spec(i);
+        if !g.present[i as usize] {
+            g.present[i as usize] = true;
+            g.len += 1;
+        }
+        g.seq[i as usize] = self.fillseq;
         if speculative {
-            self.spec[gpu].insert(slot);
-            self.spec_byfill[gpu].insert((self.fillseq, slot));
+            g.spec[i as usize] = true;
+            g.spec_links.push_back(&mut g.spec_order, i);
         }
     }
 
     fn on_touch(&mut self, gpu: usize, slot: Slot) {
-        self.clear_spec(gpu, slot);
+        let g = &mut self.gpus[gpu];
+        if let Some(i) = g.idx.lookup(slot) {
+            g.clear_spec(i);
+        }
     }
 
     fn on_evict(&mut self, gpu: usize, slot: Slot) {
-        self.clear_spec(gpu, slot);
-        self.seq[gpu].remove(&slot);
+        let g = &mut self.gpus[gpu];
+        if let Some(i) = g.idx.lookup(slot) {
+            g.clear_spec(i);
+            if g.present.get(i as usize) == Some(&true) {
+                g.present[i as usize] = false;
+                g.len -= 1;
+                if !self.fixed {
+                    g.idx.release(slot, i);
+                }
+            }
+        }
         self.fifo.on_evict(gpu, slot);
     }
 
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
         if q.prefetch_issued >= MIN_ISSUED && q.prefetch_accuracy < ACCURACY_GATE {
-            for &(_, s) in &self.spec_byfill[q.gpu] {
+            let g = &self.gpus[q.gpu];
+            let mut i = g.spec_order.head;
+            while i != NIL {
+                let s = g.idx.slot_of(i);
                 if (q.usable)(s) {
                     return VictimChoice::Take(s);
                 }
+                i = g.spec_links.next(i);
             }
         }
         self.fifo.pick_victim(q)
@@ -93,18 +152,37 @@ impl ResidencyPolicy for PrefetchAwareEngine {
     fn state_sig(&self, out: &mut Vec<u64>) {
         self.fifo.state_sig(out);
         // Fill sequence numbers reduced to dense ranks; the speculative
-        // flag per slot reconstructs `spec_byfill`.
-        let mut all: Vec<u64> = self.seq.iter().flat_map(|m| m.values().copied()).collect();
+        // flag per slot reconstructs the victim order.
+        let mut all: Vec<u64> = Vec::new();
+        for g in &self.gpus {
+            for (i, &p) in g.present.iter().enumerate() {
+                if p {
+                    all.push(g.seq[i]);
+                }
+            }
+        }
         all.sort_unstable();
         all.dedup();
-        for (gpu, m) in self.seq.iter().enumerate() {
-            let mut entries: Vec<(Slot, u64)> = m.iter().map(|(&s, &v)| (s, v)).collect();
+        for g in &self.gpus {
+            let mut entries: Vec<(Slot, u32)> = if self.fixed {
+                g.present
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &p)| p)
+                    .map(|(i, _)| (i as Slot, i as u32))
+                    .collect()
+            } else {
+                g.idx.dynamic_pairs()
+            };
             entries.sort_unstable();
             out.push(entries.len() as u64);
-            for (slot, v) in entries {
+            for (slot, i) in entries {
                 out.push(slot);
-                out.push(all.binary_search(&v).expect("seq indexed above") as u64);
-                out.push(u64::from(self.spec[gpu].contains(&slot)));
+                out.push(
+                    all.binary_search(&g.seq[i as usize])
+                        .expect("seq indexed above") as u64,
+                );
+                out.push(u64::from(g.spec[i as usize]));
             }
         }
     }
@@ -164,5 +242,21 @@ mod tests {
         assert_eq!(p.pick_victim(&q(true, 100, 0.9, &all)), VictimChoice::Take(0));
         // Too few issued for the gate, even if cold.
         assert_eq!(p.pick_victim(&q(true, 8, 0.0, &all)), VictimChoice::Take(1));
+    }
+
+    #[test]
+    fn refill_of_a_speculative_slot_reorders_its_age() {
+        let mut p = PrefetchAwareEngine::new(Universe::Frames { frames_per_gpu: 4 }, 1);
+        p.on_fill(0, 1, 0, true);
+        p.on_fill(0, 2, 0, true);
+        // Slot 1 is speculatively refilled: it becomes the *youngest*
+        // unconsumed speculation, so slot 2 is now the oldest.
+        p.on_evict(0, 1);
+        p.on_fill(0, 1, 0, true);
+        let all = |_: Slot| true;
+        assert_eq!(
+            p.pick_victim(&q(true, 100, 0.0, &all)),
+            VictimChoice::Take(2)
+        );
     }
 }

@@ -4,33 +4,72 @@
 //! sweeping hand clears a set bit and moves on, taking the first usable
 //! slot whose bit is already clear. Slots the caller reports unusable
 //! are skipped without clearing — a busy frame keeps its second chance.
+//!
+//! The ring stays a plain index vector — the hand is a *vector index*
+//! whose wrap/adjust arithmetic on removal is part of the pinned
+//! decision state — but the old per-slot `FxHashMap` reference bits are
+//! now a packed byte table over dense slot indices ([`super::table`]),
+//! and dynamic-universe removal locates its position through a packed
+//! position array instead of a linear slot scan.
 
+use super::table::{ensure, SlotIndex, NIL};
 use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
-use crate::util::fxhash::FxHashMap;
+
+/// Reference-bit states, chosen to match the `state_sig` encoding.
+const REF_CLEAR: u8 = 0;
+const REF_SET: u8 = 1;
+/// No entry: the slot was never filled (or was evicted).
+const REF_NONE: u8 = 2;
+
+/// One GPU's sweep state.
+#[derive(Clone)]
+struct Gpu {
+    idx: SlotIndex,
+    /// Sweep ring (frame indices, or live slots in fill order).
+    ring: Vec<Slot>,
+    /// Dense index of each ring member (dynamic universe only; a fixed
+    /// ring's slots are their own indices).
+    ridx: Vec<u32>,
+    /// Ring position per dense index (dynamic universe only).
+    pos: Vec<u32>,
+    hand: usize,
+    /// Packed reference bits per dense index.
+    refbit: Vec<u8>,
+}
+
+impl Gpu {
+    fn new(fixed_frames: Option<usize>) -> Self {
+        let mut g = Self {
+            idx: SlotIndex::new(fixed_frames),
+            ring: Vec::new(),
+            ridx: Vec::new(),
+            pos: Vec::new(),
+            hand: 0,
+            refbit: Vec::new(),
+        };
+        if let Some(n) = fixed_frames {
+            g.ring = (0..n as Slot).collect();
+            g.refbit = vec![REF_NONE; n];
+        }
+        g
+    }
+}
 
 #[derive(Clone)]
 pub struct ClockEngine {
     dynamic: bool,
-    /// Per-GPU sweep ring (frame indices, or live slots in fill order).
-    ring: Vec<Vec<Slot>>,
-    hand: Vec<usize>,
-    refbit: Vec<FxHashMap<Slot, bool>>,
+    gpus: Vec<Gpu>,
 }
 
 impl ClockEngine {
     pub fn new(universe: Universe, num_gpus: usize) -> Self {
-        let (dynamic, ring) = match universe {
-            Universe::Frames { frames_per_gpu } => (
-                false,
-                vec![(0..frames_per_gpu as Slot).collect::<Vec<_>>(); num_gpus],
-            ),
-            Universe::Dynamic => (true, vec![Vec::new(); num_gpus]),
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
         };
         Self {
-            dynamic,
-            ring,
-            hand: vec![0; num_gpus],
-            refbit: vec![FxHashMap::default(); num_gpus],
+            dynamic: frames.is_none(),
+            gpus: (0..num_gpus).map(|_| Gpu::new(frames)).collect(),
         }
     }
 }
@@ -41,52 +80,89 @@ impl ResidencyPolicy for ClockEngine {
     }
 
     fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
-        if self.dynamic && !self.refbit[gpu].contains_key(&slot) {
-            self.ring[gpu].push(slot);
-        }
-        self.refbit[gpu].insert(slot, true);
+        let g = &mut self.gpus[gpu];
+        let i = if self.dynamic {
+            match g.idx.lookup(slot) {
+                Some(i) => i,
+                None => {
+                    let i = g.idx.intern(slot);
+                    ensure(&mut g.pos, i, NIL);
+                    g.pos[i as usize] = g.ring.len() as u32;
+                    g.ring.push(slot);
+                    g.ridx.push(i);
+                    i
+                }
+            }
+        } else {
+            slot as u32
+        };
+        ensure(&mut g.refbit, i, REF_NONE);
+        g.refbit[i as usize] = REF_SET;
     }
 
     fn on_touch(&mut self, gpu: usize, slot: Slot) {
-        self.refbit[gpu].insert(slot, true);
+        let g = &mut self.gpus[gpu];
+        let i = if self.dynamic {
+            g.idx.intern(slot)
+        } else {
+            slot as u32
+        };
+        ensure(&mut g.refbit, i, REF_NONE);
+        g.refbit[i as usize] = REF_SET;
     }
 
     fn on_evict(&mut self, gpu: usize, slot: Slot) {
-        self.refbit[gpu].remove(&slot);
+        let g = &mut self.gpus[gpu];
+        let Some(i) = g.idx.lookup(slot) else {
+            return;
+        };
+        if let Some(b) = g.refbit.get_mut(i as usize) {
+            *b = REF_NONE;
+        }
         if self.dynamic {
-            if let Some(pos) = self.ring[gpu].iter().position(|s| *s == slot) {
-                self.ring[gpu].remove(pos);
-                if self.hand[gpu] > pos {
-                    self.hand[gpu] -= 1;
+            let p = g.pos.get(i as usize).copied().unwrap_or(NIL);
+            if p != NIL {
+                let p = p as usize;
+                g.ring.remove(p);
+                g.ridx.remove(p);
+                for k in p..g.ridx.len() {
+                    g.pos[g.ridx[k] as usize] -= 1;
+                }
+                g.pos[i as usize] = NIL;
+                if g.hand > p {
+                    g.hand -= 1;
                 }
             }
+            g.idx.release(slot, i);
         }
     }
 
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
-        let len = self.ring[q.gpu].len();
+        let g = &mut self.gpus[q.gpu];
+        let len = g.ring.len();
         if len == 0 {
             return VictimChoice::GiveUp;
         }
         // Two sweeps suffice: the first clears reference bits, the
         // second takes the first usable slot left clear.
         for _ in 0..(2 * len) {
-            let h = self.hand[q.gpu] % len;
-            let s = self.ring[q.gpu][h];
+            let h = g.hand % len;
+            let s = g.ring[h];
             if !(q.usable)(s) {
-                self.hand[q.gpu] = (h + 1) % len;
+                g.hand = (h + 1) % len;
                 continue;
             }
-            let referenced = self.refbit[q.gpu].get(&s).copied().unwrap_or(false);
-            self.hand[q.gpu] = (h + 1) % len;
+            let i = if self.dynamic { g.ridx[h] } else { s as u32 } as usize;
+            let referenced = g.refbit.get(i) == Some(&REF_SET);
+            g.hand = (h + 1) % len;
             if referenced {
-                self.refbit[q.gpu].insert(s, false);
+                g.refbit[i] = REF_CLEAR;
             } else {
                 return VictimChoice::Take(s);
             }
         }
         if q.demand {
-            VictimChoice::WaitOn(self.ring[q.gpu][self.hand[q.gpu] % len])
+            VictimChoice::WaitOn(g.ring[g.hand % len])
         } else {
             VictimChoice::GiveUp
         }
@@ -98,21 +174,18 @@ impl ResidencyPolicy for ClockEngine {
 
     fn state_sig(&self, out: &mut Vec<u64>) {
         out.push(u64::from(self.dynamic));
-        for (gpu, ring) in self.ring.iter().enumerate() {
-            out.push(ring.len() as u64);
-            out.push(if ring.is_empty() {
+        for g in &self.gpus {
+            out.push(g.ring.len() as u64);
+            out.push(if g.ring.is_empty() {
                 0
             } else {
-                (self.hand[gpu] % ring.len()) as u64
+                (g.hand % g.ring.len()) as u64
             });
-            for &s in ring {
+            for (h, &s) in g.ring.iter().enumerate() {
                 out.push(s);
+                let i = if self.dynamic { g.ridx[h] } else { s as u32 } as usize;
                 // 0 = bit clear, 1 = bit set, 2 = no entry (never filled).
-                out.push(match self.refbit[gpu].get(&s) {
-                    Some(true) => 1,
-                    Some(false) => 0,
-                    None => 2,
-                });
+                out.push(u64::from(g.refbit.get(i).copied().unwrap_or(REF_NONE)));
             }
         }
     }
@@ -159,5 +232,24 @@ mod tests {
             p.pick_victim(&query(0, false, &none)),
             VictimChoice::GiveUp
         );
+    }
+
+    #[test]
+    fn dynamic_removal_adjusts_the_hand_and_positions() {
+        let mut p = ClockEngine::new(Universe::Dynamic, 1);
+        for s in [10u64, 11, 12, 13] {
+            p.on_fill(0, s, 0, false);
+        }
+        let all = |_: Slot| true;
+        // Sweep clears 10..13, then takes 10; hand now at ring pos 1.
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(10));
+        p.on_evict(0, 10);
+        // Removing pos 0 shifts everyone left; hand drops back to 11.
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(11));
+        p.on_evict(0, 11);
+        p.on_evict(0, 13);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(12));
+        p.on_evict(0, 12);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::GiveUp);
     }
 }

@@ -19,10 +19,22 @@
 //! default 4-page × 3-frame × 2-warp scope the checker emits the wait
 //! cycle and a 7-step minimal repro schedule. Reference priority
 //! (`fifo-refcount`, paper §5.4) breaks exactly this cycle by skipping
-//! referenced frames, and is certified deadlock-free at that scope —
-//! the certification is scope-bounded, not a universal liveness proof
-//! (with more warps than frames any pin-everything policy can still
-//! wedge; see `gpuvm analyze policies --warps 3`). The
+//! referenced frames, and is certified deadlock-free at that scope.
+//!
+//! ## Scope-bounded, not universal: `fifo-refcount` at 5p/3f/3w
+//!
+//! The certification is scope-bounded, not a universal liveness proof.
+//! With more warps than frames any pin-everything policy can still
+//! wedge, and the checker *finds* that wedge for reference priority at
+//! the larger 5-page × 3-frame × 3-warp scope: three warps each pin one
+//! of the three frames and fault on a fourth page — every frame is
+//! referenced, the fruitless sweep queues each faulting warp behind a
+//! head pinned by one of the waiters, and the wait graph closes into a
+//! cycle no amount of skipping can break. Reproduce it with `gpuvm
+//! analyze policies --policy fifo-refcount --pages 5 --warps 3`; the
+//! CLI's certification gate therefore applies only at the default
+//! scope and seed with no `--policy` filter (see
+//! [`crate::analyze::explore::CheckResult::expected`]). The
 //! `fig_eviction_ablation` bench reports the same hazard dynamically:
 //! its DEADLOCK rows are this finding reproduced at full scale.
 

@@ -5,46 +5,101 @@
 //! the caller reports unusable. In a frames universe never-filled
 //! frames carry stamp 0 and are handed out first, in index order, so
 //! the engine fills the buffer before it evicts.
+//!
+//! Internally this is a packed frame table ([`super::table`]): stamps
+//! live in a dense array, recency is an intrusive doubly-linked list
+//! (restamping is an O(1) unlink + tail append — the shared clock is
+//! monotone, so the tail *is* the most recent), and the stamp-0 free
+//! group is a bitmap iterated in index order. Ordering is bit-for-bit
+//! what the old per-GPU `BTreeSet<(stamp, slot)>` produced: free slots
+//! ascending, then live slots in stamp order.
 
+use super::table::{ensure, Links, ListHead, SlotBitSet, SlotIndex, NIL};
 use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
-use crate::util::fxhash::FxHashMap;
-use std::collections::BTreeSet;
+
+/// One GPU's packed recency table.
+#[derive(Clone)]
+struct Gpu {
+    idx: SlotIndex,
+    /// Dense stamp per index (valid while `present`).
+    stamp: Vec<u64>,
+    present: Vec<bool>,
+    /// Stamp-0 free frames (fixed universe), iterated in index order.
+    zero: SlotBitSet,
+    /// Live (stamp > 0) slots in ascending-stamp order, LRU at head.
+    order: ListHead,
+    links: Links,
+    /// Tracked entries (`zero` members + `order` members).
+    len: usize,
+}
+
+impl Gpu {
+    fn new(fixed_frames: Option<usize>) -> Self {
+        let mut g = Self {
+            idx: SlotIndex::new(fixed_frames),
+            stamp: Vec::new(),
+            present: Vec::new(),
+            zero: SlotBitSet::default(),
+            order: ListHead::default(),
+            links: Links::default(),
+            len: 0,
+        };
+        if let Some(n) = fixed_frames {
+            g.stamp = vec![0; n];
+            g.present = vec![true; n];
+            for f in 0..n as u32 {
+                g.zero.set(f);
+            }
+            g.len = n;
+        }
+        g
+    }
+
+    /// Detach a present index from whichever order group holds it.
+    #[inline]
+    fn detach(&mut self, i: u32) {
+        if self.stamp[i as usize] == 0 {
+            self.zero.clear(i);
+        } else {
+            self.links.unlink(&mut self.order, i);
+        }
+    }
+}
 
 #[derive(Clone)]
 pub struct LruEngine {
     fixed: bool,
     clock: u64,
-    /// Per-GPU slot → stamp.
-    stamp: Vec<FxHashMap<Slot, u64>>,
-    /// Per-GPU (stamp, slot), ascending = LRU first.
-    order: Vec<BTreeSet<(u64, Slot)>>,
+    gpus: Vec<Gpu>,
 }
 
 impl LruEngine {
     pub fn new(universe: Universe, num_gpus: usize) -> Self {
-        let mut e = Self {
-            fixed: matches!(universe, Universe::Frames { .. }),
-            clock: 0,
-            stamp: vec![FxHashMap::default(); num_gpus],
-            order: vec![BTreeSet::new(); num_gpus],
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
         };
-        if let Universe::Frames { frames_per_gpu } = universe {
-            for gpu in 0..num_gpus {
-                for f in 0..frames_per_gpu as Slot {
-                    e.stamp[gpu].insert(f, 0);
-                    e.order[gpu].insert((0, f));
-                }
-            }
+        Self {
+            fixed: frames.is_some(),
+            clock: 0,
+            gpus: (0..num_gpus).map(|_| Gpu::new(frames)).collect(),
         }
-        e
     }
 
     fn restamp(&mut self, gpu: usize, slot: Slot) {
         self.clock += 1;
-        if let Some(old) = self.stamp[gpu].insert(slot, self.clock) {
-            self.order[gpu].remove(&(old, slot));
+        let g = &mut self.gpus[gpu];
+        let i = g.idx.intern(slot);
+        ensure(&mut g.stamp, i, 0);
+        ensure(&mut g.present, i, false);
+        if g.present[i as usize] {
+            g.detach(i);
+        } else {
+            g.present[i as usize] = true;
+            g.len += 1;
         }
-        self.order[gpu].insert((self.clock, slot));
+        g.stamp[i as usize] = self.clock;
+        g.links.push_back(&mut g.order, i);
     }
 }
 
@@ -62,25 +117,48 @@ impl ResidencyPolicy for LruEngine {
     }
 
     fn on_evict(&mut self, gpu: usize, slot: Slot) {
-        if let Some(old) = self.stamp[gpu].remove(&slot) {
-            self.order[gpu].remove(&(old, slot));
+        let g = &mut self.gpus[gpu];
+        let Some(i) = g.idx.lookup(slot) else {
+            return;
+        };
+        if g.present.get(i as usize) != Some(&true) {
+            return;
         }
+        g.detach(i);
         if self.fixed {
             // The frame is free again: oldest possible, reused first.
-            self.stamp[gpu].insert(slot, 0);
-            self.order[gpu].insert((0, slot));
+            g.stamp[i as usize] = 0;
+            g.zero.set(i);
+        } else {
+            g.present[i as usize] = false;
+            g.len -= 1;
+            g.idx.release(slot, i);
         }
     }
 
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
-        for &(_, s) in &self.order[q.gpu] {
+        let g = &self.gpus[q.gpu];
+        for i in g.zero.iter_ones() {
+            let s = g.idx.slot_of(i);
             if (q.usable)(s) {
                 return VictimChoice::Take(s);
             }
         }
+        let mut i = g.order.head;
+        while i != NIL {
+            let s = g.idx.slot_of(i);
+            if (q.usable)(s) {
+                return VictimChoice::Take(s);
+            }
+            i = g.links.next(i);
+        }
         if q.demand {
-            match self.order[q.gpu].iter().next() {
-                Some(&(_, s)) => VictimChoice::WaitOn(s),
+            let first = g
+                .zero
+                .first()
+                .or_else(|| (!g.order.is_empty()).then_some(g.order.head));
+            match first {
+                Some(i) => VictimChoice::WaitOn(g.idx.slot_of(i)),
                 None => VictimChoice::GiveUp,
             }
         } else {
@@ -95,19 +173,32 @@ impl ResidencyPolicy for LruEngine {
     fn state_sig(&self, out: &mut Vec<u64>) {
         // Stamps reduced to dense ranks: only their relative order
         // drives future picks, so rank-equal states merge.
-        let mut all: Vec<u64> = self
-            .order
-            .iter()
-            .flat_map(|o| o.iter().map(|&(s, _)| s))
-            .collect();
+        let mut all: Vec<u64> = Vec::new();
+        for g in &self.gpus {
+            all.extend(g.zero.iter_ones().map(|_| 0));
+            let mut i = g.order.head;
+            while i != NIL {
+                all.push(g.stamp[i as usize]);
+                i = g.links.next(i);
+            }
+        }
         all.sort_unstable();
         all.dedup();
         out.push(u64::from(self.fixed));
-        for o in &self.order {
-            out.push(o.len() as u64);
-            for &(s, slot) in o {
-                out.push(all.binary_search(&s).expect("stamp indexed above") as u64);
-                out.push(slot);
+        for g in &self.gpus {
+            out.push(g.len as u64);
+            for i in g.zero.iter_ones() {
+                out.push(all.binary_search(&0).expect("stamp indexed above") as u64);
+                out.push(g.idx.slot_of(i));
+            }
+            let mut i = g.order.head;
+            while i != NIL {
+                out.push(
+                    all.binary_search(&g.stamp[i as usize])
+                        .expect("stamp indexed above") as u64,
+                );
+                out.push(g.idx.slot_of(i));
+                i = g.links.next(i);
             }
         }
     }
@@ -146,5 +237,20 @@ mod tests {
         p.on_evict(0, 2);
         let all = |_: Slot| true;
         assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(2));
+    }
+
+    #[test]
+    fn dynamic_eviction_recycles_dense_indices() {
+        let mut p = LruEngine::new(Universe::Dynamic, 1);
+        p.on_fill(0, 10, 0, false);
+        p.on_fill(0, 20, 0, false);
+        p.on_evict(0, 10);
+        p.on_fill(0, 30, 0, false); // reuses slot 10's dense index
+        let all = |_: Slot| true;
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(20));
+        p.on_evict(0, 20);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(30));
+        p.on_evict(0, 30);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::GiveUp);
     }
 }

@@ -43,13 +43,26 @@
 //! deduplicate policy states while exhaustively exploring fault
 //! interleavings. That checker certifies `fifo-strict`'s deadlock (see
 //! `residency/fifo.rs`) and the other six policies' deadlock-freedom at
-//! small scope — run `gpuvm analyze policies`.
+//! the *default* small scope — run `gpuvm analyze policies`. The
+//! certificates are scope-bounded, not universal: at the larger
+//! 5-page/3-frame/3-warp scope the checker finds a deadlock in
+//! `fifo-refcount` too (`gpuvm analyze policies --policy fifo-refcount
+//! --pages 5 --warps 3`), so the CLI's certification gate applies only
+//! at the default scope and seed with no `--policy` filter.
+//!
+//! All per-slot bookkeeping inside the engines runs on packed frame
+//! tables over dense slot indices (`residency/table.rs`): intrusive
+//! doubly-linked lists for recency/age orders, bitmaps for free-frame
+//! groups, and flat arrays for stamps and flags — bit-for-bit
+//! equivalent to the `BTreeSet`/`FxHashMap` bookkeeping they replaced
+//! (see `rust/tests/residency_packed.rs` for the equivalence proofs).
 
 pub mod aware;
 pub mod clock;
 pub mod fifo;
 pub mod lru;
 pub mod random;
+mod table;
 pub mod tree;
 
 use anyhow::Result;
@@ -134,7 +147,7 @@ impl ResidencyPolicyKind {
     /// One-line description for `gpuvm list`.
     pub fn describe(self) -> &'static str {
         match self {
-            Self::FifoRefcount => "FIFO skipping referenced frames (paper §5.4; GPUVM default)",
+            Self::FifoRefcount => "FIFO skipping referenced frames (paper §5.4; GPUVM default; deadlock-free at default model scope only — deadlocks at 5p/3f/3w, see `gpuvm analyze policies --policy fifo-refcount --pages 5 --warps 3`)",
             Self::FifoStrict => "strict FIFO: take the head and wait for its references to drain (certified deadlock — `gpuvm analyze policies`)",
             Self::Random => "random victim choice (bounded probes)",
             Self::Lru => "exact least-recently-used over demand touches",

@@ -5,23 +5,39 @@
 //! probes per demand fault, one extra draw for the wait target, and no
 //! extra draw on a fruitless speculative pass — provided the caller
 //! seeds it with the historical `cfg.seed ^ 0x6b75_766d` derivation.
+//!
+//! A frames universe needs no bookkeeping at all (probes draw frame
+//! indices directly). The dynamic universe keeps its live slots in a
+//! swap-removal vector whose positions are tracked through a packed
+//! table ([`super::table`]) — one interning probe per event, no
+//! per-slot hash-map entries.
 
+use super::table::{ensure, SlotIndex, NIL};
 use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
-use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Rng;
 
 /// Probes per victim query before falling back to a wait (the
 /// pre-subsystem constant).
 const PROBES: usize = 8;
 
+/// One GPU's live-slot table (dynamic universe only).
+#[derive(Clone, Default)]
+struct Gpu {
+    /// Live slots in fill order; probes index into this, so its exact
+    /// order (swap-removal included) is pinned decision state.
+    live: Vec<Slot>,
+    /// Dense index of each `live` member, parallel to it.
+    lidx: Vec<u32>,
+    /// Position in `live` per dense index.
+    pos: Vec<u32>,
+}
+
 #[derive(Clone)]
 pub struct RandomEngine {
     frames: Option<usize>,
     rng: Rng,
-    /// Per-GPU live slots (dynamic universe), with an index map for
-    /// O(1) swap-removal.
-    live: Vec<Vec<Slot>>,
-    pos: Vec<FxHashMap<Slot, usize>>,
+    idx: Vec<SlotIndex>,
+    gpus: Vec<Gpu>,
 }
 
 impl RandomEngine {
@@ -33,8 +49,8 @@ impl RandomEngine {
         Self {
             frames,
             rng: Rng::new(seed),
-            live: vec![Vec::new(); num_gpus],
-            pos: vec![FxHashMap::default(); num_gpus],
+            idx: (0..num_gpus).map(|_| SlotIndex::new(None)).collect(),
+            gpus: (0..num_gpus).map(|_| Gpu::default()).collect(),
         }
     }
 }
@@ -45,21 +61,32 @@ impl ResidencyPolicy for RandomEngine {
     }
 
     fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
-        if self.frames.is_none() && !self.pos[gpu].contains_key(&slot) {
-            self.pos[gpu].insert(slot, self.live[gpu].len());
-            self.live[gpu].push(slot);
+        if self.frames.is_none() && self.idx[gpu].lookup(slot).is_none() {
+            let i = self.idx[gpu].intern(slot);
+            let g = &mut self.gpus[gpu];
+            ensure(&mut g.pos, i, NIL);
+            g.pos[i as usize] = g.live.len() as u32;
+            g.live.push(slot);
+            g.lidx.push(i);
         }
     }
 
     fn on_evict(&mut self, gpu: usize, slot: Slot) {
         if self.frames.is_none() {
-            if let Some(i) = self.pos[gpu].remove(&slot) {
-                let last = self.live[gpu].pop().expect("pos entries track live slots");
-                if last != slot {
-                    self.live[gpu][i] = last;
-                    self.pos[gpu].insert(last, i);
-                }
+            let Some(i) = self.idx[gpu].lookup(slot) else {
+                return;
+            };
+            let g = &mut self.gpus[gpu];
+            let p = g.pos[i as usize] as usize;
+            let last_slot = g.live.pop().expect("pos entries track live slots");
+            let last_idx = g.lidx.pop().expect("lidx parallels live");
+            if last_slot != slot {
+                g.live[p] = last_slot;
+                g.lidx[p] = last_idx;
+                g.pos[last_idx as usize] = p as u32;
             }
+            g.pos[i as usize] = NIL;
+            self.idx[gpu].release(slot, i);
         }
     }
 
@@ -80,7 +107,7 @@ impl ResidencyPolicy for RandomEngine {
                 }
             }
             None => {
-                let live = &self.live[q.gpu];
+                let live = &self.gpus[q.gpu].live;
                 if live.is_empty() {
                     return VictimChoice::GiveUp;
                 }
@@ -109,9 +136,9 @@ impl ResidencyPolicy for RandomEngine {
         // the identical probe stream. Live-slot order matters (probes
         // index into it), so it is emitted as-is.
         out.extend(self.rng.state_words());
-        for live in &self.live {
-            out.push(live.len() as u64);
-            out.extend(live.iter().copied());
+        for g in &self.gpus {
+            out.push(g.live.len() as u64);
+            out.extend(g.live.iter().copied());
         }
     }
 }
@@ -150,5 +177,21 @@ mod tests {
         }
         p.on_evict(0, 41);
         assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::GiveUp);
+    }
+
+    #[test]
+    fn swap_removal_keeps_positions_consistent() {
+        let mut p = RandomEngine::new(Universe::Dynamic, 1, 3);
+        for s in [7u64, 8, 9, 10] {
+            p.on_fill(0, s, 0, false);
+        }
+        // Remove the head: 10 swaps into position 0 → [10, 8, 9].
+        p.on_evict(0, 7);
+        // Remove 10 (now at position 0): 9 swaps in → [9, 8].
+        p.on_evict(0, 10);
+        let mut sig = Vec::new();
+        p.state_sig(&mut sig);
+        // rng words (4) + per-gpu len + live contents in order.
+        assert_eq!(&sig[4..], &[2, 9, 8]);
     }
 }

@@ -1,0 +1,336 @@
+//! Packed frame-table primitives shared by the residency engines.
+//!
+//! The first-generation engines tracked per-slot state in
+//! `BTreeSet`/`FxHashMap` structures — clean, but every fill/touch on
+//! the simulator's hot path paid tree rebalancing and hashing. The
+//! packed replacements keep per-slot attributes in dense parallel
+//! arrays addressed by a small integer index, and thread ordering
+//! through intrusive doubly-linked lists over those indices:
+//!
+//! - [`SlotIndex`] maps a policy [`Slot`] to its dense index: the
+//!   identity in a frames universe (frame numbers already *are* dense
+//!   indices, so no map exists at all), an interning table with index
+//!   recycling in a dynamic one (one hash probe per event, instead of
+//!   one per ordered-set operation).
+//! - [`Links`] + [`ListHead`] form an intrusive doubly-linked list
+//!   ([`NIL`]-terminated) whose nodes are the dense indices themselves
+//!   — O(1) unlink/append, no per-node allocation.
+//! - [`SlotBitSet`] is a word-packed bitmap with ascending iteration,
+//!   for the "free frames are reused in index order" groups a fixed
+//!   universe maintains.
+//!
+//! Everything here is observationally inert: the engines built on top
+//! are pinned bit-for-bit (victim sequences *and* `state_sig` words)
+//! against the pre-packed implementations by the reference models in
+//! `rust/tests/residency_packed.rs`.
+
+use super::Slot;
+use crate::util::fxhash::FxHashMap;
+
+/// Null link / absent-index sentinel.
+pub(crate) const NIL: u32 = u32::MAX;
+
+/// Grow `v` (with `fill`) until `idx` is addressable.
+pub(crate) fn ensure<T: Clone>(v: &mut Vec<T>, idx: u32, fill: T) {
+    if v.len() <= idx as usize {
+        v.resize(idx as usize + 1, fill);
+    }
+}
+
+/// Slot → dense-index addressing for one GPU's table.
+#[derive(Clone)]
+pub(crate) enum SlotIndex {
+    /// Frames universe: slots are `0..n`, the index is the slot.
+    Fixed(u32),
+    /// Dynamic universe: arbitrary `u64` slots, interned densely.
+    Dynamic(Interner),
+}
+
+impl SlotIndex {
+    pub(crate) fn new(fixed_frames: Option<usize>) -> Self {
+        match fixed_frames {
+            Some(n) => Self::Fixed(n as u32),
+            None => Self::Dynamic(Interner::default()),
+        }
+    }
+
+    /// Dense index of `slot`, if it is addressable/known.
+    #[inline]
+    pub(crate) fn lookup(&self, slot: Slot) -> Option<u32> {
+        match self {
+            Self::Fixed(n) => (slot < u64::from(*n)).then_some(slot as u32),
+            Self::Dynamic(t) => t.map.get(&slot).copied(),
+        }
+    }
+
+    /// Dense index of `slot`, allocating one in a dynamic universe.
+    #[inline]
+    pub(crate) fn intern(&mut self, slot: Slot) -> u32 {
+        match self {
+            Self::Fixed(n) => {
+                debug_assert!(slot < u64::from(*n), "slot {slot} outside fixed universe");
+                slot as u32
+            }
+            Self::Dynamic(t) => {
+                if let Some(&i) = t.map.get(&slot) {
+                    return i;
+                }
+                let i = t.free.pop().unwrap_or_else(|| {
+                    t.slot_of.push(0);
+                    (t.slot_of.len() - 1) as u32
+                });
+                t.slot_of[i as usize] = slot;
+                t.map.insert(slot, i);
+                i
+            }
+        }
+    }
+
+    /// Return `idx` to the free pool (dynamic universes only; a fixed
+    /// universe's identity mapping never retires indices).
+    #[inline]
+    pub(crate) fn release(&mut self, slot: Slot, idx: u32) {
+        if let Self::Dynamic(t) = self {
+            t.map.remove(&slot);
+            t.free.push(idx);
+        }
+    }
+
+    /// The slot a dense index addresses (valid only while live).
+    #[inline]
+    pub(crate) fn slot_of(&self, idx: u32) -> Slot {
+        match self {
+            Self::Fixed(_) => u64::from(idx),
+            Self::Dynamic(t) => t.slot_of[idx as usize],
+        }
+    }
+
+    /// Live `(slot, idx)` pairs of a dynamic table, unordered (cold
+    /// paths — `state_sig` — sort as they need).
+    pub(crate) fn dynamic_pairs(&self) -> Vec<(Slot, u32)> {
+        match self {
+            Self::Fixed(_) => Vec::new(),
+            Self::Dynamic(t) => t.map.iter().map(|(&s, &i)| (s, i)).collect(),
+        }
+    }
+}
+
+/// Interning table backing [`SlotIndex::Dynamic`].
+#[derive(Clone, Default)]
+pub(crate) struct Interner {
+    map: FxHashMap<Slot, u32>,
+    slot_of: Vec<Slot>,
+    free: Vec<u32>,
+}
+
+/// Head/tail of one intrusive list (links live in a [`Links`] arena).
+#[derive(Clone, Copy)]
+pub(crate) struct ListHead {
+    pub(crate) head: u32,
+    pub(crate) tail: u32,
+}
+
+impl Default for ListHead {
+    fn default() -> Self {
+        Self {
+            head: NIL,
+            tail: NIL,
+        }
+    }
+}
+
+impl ListHead {
+    #[inline]
+    pub(crate) fn is_empty(&self) -> bool {
+        self.head == NIL
+    }
+}
+
+/// Link arena for intrusive doubly-linked lists over dense indices. A
+/// node may belong to at most one list per arena; engines needing two
+/// orders per slot (global + per-block) keep two arenas.
+#[derive(Clone, Default)]
+pub(crate) struct Links {
+    next: Vec<u32>,
+    prev: Vec<u32>,
+}
+
+impl Links {
+    #[inline]
+    pub(crate) fn next(&self, idx: u32) -> u32 {
+        self.next[idx as usize]
+    }
+
+    /// Append `idx` at the tail of `list`.
+    #[inline]
+    pub(crate) fn push_back(&mut self, list: &mut ListHead, idx: u32) {
+        ensure(&mut self.next, idx, NIL);
+        ensure(&mut self.prev, idx, NIL);
+        self.next[idx as usize] = NIL;
+        self.prev[idx as usize] = list.tail;
+        if list.tail == NIL {
+            list.head = idx;
+        } else {
+            self.next[list.tail as usize] = idx;
+        }
+        list.tail = idx;
+    }
+
+    /// Unlink `idx` from `list` (must currently be a member).
+    #[inline]
+    pub(crate) fn unlink(&mut self, list: &mut ListHead, idx: u32) {
+        let (p, n) = (self.prev[idx as usize], self.next[idx as usize]);
+        if p == NIL {
+            list.head = n;
+        } else {
+            self.next[p as usize] = n;
+        }
+        if n == NIL {
+            list.tail = p;
+        } else {
+            self.prev[n as usize] = p;
+        }
+        self.next[idx as usize] = NIL;
+        self.prev[idx as usize] = NIL;
+    }
+}
+
+/// Word-packed index bitmap with ascending-order iteration.
+#[derive(Clone, Default)]
+pub(crate) struct SlotBitSet {
+    words: Vec<u64>,
+}
+
+impl SlotBitSet {
+    #[inline]
+    pub(crate) fn set(&mut self, idx: u32) {
+        let w = (idx / 64) as usize;
+        if self.words.len() <= w {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (idx % 64);
+    }
+
+    #[inline]
+    pub(crate) fn clear(&mut self, idx: u32) {
+        let w = (idx / 64) as usize;
+        if let Some(word) = self.words.get_mut(w) {
+            *word &= !(1u64 << (idx % 64));
+        }
+    }
+
+    /// Lowest set index, if any.
+    #[inline]
+    pub(crate) fn first(&self) -> Option<u32> {
+        for (w, &word) in self.words.iter().enumerate() {
+            if word != 0 {
+                return Some((w * 64) as u32 + word.trailing_zeros());
+            }
+        }
+        None
+    }
+
+    /// Set indices in ascending order.
+    pub(crate) fn iter_ones(&self) -> Ones<'_> {
+        Ones {
+            words: &self.words,
+            word_i: 0,
+            cur: self.words.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Iterator over a [`SlotBitSet`]'s set indices, ascending.
+pub(crate) struct Ones<'a> {
+    words: &'a [u64],
+    word_i: usize,
+    cur: u64,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        loop {
+            if self.cur != 0 {
+                let bit = self.cur.trailing_zeros();
+                self.cur &= self.cur - 1;
+                return Some((self.word_i * 64) as u32 + bit);
+            }
+            self.word_i += 1;
+            self.cur = *self.words.get(self.word_i)?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interner_recycles_indices() {
+        let mut t = SlotIndex::new(None);
+        let a = t.intern(100);
+        let b = t.intern(200);
+        assert_ne!(a, b);
+        assert_eq!(t.intern(100), a);
+        assert_eq!(t.lookup(200), Some(b));
+        t.release(100, a);
+        assert_eq!(t.lookup(100), None);
+        // The freed dense index is reused for the next new slot.
+        assert_eq!(t.intern(300), a);
+        assert_eq!(t.slot_of(a), 300);
+    }
+
+    #[test]
+    fn fixed_index_is_identity() {
+        let mut t = SlotIndex::new(Some(4));
+        assert_eq!(t.lookup(3), Some(3));
+        assert_eq!(t.lookup(4), None);
+        assert_eq!(t.intern(2), 2);
+        assert_eq!(t.slot_of(1), 1);
+    }
+
+    #[test]
+    fn list_push_unlink_orders() {
+        let mut links = Links::default();
+        let mut l = ListHead::default();
+        for i in [3u32, 1, 4, 1 + 4] {
+            links.push_back(&mut l, i);
+        }
+        let walk = |links: &Links, l: &ListHead| {
+            let mut out = Vec::new();
+            let mut i = l.head;
+            while i != NIL {
+                out.push(i);
+                i = links.next(i);
+            }
+            out
+        };
+        assert_eq!(walk(&links, &l), vec![3, 1, 4, 5]);
+        links.unlink(&mut l, 4);
+        assert_eq!(walk(&links, &l), vec![3, 1, 5]);
+        links.unlink(&mut l, 3);
+        links.unlink(&mut l, 5);
+        assert_eq!(walk(&links, &l), vec![1]);
+        links.unlink(&mut l, 1);
+        assert!(l.is_empty());
+        links.push_back(&mut l, 2);
+        assert_eq!(walk(&links, &l), vec![2]);
+    }
+
+    #[test]
+    fn bitset_iterates_ascending_across_words() {
+        let mut b = SlotBitSet::default();
+        for i in [0u32, 5, 63, 64, 130] {
+            b.set(i);
+        }
+        b.clear(63);
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![0, 5, 64, 130]);
+        assert_eq!(b.first(), Some(0));
+        b.clear(0);
+        b.clear(5);
+        assert_eq!(b.first(), Some(64));
+    }
+}

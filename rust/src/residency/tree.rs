@@ -12,71 +12,145 @@
 //! `WaitOn(seed)` rather than hunting elsewhere: the driver serializes
 //! on its chosen block, it does not shop around — precisely the
 //! behaviour the paper's GPU-side reference priority avoids.
+//!
+//! Internally this is a packed frame table ([`super::table`]): each
+//! live slot sits on *two* intrusive lists — the global recency order
+//! and its block's recency order — so a restamp is two O(1) unlinks
+//! plus two tail appends (the shared clock is monotone). Free frames
+//! (fixed universe) live in an index-ordered bitmap. The orders are
+//! bit-for-bit those of the old `BTreeSet<(stamp, slot)>` /
+//! `BTreeSet<(block, stamp, slot)>` pair.
 
+use super::table::{ensure, Links, ListHead, SlotBitSet, SlotIndex, NIL};
 use super::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
 use crate::util::fxhash::FxHashMap;
-use std::collections::BTreeSet;
 
 /// Block hint for never-filled (free) frames in a fixed universe.
 const NO_BLOCK: u64 = u64::MAX;
+
+/// One GPU's packed two-order recency table.
+#[derive(Clone)]
+struct Gpu {
+    idx: SlotIndex,
+    present: Vec<bool>,
+    /// Dense stamp per index (valid while present).
+    stamp: Vec<u64>,
+    /// Raw VA-block hint per index (valid while present).
+    block_raw: Vec<u64>,
+    /// Interned block index per slot index (`NIL` for stamp-0 frames).
+    bidx: Vec<u32>,
+    /// Stamp-0 free frames (fixed universe, always `NO_BLOCK`).
+    zero: SlotBitSet,
+    /// Global recency order over live (stamp > 0) slots, LRU at head.
+    global: ListHead,
+    glinks: Links,
+    /// Block id → index into `block_heads`.
+    blocks: FxHashMap<u64, u32>,
+    /// Per-block recency order, LRU at head.
+    block_heads: Vec<ListHead>,
+    blinks: Links,
+    /// Tracked entries (`zero` members + `global` members).
+    len: usize,
+}
+
+impl Gpu {
+    fn new(fixed_frames: Option<usize>) -> Self {
+        let mut g = Self {
+            idx: SlotIndex::new(fixed_frames),
+            present: Vec::new(),
+            stamp: Vec::new(),
+            block_raw: Vec::new(),
+            bidx: Vec::new(),
+            zero: SlotBitSet::default(),
+            global: ListHead::default(),
+            glinks: Links::default(),
+            blocks: FxHashMap::default(),
+            block_heads: Vec::new(),
+            blinks: Links::default(),
+            len: 0,
+        };
+        if let Some(n) = fixed_frames {
+            g.present = vec![true; n];
+            g.stamp = vec![0; n];
+            g.block_raw = vec![NO_BLOCK; n];
+            g.bidx = vec![NIL; n];
+            for f in 0..n as u32 {
+                g.zero.set(f);
+            }
+            g.len = n;
+        }
+        g
+    }
+
+    fn block_index(&mut self, block: u64) -> u32 {
+        if let Some(&b) = self.blocks.get(&block) {
+            return b;
+        }
+        let b = self.block_heads.len() as u32;
+        self.block_heads.push(ListHead::default());
+        self.blocks.insert(block, b);
+        b
+    }
+
+    /// Detach a present index from both orders.
+    #[inline]
+    fn detach(&mut self, i: u32) {
+        if self.stamp[i as usize] == 0 {
+            self.zero.clear(i);
+        } else {
+            self.glinks.unlink(&mut self.global, i);
+            let b = self.bidx[i as usize] as usize;
+            self.blinks.unlink(&mut self.block_heads[b], i);
+        }
+    }
+}
 
 #[derive(Clone)]
 pub struct TreeLruEngine {
     fixed: bool,
     clock: u64,
-    /// Per-GPU slot → stamp.
-    stamp: Vec<FxHashMap<Slot, u64>>,
-    /// Per-GPU (stamp, slot): global LRU order.
-    order: Vec<BTreeSet<(u64, Slot)>>,
-    /// Per-GPU slot → VA-block hint.
-    block_of: Vec<FxHashMap<Slot, u64>>,
-    /// Per-GPU (block, stamp, slot): LRU order within each block.
-    blocks: Vec<BTreeSet<(u64, u64, Slot)>>,
+    gpus: Vec<Gpu>,
 }
 
 impl TreeLruEngine {
     pub fn new(universe: Universe, num_gpus: usize) -> Self {
-        let mut e = Self {
-            fixed: matches!(universe, Universe::Frames { .. }),
-            clock: 0,
-            stamp: vec![FxHashMap::default(); num_gpus],
-            order: vec![BTreeSet::new(); num_gpus],
-            block_of: vec![FxHashMap::default(); num_gpus],
-            blocks: vec![BTreeSet::new(); num_gpus],
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
         };
-        if let Universe::Frames { frames_per_gpu } = universe {
-            for gpu in 0..num_gpus {
-                for f in 0..frames_per_gpu as Slot {
-                    e.insert(gpu, f, 0, NO_BLOCK);
-                }
-            }
+        Self {
+            fixed: frames.is_some(),
+            clock: 0,
+            gpus: (0..num_gpus).map(|_| Gpu::new(frames)).collect(),
         }
-        e
-    }
-
-    fn remove(&mut self, gpu: usize, slot: Slot) {
-        if let Some(old) = self.stamp[gpu].remove(&slot) {
-            self.order[gpu].remove(&(old, slot));
-            let b = self.block_of[gpu].remove(&slot).unwrap_or(NO_BLOCK);
-            self.blocks[gpu].remove(&(b, old, slot));
-        }
-    }
-
-    fn insert(&mut self, gpu: usize, slot: Slot, stamp: u64, block: u64) {
-        self.stamp[gpu].insert(slot, stamp);
-        self.order[gpu].insert((stamp, slot));
-        self.block_of[gpu].insert(slot, block);
-        self.blocks[gpu].insert((block, stamp, slot));
     }
 
     fn restamp(&mut self, gpu: usize, slot: Slot, block: Option<u64>) {
-        let block = block
-            .or_else(|| self.block_of[gpu].get(&slot).copied())
-            .unwrap_or(NO_BLOCK);
         self.clock += 1;
         let stamp = self.clock;
-        self.remove(gpu, slot);
-        self.insert(gpu, slot, stamp, block);
+        let g = &mut self.gpus[gpu];
+        let i = g.idx.intern(slot);
+        ensure(&mut g.present, i, false);
+        ensure(&mut g.stamp, i, 0);
+        ensure(&mut g.block_raw, i, NO_BLOCK);
+        ensure(&mut g.bidx, i, NIL);
+        let block = match block {
+            Some(b) => b,
+            None if g.present[i as usize] => g.block_raw[i as usize],
+            None => NO_BLOCK,
+        };
+        if g.present[i as usize] {
+            g.detach(i);
+        } else {
+            g.present[i as usize] = true;
+            g.len += 1;
+        }
+        g.stamp[i as usize] = stamp;
+        g.block_raw[i as usize] = block;
+        let b = g.block_index(block);
+        g.bidx[i as usize] = b;
+        g.glinks.push_back(&mut g.global, i);
+        g.blinks.push_back(&mut g.block_heads[b as usize], i);
     }
 }
 
@@ -94,25 +168,60 @@ impl ResidencyPolicy for TreeLruEngine {
     }
 
     fn on_evict(&mut self, gpu: usize, slot: Slot) {
-        self.remove(gpu, slot);
+        let g = &mut self.gpus[gpu];
+        let Some(i) = g.idx.lookup(slot) else {
+            return;
+        };
+        if g.present.get(i as usize) != Some(&true) {
+            return;
+        }
+        g.detach(i);
         if self.fixed {
             // Free frame: oldest possible, reused before any eviction.
-            self.insert(gpu, slot, 0, NO_BLOCK);
+            g.stamp[i as usize] = 0;
+            g.block_raw[i as usize] = NO_BLOCK;
+            g.bidx[i as usize] = NIL;
+            g.zero.set(i);
+        } else {
+            g.present[i as usize] = false;
+            g.len -= 1;
+            g.idx.release(slot, i);
         }
     }
 
     fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
-        // Seed: the slot holding the globally LRU page.
-        let Some(&(_, seed)) = self.order[q.gpu].iter().next() else {
-            return VictimChoice::GiveUp;
+        let g = &self.gpus[q.gpu];
+        // Seed: the slot holding the globally LRU page (free frames are
+        // stamp 0, so the lowest free index wins when any exist).
+        let seed_i = match g.zero.first() {
+            Some(i) => i,
+            None if !g.global.is_empty() => g.global.head,
+            None => return VictimChoice::GiveUp,
         };
-        let block = self.block_of[q.gpu].get(&seed).copied().unwrap_or(NO_BLOCK);
-        // LRU usable slot within the seed's block.
-        for &(_, _, s) in self.blocks[q.gpu]
-            .range((block, 0, 0)..=(block, u64::MAX, Slot::MAX))
-        {
-            if (q.usable)(s) {
-                return VictimChoice::Take(s);
+        let seed = g.idx.slot_of(seed_i);
+        let block = if g.stamp[seed_i as usize] == 0 {
+            NO_BLOCK
+        } else {
+            g.block_raw[seed_i as usize]
+        };
+        // LRU usable slot within the seed's block. The NO_BLOCK group
+        // orders its stamp-0 frames (index order) before live entries.
+        if block == NO_BLOCK {
+            for i in g.zero.iter_ones() {
+                let s = g.idx.slot_of(i);
+                if (q.usable)(s) {
+                    return VictimChoice::Take(s);
+                }
+            }
+        }
+        if let Some(&b) = g.blocks.get(&block) {
+            let mut i = g.block_heads[b as usize].head;
+            while i != NIL {
+                let s = g.idx.slot_of(i);
+                if (q.usable)(s) {
+                    return VictimChoice::Take(s);
+                }
+                i = g.blinks.next(i);
             }
         }
         if q.demand {
@@ -128,21 +237,35 @@ impl ResidencyPolicy for TreeLruEngine {
 
     fn state_sig(&self, out: &mut Vec<u64>) {
         // Dense stamp ranks (relative order is all that matters) plus
-        // each slot's block hint; `blocks` is derivable from these.
-        let mut all: Vec<u64> = self
-            .order
-            .iter()
-            .flat_map(|o| o.iter().map(|&(s, _)| s))
-            .collect();
+        // each slot's block hint; the block orders are derivable.
+        let mut all: Vec<u64> = Vec::new();
+        for g in &self.gpus {
+            all.extend(g.zero.iter_ones().map(|_| 0));
+            let mut i = g.global.head;
+            while i != NIL {
+                all.push(g.stamp[i as usize]);
+                i = g.glinks.next(i);
+            }
+        }
         all.sort_unstable();
         all.dedup();
         out.push(u64::from(self.fixed));
-        for (gpu, o) in self.order.iter().enumerate() {
-            out.push(o.len() as u64);
-            for &(s, slot) in o {
-                out.push(all.binary_search(&s).expect("stamp indexed above") as u64);
-                out.push(slot);
-                out.push(self.block_of[gpu].get(&slot).copied().unwrap_or(NO_BLOCK));
+        for g in &self.gpus {
+            out.push(g.len as u64);
+            for i in g.zero.iter_ones() {
+                out.push(all.binary_search(&0).expect("stamp indexed above") as u64);
+                out.push(g.idx.slot_of(i));
+                out.push(NO_BLOCK);
+            }
+            let mut i = g.global.head;
+            while i != NIL {
+                out.push(
+                    all.binary_search(&g.stamp[i as usize])
+                        .expect("stamp indexed above") as u64,
+                );
+                out.push(g.idx.slot_of(i));
+                out.push(g.block_raw[i as usize]);
+                i = g.glinks.next(i);
             }
         }
     }
@@ -197,5 +320,23 @@ mod tests {
         p.on_evict(0, 0);
         // The freed frame is reused before any further eviction.
         assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(0));
+    }
+
+    #[test]
+    fn touch_preserves_the_block_and_eviction_forgets_it() {
+        let mut p = TreeLruEngine::new(Universe::Dynamic, 1);
+        p.on_fill(0, 5, 9, false);
+        p.on_fill(0, 6, 9, false);
+        p.on_fill(0, 7, 4, false);
+        // Touching 5 keeps it in block 9; 6 becomes the LRU seed, so
+        // block 9's LRU usable slot is 6.
+        p.on_touch(0, 5);
+        let all = |_: Slot| true;
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(6));
+        p.on_evict(0, 6);
+        p.on_evict(0, 5);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::Take(7));
+        p.on_evict(0, 7);
+        assert_eq!(p.pick_victim(&query(0, true, &all)), VictimChoice::GiveUp);
     }
 }

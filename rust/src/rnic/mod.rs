@@ -87,6 +87,22 @@ impl Rnic {
         Ok(())
     }
 
+    /// Insert the longest prefix of `wrs` that fits the QP, returning
+    /// how many were accepted — one bounds check and one extend instead
+    /// of a per-WR post loop. Matches a post-until-`QueueFull` loop
+    /// bit-for-bit (never errors on a full queue, only on a bad QP).
+    pub fn post_batch(&mut self, qp: usize, wrs: &[WorkRequest]) -> Result<usize, TransportError> {
+        let cap = self.qp_entries;
+        let q = self
+            .queues
+            .get_mut(qp)
+            .ok_or(TransportError::NoSuchQueue(qp))?;
+        let room = cap.saturating_sub(q.len());
+        let n = room.min(wrs.len());
+        q.extend(&wrs[..n]);
+        Ok(n)
+    }
+
     /// Ring the doorbell for `qp` (leader's step 6): the NIC fetches all
     /// currently queued WRs on that QP and services them. Returns one
     /// completion per WR, with delivery times that account for WQE
@@ -195,6 +211,21 @@ impl NicBank {
             TransportError::QueueFull { depth, .. } => TransportError::QueueFull { queue, depth },
             other => other,
         })
+    }
+
+    /// Batched [`NicBank::post`]: locate the owning NIC once and insert
+    /// the longest prefix that fits, returning the count accepted.
+    pub fn post_batch(
+        &mut self,
+        queue: usize,
+        wrs: &[WorkRequest],
+    ) -> Result<usize, TransportError> {
+        if queue >= self.num_queues {
+            return Err(TransportError::NoSuchQueue(queue));
+        }
+        let nic = self.nic_of(queue);
+        let qp = self.local_qp(queue);
+        self.nics[nic].post_batch(qp, wrs)
     }
 
     pub fn ring_doorbell(
@@ -327,6 +358,48 @@ mod tests {
             last < us(cfg.rnic.verb_latency_us) * 4,
             "last={last} — queues are not pipelining"
         );
+    }
+
+    #[test]
+    fn post_batch_matches_post_loop() {
+        // A batch must accept exactly the prefix a per-WR post loop
+        // would, leave identical queue contents, and never error on a
+        // full queue.
+        let (cfg, mut topo) = setup(1);
+        let cap = cfg.gpuvm.qp_entries;
+        let wrs: Vec<_> = (0..cap as u64 + 3).map(|i| wr(i, 4096)).collect();
+
+        let mut a = Rnic::new(0, &cfg, 2);
+        let mut accepted_loop = 0;
+        for w in &wrs {
+            match a.post(0, *w) {
+                Ok(()) => accepted_loop += 1,
+                Err(TransportError::QueueFull { .. }) => break,
+                Err(e) => panic!("unexpected: {e:?}"),
+            }
+        }
+
+        let mut b = Rnic::new(0, &cfg, 2);
+        let accepted_batch = b.post_batch(0, &wrs).unwrap();
+        assert_eq!(accepted_batch, accepted_loop);
+        assert_eq!(accepted_batch, cap);
+        assert_eq!(a.queue_depth(0), b.queue_depth(0));
+
+        // Servicing the two queues yields identical completions.
+        let ca = a.ring_doorbell(0, 0, &mut topo).unwrap();
+        let mut topo2 = Topology::new(&cfg);
+        let cb = b.ring_doorbell(0, 0, &mut topo2).unwrap();
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!((x.wr_id, x.at, x.wr), (y.wr_id, y.at, y.wr));
+        }
+
+        // Bad QP still errors; full queue does not.
+        assert!(matches!(
+            b.post_batch(9, &wrs),
+            Err(TransportError::NoSuchQueue(9))
+        ));
+        assert_eq!(b.post_batch(0, &wrs[..2]).unwrap(), 2);
     }
 
     #[test]

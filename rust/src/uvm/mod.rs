@@ -207,7 +207,14 @@ impl UvmSystem {
         self.next_wr += 1;
         let mut buf = std::mem::take(&mut self.cq_buf);
         buf.clear();
-        self.fabric.post(0, wr).expect("copy queue accepts one WR");
+        // The serialized driver moves one group per doorbell, so its
+        // "batch" is architecturally a single WR — posted through the
+        // batch API for the amortized profiling count all the same.
+        let posted = self
+            .fabric
+            .post_batch(0, std::slice::from_ref(&wr))
+            .expect("copy queue exists");
+        debug_assert_eq!(posted, 1, "copy queue accepts one WR");
         self.fabric
             .ring_doorbell_into(now, 0, &mut buf)
             .expect("queue 0 exists");

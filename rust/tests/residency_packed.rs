@@ -1,0 +1,742 @@
+//! Packed-engine equivalence: the PR 10 frame-table rewrites of the
+//! residency engines must be observationally identical to the
+//! first-generation `BTreeSet`/`FxHashMap` implementations they
+//! replaced — same [`VictimChoice`] on every pick *and* the same
+//! `state_sig` words after every event, under randomized
+//! fill/touch/promote/drain/evict/pick streams, in both universes.
+//!
+//! The reference models below are the pre-PR implementations
+//! transcribed verbatim (modulo `std` collections in place of the
+//! crate-private `FxHashMap`, which only ever served point lookups —
+//! no decision path iterated a hash map). Each implements
+//! [`ResidencyPolicy`], so one driver compares any engine pair,
+//! `clone_box` forks included (the model checker's usage).
+
+use gpuvm::residency::aware::PrefetchAwareEngine;
+use gpuvm::residency::clock::ClockEngine;
+use gpuvm::residency::fifo::FifoEngine;
+use gpuvm::residency::lru::LruEngine;
+use gpuvm::residency::random::RandomEngine;
+use gpuvm::residency::tree::TreeLruEngine;
+use gpuvm::residency::{ResidencyPolicy, Slot, Universe, VictimChoice, VictimQuery};
+use gpuvm::util::proptest::check;
+use gpuvm::util::rng::Rng;
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+// ---------------------------------------------------------------------------
+// Reference model: pre-PR `lru` (per-GPU `slot → stamp` map + a
+// `BTreeSet<(stamp, slot)>` in ascending = LRU-first order).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct RefLru {
+    fixed: bool,
+    clock: u64,
+    stamp: Vec<HashMap<Slot, u64>>,
+    order: Vec<BTreeSet<(u64, Slot)>>,
+}
+
+impl RefLru {
+    fn new(universe: Universe, num_gpus: usize) -> Self {
+        let mut e = Self {
+            fixed: matches!(universe, Universe::Frames { .. }),
+            clock: 0,
+            stamp: vec![HashMap::new(); num_gpus],
+            order: vec![BTreeSet::new(); num_gpus],
+        };
+        if let Universe::Frames { frames_per_gpu } = universe {
+            for gpu in 0..num_gpus {
+                for f in 0..frames_per_gpu as Slot {
+                    e.stamp[gpu].insert(f, 0);
+                    e.order[gpu].insert((0, f));
+                }
+            }
+        }
+        e
+    }
+
+    fn restamp(&mut self, gpu: usize, slot: Slot) {
+        self.clock += 1;
+        if let Some(old) = self.stamp[gpu].insert(slot, self.clock) {
+            self.order[gpu].remove(&(old, slot));
+        }
+        self.order[gpu].insert((self.clock, slot));
+    }
+}
+
+impl ResidencyPolicy for RefLru {
+    fn name(&self) -> &'static str {
+        "ref-lru"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
+        self.restamp(gpu, slot);
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.restamp(gpu, slot);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        if let Some(old) = self.stamp[gpu].remove(&slot) {
+            self.order[gpu].remove(&(old, slot));
+        }
+        if self.fixed {
+            self.stamp[gpu].insert(slot, 0);
+            self.order[gpu].insert((0, slot));
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        for &(_, s) in &self.order[q.gpu] {
+            if (q.usable)(s) {
+                return VictimChoice::Take(s);
+            }
+        }
+        if q.demand {
+            match self.order[q.gpu].iter().next() {
+                Some(&(_, s)) => VictimChoice::WaitOn(s),
+                None => VictimChoice::GiveUp,
+            }
+        } else {
+            VictimChoice::GiveUp
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        let mut all: Vec<u64> = self
+            .order
+            .iter()
+            .flat_map(|o| o.iter().map(|&(s, _)| s))
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        out.push(u64::from(self.fixed));
+        for o in &self.order {
+            out.push(o.len() as u64);
+            for &(s, slot) in o {
+                out.push(all.binary_search(&s).expect("stamp indexed above") as u64);
+                out.push(slot);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference model: pre-PR `tree-lru` (global `(stamp, slot)` order plus a
+// `(block, stamp, slot)` set ranged per block).
+// ---------------------------------------------------------------------------
+
+const NO_BLOCK: u64 = u64::MAX;
+
+#[derive(Clone)]
+struct RefTree {
+    fixed: bool,
+    clock: u64,
+    stamp: Vec<HashMap<Slot, u64>>,
+    order: Vec<BTreeSet<(u64, Slot)>>,
+    block_of: Vec<HashMap<Slot, u64>>,
+    blocks: Vec<BTreeSet<(u64, u64, Slot)>>,
+}
+
+impl RefTree {
+    fn new(universe: Universe, num_gpus: usize) -> Self {
+        let mut e = Self {
+            fixed: matches!(universe, Universe::Frames { .. }),
+            clock: 0,
+            stamp: vec![HashMap::new(); num_gpus],
+            order: vec![BTreeSet::new(); num_gpus],
+            block_of: vec![HashMap::new(); num_gpus],
+            blocks: vec![BTreeSet::new(); num_gpus],
+        };
+        if let Universe::Frames { frames_per_gpu } = universe {
+            for gpu in 0..num_gpus {
+                for f in 0..frames_per_gpu as Slot {
+                    e.insert(gpu, f, 0, NO_BLOCK);
+                }
+            }
+        }
+        e
+    }
+
+    fn remove(&mut self, gpu: usize, slot: Slot) {
+        if let Some(old) = self.stamp[gpu].remove(&slot) {
+            self.order[gpu].remove(&(old, slot));
+            let b = self.block_of[gpu].remove(&slot).unwrap_or(NO_BLOCK);
+            self.blocks[gpu].remove(&(b, old, slot));
+        }
+    }
+
+    fn insert(&mut self, gpu: usize, slot: Slot, stamp: u64, block: u64) {
+        self.stamp[gpu].insert(slot, stamp);
+        self.order[gpu].insert((stamp, slot));
+        self.block_of[gpu].insert(slot, block);
+        self.blocks[gpu].insert((block, stamp, slot));
+    }
+
+    fn restamp(&mut self, gpu: usize, slot: Slot, block: Option<u64>) {
+        let block = block
+            .or_else(|| self.block_of[gpu].get(&slot).copied())
+            .unwrap_or(NO_BLOCK);
+        self.clock += 1;
+        let stamp = self.clock;
+        self.remove(gpu, slot);
+        self.insert(gpu, slot, stamp, block);
+    }
+}
+
+impl ResidencyPolicy for RefTree {
+    fn name(&self) -> &'static str {
+        "ref-tree-lru"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, block: u64, _speculative: bool) {
+        self.restamp(gpu, slot, Some(block));
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.restamp(gpu, slot, None);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        self.remove(gpu, slot);
+        if self.fixed {
+            self.insert(gpu, slot, 0, NO_BLOCK);
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        let Some(&(_, seed)) = self.order[q.gpu].iter().next() else {
+            return VictimChoice::GiveUp;
+        };
+        let block = self.block_of[q.gpu].get(&seed).copied().unwrap_or(NO_BLOCK);
+        for &(_, _, s) in self.blocks[q.gpu].range((block, 0, 0)..=(block, u64::MAX, Slot::MAX)) {
+            if (q.usable)(s) {
+                return VictimChoice::Take(s);
+            }
+        }
+        if q.demand {
+            VictimChoice::WaitOn(seed)
+        } else {
+            VictimChoice::GiveUp
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        let mut all: Vec<u64> = self
+            .order
+            .iter()
+            .flat_map(|o| o.iter().map(|&(s, _)| s))
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        out.push(u64::from(self.fixed));
+        for (gpu, o) in self.order.iter().enumerate() {
+            out.push(o.len() as u64);
+            for &(s, slot) in o {
+                out.push(all.binary_search(&s).expect("stamp indexed above") as u64);
+                out.push(slot);
+                out.push(self.block_of[gpu].get(&slot).copied().unwrap_or(NO_BLOCK));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference model: pre-PR `clock` (ring vector + `slot → bool` map).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct RefClock {
+    dynamic: bool,
+    ring: Vec<Vec<Slot>>,
+    hand: Vec<usize>,
+    refbit: Vec<HashMap<Slot, bool>>,
+}
+
+impl RefClock {
+    fn new(universe: Universe, num_gpus: usize) -> Self {
+        let (dynamic, ring) = match universe {
+            Universe::Frames { frames_per_gpu } => (
+                false,
+                vec![(0..frames_per_gpu as Slot).collect::<Vec<_>>(); num_gpus],
+            ),
+            Universe::Dynamic => (true, vec![Vec::new(); num_gpus]),
+        };
+        Self {
+            dynamic,
+            ring,
+            hand: vec![0; num_gpus],
+            refbit: vec![HashMap::new(); num_gpus],
+        }
+    }
+}
+
+impl ResidencyPolicy for RefClock {
+    fn name(&self) -> &'static str {
+        "ref-clock"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
+        if self.dynamic && !self.refbit[gpu].contains_key(&slot) {
+            self.ring[gpu].push(slot);
+        }
+        self.refbit[gpu].insert(slot, true);
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.refbit[gpu].insert(slot, true);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        self.refbit[gpu].remove(&slot);
+        if self.dynamic {
+            if let Some(pos) = self.ring[gpu].iter().position(|s| *s == slot) {
+                self.ring[gpu].remove(pos);
+                if self.hand[gpu] > pos {
+                    self.hand[gpu] -= 1;
+                }
+            }
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        let len = self.ring[q.gpu].len();
+        if len == 0 {
+            return VictimChoice::GiveUp;
+        }
+        for _ in 0..(2 * len) {
+            let h = self.hand[q.gpu] % len;
+            let s = self.ring[q.gpu][h];
+            if !(q.usable)(s) {
+                self.hand[q.gpu] = (h + 1) % len;
+                continue;
+            }
+            let referenced = self.refbit[q.gpu].get(&s).copied().unwrap_or(false);
+            self.hand[q.gpu] = (h + 1) % len;
+            if referenced {
+                self.refbit[q.gpu].insert(s, false);
+            } else {
+                return VictimChoice::Take(s);
+            }
+        }
+        if q.demand {
+            VictimChoice::WaitOn(self.ring[q.gpu][self.hand[q.gpu] % len])
+        } else {
+            VictimChoice::GiveUp
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        out.push(u64::from(self.dynamic));
+        for (gpu, ring) in self.ring.iter().enumerate() {
+            out.push(ring.len() as u64);
+            out.push(if ring.is_empty() {
+                0
+            } else {
+                (self.hand[gpu] % ring.len()) as u64
+            });
+            for &s in ring {
+                out.push(s);
+                out.push(match self.refbit[gpu].get(&s) {
+                    Some(true) => 1,
+                    Some(false) => 0,
+                    None => 2,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference model: pre-PR `random` (live vector + `slot → position` map
+// for swap-removal; probe stream from the crate RNG).
+// ---------------------------------------------------------------------------
+
+const PROBES: usize = 8;
+
+#[derive(Clone)]
+struct RefRandom {
+    frames: Option<usize>,
+    rng: Rng,
+    live: Vec<Vec<Slot>>,
+    pos: Vec<HashMap<Slot, usize>>,
+}
+
+impl RefRandom {
+    fn new(universe: Universe, num_gpus: usize, seed: u64) -> Self {
+        let frames = match universe {
+            Universe::Frames { frames_per_gpu } => Some(frames_per_gpu),
+            Universe::Dynamic => None,
+        };
+        Self {
+            frames,
+            rng: Rng::new(seed),
+            live: vec![Vec::new(); num_gpus],
+            pos: vec![HashMap::new(); num_gpus],
+        }
+    }
+}
+
+impl ResidencyPolicy for RefRandom {
+    fn name(&self) -> &'static str {
+        "ref-random"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, _block: u64, _speculative: bool) {
+        if self.frames.is_none() && !self.pos[gpu].contains_key(&slot) {
+            self.pos[gpu].insert(slot, self.live[gpu].len());
+            self.live[gpu].push(slot);
+        }
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        if self.frames.is_none() {
+            if let Some(i) = self.pos[gpu].remove(&slot) {
+                let last = self.live[gpu].pop().expect("pos entries track live slots");
+                if last != slot {
+                    self.live[gpu][i] = last;
+                    self.pos[gpu].insert(last, i);
+                }
+            }
+        }
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        match self.frames {
+            Some(n) => {
+                let n = n as u64;
+                for _ in 0..PROBES {
+                    let f = self.rng.gen_range(n);
+                    if (q.usable)(f) {
+                        return VictimChoice::Take(f);
+                    }
+                }
+                if q.demand {
+                    VictimChoice::WaitOn(self.rng.gen_range(n))
+                } else {
+                    VictimChoice::GiveUp
+                }
+            }
+            None => {
+                let live = &self.live[q.gpu];
+                if live.is_empty() {
+                    return VictimChoice::GiveUp;
+                }
+                let len = live.len() as u64;
+                for _ in 0..PROBES {
+                    let s = live[self.rng.gen_range(len) as usize];
+                    if (q.usable)(s) {
+                        return VictimChoice::Take(s);
+                    }
+                }
+                if q.demand {
+                    VictimChoice::WaitOn(live[self.rng.gen_range(len) as usize])
+                } else {
+                    VictimChoice::GiveUp
+                }
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        out.extend(self.rng.state_words());
+        for live in &self.live {
+            out.push(live.len() as u64);
+            out.extend(live.iter().copied());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference model: pre-PR `prefetch-aware` (seq map + `(fillseq, slot)`
+// set of unconsumed speculation, wrapping the unchanged FIFO engine).
+// ---------------------------------------------------------------------------
+
+const MIN_ISSUED: u64 = 32;
+const ACCURACY_GATE: f64 = 0.5;
+
+#[derive(Clone)]
+struct RefAware {
+    fifo: FifoEngine,
+    fillseq: u64,
+    seq: Vec<HashMap<Slot, u64>>,
+    spec_byfill: Vec<BTreeSet<(u64, Slot)>>,
+    spec: Vec<HashSet<Slot>>,
+}
+
+impl RefAware {
+    fn new(universe: Universe, num_gpus: usize) -> Self {
+        Self {
+            fifo: FifoEngine::new(false, universe, num_gpus),
+            fillseq: 0,
+            seq: vec![HashMap::new(); num_gpus],
+            spec_byfill: vec![BTreeSet::new(); num_gpus],
+            spec: vec![HashSet::new(); num_gpus],
+        }
+    }
+
+    fn clear_spec(&mut self, gpu: usize, slot: Slot) {
+        if self.spec[gpu].remove(&slot) {
+            if let Some(&sq) = self.seq[gpu].get(&slot) {
+                self.spec_byfill[gpu].remove(&(sq, slot));
+            }
+        }
+    }
+}
+
+impl ResidencyPolicy for RefAware {
+    fn name(&self) -> &'static str {
+        "ref-prefetch-aware"
+    }
+
+    fn on_fill(&mut self, gpu: usize, slot: Slot, block: u64, speculative: bool) {
+        self.fifo.on_fill(gpu, slot, block, speculative);
+        self.clear_spec(gpu, slot);
+        self.fillseq += 1;
+        self.seq[gpu].insert(slot, self.fillseq);
+        if speculative {
+            self.spec[gpu].insert(slot);
+            self.spec_byfill[gpu].insert((self.fillseq, slot));
+        }
+    }
+
+    fn on_touch(&mut self, gpu: usize, slot: Slot) {
+        self.clear_spec(gpu, slot);
+    }
+
+    fn on_evict(&mut self, gpu: usize, slot: Slot) {
+        self.clear_spec(gpu, slot);
+        self.seq[gpu].remove(&slot);
+        self.fifo.on_evict(gpu, slot);
+    }
+
+    fn pick_victim(&mut self, q: &VictimQuery<'_>) -> VictimChoice {
+        if q.prefetch_issued >= MIN_ISSUED && q.prefetch_accuracy < ACCURACY_GATE {
+            for &(_, s) in &self.spec_byfill[q.gpu] {
+                if (q.usable)(s) {
+                    return VictimChoice::Take(s);
+                }
+            }
+        }
+        self.fifo.pick_victim(q)
+    }
+
+    fn clone_box(&self) -> Box<dyn ResidencyPolicy> {
+        Box::new(self.clone())
+    }
+
+    fn state_sig(&self, out: &mut Vec<u64>) {
+        self.fifo.state_sig(out);
+        let mut all: Vec<u64> = self.seq.iter().flat_map(|m| m.values().copied()).collect();
+        all.sort_unstable();
+        all.dedup();
+        for (gpu, m) in self.seq.iter().enumerate() {
+            let mut entries: Vec<(Slot, u64)> = m.iter().map(|(&s, &v)| (s, v)).collect();
+            entries.sort_unstable();
+            out.push(entries.len() as u64);
+            for (slot, v) in entries {
+                out.push(slot);
+                out.push(all.binary_search(&v).expect("seq indexed above") as u64);
+                out.push(u64::from(self.spec[gpu].contains(&slot)));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The driver: one randomized event/query stream, applied to both
+// engines in lockstep; signatures compared after every step, choices
+// compared on every pick, with occasional `clone_box` forks (the model
+// checker's usage pattern).
+// ---------------------------------------------------------------------------
+
+fn random_universe(rng: &mut Rng) -> Universe {
+    if rng.gen_range(2) == 0 {
+        Universe::Frames {
+            frames_per_gpu: 3 + rng.gen_range(4) as usize,
+        }
+    } else {
+        Universe::Dynamic
+    }
+}
+
+fn sigs_match(packed: &dyn ResidencyPolicy, reference: &dyn ResidencyPolicy, step: usize) {
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    packed.state_sig(&mut a);
+    reference.state_sig(&mut b);
+    assert_eq!(
+        a,
+        b,
+        "state_sig diverged from {} at step {step}",
+        reference.name()
+    );
+}
+
+fn drive(
+    rng: &mut Rng,
+    mut packed: Box<dyn ResidencyPolicy>,
+    mut reference: Box<dyn ResidencyPolicy>,
+    universe: Universe,
+    gpus: usize,
+) {
+    let slot_space = match universe {
+        // Stay in-contract: callers never evict frames outside the pool.
+        Universe::Frames { frames_per_gpu } => frames_per_gpu as u64,
+        Universe::Dynamic => 12,
+    };
+    for step in 0..200 {
+        let gpu = rng.gen_range(gpus as u64) as usize;
+        let slot = rng.gen_range(slot_space);
+        match rng.gen_range(12) {
+            0..=2 => {
+                let block = rng.gen_range(4);
+                let speculative = rng.gen_range(4) == 0;
+                packed.on_fill(gpu, slot, block, speculative);
+                reference.on_fill(gpu, slot, block, speculative);
+            }
+            3..=4 => {
+                packed.on_touch(gpu, slot);
+                reference.on_touch(gpu, slot);
+            }
+            5 => {
+                packed.on_promote(gpu, slot);
+                reference.on_promote(gpu, slot);
+            }
+            6 => {
+                packed.on_drain(gpu, slot);
+                reference.on_drain(gpu, slot);
+            }
+            7..=8 => {
+                packed.on_evict(gpu, slot);
+                reference.on_evict(gpu, slot);
+            }
+            9 => {
+                // Fork both sides, as the model checker does, and keep
+                // working on the clones.
+                packed = packed.clone_box();
+                reference = reference.clone_box();
+            }
+            _ => {
+                let demand = rng.gen_range(2) == 0;
+                let mask = rng.next_u64();
+                let usable = move |s: Slot| (mask >> (s % 64)) & 1 == 1;
+                let prefetch_issued = if rng.gen_range(2) == 0 { 0 } else { 100 };
+                let prefetch_accuracy = [0.0, 0.3, 0.9][rng.gen_range(3) as usize];
+                let qa = VictimQuery {
+                    gpu,
+                    demand,
+                    prefetch_issued,
+                    prefetch_accuracy,
+                    usable: &usable,
+                };
+                let qb = VictimQuery {
+                    gpu,
+                    demand,
+                    prefetch_issued,
+                    prefetch_accuracy,
+                    usable: &usable,
+                };
+                assert_eq!(
+                    packed.pick_victim(&qa),
+                    reference.pick_victim(&qb),
+                    "victim diverged from {} at step {step}",
+                    reference.name()
+                );
+            }
+        }
+        sigs_match(packed.as_ref(), reference.as_ref(), step);
+    }
+}
+
+#[test]
+fn packed_lru_matches_the_reference_model() {
+    check("packed lru equivalence", 48, |rng| {
+        let universe = random_universe(rng);
+        let gpus = 1 + rng.gen_range(2) as usize;
+        drive(
+            rng,
+            Box::new(LruEngine::new(universe, gpus)),
+            Box::new(RefLru::new(universe, gpus)),
+            universe,
+            gpus,
+        );
+    });
+}
+
+#[test]
+fn packed_tree_lru_matches_the_reference_model() {
+    check("packed tree-lru equivalence", 48, |rng| {
+        let universe = random_universe(rng);
+        let gpus = 1 + rng.gen_range(2) as usize;
+        drive(
+            rng,
+            Box::new(TreeLruEngine::new(universe, gpus)),
+            Box::new(RefTree::new(universe, gpus)),
+            universe,
+            gpus,
+        );
+    });
+}
+
+#[test]
+fn packed_clock_matches_the_reference_model() {
+    check("packed clock equivalence", 48, |rng| {
+        let universe = random_universe(rng);
+        let gpus = 1 + rng.gen_range(2) as usize;
+        drive(
+            rng,
+            Box::new(ClockEngine::new(universe, gpus)),
+            Box::new(RefClock::new(universe, gpus)),
+            universe,
+            gpus,
+        );
+    });
+}
+
+#[test]
+fn packed_random_matches_the_reference_model() {
+    check("packed random equivalence", 48, |rng| {
+        let universe = random_universe(rng);
+        let gpus = 1 + rng.gen_range(2) as usize;
+        let seed = rng.next_u64();
+        drive(
+            rng,
+            Box::new(RandomEngine::new(universe, gpus, seed)),
+            Box::new(RefRandom::new(universe, gpus, seed)),
+            universe,
+            gpus,
+        );
+    });
+}
+
+#[test]
+fn packed_prefetch_aware_matches_the_reference_model() {
+    check("packed prefetch-aware equivalence", 48, |rng| {
+        let universe = random_universe(rng);
+        let gpus = 1 + rng.gen_range(2) as usize;
+        drive(
+            rng,
+            Box::new(PrefetchAwareEngine::new(universe, gpus)),
+            Box::new(RefAware::new(universe, gpus)),
+            universe,
+            gpus,
+        );
+    });
+}
